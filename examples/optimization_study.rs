@@ -1,0 +1,29 @@
+//! The paper's §3 optimisation study (Fig. 1): run all five diameter-kernel
+//! strategies over the dataset, verify they agree bit-for-bit, and price
+//! each on the three paper GPUs with the calibrated device model.
+//!
+//! Run: `cargo run --release --offline --example optimization_study [-- --scale 0.02]`
+
+use radpipe::experiments::{fig1, run_fig1};
+use radpipe::synth::{generate_dataset, GenOptions};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = radpipe::cli::Args::parse(&args)?;
+    let scale = parsed.opt_parse::<f64>("scale")?.unwrap_or(0.02);
+
+    let root = std::env::temp_dir().join(format!("radpipe_optstudy_{scale}"));
+    eprintln!("generating dataset (scale {scale})…");
+    let manifest = generate_dataset(&root, &GenOptions { scale, seed: 7 })?;
+
+    eprintln!("running 5 strategies × 20 cases (each verified against brute force)…");
+    let rows = run_fig1(&manifest, 0)?;
+    print!("{}", fig1::to_table(&rows).to_text());
+
+    println!("\nwinning strategy per device (paper: T4→block reduction,");
+    println!("RTX 4070→local accumulators, H100→memory-careful/tiled):");
+    for (dev, strat) in fig1::winners(&rows) {
+        println!("  {dev}: {}", strat.label());
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX (L2 + L1) → HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the HLO
+text through ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO **text** (not ``.serialize()``) is the interchange format:
+jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Manifest format (one artifact per line, parsed by rust/src/runtime/registry):
+
+    name=<kernel> bucket=<key> file=<rel path> inputs=<shape;shape> outputs=<arity>
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_str(shape) -> str:
+    return "f32[" + ",".join(str(d) for d in shape) + "]"
+
+
+def lower_all(out_dir: str, full: bool = False, verbose: bool = True) -> list[str]:
+    """Lower every (kernel, bucket) artifact into ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    lines: list[str] = []
+
+    jobs = []
+    vbuckets = model.VERTEX_BUCKETS + (model.VERTEX_BUCKETS_FULL if full else [])
+    for n in vbuckets:
+        jobs.append(
+            (
+                "diameter",
+                str(n),
+                f"diameter_{n}.hlo.txt",
+                [_spec((n, 3))],
+                [(n, 3)],
+                model.shape_diameters,
+            )
+        )
+    for t in model.TRI_BUCKETS:
+        jobs.append(
+            (
+                "mesh_stats",
+                str(t),
+                f"mesh_stats_{t}.hlo.txt",
+                [_spec((t, 9))],
+                [(t, 9)],
+                model.shape_mesh_stats,
+            )
+        )
+    for dims in model.GRID_BUCKETS:
+        key = "x".join(map(str, dims))
+        jobs.append(
+            (
+                "mc_grid",
+                key,
+                f"mc_grid_{key}.hlo.txt",
+                [_spec(dims), _spec((3,))],
+                [dims, (3,)],
+                model.shape_mc_stats,
+            )
+        )
+
+    for name, bucket, fname, specs, shapes, fn in jobs:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        inputs = ";".join(_shape_str(s) for s in shapes)
+        lines.append(
+            f"name={name} bucket={bucket} file={fname} inputs={inputs} outputs=1"
+        )
+        if verbose:
+            print(
+                f"lowered {name}[{bucket}] -> {fname} "
+                f"({len(text)} chars, {time.time() - t0:.1f}s)",
+                flush=True,
+            )
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    if verbose:
+        print(f"wrote {manifest} ({len(lines)} artifacts)")
+    return lines
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--full",
+        action="store_true",
+        help="also lower the paper-scale vertex buckets (131072, 262144)",
+    )
+    args = p.parse_args()
+    lower_all(args.out_dir, full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the PyRadiomics-cuda reproduction.
+
+* :mod:`.diameter` — pairwise max 3D + planar diameters (the paper's
+  dominant hot-spot).
+* :mod:`.mesh_stats` — fused mesh volume + surface area over triangle soup.
+* :mod:`.mc_grid` — fused marching-tetrahedra stats straight from the grid.
+* :mod:`.ref` — pure-numpy oracles for all of the above.
+* :mod:`.mt_tables` — generated marching-tetrahedra tables.
+"""
+
+from . import diameter, mc_grid, mesh_stats, mt_tables, ref  # noqa: F401

@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: pairwise maximum 3D + planar diameters.
+
+The paper's dominant hot-spot (95.7–99.9 % of post-read time, Table 2) is the
+O(m²) search for the farthest vertex pair. The CUDA kernels assign vertex
+pairs to threads and reduce per-thread maxima; on TPU we re-derive the same
+all-pairs reduction around the MXU:
+
+    d²(i, j) = |v_i|² + |v_j|² − 2·v_iᵀv_j
+
+so the cross term of a (TM × 3) row slab against the full (N × 3) panel is a
+single matmul on the systolic array, and the planar diameters reuse the same
+d² tile under an exact same-coordinate mask (PyRadiomics `cshape` semantics:
+a planar pair must share the dropped coordinate *exactly* — mesh vertices sit
+on half-lattice planes so floating-point equality is well-defined).
+
+Two block strategies are provided (the L1 ablation of DESIGN.md):
+
+* ``row_panel`` (default): grid over row slabs, full column panel resident.
+  Fewest grid steps — best for the single-core XLA-CPU artifact path, and on
+  TPU keeps the MXU busy with a (TM×3)·(3×N) contraction per step.
+* ``square_tile``: classic 2D (TM × TN) tiling — the direct analogue of the
+  paper's shared-memory strategy (3); smallest VMEM working set.
+
+Outputs are **squared** distances ``[d3d², dxy², dyz², dxz²]`` (sqrt is done
+by the consumer); planes with no valid pair yield -1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default row-slab height. 2048 rows × 3 f32 ≈ 24 KiB of VMEM for the slab;
+#: the dominant VMEM tenant is the (TM × TN) d² tile: 2048 × 2048 × 4 B =
+#: 16 MiB exceeds VMEM, so on real TPU hardware the d² tile materialises per
+#: (TM × TN) sub-block of the panel — the row_panel schedule below keeps the
+#: *HBM* traffic at one panel read per slab either way. Chosen by the §Perf
+#: sweep (see EXPERIMENTS.md).
+DEFAULT_BLOCK_ROWS = 2048
+
+
+def _tile_diameters(vi: jax.Array, vj: jax.Array) -> jax.Array:
+    """Squared-diameter candidates of one (TM, 3) × (TN, 3) tile pair."""
+    ni = jnp.sum(vi * vi, axis=1, keepdims=True)  # [TM, 1]
+    nj = jnp.sum(vj * vj, axis=1, keepdims=True).T  # [1, TN]
+    # MXU contraction: the -2·v_i·v_j Gram term.
+    g = jnp.dot(vi, vj.T, preferred_element_type=jnp.float32)
+    d2 = ni + nj - 2.0 * g
+    neg = jnp.float32(-1.0)
+    return jnp.stack(
+        [
+            jnp.max(d2),
+            # XY plane: pairs sharing z; YZ: sharing x; XZ: sharing y.
+            jnp.max(jnp.where(vi[:, 2:3] == vj[:, 2:3].T, d2, neg)),
+            jnp.max(jnp.where(vi[:, 0:1] == vj[:, 0:1].T, d2, neg)),
+            jnp.max(jnp.where(vi[:, 1:2] == vj[:, 1:2].T, d2, neg)),
+        ]
+    )
+
+
+def _row_panel_kernel(v_ref, w_ref, o_ref):
+    """Grid over row slabs; the full vertex panel is the second operand."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, -1.0)
+
+    o_ref[...] = jnp.maximum(o_ref[...], _tile_diameters(v_ref[...], w_ref[...]))
+
+
+def _square_tile_kernel(v_ref, w_ref, o_ref):
+    """Classic 2D tiling — both operands are (T, 3) blocks."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, -1.0)
+
+    o_ref[...] = jnp.maximum(o_ref[...], _tile_diameters(v_ref[...], w_ref[...]))
+
+
+def diameters(
+    v: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    strategy: str = "row_panel",
+    interpret: bool = True,
+) -> jax.Array:
+    """Max squared 3D/XY/YZ/XZ diameters of ``v`` (f32[N, 3]) → f32[4].
+
+    ``N`` must be a multiple of ``block_rows``; pad by *duplicating any real
+    vertex* (e.g. ``v[0]``) — duplicates can never increase a maximum
+    distance, so the result over the padded buffer equals the true result.
+    """
+    n = v.shape[0]
+    bm = min(block_rows, n)
+    if n % bm:
+        raise ValueError(f"N={n} not a multiple of block_rows={bm}")
+    if strategy == "row_panel":
+        return pl.pallas_call(
+            _row_panel_kernel,
+            grid=(n // bm,),
+            in_specs=[
+                pl.BlockSpec((bm, 3), lambda i: (i, 0)),
+                pl.BlockSpec((n, 3), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+            interpret=interpret,
+        )(v, v)
+    elif strategy == "square_tile":
+        return pl.pallas_call(
+            _square_tile_kernel,
+            grid=(n // bm, n // bm),
+            in_specs=[
+                pl.BlockSpec((bm, 3), lambda i, j: (i, 0)),
+                pl.BlockSpec((bm, 3), lambda i, j: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((4,), lambda i, j: (0,)),
+            out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+            interpret=interpret,
+        )(v, v)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "strategy"))
+def diameters_jit(v, block_rows: int = DEFAULT_BLOCK_ROWS, strategy: str = "row_panel"):
+    """Jitted convenience wrapper used by tests and model.py."""
+    return diameters(v, block_rows=block_rows, strategy=strategy)

@@ -1,0 +1,133 @@
+"""Marching-tetrahedra decomposition tables, generated programmatically.
+
+The repo substitutes PyRadiomics' 256-case marching cubes with marching
+tetrahedra over the Freudenthal (Kuhn) 6-tet decomposition of each cell:
+
+* the Freudenthal triangulation tiles space consistently (shared cube faces
+  get identical diagonals in both neighbouring cells), so the isosurface is
+  watertight;
+* every one of the 16 per-tet cases is derivable mechanically (below), so the
+  tables are *generated*, not transcribed — the identical generator exists in
+  ``rust/src/mc/tets.rs`` and cross-language agreement is tested.
+
+Triangle orientation is normalised at evaluation time (both here and in Rust)
+by flipping any triangle whose normal does not point from the inside corners
+towards the outside corners, which makes the summed signed volume equal the
+enclosed volume with a positive sign.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+# Cube corner id = x | y << 1 | z << 2, offsets in (x, y, z).
+CORNER_OFFSETS = np.array(
+    [[(c >> 0) & 1, (c >> 1) & 1, (c >> 2) & 1] for c in range(8)], dtype=np.int32
+)
+
+_AXIS_BIT = {0: 1, 1: 2, 2: 4}
+
+
+def _freudenthal_tets() -> np.ndarray:
+    """The 6 tetrahedra of the Freudenthal decomposition.
+
+    Tet for permutation (a, b, c): corner 0 → +e_a → +e_b → +e_c, i.e. the
+    monotone lattice path from corner 0 to corner 7. Returns int32[6, 4]
+    cube-corner ids.
+    """
+    tets = []
+    for perm in itertools.permutations(range(3)):
+        corner = 0
+        path = [corner]
+        for axis in perm:
+            corner |= _AXIS_BIT[axis]
+            path.append(corner)
+        tets.append(path)
+    return np.array(tets, dtype=np.int32)
+
+
+TETS = _freudenthal_tets()  # int32[6, 4]
+
+# The 6 edges of a tetrahedron as (vertex, vertex) index pairs.
+TET_EDGES = np.array(
+    [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)], dtype=np.int32
+)
+
+_EDGE_ID = {(a, b): i for i, (a, b) in enumerate(map(tuple, TET_EDGES))}
+
+
+def _edge(a: int, b: int) -> int:
+    return _EDGE_ID[(a, b) if a < b else (b, a)]
+
+
+def _case_triangles(case: int) -> list[tuple[int, int, int]]:
+    """Triangles (as tet-edge-id triples) separating inside from outside.
+
+    ``case`` bit *i* set ⇔ tet vertex *i* is inside the surface. Orientation
+    of the emitted triples is arbitrary; callers normalise it geometrically.
+    """
+    inside = [i for i in range(4) if case >> i & 1]
+    outside = [i for i in range(4) if not case >> i & 1]
+    if len(inside) in (0, 4):
+        return []
+    if len(inside) == 1:
+        a = inside[0]
+        e = [_edge(a, o) for o in outside]
+        return [(e[0], e[1], e[2])]
+    if len(inside) == 3:
+        a = outside[0]
+        e = [_edge(a, i) for i in inside]
+        return [(e[0], e[1], e[2])]
+    # 2-2 split: quad with cyclically ordered corners
+    # e(a,c) — e(a,d) — e(b,d) — e(b,c), split into two triangles.
+    a, b = inside
+    c, d = outside
+    q = [_edge(a, c), _edge(a, d), _edge(b, d), _edge(b, c)]
+    return [(q[0], q[1], q[2]), (q[0], q[2], q[3])]
+
+
+def _build_case_table() -> tuple[np.ndarray, np.ndarray]:
+    """Dense per-case tables.
+
+    Returns ``(tris, ntris)`` with ``tris`` int32[16, 2, 3] (edge ids, padded
+    with -1) and ``ntris`` int32[16].
+    """
+    tris = np.full((16, 2, 3), -1, dtype=np.int32)
+    ntris = np.zeros(16, dtype=np.int32)
+    for case in range(16):
+        ts = _case_triangles(case)
+        ntris[case] = len(ts)
+        for k, t in enumerate(ts):
+            tris[case, k] = t
+    return tris, ntris
+
+
+CASE_TRIS, CASE_NTRIS = _build_case_table()
+
+# Convenience: per-tet, per-edge cube-corner endpoints, int32[6, 6, 2].
+TET_EDGE_CORNERS = np.stack(
+    [TETS[:, TET_EDGES[e, 0]] for e in range(6)], axis=1
+), np.stack([TETS[:, TET_EDGES[e, 1]] for e in range(6)], axis=1)
+TET_EDGE_CORNERS = np.stack(TET_EDGE_CORNERS, axis=-1)  # [6 tets, 6 edges, 2]
+
+
+def self_check() -> None:
+    """Structural invariants of the generated tables (also unit-tested)."""
+    # 6 tets, each a monotone path → all share corners 0 and 7.
+    assert TETS.shape == (6, 4)
+    assert (TETS[:, 0] == 0).all() and (TETS[:, 3] == 7).all()
+    # Case triangle counts: 0 for empty/full, 1 for 1-or-3 inside, 2 for 2-2.
+    for case in range(16):
+        inside = bin(case).count("1")
+        expect = {0: 0, 1: 1, 2: 2, 3: 1, 4: 0}[inside]
+        assert CASE_NTRIS[case] == expect, (case, CASE_NTRIS[case])
+    # Complementary cases produce the same edge set.
+    for case in range(1, 8):
+        a = sorted(e for t in _case_triangles(case) for e in t)
+        b = sorted(e for t in _case_triangles(15 - case) for e in t)
+        assert a == b, (case, a, b)
+
+
+self_check()

@@ -1,0 +1,119 @@
+"""Pure-numpy/jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: slow, obvious implementations that
+pytest compares against both the Pallas kernels (interpret mode) and, through
+the exported feature values, the Rust CPU path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import mt_tables as mt
+
+
+def diameters_ref(v: np.ndarray) -> np.ndarray:
+    """Brute-force squared diameters ``[d3d², dxy², dyz², dxz²]``.
+
+    ``v`` is float32[N, 3]. Planar diameters only consider vertex pairs that
+    lie in the same plane (equal third coordinate), mirroring PyRadiomics'
+    ``cshape`` semantics; a plane with fewer than two distinct vertices
+    yields -1 (PyRadiomics returns NaN there; the pipeline maps -1 → NaN).
+    """
+    v = np.asarray(v, dtype=np.float32)
+    d = v[:, None, :].astype(np.float64) - v[None, :, :].astype(np.float64)
+    d2 = (d**2).sum(-1)
+    out = np.empty(4, dtype=np.float64)
+    out[0] = d2.max() if len(v) else -1.0
+    for k, axis in ((1, 2), (2, 0), (3, 1)):
+        eq = v[:, None, axis] == v[None, :, axis]
+        masked = np.where(eq, d2, -1.0)
+        out[k] = masked.max() if len(v) else -1.0
+    return out.astype(np.float32)
+
+
+def mesh_stats_ref(tris: np.ndarray) -> np.ndarray:
+    """``[volume, area]`` of a triangle soup float32[T, 3, 3].
+
+    Volume is the absolute sum of signed origin-tetrahedron volumes (exact
+    for watertight, consistently oriented meshes); area is the sum of
+    triangle areas. Degenerate (all-zero padding) triangles contribute 0.
+    """
+    t = np.asarray(tris, dtype=np.float64)
+    if len(t) == 0:
+        return np.array([0.0, 0.0], dtype=np.float32)
+    a, b, c = t[:, 0], t[:, 1], t[:, 2]
+    signed = np.einsum("ij,ij->i", a, np.cross(b, c)) / 6.0
+    area = np.linalg.norm(np.cross(b - a, c - a), axis=1).sum() / 2.0
+    return np.array([abs(signed.sum()), area], dtype=np.float32)
+
+
+def _mt_triangles(grid: np.ndarray, spacing, iso: float = 0.5):
+    """All marching-tetrahedra triangles of ``grid`` (float[D, H, W]).
+
+    Axis order: grid[z, y, x]; world coordinates (x, y, z) in mm. Returns
+    float64[T, 3, 3] with orientation normalised outward (inside → outside).
+    Reference implementation — loops are fine for test-sized volumes.
+    """
+    g = np.asarray(grid, dtype=np.float64)
+    d, h, w = g.shape
+    sx, sy, sz = float(spacing[0]), float(spacing[1]), float(spacing[2])
+    scale = np.array([sx, sy, sz])
+    tris_out = []
+    corner_xyz = mt.CORNER_OFFSETS.astype(np.float64)  # [8, 3] in (x,y,z)
+    for z in range(d - 1):
+        for y in range(h - 1):
+            for x in range(w - 1):
+                vals = np.array(
+                    [g[z + oz, y + oy, x + ox] for ox, oy, oz in mt.CORNER_OFFSETS]
+                )
+                if (vals > iso).all() or (vals <= iso).all():
+                    continue
+                base = np.array([x, y, z], dtype=np.float64)
+                pos = (base + corner_xyz) * scale  # [8, 3] world corners
+                for t in range(6):
+                    corners = mt.TETS[t]
+                    tv = vals[corners]
+                    inside = tv > iso
+                    case = sum(1 << i for i in range(4) if inside[i])
+                    n = mt.CASE_NTRIS[case]
+                    if n == 0:
+                        continue
+                    pts = np.zeros((6, 3))
+                    for e in range(6):
+                        i0, i1 = mt.TET_EDGES[e]
+                        v0, v1 = tv[i0], tv[i1]
+                        denom = v1 - v0
+                        tt = 0.5 if denom == 0 else (iso - v0) / denom
+                        tt = min(max(tt, 0.0), 1.0)
+                        pts[e] = pos[corners[i0]] * (1 - tt) + pos[corners[i1]] * tt
+                    cin = pos[corners[inside]].mean(axis=0)
+                    cout = pos[corners[~inside]].mean(axis=0)
+                    direction = cout - cin
+                    for k in range(n):
+                        e0, e1, e2 = mt.CASE_TRIS[case, k]
+                        a, b, c = pts[e0], pts[e1], pts[e2]
+                        nrm = np.cross(b - a, c - a)
+                        if nrm.dot(direction) < 0:
+                            b, c = c, b
+                        tris_out.append((a, b, c))
+    if not tris_out:
+        return np.zeros((0, 3, 3))
+    return np.array(tris_out)
+
+
+def mt_stats_ref(grid: np.ndarray, spacing, iso: float = 0.5) -> np.ndarray:
+    """``[volume, area]`` of the marching-tetrahedra isosurface of ``grid``."""
+    tris = _mt_triangles(grid, spacing, iso)
+    if len(tris) == 0:
+        return np.array([0.0, 0.0], dtype=np.float32)
+    return mesh_stats_ref(tris.astype(np.float32))
+
+
+def mt_vertices_ref(grid: np.ndarray, spacing, iso: float = 0.5) -> np.ndarray:
+    """Unique mesh vertices (float32[N, 3]) of the MT isosurface."""
+    tris = _mt_triangles(grid, spacing, iso)
+    if len(tris) == 0:
+        return np.zeros((0, 3), dtype=np.float32)
+    pts = tris.reshape(-1, 3)
+    return np.unique(pts.round(decimals=9), axis=0).astype(np.float32)

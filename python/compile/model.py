@@ -1,0 +1,93 @@
+"""L2 — the JAX compute graphs that the AOT artifacts are lowered from.
+
+Each function here is a *whole-artifact* computation: it composes the L1
+Pallas kernels (which lower into the same HLO module) and adds the cheap
+eilogue math (sqrt, abs) so the Rust coordinator receives final feature
+values and never re-derives anything on the request path.
+
+Static-shape contract (PJRT artifacts are AOT-compiled per size bucket):
+
+* ``shape_diameters``  — f32[N, 3] vertices, padded by duplicating a real
+  vertex; N ∈ VERTEX_BUCKETS.
+* ``shape_mesh_stats`` — f32[T, 9] triangle soup, zero-padded; T ∈
+  TRI_BUCKETS.
+* ``shape_mc_stats``   — f32[D, H, W] binary grid (zero-padded) + f32[3]
+  spacing; (D, H, W) ∈ GRID_BUCKETS.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import diameter, mc_grid, mesh_stats
+
+#: Vertex-count buckets for the diameter artifact. The default dataset is
+#: generated at 1/8 of the paper's vertex scale (single-core testbed — see
+#: DESIGN.md §Substitutions); `--full` adds the paper-scale buckets.
+VERTEX_BUCKETS = [512, 1024, 2048, 4096, 8192, 16384, 32768, 65536]
+VERTEX_BUCKETS_FULL = [131072, 262144]
+
+#: Triangle-count buckets for the mesh-stats artifact (~2× vertex counts).
+TRI_BUCKETS = [1024, 4096, 16384, 65536, 131072]
+
+#: (D, H, W) buckets for the fused grid-stats artifact. D = k·slab + 1.
+GRID_BUCKETS = [(33, 40, 40), (65, 72, 72), (129, 136, 136)]
+
+
+def shape_diameters(v: jax.Array) -> tuple[jax.Array]:
+    """f32[N, 3] → f32[4]: max [3D, XY, YZ, XZ] diameters (mm, not squared).
+
+    -1 squared-distance sentinels (empty planes) map to NaN, matching
+    PyRadiomics' behaviour for degenerate planar diameters.
+    """
+    d2 = diameter.diameters(v)
+    nan = jnp.float32(jnp.nan)
+    return (jnp.where(d2 < 0.0, nan, jnp.sqrt(jnp.maximum(d2, 0.0))),)
+
+
+def shape_mesh_stats(tris: jax.Array) -> tuple[jax.Array]:
+    """f32[T, 9] → f32[2]: [mesh_volume (abs), surface_area]."""
+    s = mesh_stats.mesh_stats(tris)
+    return (jnp.stack([jnp.abs(s[0]), s[1]]),)
+
+
+def shape_mc_stats(grid: jax.Array, spacing: jax.Array) -> tuple[jax.Array]:
+    """(f32[D, H, W], f32[3]) → f32[2]: fused [mesh_volume, surface_area]."""
+    s = mc_grid.mc_stats(grid, spacing)
+    return (jnp.stack([jnp.abs(s[0]), s[1]]),)
+
+
+def pad_vertices(v, n: int):
+    """Pad f32[m, 3] to f32[n, 3] by duplicating the first vertex."""
+    import numpy as np
+
+    m = len(v)
+    if m == 0:
+        raise ValueError("cannot pad an empty vertex set")
+    if m > n:
+        raise ValueError(f"{m} vertices exceed bucket {n}")
+    out = np.empty((n, 3), dtype=np.float32)
+    out[:m] = v
+    out[m:] = v[0]
+    return out
+
+
+def pad_tris(t, n: int):
+    """Pad f32[m, 9] to f32[n, 9] with zero (degenerate) triangles."""
+    import numpy as np
+
+    m = len(t)
+    if m > n:
+        raise ValueError(f"{m} triangles exceed bucket {n}")
+    out = np.zeros((n, 9), dtype=np.float32)
+    out[:m] = t
+    return out
+
+
+def bucket_for(count: int, buckets) -> int:
+    """Smallest bucket ≥ count (same policy as rust runtime::buckets)."""
+    for b in buckets:
+        if count <= b:
+            return b
+    raise ValueError(f"count {count} exceeds largest bucket {buckets[-1]}")

@@ -1,0 +1,66 @@
+"""AOT pipeline tests: lowering each kernel family to HLO text and the
+manifest contract the rust registry parses."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def _lower(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_mesh_stats_artifact_lowers():
+    text = _lower(model.shape_mesh_stats, jax.ShapeDtypeStruct((1024, 9), jnp.float32))
+    assert text.startswith("HloModule")
+    assert "f32[2]" in text
+
+
+def test_mc_grid_artifact_lowers():
+    text = _lower(
+        model.shape_mc_stats,
+        jax.ShapeDtypeStruct((33, 40, 40), jnp.float32),
+        jax.ShapeDtypeStruct((3,), jnp.float32),
+    )
+    assert text.startswith("HloModule")
+    # the MT case table must be embedded as a constant: the ENTRY
+    # computation takes only (grid, spacing) — rust passes nothing else.
+    entry = text[text.index("ENTRY") :]
+    assert "parameter(0)" in entry and "parameter(1)" in entry
+    assert "parameter(2)" not in entry
+
+
+def test_manifest_contract(tmp_path):
+    """lower_all writes a manifest whose lines carry the 5 required keys."""
+    # monkeypatch the bucket lists down so the test is fast
+    old_v, old_t, old_g = model.VERTEX_BUCKETS, model.TRI_BUCKETS, model.GRID_BUCKETS
+    model.VERTEX_BUCKETS, model.TRI_BUCKETS, model.GRID_BUCKETS = (
+        [64],
+        [64],
+        [(17, 8, 8)],  # D must be k·slab + 1 (slab = 16)
+    )
+    try:
+        lines = aot.lower_all(str(tmp_path), verbose=False)
+    finally:
+        model.VERTEX_BUCKETS, model.TRI_BUCKETS, model.GRID_BUCKETS = old_v, old_t, old_g
+    assert len(lines) == 3
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    assert manifest == lines
+    for line in lines:
+        keys = dict(tok.split("=", 1) for tok in line.split())
+        assert set(keys) == {"name", "bucket", "file", "inputs", "outputs"}
+        assert (tmp_path / keys["file"]).exists()
+        assert keys["outputs"] == "1"
+        assert keys["inputs"].startswith("f32[")
+
+
+def test_full_flag_extends_vertex_buckets(tmp_path):
+    # --full adds the paper-scale buckets to the job list; just check the
+    # bucket policy sees them.
+    assert model.bucket_for(
+        200_000, model.VERTEX_BUCKETS + model.VERTEX_BUCKETS_FULL
+    ) == 262144
+    with pytest.raises(ValueError):
+        model.bucket_for(200_000, model.VERTEX_BUCKETS)

@@ -1,0 +1,26 @@
+//! Fig. 1 regeneration: the five kernel strategies × three GPU models,
+//! total time over all input files (the paper plots this on a log axis).
+//!
+//! Run: `cargo bench --offline --bench bench_fig1`
+
+mod common;
+
+use radpipe::experiments::{fig1, run_fig1};
+
+fn main() -> anyhow::Result<()> {
+    // Fig 1's winner pattern is scale-sensitive (H100's memory-term
+    // advantage needs ≥ ~30k-vertex cases); use at least 1/8 paper scale.
+    let scale = common::bench_scale().max(0.125);
+    std::env::set_var("RADPIPE_BENCH_SCALE", scale.to_string());
+    let manifest = common::bench_dataset();
+    common::banner(&format!(
+        "FIG 1 — strategy comparison (scale {scale}, sum over 20 cases)"
+    ));
+    let rows = run_fig1(&manifest, 0)?;
+    print!("{}", fig1::to_table(&rows).to_text());
+    println!("\nwinners (paper: H100→memory-careful, 4070→local accumulators, T4→block reduction):");
+    for (dev, s) in fig1::winners(&rows) {
+        println!("  {dev}: {}", s.label());
+    }
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Fig. 2 regeneration. LEFT: per-case 3D-feature time across the six
+//! machine configurations (log-log in the paper). RIGHT: speedup over the
+//! Intel Xeon baseline.
+//!
+//! Run: `cargo bench --offline --bench bench_fig2`
+
+mod common;
+
+use radpipe::experiments::{fig2, run_fig2};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = common::bench_dataset();
+    common::banner(&format!("FIG 2 LEFT+RIGHT (scale {})", common::bench_scale()));
+    let rows = run_fig2(&manifest)?;
+    print!("{}", fig2::to_table(&rows).to_text());
+
+    // summary: speedup bands per GPU (the paper's 8–24× T4, ≥50×/2000× H100)
+    common::banner("speedup bands vs Intel Xeon (paper: T4 8-24x, H100 50-2000x)");
+    for dev in ["NVIDIA T4", "NVIDIA RTX 4070", "NVIDIA H100"] {
+        let s: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.machine.contains(dev))
+            .map(|r| r.speedup_vs_xeon)
+            .collect();
+        let min = s.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = s.iter().copied().fold(0.0f64, f64::max);
+        println!("  {dev}: {min:.1}x .. {max:.1}x");
+    }
+    Ok(())
+}

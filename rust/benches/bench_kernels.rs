@@ -1,0 +1,136 @@
+//! Micro-benchmarks feeding EXPERIMENTS.md §Perf:
+//!   * mesher throughput (fused MT walk) vs volume size,
+//!   * CPU diameter strategies vs vertex count,
+//!   * PJRT artifact execution per bucket (transfer vs execute split).
+//!
+//! Run: `cargo bench --offline --bench bench_kernels`
+
+mod common;
+
+use radpipe::features::brute_force_diameters;
+use radpipe::geometry::Vec3;
+use radpipe::mc::mesh_roi;
+use radpipe::parallel::{compute_diameters, Strategy};
+use radpipe::report::Table;
+use radpipe::runtime::Engine;
+use radpipe::testkit::Pcg32;
+use radpipe::volume::{Dims, VoxelGrid};
+
+fn sphere(n: usize, r: f64) -> VoxelGrid<u8> {
+    let mut m = VoxelGrid::zeros(Dims::new(n, n, n), Vec3::splat(1.0));
+    let c = n as f64 / 2.0;
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let (dx, dy, dz) = (x as f64 - c, y as f64 - c, z as f64 - c);
+                if dx * dx + dy * dy + dz * dz <= r * r {
+                    m.set(x, y, z, 1);
+                }
+            }
+        }
+    }
+    m
+}
+
+fn cloud(n: usize) -> Vec<Vec3> {
+    let mut rng = Pcg32::new(42);
+    (0..n)
+        .map(|_| {
+            Vec3::new(
+                rng.range_f64(0.0, 100.0),
+                rng.range_f64(0.0, 100.0),
+                (rng.below(64) as f64) * 1.5, // quantised z planes
+            )
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("MESHER — fused marching-tetrahedra walk");
+    let mut t = Table::new(vec!["volume", "voxels", "verts", "best[ms]", "Mcells/s"]);
+    for n in [32usize, 64, 96] {
+        let mask = sphere(n, n as f64 * 0.4);
+        let mesh = mesh_roi(&mask); // warm result for the verts column
+        let (best, _) = common::measure(3, || {
+            std::hint::black_box(mesh_roi(&mask));
+        });
+        let cells = (n - 1).pow(3) as f64;
+        t.row(vec![
+            format!("{n}^3"),
+            n.pow(3).to_string(),
+            mesh.vertices.len().to_string(),
+            format!("{:.1}", best * 1e3),
+            format!("{:.1}", cells / best / 1e6),
+        ]);
+    }
+    print!("{}", t.to_text());
+
+    common::banner("DIAMETER — CPU strategies (Mpairs/s, this machine)");
+    let mut t = Table::new(vec!["N", "strategy", "best[ms]", "Mpairs/s"]);
+    for n in [2000usize, 8000, 16000] {
+        let v = cloud(n);
+        let pairs = (n as f64) * (n as f64 + 1.0) / 2.0;
+        // brute-force single-thread reference first
+        let (best, _) = common::measure(2, || {
+            std::hint::black_box(brute_force_diameters(&v));
+        });
+        t.row(vec![
+            n.to_string(),
+            "0-brute-single-thread".into(),
+            format!("{:.1}", best * 1e3),
+            format!("{:.1}", pairs / best / 1e6),
+        ]);
+        for s in Strategy::ALL {
+            let (best, _) = common::measure(2, || {
+                std::hint::black_box(compute_diameters(s, &v, 0));
+            });
+            t.row(vec![
+                n.to_string(),
+                s.label().into(),
+                format!("{:.1}", best * 1e3),
+                format!("{:.1}", pairs / best / 1e6),
+            ]);
+        }
+    }
+    print!("{}", t.to_text());
+
+    if let Some(dir) = common::artifact_dir() {
+        common::banner("PJRT ARTIFACTS — diameter kernel per bucket");
+        let engine = Engine::start(&dir)?;
+        let mut t = Table::new(vec![
+            "bucket", "compile[ms]", "transfer[ms]", "execute[ms]", "Mpairs/s",
+        ]);
+        for bucket in [512usize, 2048, 8192, 16384] {
+            let v = cloud(bucket);
+            let verts: Vec<f32> = v.iter().flat_map(|p| p.to_f32()).collect();
+            let (_, first) = engine.handle().diameters(verts.clone())?;
+            // measured run (cache warm)
+            let (_, timing) = engine.handle().diameters(verts.clone())?;
+            let pairs = (bucket as f64) * (bucket as f64 + 1.0) / 2.0;
+            t.row(vec![
+                bucket.to_string(),
+                format!("{:.0}", first.compile.as_secs_f64() * 1e3),
+                format!("{:.2}", timing.transfer.as_secs_f64() * 1e3),
+                format!("{:.1}", timing.execute.as_secs_f64() * 1e3),
+                format!("{:.1}", pairs / timing.execute.as_secs_f64() / 1e6),
+            ]);
+        }
+        print!("{}", t.to_text());
+
+        common::banner("PJRT ARTIFACTS — mesh_stats kernel per bucket");
+        let mut t = Table::new(vec!["bucket", "transfer[ms]", "execute[ms]", "Mtris/s"]);
+        for bucket in [1024usize, 16384, 65536] {
+            let tris = vec![0.5f32; bucket * 9];
+            let _ = engine.handle().mesh_stats(tris.clone())?;
+            let (_, timing) = engine.handle().mesh_stats(tris.clone())?;
+            t.row(vec![
+                bucket.to_string(),
+                format!("{:.2}", timing.transfer.as_secs_f64() * 1e3),
+                format!("{:.2}", timing.execute.as_secs_f64() * 1e3),
+                format!("{:.1}", bucket as f64 / timing.execute.as_secs_f64() / 1e6),
+            ]);
+        }
+        print!("{}", t.to_text());
+    }
+    Ok(())
+}

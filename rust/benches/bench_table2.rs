@@ -1,0 +1,58 @@
+//! Table 2 regeneration: per-case breakdown (file read, M.C., Diam,
+//! D.tran) for the CPU baseline and the accelerated PJRT path, plus the
+//! paper-GPU projections, over the 20-case synthetic KiTS19 stand-in.
+//!
+//! Run: `cargo bench --offline --bench bench_table2`
+//! Scale via RADPIPE_BENCH_SCALE (default 0.05; paper scale = 1.0).
+
+mod common;
+
+use radpipe::experiments::{run_table2, table2, Table2Options};
+use radpipe::synth::paper_cases;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = common::bench_dataset();
+    let artifact_dir = common::artifact_dir();
+
+    common::banner(&format!(
+        "TABLE 2 — per-case breakdown (scale {}, 20 cases)",
+        common::bench_scale()
+    ));
+    let opts = Table2Options {
+        artifact_dir: artifact_dir.clone().unwrap_or_else(|| "artifacts".into()),
+        cpu_only: artifact_dir.is_none(),
+    };
+    let rows = run_table2(&manifest, &opts)?;
+    print!("{}", table2::to_table(&rows).to_text());
+
+    // headline claims
+    let share_min = rows.iter().map(|r| r.diam_share).fold(f64::INFINITY, f64::min);
+    let share_max = rows.iter().map(|r| r.diam_share).fold(0.0, f64::max);
+    println!(
+        "\ndiameter share of post-read CPU time: {:.1}%..{:.1}%  (paper: 95.7%..99.9%)",
+        share_min * 100.0,
+        share_max * 100.0
+    );
+
+    // paper-vs-projection comparison on the shared case ids
+    common::banner("projection vs paper (RTX 4070 diameter column, ms)");
+    let paper = paper_cases();
+    let scale = common::bench_scale();
+    let mut t = radpipe::report::Table::new(vec![
+        "case", "paper Diam[ms]", "proj 4070[ms]", "note",
+    ]);
+    for r in &rows {
+        if let Some(p) = paper.iter().find(|p| p.case_id == r.case_id) {
+            // projections are at the *scaled* vertex count; paper column is
+            // full scale — note the expected ~scale² factor.
+            t.row(vec![
+                r.case_id.clone(),
+                format!("{:.1}", p.t_diam_gpu_ms),
+                format!("{:.2}", r.diam_4070_ms),
+                format!("x{:.4} scale^2 expected", scale * scale),
+            ]);
+        }
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}

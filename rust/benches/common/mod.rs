@@ -1,0 +1,59 @@
+//! Shared bench harness utilities (the offline mirror has no criterion —
+//! this is the in-repo measurement kit used by all `cargo bench` targets).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use radpipe::io::DatasetManifest;
+use radpipe::synth::{generate_dataset, GenOptions};
+
+/// Vertex-count scale for bench datasets; override with
+/// `RADPIPE_BENCH_SCALE` (1.0 = paper scale — hours on this testbed).
+pub fn bench_scale() -> f64 {
+    std::env::var("RADPIPE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05)
+}
+
+/// Generate (or reuse) the deterministic bench dataset.
+pub fn bench_dataset() -> DatasetManifest {
+    let scale = bench_scale();
+    let root = PathBuf::from(format!("target/bench-data-{scale}"));
+    if root.join("cases.txt").exists() {
+        radpipe::io::scan_dataset(&root).expect("rescan bench dataset")
+    } else {
+        eprintln!("generating bench dataset at scale {scale} (once)…");
+        generate_dataset(&root, &GenOptions { scale, seed: 7 }).expect("generate dataset")
+    }
+}
+
+/// Artifact dir if `make artifacts` has produced one.
+pub fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: no artifacts/ bundle — accelerated columns skipped");
+        None
+    }
+}
+
+/// Measure a closure `iters` times; returns (best, mean) seconds.
+pub fn measure<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut sum = 0.0;
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+        sum += dt;
+    }
+    (best, sum / iters.max(1) as f64)
+}
+
+/// Simple section banner so `cargo bench | tee` output reads well.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

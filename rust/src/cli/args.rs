@@ -1,0 +1,145 @@
+//! Tiny long-option argument parser: `--key value`, `--flag`, positionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Option keys that were consumed via accessors (for strict checking).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse an argv tail. `--key value` pairs become options; a `--key`
+    /// followed by another `--…` (or nothing) becomes a boolean flag.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                let next = argv.get(i + 1);
+                match next {
+                    Some(v) if !v.starts_with("--") => {
+                        if out.options.insert(key.to_string(), v.clone()).is_some() {
+                            bail!("duplicate option --{key}");
+                        }
+                        i += 2;
+                    }
+                    _ => {
+                        out.flags.push(key.to_string());
+                        i += 1;
+                    }
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.known.borrow_mut().push(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.opt(key).with_context(|| format!("missing required option --{key}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.known.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(raw) => match raw.parse() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => bail!("--{key}: cannot parse '{raw}': {e}"),
+            },
+        }
+    }
+
+    /// Error on any option/flag that no accessor asked about (typo guard).
+    pub fn finish(&self) -> Result<()> {
+        let known = self.known.borrow();
+        for k in self.options.keys() {
+            if !known.iter().any(|x| x == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !known.iter().any(|x| x == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        // NB: a `--flag` followed by a bare token would consume it as a
+        // value (inherent ambiguity without a flag registry); positionals
+        // therefore come before flags, which all radpipe commands follow.
+        let a = Args::parse(&argv(&["cmd", "pos2", "--out", "dir", "--fast"])).unwrap();
+        assert_eq!(a.positional, vec!["cmd", "pos2"]);
+        assert_eq!(a.opt("out"), Some("dir"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = Args::parse(&argv(&["--verbose", "--n", "3"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_parse::<usize>("n").unwrap(), Some(3));
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = Args::parse(&argv(&[])).unwrap();
+        assert!(a.req("data").is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        assert!(Args::parse(&argv(&["--x", "1", "--x", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_caught_by_finish() {
+        let a = Args::parse(&argv(&["--bogus", "1"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn parse_error_mentions_key() {
+        let a = Args::parse(&argv(&["--n", "abc"])).unwrap();
+        let err = a.opt_parse::<usize>("n").unwrap_err();
+        assert!(err.to_string().contains("--n"));
+    }
+}

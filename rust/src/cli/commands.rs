@@ -1,0 +1,265 @@
+//! Subcommand implementations (thin wrappers over [`crate::experiments`],
+//! [`crate::pipeline`] and [`crate::synth`]).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::args::Args;
+use crate::config::{Backend, PipelineConfig};
+use crate::dispatch::FeatureExtractor;
+use crate::experiments;
+use crate::gpusim::{cpu_profiles, gpu_profiles};
+use crate::pipeline::run_pipeline;
+use crate::report::{JsonValue, Table};
+use crate::synth::{generate_dataset, GenOptions};
+
+const USAGE: &str = "\
+radpipe — PyRadiomics-cuda reproduction pipeline
+
+USAGE:
+  radpipe gen-data  --out DIR [--scale F] [--seed N]
+  radpipe extract   --data DIR [--config FILE] [--backend auto|cpu|accelerated]
+                    [--artifacts DIR] [--json FILE] [--workers N]
+  radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
+  radpipe fig1      --data DIR [--threads N]
+  radpipe fig2      --data DIR
+  radpipe inspect   --mask FILE
+  radpipe devices   (list Table 1 device profiles)
+  radpipe version
+";
+
+pub fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(&argv)?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "gen-data" => gen_data(&args),
+        "extract" => extract(&args),
+        "table2" => table2(&args),
+        "fig1" => fig1(&args),
+        "fig2" => fig2(&args),
+        "inspect" => inspect(&args),
+        "devices" => devices(&args),
+        "version" => {
+            println!("radpipe {}", crate::version());
+            Ok(())
+        }
+        "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.req("out")?);
+    let opts = GenOptions {
+        scale: args.opt_parse::<f64>("scale")?.unwrap_or(0.125),
+        seed: args.opt_parse::<u64>("seed")?.unwrap_or(7),
+    };
+    args.finish()?;
+    let m = generate_dataset(&out, &opts)?;
+    let mut t = Table::new(vec!["case", "dims", "vertices"]);
+    for e in &m.cases {
+        t.row(vec![e.case_id.clone(), e.dims.to_string(), e.target_vertices.to_string()]);
+    }
+    print!("{}", t.to_text());
+    println!("wrote {} cases to {}", m.cases.len(), out.display());
+    Ok(())
+}
+
+fn load_config(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => PipelineConfig::from_file(Path::new(path))?,
+        None => PipelineConfig::default(),
+    };
+    if let Some(b) = args.opt("backend") {
+        cfg.backend = Backend::parse(b)?;
+    }
+    if let Some(dir) = args.opt("artifacts") {
+        cfg.artifact_dir = PathBuf::from(dir);
+    }
+    if let Some(w) = args.opt_parse::<usize>("workers")? {
+        cfg.read_workers = w;
+        cfg.feature_workers = w;
+    }
+    Ok(cfg)
+}
+
+fn extract(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.req("data")?);
+    let cfg = load_config(args)?;
+    let json_out = args.opt("json").map(PathBuf::from);
+    args.finish()?;
+
+    let manifest = crate::io::scan_dataset(&data)?;
+    let extractor = FeatureExtractor::new(&cfg)?;
+    let report = run_pipeline(&manifest, &cfg, &extractor)?;
+
+    let mut t = Table::new(vec!["case", "verts", "MeshVolume", "SurfaceArea", "Max3DDiam", "path", "total[ms]"]);
+    for r in &report.results {
+        t.row(vec![
+            r.case_id.clone(),
+            r.features.vertex_count.to_string(),
+            format!("{:.1}", r.features.mesh_volume),
+            format!("{:.1}", r.features.surface_area),
+            format!("{:.2}", r.features.maximum_3d_diameter),
+            format!("{:?}", r.path),
+            format!("{:.1}", r.timing.total().as_secs_f64() * 1e3),
+        ]);
+    }
+    print!("{}", t.to_text());
+    for (case, err) in &report.failures {
+        eprintln!("FAILED {case}: {err}");
+    }
+    eprintln!("--- metrics ---\n{}", report.metrics_text);
+    eprintln!("wall: {:.2}s", report.wall.as_secs_f64());
+
+    if let Some(path) = json_out {
+        let mut doc = JsonValue::obj();
+        let mut cases = Vec::new();
+        for r in &report.results {
+            let mut c = JsonValue::obj();
+            c.set("case", r.case_id.as_str());
+            c.set("path", format!("{:?}", r.path));
+            for (name, value) in r.features.named() {
+                c.set(name, value);
+            }
+            cases.push(c);
+        }
+        doc.set("cases", JsonValue::Arr(cases));
+        doc.set("failures", report.failures.len());
+        std::fs::write(&path, doc.to_string())
+            .with_context(|| format!("write {}", path.display()))?;
+        eprintln!("wrote {}", path.display());
+    }
+    if !report.failures.is_empty() {
+        bail!("{} case(s) failed", report.failures.len());
+    }
+    Ok(())
+}
+
+fn table2(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.req("data")?);
+    let opts = experiments::table2::Table2Options {
+        artifact_dir: PathBuf::from(args.opt("artifacts").unwrap_or("artifacts")),
+        cpu_only: args.flag("cpu-only"),
+    };
+    args.finish()?;
+    let manifest = crate::io::scan_dataset(&data)?;
+    let rows = experiments::run_table2(&manifest, &opts)?;
+    print!("{}", experiments::table2::to_table(&rows).to_text());
+    let share_min = rows.iter().map(|r| r.diam_share).fold(f64::INFINITY, f64::min);
+    let share_max = rows.iter().map(|r| r.diam_share).fold(0.0, f64::max);
+    println!(
+        "diameter share of post-read CPU time: {:.1}%..{:.1}% (paper: 95.7%..99.9%)",
+        share_min * 100.0,
+        share_max * 100.0
+    );
+    Ok(())
+}
+
+fn fig1(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.req("data")?);
+    let threads = args.opt_parse::<usize>("threads")?.unwrap_or(0);
+    args.finish()?;
+    let manifest = crate::io::scan_dataset(&data)?;
+    let rows = experiments::run_fig1(&manifest, threads)?;
+    print!("{}", experiments::fig1::to_table(&rows).to_text());
+    println!("winners per device:");
+    for (dev, strat) in experiments::fig1::winners(&rows) {
+        println!("  {dev}: {}", strat.label());
+    }
+    Ok(())
+}
+
+fn fig2(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.req("data")?);
+    args.finish()?;
+    let manifest = crate::io::scan_dataset(&data)?;
+    let rows = experiments::run_fig2(&manifest)?;
+    print!("{}", experiments::fig2::to_table(&rows).to_text());
+    Ok(())
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let mask_path = PathBuf::from(args.req("mask")?);
+    args.finish()?;
+    let cfg = PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() };
+    let ex = FeatureExtractor::new(&cfg)?;
+    let out = ex.execute(&mask_path)?;
+    let mut t = Table::new(vec!["feature", "value"]);
+    for (name, value) in out.features.named() {
+        t.row(vec![name.to_string(), format!("{value:.6}")]);
+    }
+    t.row(vec!["VertexCount".to_string(), out.features.vertex_count.to_string()]);
+    t.row(vec!["VoxelCount".to_string(), out.features.voxel_count.to_string()]);
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn devices(args: &Args) -> Result<()> {
+    args.finish()?;
+    let mut t = Table::new(vec!["device", "class", "cores", "clock[GHz]", "peak[GFLOPs]", "mem[GB/s]", "eff"]);
+    for p in gpu_profiles().iter().chain(cpu_profiles().iter()) {
+        t.row(vec![
+            p.name.to_string(),
+            format!("{:?}", p.class),
+            p.cores.to_string(),
+            format!("{:.2}", p.clock_ghz),
+            format!("{:.0}", p.peak_gflops()),
+            format!("{:.0}", p.mem_bw_gbs),
+            format!("{:.4}", p.efficiency),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn no_command_prints_usage() {
+        dispatch(argv(&[])).unwrap();
+    }
+
+    #[test]
+    fn version_and_devices_run() {
+        dispatch(argv(&["version"])).unwrap();
+        dispatch(argv(&["devices"])).unwrap();
+    }
+
+    #[test]
+    fn gen_data_and_inspect_roundtrip() {
+        let dir = std::env::temp_dir().join("radpipe_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        assert!(dir.join("cases.txt").exists());
+        let mask = dir.join("00009-2.rvol.gz");
+        dispatch(argv(&["inspect", "--mask", mask.to_str().unwrap()])).unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let err = dispatch(argv(&["devices", "--wat"])).unwrap_err();
+        assert!(err.to_string().contains("--wat"));
+    }
+}

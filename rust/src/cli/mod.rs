@@ -1,0 +1,26 @@
+//! CLI: argument parser + subcommands (no clap offline — in-repo parser).
+//!
+//! ```text
+//! radpipe gen-data  --out DIR [--scale F] [--seed N]
+//! radpipe extract   --data DIR [--config FILE] [--backend auto|cpu|accelerated] [--json FILE]
+//! radpipe table2    --data DIR [--backend ...]        # Table 2 harness
+//! radpipe fig1      [--vertices N[,N..]]              # Fig 1 harness
+//! radpipe fig2      [--list-devices]                  # Fig 2 harness
+//! radpipe inspect   --mask FILE
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> std::process::ExitCode {
+    match commands::dispatch(argv) {
+        Ok(()) => std::process::ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("radpipe: error: {e:#}");
+            std::process::ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Config system: a TOML-subset parser (no external codec crates offline)
+//! plus the typed [`PipelineConfig`] the launcher builds from it.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! (`"…"`), integer, float and boolean values, `#` comments. That covers
+//! every knob the pipeline exposes; nested tables/arrays are rejected with
+//! a clear error instead of being silently misparsed.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Which compute path the dispatcher should take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Probe for artifacts/PJRT and fall back to CPU — the paper's default.
+    Auto,
+    /// Force the CPU fallback.
+    Cpu,
+    /// Force the accelerated path; error if artifacts are unavailable.
+    Accelerated,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "auto" => Backend::Auto,
+            "cpu" => Backend::Cpu,
+            "accelerated" | "gpu" => Backend::Accelerated,
+            other => bail!("unknown backend '{other}' (auto|cpu|accelerated)"),
+        })
+    }
+}
+
+/// Typed pipeline configuration (defaults reflect the single-core testbed).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Artifact directory (the AOT HLO bundle).
+    pub artifact_dir: PathBuf,
+    /// Worker threads for the read stage.
+    pub read_workers: usize,
+    /// Worker threads for the mesh stage.
+    pub mesh_workers: usize,
+    /// Worker threads for the feature/dispatch stage.
+    pub feature_workers: usize,
+    /// Bounded-channel capacity between stages (backpressure knob).
+    pub queue_capacity: usize,
+    /// Backend selection policy.
+    pub backend: Backend,
+    /// Thread count handed to the CPU diameter strategies (0 = auto).
+    pub cpu_threads: usize,
+    /// Diameter strategy for the CPU path.
+    pub strategy: crate::parallel::Strategy,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            artifact_dir: PathBuf::from("artifacts"),
+            read_workers: 1,
+            mesh_workers: 1,
+            feature_workers: 1,
+            queue_capacity: 4,
+            backend: Backend::Auto,
+            cpu_threads: 0,
+            strategy: crate::parallel::Strategy::LocalAccumulators,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Load from a TOML file ([pipeline] section).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = PipelineConfig::default();
+        let empty = BTreeMap::new();
+        let section = doc.get("pipeline").unwrap_or(&empty);
+        for (key, value) in section {
+            match key.as_str() {
+                "artifact_dir" => cfg.artifact_dir = PathBuf::from(value.as_str()?),
+                "read_workers" => cfg.read_workers = value.as_usize()?,
+                "mesh_workers" => cfg.mesh_workers = value.as_usize()?,
+                "feature_workers" => cfg.feature_workers = value.as_usize()?,
+                "queue_capacity" => cfg.queue_capacity = value.as_usize()?.max(1),
+                "backend" => cfg.backend = Backend::parse(value.as_str()?)?,
+                "cpu_threads" => cfg.cpu_threads = value.as_usize()?,
+                "strategy" => {
+                    cfg.strategy = crate::parallel::Strategy::from_label(value.as_str()?)
+                        .with_context(|| format!("unknown strategy '{}'", value.as_str().unwrap_or("")))?
+                }
+                other => bail!("unknown [pipeline] key '{other}'"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.backend, Backend::Auto);
+        assert!(c.queue_capacity >= 1);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# experiment config
+[pipeline]
+artifact_dir = "artifacts"
+read_workers = 2
+mesh_workers = 3
+feature_workers = 4
+queue_capacity = 16
+backend = "cpu"
+cpu_threads = 8
+strategy = "2-block-reduction"
+"#;
+        let c = PipelineConfig::from_toml(text).unwrap();
+        assert_eq!(c.read_workers, 2);
+        assert_eq!(c.mesh_workers, 3);
+        assert_eq!(c.feature_workers, 4);
+        assert_eq!(c.queue_capacity, 16);
+        assert_eq!(c.backend, Backend::Cpu);
+        assert_eq!(c.cpu_threads, 8);
+        assert_eq!(c.strategy, crate::parallel::Strategy::BlockReduction);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = PipelineConfig::from_toml("[pipeline]\nbogus = 1\n").unwrap_err();
+        assert!(err.to_string().contains("bogus"));
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let err =
+            PipelineConfig::from_toml("[pipeline]\nbackend = \"quantum\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("quantum"));
+    }
+
+    #[test]
+    fn empty_config_gives_defaults() {
+        let c = PipelineConfig::from_toml("").unwrap();
+        assert_eq!(c.queue_capacity, PipelineConfig::default().queue_capacity);
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("auto").unwrap(), Backend::Auto);
+        assert_eq!(Backend::parse("gpu").unwrap(), Backend::Accelerated);
+        assert!(Backend::parse("x").is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! The TOML-subset parser behind [`super::PipelineConfig`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// `section → key → value` document map.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+fn parse_value(raw: &str, line_no: usize) -> Result<TomlValue> {
+    let raw = raw.trim();
+    if raw.starts_with('"') {
+        if !raw.ends_with('"') || raw.len() < 2 {
+            bail!("line {line_no}: unterminated string");
+        }
+        let inner = &raw[1..raw.len() - 1];
+        if inner.contains('"') {
+            bail!("line {line_no}: escapes/embedded quotes unsupported");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if raw == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if raw.starts_with('[') || raw.starts_with('{') {
+        bail!("line {line_no}: arrays/inline tables are not supported by this subset");
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {line_no}: cannot parse value '{raw}'")
+}
+
+/// Strip a trailing `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse the supported TOML subset into a section map. Keys before any
+/// `[section]` land in the `""` section.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    for (no, raw_line) in text.lines().enumerate() {
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: malformed section header '{line}'", no + 1);
+            };
+            if name.contains('[') || name.contains('.') {
+                bail!("line {}: nested tables unsupported ('{name}')", no + 1);
+            }
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected 'key = value', got '{line}'", no + 1);
+        };
+        let key = key.trim().to_string();
+        if key.is_empty() {
+            bail!("line {}: empty key", no + 1);
+        }
+        let value = parse_value(value, no + 1)?;
+        let prev = doc.entry(section.clone()).or_default().insert(key.clone(), value);
+        if prev.is_some() {
+            bail!("line {}: duplicate key '{key}'", no + 1);
+        }
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = parse_toml(
+            "a = 1\nb = -2\nc = 3.5\nd = true\ne = \"hi\"\n[s]\nf = false\n",
+        )
+        .unwrap();
+        let root = &doc[""];
+        assert_eq!(root["a"], TomlValue::Int(1));
+        assert_eq!(root["b"], TomlValue::Int(-2));
+        assert_eq!(root["c"], TomlValue::Float(3.5));
+        assert_eq!(root["d"], TomlValue::Bool(true));
+        assert_eq!(root["e"], TomlValue::Str("hi".into()));
+        assert_eq!(doc["s"]["f"], TomlValue::Bool(false));
+    }
+
+    #[test]
+    fn comments_stripped_outside_strings() {
+        let doc = parse_toml("a = 1 # trailing\nb = \"x # y\"\n").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Int(1));
+        assert_eq!(doc[""]["b"], TomlValue::Str("x # y".into()));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse_toml("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn arrays_rejected_loudly() {
+        let err = parse_toml("a = [1, 2]\n").unwrap_err();
+        assert!(err.to_string().contains("not supported"));
+    }
+
+    #[test]
+    fn nested_tables_rejected() {
+        assert!(parse_toml("[a.b]\n").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nnonsense\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(TomlValue::Int(5).as_usize().unwrap(), 5);
+        assert!(TomlValue::Int(-1).as_usize().is_err());
+        assert_eq!(TomlValue::Int(2).as_f64().unwrap(), 2.0);
+        assert!(TomlValue::Str("x".into()).as_bool().is_err());
+    }
+}

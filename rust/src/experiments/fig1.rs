@@ -1,0 +1,123 @@
+//! Fig. 1 reproduction: the five kernel optimisation strategies compared
+//! across the three GPU models (sum of processing time over all input
+//! files, log-scale in the paper).
+//!
+//! Two layers of evidence per (strategy, device):
+//!   * `measured_ms` — the strategy genuinely executed on this machine's
+//!     CPU threads (correctness + real WorkProfile tally);
+//!   * `simulated_ms` — the gpusim pricing of that tally on the device.
+
+use anyhow::Result;
+
+use crate::features::brute_force_diameters;
+use crate::gpusim::{estimate_kernel_time, gpu_profiles};
+use crate::io::DatasetManifest;
+use crate::parallel::{compute_diameters, Strategy};
+use crate::report::Table;
+use crate::volume::VoxelGrid;
+
+/// One (device, strategy) total over the dataset.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub device: &'static str,
+    pub strategy: Strategy,
+    /// Sum over all cases of the gpusim-priced kernel time, ms.
+    pub simulated_ms: f64,
+    /// Sum over all cases of the real CPU-thread execution, ms.
+    pub measured_ms: f64,
+}
+
+/// Run every strategy over every case of the dataset; verify all
+/// strategies agree with brute force; price each on each paper GPU.
+pub fn run_fig1(manifest: &DatasetManifest, threads: usize) -> Result<Vec<Fig1Row>> {
+    let gpus = gpu_profiles();
+    // accumulate per (device, strategy)
+    let mut sim = vec![[0.0f64; 5]; gpus.len()];
+    let mut measured = [0.0f64; 5];
+
+    for entry in &manifest.cases {
+        let mask: VoxelGrid<u8> = crate::io::read_rvol(&manifest.mask_path(entry))?;
+        let mesh = crate::mc::mesh_roi(&mask);
+        let oracle = brute_force_diameters(&mesh.vertices);
+        for (si, strategy) in Strategy::ALL.into_iter().enumerate() {
+            let (d, stats) = compute_diameters(strategy, &mesh.vertices, threads);
+            anyhow::ensure!(
+                d.as_array() == oracle.as_array(),
+                "{}: strategy {:?} diverges from brute force",
+                entry.case_id,
+                strategy
+            );
+            measured[si] += stats.wall.as_secs_f64() * 1e3;
+            for (di, dev) in gpus.iter().enumerate() {
+                sim[di][si] += estimate_kernel_time(&stats.profile, strategy, dev) * 1e3;
+            }
+        }
+    }
+
+    let mut rows = Vec::new();
+    for (di, dev) in gpus.iter().enumerate() {
+        for (si, strategy) in Strategy::ALL.into_iter().enumerate() {
+            rows.push(Fig1Row {
+                device: dev.name,
+                strategy,
+                simulated_ms: sim[di][si],
+                measured_ms: measured[si],
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render in a Fig. 1-like layout (one block per device).
+pub fn to_table(rows: &[Fig1Row]) -> Table {
+    let mut t = Table::new(vec!["device", "strategy", "sim total[ms]", "cpu-measured[ms]"]);
+    for r in rows {
+        t.row(vec![
+            r.device.to_string(),
+            r.strategy.label().to_string(),
+            format!("{:.1}", r.simulated_ms),
+            format!("{:.1}", r.measured_ms),
+        ]);
+    }
+    t
+}
+
+/// The winning strategy per device (for the EXPERIMENTS.md summary).
+pub fn winners(rows: &[Fig1Row]) -> Vec<(&'static str, Strategy)> {
+    let mut out = Vec::new();
+    for dev in ["NVIDIA H100", "NVIDIA RTX 4070", "NVIDIA T4"] {
+        let best = rows
+            .iter()
+            .filter(|r| r.device == dev)
+            .min_by(|a, b| a.simulated_ms.partial_cmp(&b.simulated_ms).unwrap());
+        if let Some(b) = best {
+            out.push((b.device, b.strategy));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::{generate_dataset, GenOptions};
+
+    #[test]
+    fn fig1_on_tiny_dataset_reproduces_winner_pattern() {
+        let root = std::env::temp_dir().join("radpipe_fig1_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let m = generate_dataset(&root, &GenOptions { scale: 0.002, seed: 2 }).unwrap();
+        let rows = run_fig1(&m, 2).unwrap();
+        assert_eq!(rows.len(), 15);
+        // Winner identities are scale-dependent (launch/atomic overheads
+        // dominate at toy vertex counts); the paper-scale winner pattern is
+        // asserted in gpusim::model::tests::fig1_strategy_winners_match_paper
+        // and regenerated on the real dataset by `cargo bench bench_fig1`.
+        assert_eq!(winners(&rows).len(), 3);
+        // every strategy really ran and agreed with brute force (run_fig1
+        // would have errored otherwise)
+        assert!(rows.iter().all(|r| r.measured_ms > 0.0));
+        assert!(rows.iter().all(|r| r.simulated_ms > 0.0));
+        assert_eq!(to_table(&rows).len(), 15);
+    }
+}

@@ -1,0 +1,154 @@
+//! Fig. 2 reproduction.
+//!
+//! LEFT: per-case 3D-feature processing time across machine configurations
+//! (3 CPUs + 3 GPUs, log-log in the paper). RIGHT: speedup of each GPU over
+//! the Intel Xeon PyRadiomics baseline.
+//!
+//! CPU lines use the gpusim CPU profiles (calibrated against the paper's
+//! published Xeon/Ryzen timings); GPU lines use the per-device best
+//! strategy from Fig. 1. The local testbed's *measured* CPU time is
+//! included as its own machine line for grounding.
+
+use anyhow::Result;
+
+use crate::features::brute_force_diameters;
+use crate::gpusim::{cpu_profiles, estimate_kernel_time, estimate_transfer_time, gpu_profiles};
+use crate::io::DatasetManifest;
+use crate::parallel::{Strategy, WorkProfile};
+use crate::report::Table;
+use crate::volume::VoxelGrid;
+use std::time::Instant;
+
+/// One (case, machine) point of Fig. 2-left, plus the speedup for -right.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub case_id: String,
+    pub vertices: usize,
+    pub machine: String,
+    pub time_ms: f64,
+    /// vs the Intel Xeon baseline on the same case (Fig. 2 right).
+    pub speedup_vs_xeon: f64,
+}
+
+fn best_strategy_for(device_name: &str) -> Strategy {
+    match device_name {
+        "NVIDIA H100" => Strategy::Tiled2D,
+        "NVIDIA RTX 4070" => Strategy::LocalAccumulators,
+        "NVIDIA T4" => Strategy::BlockReduction,
+        _ => Strategy::BlockReduction,
+    }
+}
+
+/// Compute the full grid of Fig. 2 points over a dataset.
+pub fn run_fig2(manifest: &DatasetManifest) -> Result<Vec<Fig2Row>> {
+    let gpus = gpu_profiles();
+    let cpus = cpu_profiles();
+    let mut rows = Vec::new();
+
+    for entry in &manifest.cases {
+        let mask: VoxelGrid<u8> = crate::io::read_rvol(&manifest.mask_path(entry))?;
+        let mesh = crate::mc::mesh_roi(&mask);
+        let n = mesh.vertices.len() as u64;
+
+        // local measured baseline (this testbed = "local 1-core" machine)
+        let t0 = Instant::now();
+        std::hint::black_box(brute_force_diameters(std::hint::black_box(&mesh.vertices)));
+        let local_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let pairs = n * (n + 1) / 2;
+        let profile = WorkProfile {
+            pairs,
+            distance_ops: pairs,
+            global_atomics: 64,
+            block_reductions: n.div_ceil(256),
+            tile_bytes: 0,
+            logical_threads: n,
+            index_ops: pairs,
+        };
+
+        // Xeon baseline (denominator of Fig. 2-right)
+        let xeon = cpus.iter().find(|p| p.name.contains("Xeon")).unwrap();
+        let xeon_ms =
+            estimate_kernel_time(&profile, Strategy::EqualSplit, xeon) * 1e3;
+
+        let mut push = |machine: String, time_ms: f64| {
+            rows.push(Fig2Row {
+                case_id: entry.case_id.clone(),
+                vertices: n as usize,
+                machine,
+                time_ms,
+                speedup_vs_xeon: xeon_ms / time_ms.max(1e-9),
+            });
+        };
+
+        for cpu in &cpus {
+            let t = estimate_kernel_time(&profile, Strategy::EqualSplit, cpu) * 1e3;
+            push(format!("{} (PyRadiomics, sim)", cpu.name), t);
+        }
+        for gpu in &gpus {
+            let s = best_strategy_for(gpu.name);
+            let t = (estimate_kernel_time(&profile, s, gpu)
+                + estimate_transfer_time(n * 12, gpu))
+                * 1e3;
+            push(format!("{} (PyRadiomics-cuda, sim)", gpu.name), t);
+        }
+        push("local 1-core (measured)".to_string(), local_ms);
+    }
+    Ok(rows)
+}
+
+/// Fig. 2 rendered as a table (cases × machines, time + speedup).
+pub fn to_table(rows: &[Fig2Row]) -> Table {
+    let mut t = Table::new(vec!["case", "verts", "machine", "time[ms]", "speedup-vs-Xeon"]);
+    for r in rows {
+        t.row(vec![
+            r.case_id.clone(),
+            r.vertices.to_string(),
+            r.machine.clone(),
+            format!("{:.2}", r.time_ms),
+            format!("{:.1}", r.speedup_vs_xeon),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::{generate_dataset, GenOptions};
+
+    #[test]
+    fn fig2_reproduces_speedup_bands() {
+        let root = std::env::temp_dir().join("radpipe_fig2_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let m = generate_dataset(&root, &GenOptions { scale: 0.02, seed: 4 }).unwrap();
+        let rows = run_fig2(&m).unwrap();
+        // 20 cases × 7 machines
+        assert_eq!(rows.len(), 140);
+
+        // biggest case: find its rows
+        let biggest = rows
+            .iter()
+            .filter(|r| r.machine.contains("H100"))
+            .max_by_key(|r| r.vertices)
+            .unwrap();
+        // paper: H100 reaches 3 orders of magnitude over Xeon on big cases
+        assert!(
+            biggest.speedup_vs_xeon > 100.0,
+            "H100 speedup {}",
+            biggest.speedup_vs_xeon
+        );
+        // CPU machines never report speedup > ~4 (paper: "not more than 3x")
+        for r in rows.iter().filter(|r| r.machine.contains("PyRadiomics,")) {
+            assert!(r.speedup_vs_xeon < 5.0, "{}: {}", r.machine, r.speedup_vs_xeon);
+        }
+        // times grow with vertex count on every machine (log-log monotone-ish):
+        // compare smallest vs biggest case per machine.
+        for machine in ["NVIDIA T4 (PyRadiomics-cuda, sim)", "Intel Xeon E5649 (PyRadiomics, sim)"] {
+            let mut ms: Vec<_> =
+                rows.iter().filter(|r| r.machine == machine).collect();
+            ms.sort_by_key(|r| r.vertices);
+            assert!(ms.first().unwrap().time_ms < ms.last().unwrap().time_ms);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment harnesses: one function per paper table/figure, shared by the
+//! CLI subcommands, `cargo bench` targets and the examples so every surface
+//! regenerates identical artifacts.
+
+pub mod fig1;
+pub mod fig2;
+pub mod table2;
+
+pub use fig1::{run_fig1, Fig1Row};
+pub use fig2::{run_fig2, Fig2Row};
+pub use table2::{run_table2, Table2Options, Table2Row};

@@ -1,0 +1,235 @@
+//! Table 2 reproduction: per-case breakdown of the processing time into
+//! file reading, marching cubes, diameter calculation and (accelerated
+//! path) device transfer, plus the Comp./Overall speedups.
+//!
+//! Columns measured on this testbed:
+//!   * baseline = the faithful single-thread CPU port (PyRadiomics stand-in)
+//!   * accel    = the PJRT artifact path (PyRadiomics-cuda stand-in)
+//! plus paper-published values and gpusim device projections for context
+//! (DESIGN.md §Substitutions — the real GPUs are simulated).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Backend, PipelineConfig};
+use crate::dispatch::FeatureExtractor;
+use crate::gpusim::{estimate_kernel_time, estimate_transfer_time, gpu_profiles};
+use crate::io::DatasetManifest;
+use crate::parallel::{Strategy, WorkProfile};
+use crate::report::Table;
+
+/// Options for the Table 2 harness.
+#[derive(Debug, Clone)]
+pub struct Table2Options {
+    /// Artifact directory for the accelerated path.
+    pub artifact_dir: std::path::PathBuf,
+    /// Skip the accelerated path (CPU-only run).
+    pub cpu_only: bool,
+}
+
+impl Default for Table2Options {
+    fn default() -> Self {
+        Table2Options { artifact_dir: "artifacts".into(), cpu_only: false }
+    }
+}
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub case_id: String,
+    pub dims: String,
+    pub vertices: usize,
+    pub read_ms: f64,
+    pub mc_cpu_ms: f64,
+    pub diam_cpu_ms: f64,
+    pub tran_accel_ms: f64,
+    pub mc_accel_ms: f64,
+    pub diam_accel_ms: f64,
+    pub speedup_comp: f64,
+    pub speedup_overall: f64,
+    /// gpusim projections of the diameter kernel on the paper's GPUs, ms.
+    pub diam_h100_ms: f64,
+    pub diam_4070_ms: f64,
+    pub diam_t4_ms: f64,
+    /// Diameter share of post-read CPU time (the 95.7–99.9 % claim).
+    pub diam_share: f64,
+}
+
+/// Run the harness over a dataset. Each case is measured once per path
+/// (the workloads are O(m²); single-shot timing is what the paper reports).
+pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Vec<Table2Row>> {
+    let cpu_cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 1, // faithful single-thread PyRadiomics baseline
+        ..Default::default()
+    };
+    let cpu = FeatureExtractor::new(&cpu_cfg)?;
+
+    let accel = if opts.cpu_only {
+        None
+    } else {
+        let accel_cfg = PipelineConfig {
+            backend: Backend::Accelerated,
+            artifact_dir: opts.artifact_dir.clone(),
+            ..Default::default()
+        };
+        Some(FeatureExtractor::new(&accel_cfg).context("accelerated path unavailable")?)
+    };
+
+    let gpus = gpu_profiles();
+    let mut rows = Vec::new();
+    for entry in &manifest.cases {
+        let path = manifest.mask_path(entry);
+
+        // ---- read (charged once; same file both paths)
+        let t0 = Instant::now();
+        let mask: crate::volume::VoxelGrid<u8> = crate::io::read_rvol(&path)?;
+        let read_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // ---- CPU baseline path
+        let b = cpu.execute_mask(&mask)?;
+        let mc_cpu_ms = (b.timing.preprocess + b.timing.marching).as_secs_f64() * 1e3;
+        let diam_cpu_ms = b.timing.diameters.as_secs_f64() * 1e3;
+
+        // ---- accelerated path
+        let (tran_ms, mc_accel_ms, diam_accel_ms) = match &accel {
+            Some(ex) => {
+                let a = ex.execute_mask(&mask)?;
+                // numerics must agree between paths (§4 "identical quality")
+                let dv = (a.features.maximum_3d_diameter - b.features.maximum_3d_diameter)
+                    .abs();
+                anyhow::ensure!(
+                    dv <= 1e-3 * b.features.maximum_3d_diameter.max(1.0),
+                    "{}: accelerated/CPU diameter mismatch ({} vs {})",
+                    entry.case_id,
+                    a.features.maximum_3d_diameter,
+                    b.features.maximum_3d_diameter
+                );
+                (
+                    a.timing.transfer.as_secs_f64() * 1e3,
+                    (a.timing.preprocess + a.timing.marching).as_secs_f64() * 1e3,
+                    a.timing.diameters.as_secs_f64() * 1e3,
+                )
+            }
+            None => (0.0, 0.0, 0.0),
+        };
+
+        let vertices = b.features.vertex_count;
+
+        // ---- gpusim projections of the diameter kernel per paper GPU
+        let n = vertices as u64;
+        let pairs = n * (n + 1) / 2;
+        let profile = WorkProfile {
+            pairs,
+            distance_ops: pairs,
+            global_atomics: 64,
+            block_reductions: n.div_ceil(256),
+            tile_bytes: 0,
+            logical_threads: n,
+            index_ops: pairs,
+        };
+        // each device priced with its best strategy per the paper's Fig. 1
+        let proj = |d: &crate::gpusim::DeviceProfile, s: Strategy| {
+            (estimate_kernel_time(&profile, s, d)
+                + estimate_transfer_time(n * 12, d))
+                * 1e3
+        };
+        let diam_h100_ms = proj(&gpus[0], Strategy::Tiled2D);
+        let diam_4070_ms = proj(&gpus[1], Strategy::LocalAccumulators);
+        let diam_t4_ms = proj(&gpus[2], Strategy::BlockReduction);
+
+        let cpu_comp = mc_cpu_ms + diam_cpu_ms;
+        let accel_comp = tran_ms + mc_accel_ms + diam_accel_ms;
+        let speedup_comp = if accel_comp > 0.0 { cpu_comp / accel_comp } else { f64::NAN };
+        let speedup_overall = if accel_comp > 0.0 {
+            (read_ms + cpu_comp) / (read_ms + accel_comp)
+        } else {
+            f64::NAN
+        };
+
+        rows.push(Table2Row {
+            case_id: entry.case_id.clone(),
+            dims: entry.dims.to_string(),
+            vertices,
+            read_ms,
+            mc_cpu_ms,
+            diam_cpu_ms,
+            tran_accel_ms: tran_ms,
+            mc_accel_ms,
+            diam_accel_ms,
+            speedup_comp,
+            speedup_overall,
+            diam_h100_ms,
+            diam_4070_ms,
+            diam_t4_ms,
+            diam_share: diam_cpu_ms / (mc_cpu_ms + diam_cpu_ms).max(1e-12),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows in the paper's Table 2 layout (+ projection columns).
+pub fn to_table(rows: &[Table2Row]) -> Table {
+    let mut t = Table::new(vec![
+        "case", "dims", "verts", "read[ms]", "M.C.[ms]", "Diam[ms]", "D.tran[ms]",
+        "M.C.a[ms]", "Diam.a[ms]", "Comp", "Overall", "H100*[ms]", "4070*[ms]", "T4*[ms]",
+        "diam%",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.case_id.clone(),
+            r.dims.clone(),
+            r.vertices.to_string(),
+            format!("{:.1}", r.read_ms),
+            format!("{:.1}", r.mc_cpu_ms),
+            format!("{:.1}", r.diam_cpu_ms),
+            format!("{:.2}", r.tran_accel_ms),
+            format!("{:.1}", r.mc_accel_ms),
+            format!("{:.1}", r.diam_accel_ms),
+            format!("{:.1}", r.speedup_comp),
+            format!("{:.1}", r.speedup_overall),
+            format!("{:.1}", r.diam_h100_ms),
+            format!("{:.1}", r.diam_4070_ms),
+            format!("{:.1}", r.diam_t4_ms),
+            format!("{:.1}", r.diam_share * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::{generate_dataset, GenOptions};
+
+    #[test]
+    fn cpu_only_table2_on_tiny_dataset() {
+        let root = std::env::temp_dir().join("radpipe_table2_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let m = generate_dataset(&root, &GenOptions { scale: 0.002, seed: 1 }).unwrap();
+        let rows = run_table2(
+            &m,
+            &Table2Options { cpu_only: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 20);
+        for r in &rows {
+            assert!(r.vertices > 0);
+            assert!(r.read_ms >= 0.0);
+            assert!(r.diam_h100_ms > 0.0);
+            // device ordering vs the budget GPU holds at every size
+            assert!(r.diam_h100_ms < r.diam_t4_ms);
+            assert!(r.diam_4070_ms < r.diam_t4_ms);
+        }
+        // at the largest case the full H100 < 4070 < T4 ordering holds
+        // (tiny cases are launch-latency bound, where H100's 6 µs launch
+        // loses to the 4070's 5 µs — same effect as the paper's speedup
+        // 1.0 rows)
+        let biggest = rows.iter().max_by_key(|r| r.vertices).unwrap();
+        assert!(biggest.diam_h100_ms < biggest.diam_4070_ms);
+        let t = to_table(&rows);
+        assert_eq!(t.len(), 20);
+        assert!(t.to_text().contains("case"));
+    }
+}

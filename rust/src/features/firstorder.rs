@@ -1,0 +1,265 @@
+//! PyRadiomics *first-order* statistics — the feature class the prior-work
+//! GPU ports (cuRadiomics, §1) accelerate. Included so the pipeline covers
+//! the paper's comparison surface: intensity statistics over the ROI of an
+//! image volume, computed in one sort + two passes.
+//!
+//! Definitions follow `radiomics.firstorder` (bin width 25 for the
+//! histogram features, voxel volume `c` for Energy/TotalEnergy).
+
+use crate::volume::VoxelGrid;
+
+/// The PyRadiomics first-order feature vector (18 features).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FirstOrderFeatures {
+    pub energy: f64,
+    pub total_energy: f64,
+    pub entropy: f64,
+    pub minimum: f64,
+    pub percentile10: f64,
+    pub percentile90: f64,
+    pub maximum: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub interquartile_range: f64,
+    pub range: f64,
+    pub mean_absolute_deviation: f64,
+    pub robust_mean_absolute_deviation: f64,
+    pub root_mean_squared: f64,
+    pub skewness: f64,
+    pub kurtosis: f64,
+    pub variance: f64,
+    pub uniformity: f64,
+}
+
+impl FirstOrderFeatures {
+    /// Ordered (name, value) view, mirroring [`super::ShapeFeatures::named`].
+    pub fn named(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("Energy", self.energy),
+            ("TotalEnergy", self.total_energy),
+            ("Entropy", self.entropy),
+            ("Minimum", self.minimum),
+            ("10Percentile", self.percentile10),
+            ("90Percentile", self.percentile90),
+            ("Maximum", self.maximum),
+            ("Mean", self.mean),
+            ("Median", self.median),
+            ("InterquartileRange", self.interquartile_range),
+            ("Range", self.range),
+            ("MeanAbsoluteDeviation", self.mean_absolute_deviation),
+            ("RobustMeanAbsoluteDeviation", self.robust_mean_absolute_deviation),
+            ("RootMeanSquared", self.root_mean_squared),
+            ("Skewness", self.skewness),
+            ("Kurtosis", self.kurtosis),
+            ("Variance", self.variance),
+            ("Uniformity", self.uniformity),
+        ]
+    }
+}
+
+/// Linear-interpolated percentile of a sorted slice (numpy default).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Compute the first-order features of `image` restricted to `mask != 0`.
+///
+/// Returns `None` for an empty ROI (PyRadiomics raises; callers surface a
+/// clean error). `bin_width` controls the Entropy/Uniformity histogram
+/// (PyRadiomics default 25).
+pub fn compute_first_order(
+    image: &VoxelGrid<f32>,
+    mask: &VoxelGrid<u8>,
+    bin_width: f64,
+) -> Option<FirstOrderFeatures> {
+    assert_eq!(image.dims, mask.dims, "image/mask dims mismatch");
+    let mut vals: Vec<f64> = mask
+        .iter_roi()
+        .map(|(x, y, z)| image.get(x, y, z) as f64)
+        .collect();
+    if vals.is_empty() {
+        return None;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = vals.len() as f64;
+
+    let minimum = vals[0];
+    let maximum = *vals.last().unwrap();
+    let sum: f64 = vals.iter().sum();
+    let mean = sum / n;
+    let energy: f64 = vals.iter().map(|v| v * v).sum();
+    let variance = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    let std = variance.sqrt();
+
+    let p10 = percentile(&vals, 10.0);
+    let p25 = percentile(&vals, 25.0);
+    let p50 = percentile(&vals, 50.0);
+    let p75 = percentile(&vals, 75.0);
+    let p90 = percentile(&vals, 90.0);
+
+    let mad = vals.iter().map(|v| (v - mean).abs()).sum::<f64>() / n;
+    // robust MAD: MAD over values within [p10, p90]
+    let robust: Vec<f64> = vals.iter().copied().filter(|&v| v >= p10 && v <= p90).collect();
+    let rmean = robust.iter().sum::<f64>() / robust.len().max(1) as f64;
+    let rmad = if robust.is_empty() {
+        0.0
+    } else {
+        robust.iter().map(|v| (v - rmean).abs()).sum::<f64>() / robust.len() as f64
+    };
+
+    let (skewness, kurtosis) = if std > 1e-12 {
+        let m3 = vals.iter().map(|v| (v - mean).powi(3)).sum::<f64>() / n;
+        let m4 = vals.iter().map(|v| (v - mean).powi(4)).sum::<f64>() / n;
+        (m3 / std.powi(3), m4 / (variance * variance))
+    } else {
+        (0.0, 0.0) // degenerate constant ROI (PyRadiomics yields 0)
+    };
+
+    // discretised histogram for Entropy / Uniformity
+    let lo = (minimum / bin_width).floor() * bin_width;
+    let nbins = (((maximum - lo) / bin_width).floor() as usize + 1).max(1);
+    let mut hist = vec![0u64; nbins];
+    for &v in &vals {
+        let b = (((v - lo) / bin_width).floor() as usize).min(nbins - 1);
+        hist[b] += 1;
+    }
+    let mut entropy = 0.0;
+    let mut uniformity = 0.0;
+    for &c in &hist {
+        if c > 0 {
+            let p = c as f64 / n;
+            entropy -= p * p.log2();
+            uniformity += p * p;
+        }
+    }
+
+    Some(FirstOrderFeatures {
+        energy,
+        total_energy: energy * image.voxel_volume(),
+        entropy,
+        minimum,
+        percentile10: p10,
+        percentile90: p90,
+        maximum,
+        mean,
+        median: p50,
+        interquartile_range: p75 - p25,
+        range: maximum - minimum,
+        mean_absolute_deviation: mad,
+        robust_mean_absolute_deviation: rmad,
+        root_mean_squared: (energy / n).sqrt(),
+        skewness,
+        kurtosis,
+        variance,
+        uniformity,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::Dims;
+
+    /// Image with ROI values exactly [1, 2, 3, 4, 5].
+    fn fixture() -> (VoxelGrid<f32>, VoxelGrid<u8>) {
+        let dims = Dims::new(5, 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::new(2.0, 1.0, 1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::new(2.0, 1.0, 1.0));
+        for x in 0..5 {
+            img.set(x, 0, 0, (x + 1) as f32);
+            mask.set(x, 0, 0, 1);
+        }
+        (img, mask)
+    }
+
+    #[test]
+    fn known_values_1_to_5() {
+        let (img, mask) = fixture();
+        let f = compute_first_order(&img, &mask, 25.0).unwrap();
+        assert_eq!(f.minimum, 1.0);
+        assert_eq!(f.maximum, 5.0);
+        assert_eq!(f.mean, 3.0);
+        assert_eq!(f.median, 3.0);
+        assert_eq!(f.range, 4.0);
+        assert_eq!(f.energy, 55.0);
+        assert_eq!(f.total_energy, 110.0); // voxel volume 2
+        assert!((f.variance - 2.0).abs() < 1e-12);
+        assert!((f.root_mean_squared - (11.0f64).sqrt()).abs() < 1e-12);
+        assert!((f.mean_absolute_deviation - 1.2).abs() < 1e-12);
+        assert_eq!(f.skewness, 0.0); // symmetric
+        // all values land in one bin (width 25) → entropy 0, uniformity 1
+        assert_eq!(f.entropy, 0.0);
+        assert_eq!(f.uniformity, 1.0);
+    }
+
+    #[test]
+    fn percentiles_numpy_semantics() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&v, 50.0), 2.5);
+        assert_eq!(percentile(&v, 25.0), 1.75);
+    }
+
+    #[test]
+    fn entropy_of_two_equal_bins() {
+        let dims = Dims::new(4, 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for x in 0..4 {
+            img.set(x, 0, 0, if x < 2 { 0.0 } else { 30.0 }); // two bins at width 25
+            mask.set(x, 0, 0, 1);
+        }
+        let f = compute_first_order(&img, &mask, 25.0).unwrap();
+        assert!((f.entropy - 1.0).abs() < 1e-12);
+        assert!((f.uniformity - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_roi_is_none() {
+        let dims = Dims::new(3, 3, 3);
+        let img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        assert!(compute_first_order(&img, &mask, 25.0).is_none());
+    }
+
+    #[test]
+    fn constant_roi_degenerate_moments() {
+        let dims = Dims::new(3, 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for x in 0..3 {
+            img.set(x, 0, 0, 7.5);
+            mask.set(x, 0, 0, 1);
+        }
+        let f = compute_first_order(&img, &mask, 25.0).unwrap();
+        assert_eq!(f.variance, 0.0);
+        assert_eq!(f.skewness, 0.0);
+        assert_eq!(f.kurtosis, 0.0);
+        assert_eq!(f.interquartile_range, 0.0);
+    }
+
+    #[test]
+    fn named_exports_18() {
+        let (img, mask) = fixture();
+        let f = compute_first_order(&img, &mask, 25.0).unwrap();
+        assert_eq!(f.named().len(), 18);
+    }
+
+    #[test]
+    fn mask_restricts_values() {
+        let (img, mut mask) = fixture();
+        mask.set(4, 0, 0, 0); // drop the value 5
+        let f = compute_first_order(&img, &mask, 25.0).unwrap();
+        assert_eq!(f.maximum, 4.0);
+        assert_eq!(f.mean, 2.5);
+    }
+}

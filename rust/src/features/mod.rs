@@ -1,0 +1,16 @@
+//! The complete PyRadiomics *Shape (3D)* feature class.
+//!
+//! Feature definitions follow the PyRadiomics documentation exactly; all are
+//! computed in physical (mm) space. The expensive inputs (mesh volume,
+//! surface area, diameters) come either from the CPU path
+//! ([`crate::mc::mesh_roi`] + [`crate::parallel`]) or from the PJRT
+//! artifacts ([`crate::dispatch`]); the cheap closed-form features are
+//! derived here.
+
+mod shape;
+mod diameters;
+mod firstorder;
+
+pub use diameters::{brute_force_diameters, Diameters};
+pub use firstorder::{compute_first_order, FirstOrderFeatures};
+pub use shape::{compute_shape_features, ShapeFeatures};

@@ -1,0 +1,253 @@
+//! The full PyRadiomics 3D shape-feature vector.
+
+use super::Diameters;
+use crate::mc::MeshStats;
+use crate::volume::{MaskStats, VoxelGrid};
+use crate::geometry::sym3_eigenvalues;
+
+/// All 17 PyRadiomics shape (3D) features, plus bookkeeping fields used by
+/// the experiment harnesses (voxel/vertex counts).
+///
+/// Formula sources: PyRadiomics documentation, `radiomics.shape`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeFeatures {
+    pub mesh_volume: f64,
+    pub voxel_volume: f64,
+    pub surface_area: f64,
+    pub surface_volume_ratio: f64,
+    pub sphericity: f64,
+    pub compactness1: f64,
+    pub compactness2: f64,
+    pub spherical_disproportion: f64,
+    pub maximum_3d_diameter: f64,
+    pub maximum_2d_diameter_slice: f64,
+    pub maximum_2d_diameter_column: f64,
+    pub maximum_2d_diameter_row: f64,
+    pub major_axis_length: f64,
+    pub minor_axis_length: f64,
+    pub least_axis_length: f64,
+    pub elongation: f64,
+    pub flatness: f64,
+    /// ROI voxel count (not a PyRadiomics feature; used by reports).
+    pub voxel_count: usize,
+    /// Mesh vertex count (the paper's "vertices in 3D space" column).
+    pub vertex_count: usize,
+}
+
+impl ShapeFeatures {
+    /// Ordered (name, value) view — used by the CSV/JSON reporters and the
+    /// PyRadiomics-compatible result map.
+    pub fn named(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("MeshVolume", self.mesh_volume),
+            ("VoxelVolume", self.voxel_volume),
+            ("SurfaceArea", self.surface_area),
+            ("SurfaceVolumeRatio", self.surface_volume_ratio),
+            ("Sphericity", self.sphericity),
+            ("Compactness1", self.compactness1),
+            ("Compactness2", self.compactness2),
+            ("SphericalDisproportion", self.spherical_disproportion),
+            ("Maximum3DDiameter", self.maximum_3d_diameter),
+            ("Maximum2DDiameterSlice", self.maximum_2d_diameter_slice),
+            ("Maximum2DDiameterColumn", self.maximum_2d_diameter_column),
+            ("Maximum2DDiameterRow", self.maximum_2d_diameter_row),
+            ("MajorAxisLength", self.major_axis_length),
+            ("MinorAxisLength", self.minor_axis_length),
+            ("LeastAxisLength", self.least_axis_length),
+            ("Elongation", self.elongation),
+            ("Flatness", self.flatness),
+        ]
+    }
+}
+
+/// Derive the full feature vector from the three measured ingredients
+/// (mask statistics, fused mesh stats, diameters).
+///
+/// This is pure closed-form math — the expensive parts were already done —
+/// so it is shared verbatim by the CPU fallback and the accelerated path
+/// (guaranteeing the paper's "identical output quality" property by
+/// construction for everything except the measured inputs themselves).
+pub fn compute_shape_features(
+    mask: &VoxelGrid<u8>,
+    mask_stats: &MaskStats,
+    mesh: &MeshStats,
+    diam: &Diameters,
+    vertex_count: usize,
+) -> ShapeFeatures {
+    use std::f64::consts::PI;
+
+    let v = mesh.volume;
+    let a = mesh.area;
+    let voxel_volume = mask_stats.count as f64 * mask.voxel_volume();
+
+    // Sphericity family (PyRadiomics definitions).
+    let sphericity = if a > 0.0 {
+        (36.0 * PI * v * v).cbrt() / a
+    } else {
+        f64::NAN
+    };
+    let compactness1 = if v > 0.0 && a > 0.0 {
+        v / (PI.sqrt() * a.powf(1.5))
+    } else {
+        f64::NAN
+    };
+    let compactness2 = if a > 0.0 {
+        36.0 * PI * v * v / (a * a * a)
+    } else {
+        f64::NAN
+    };
+    let spherical_disproportion = if sphericity.is_finite() && sphericity != 0.0 {
+        1.0 / sphericity
+    } else {
+        f64::NAN
+    };
+
+    // PCA axis lengths: 4·sqrt(λ) over the physical-coordinate covariance.
+    let eig = sym3_eigenvalues(mask_stats.covariance);
+    let lam_least = eig[0].max(0.0);
+    let lam_minor = eig[1].max(0.0);
+    let lam_major = eig[2].max(0.0);
+    let major = 4.0 * lam_major.sqrt();
+    let minor = 4.0 * lam_minor.sqrt();
+    let least = 4.0 * lam_least.sqrt();
+    let elongation = if lam_major > 0.0 { (lam_minor / lam_major).sqrt() } else { f64::NAN };
+    let flatness = if lam_major > 0.0 { (lam_least / lam_major).sqrt() } else { f64::NAN };
+
+    let dl = diam.lengths();
+    ShapeFeatures {
+        mesh_volume: v,
+        voxel_volume,
+        surface_area: a,
+        surface_volume_ratio: if v > 0.0 { a / v } else { f64::NAN },
+        sphericity,
+        compactness1,
+        compactness2,
+        spherical_disproportion,
+        maximum_3d_diameter: dl[0],
+        maximum_2d_diameter_slice: dl[1],
+        maximum_2d_diameter_column: dl[2],
+        maximum_2d_diameter_row: dl[3],
+        major_axis_length: major,
+        minor_axis_length: minor,
+        least_axis_length: least,
+        elongation,
+        flatness,
+        voxel_count: mask_stats.count,
+        vertex_count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::brute_force_diameters;
+    use crate::geometry::Vec3;
+    use crate::mc::mesh_roi;
+    use crate::volume::Dims;
+
+    fn sphere(n: usize, r: f64) -> VoxelGrid<u8> {
+        let mut m = VoxelGrid::zeros(Dims::new(n, n, n), Vec3::splat(1.0));
+        let c = n as f64 / 2.0;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let (dx, dy, dz) = (x as f64 - c, y as f64 - c, z as f64 - c);
+                    if dx * dx + dy * dy + dz * dz <= r * r {
+                        m.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    fn features_of(mask: &VoxelGrid<u8>) -> ShapeFeatures {
+        let stats = MaskStats::compute(mask);
+        let mesh = mesh_roi(mask);
+        let diam = brute_force_diameters(&mesh.vertices);
+        compute_shape_features(mask, &stats, &mesh.stats, &diam, mesh.vertices.len())
+    }
+
+    #[test]
+    fn sphere_features_match_analytic() {
+        let r = 8.0;
+        let f = features_of(&sphere(24, r));
+        // volumes within discretisation error
+        let vol = 4.0 / 3.0 * std::f64::consts::PI * r * r * r;
+        assert!((f.mesh_volume - vol).abs() / vol < 0.05);
+        assert!((f.voxel_volume - vol).abs() / vol < 0.05);
+        // sphere: sphericity near 1 (MT faceting reduces it)
+        assert!(f.sphericity > 0.75 && f.sphericity <= 1.0, "{}", f.sphericity);
+        assert!((f.spherical_disproportion - 1.0 / f.sphericity).abs() < 1e-12);
+        // diameter ≈ 2r (+ surface offset)
+        assert!((f.maximum_3d_diameter - 2.0 * r).abs() < 2.0);
+        // near-isotropic axes
+        assert!((f.elongation - 1.0).abs() < 0.1);
+        assert!((f.flatness - 1.0).abs() < 0.1);
+        assert!(f.major_axis_length >= f.minor_axis_length);
+        assert!(f.minor_axis_length >= f.least_axis_length);
+        assert!(f.vertex_count > 100);
+        assert_eq!(f.voxel_count, 2109); // locked: |{p: |p-c|<=8}| in 24³
+    }
+
+    #[test]
+    fn ellipsoid_axis_lengths() {
+        // Half-axes (a, b, c) = (10, 6, 3) → axis lengths ≈ (4√(a²/5), …).
+        let n = 28;
+        let mut m = VoxelGrid::zeros(Dims::new(n, n, n), Vec3::splat(1.0));
+        let cc = n as f64 / 2.0;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let dx = (x as f64 - cc) / 10.0;
+                    let dy = (y as f64 - cc) / 6.0;
+                    let dz = (z as f64 - cc) / 3.0;
+                    if dx * dx + dy * dy + dz * dz <= 1.0 {
+                        m.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        let f = features_of(&m);
+        // Uniform solid ellipsoid: λ_major = a²/5 → major = 4a/√5 ≈ 17.9.
+        let expect_major = 4.0 * 10.0 / 5.0f64.sqrt();
+        let expect_minor = 4.0 * 6.0 / 5.0f64.sqrt();
+        let expect_least = 4.0 * 3.0 / 5.0f64.sqrt();
+        assert!((f.major_axis_length - expect_major).abs() / expect_major < 0.08);
+        assert!((f.minor_axis_length - expect_minor).abs() / expect_minor < 0.08);
+        assert!((f.least_axis_length - expect_least).abs() / expect_least < 0.12);
+        assert!((f.elongation - 0.6).abs() < 0.05); // b/a
+        assert!((f.flatness - 0.3).abs() < 0.05); // c/a
+        // elongated: sphericity < sphere's
+        assert!(f.sphericity < 0.95);
+    }
+
+    #[test]
+    fn surface_volume_ratio_consistency() {
+        let f = features_of(&sphere(20, 6.0));
+        assert!((f.surface_volume_ratio - f.surface_area / f.mesh_volume).abs() < 1e-12);
+        // compactness identities: C2 = sphericity³, SD = C2^(-1/3)
+        assert!((f.compactness2 - f.sphericity.powi(3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn named_exports_all_17() {
+        let f = features_of(&sphere(16, 4.0));
+        let named = f.named();
+        assert_eq!(named.len(), 17);
+        assert_eq!(named[0].0, "MeshVolume");
+        assert!(named.iter().all(|(_, v)| !v.is_nan()));
+    }
+
+    #[test]
+    fn empty_mask_yields_nans_not_panics() {
+        let m = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        let stats = MaskStats::compute(&m);
+        let mesh = mesh_roi(&m);
+        let d = brute_force_diameters(&[]);
+        let f = compute_shape_features(&m, &stats, &mesh.stats, &d, 0);
+        assert_eq!(f.voxel_volume, 0.0);
+        assert!(f.sphericity.is_nan());
+        assert!(f.maximum_3d_diameter.is_nan());
+    }
+}

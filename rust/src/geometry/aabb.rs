@@ -1,0 +1,129 @@
+//! Axis-aligned bounding box over [`Vec3`] points.
+
+use super::Vec3;
+
+/// Axis-aligned bounding box. Used for ROI cropping (the pipeline crops each
+/// mask to its bounding box before meshing, exactly as PyRadiomics does) and
+/// as a cheap sanity invariant for meshes (all vertices inside the padded
+/// voxel AABB).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Aabb {
+    pub min: Vec3,
+    pub max: Vec3,
+}
+
+impl Aabb {
+    /// An "empty" box that any point will expand.
+    pub fn empty() -> Self {
+        Aabb {
+            min: Vec3::splat(f64::INFINITY),
+            max: Vec3::splat(f64::NEG_INFINITY),
+        }
+    }
+
+    pub fn new(min: Vec3, max: Vec3) -> Self {
+        Aabb { min, max }
+    }
+
+    /// Build the tight box over an iterator of points.
+    pub fn from_points<I: IntoIterator<Item = Vec3>>(pts: I) -> Self {
+        let mut b = Aabb::empty();
+        for p in pts {
+            b.expand(p);
+        }
+        b
+    }
+
+    /// Grow to include `p`.
+    pub fn expand(&mut self, p: Vec3) {
+        self.min = self.min.min(p);
+        self.max = self.max.max(p);
+    }
+
+    /// Grow by `pad` on every side.
+    pub fn padded(&self, pad: f64) -> Aabb {
+        Aabb::new(self.min - Vec3::splat(pad), self.max + Vec3::splat(pad))
+    }
+
+    /// True when no point was ever added.
+    pub fn is_empty(&self) -> bool {
+        self.min.x > self.max.x
+    }
+
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.min.x
+            && p.y >= self.min.y
+            && p.z >= self.min.z
+            && p.x <= self.max.x
+            && p.y <= self.max.y
+            && p.z <= self.max.z
+    }
+
+    /// Edge lengths (zero for empty boxes).
+    pub fn extent(&self) -> Vec3 {
+        if self.is_empty() {
+            Vec3::ZERO
+        } else {
+            self.max - self.min
+        }
+    }
+
+    /// Length of the space diagonal — an upper bound for the max 3D diameter
+    /// of any point set inside the box (used as a property-test invariant).
+    pub fn diagonal(&self) -> f64 {
+        self.extent().norm()
+    }
+
+    pub fn center(&self) -> Vec3 {
+        (self.min + self.max) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_box() {
+        let b = Aabb::empty();
+        assert!(b.is_empty());
+        assert_eq!(b.extent(), Vec3::ZERO);
+        assert_eq!(b.diagonal(), 0.0);
+    }
+
+    #[test]
+    fn from_points() {
+        let b = Aabb::from_points([
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(-1.0, 5.0, 0.0),
+            Vec3::new(0.5, 0.0, 10.0),
+        ]);
+        assert_eq!(b.min, Vec3::new(-1.0, 0.0, 0.0));
+        assert_eq!(b.max, Vec3::new(1.0, 5.0, 10.0));
+        assert!(b.contains(Vec3::new(0.0, 1.0, 1.0)));
+        assert!(!b.contains(Vec3::new(2.0, 1.0, 1.0)));
+    }
+
+    #[test]
+    fn padding_and_center() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::splat(2.0)).padded(1.0);
+        assert_eq!(b.min, Vec3::splat(-1.0));
+        assert_eq!(b.max, Vec3::splat(3.0));
+        assert_eq!(b.center(), Vec3::splat(1.0));
+    }
+
+    #[test]
+    fn diagonal_bounds_pairwise_distance() {
+        let pts = [
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 2.0, 2.0),
+            Vec3::new(0.5, 1.0, 0.0),
+        ];
+        let b = Aabb::from_points(pts);
+        for p in pts {
+            for q in pts {
+                assert!(p.dist(q) <= b.diagonal() + 1e-12);
+            }
+        }
+    }
+}

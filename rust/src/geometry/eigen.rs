@@ -1,0 +1,153 @@
+//! Closed-form eigenvalues of a symmetric 3×3 matrix.
+//!
+//! PyRadiomics derives `MajorAxisLength`, `MinorAxisLength`,
+//! `LeastAxisLength`, `Elongation` and `Flatness` from the eigenvalues of the
+//! voxel-coordinate covariance matrix (its "principal moments"). We use the
+//! standard trigonometric solution (Smith 1961 / the method used by Eigen's
+//! `SelfAdjointEigenSolver` fast path), which is branch-light and accurate
+//! enough for covariance matrices of well-conditioned ROIs.
+
+/// Symmetric 3×3 matrix stored as the six unique entries.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Sym3 {
+    pub xx: f64,
+    pub yy: f64,
+    pub zz: f64,
+    pub xy: f64,
+    pub xz: f64,
+    pub yz: f64,
+}
+
+impl Sym3 {
+    pub fn trace(&self) -> f64 {
+        self.xx + self.yy + self.zz
+    }
+
+    /// Covariance matrix of a point cloud given coordinate accumulators.
+    /// `n` points, `s*` coordinate sums, `s**` product sums.
+    #[allow(clippy::too_many_arguments)]
+    pub fn covariance(
+        n: f64,
+        sx: f64,
+        sy: f64,
+        sz: f64,
+        sxx: f64,
+        syy: f64,
+        szz: f64,
+        sxy: f64,
+        sxz: f64,
+        syz: f64,
+    ) -> Sym3 {
+        // Population covariance (divide by n), matching numpy.cov(..., bias=1)
+        // which PyRadiomics uses via `numpy.linalg.eigvals(cov)` on physical
+        // coordinates.
+        let mx = sx / n;
+        let my = sy / n;
+        let mz = sz / n;
+        Sym3 {
+            xx: sxx / n - mx * mx,
+            yy: syy / n - my * my,
+            zz: szz / n - mz * mz,
+            xy: sxy / n - mx * my,
+            xz: sxz / n - mx * mz,
+            yz: syz / n - my * mz,
+        }
+    }
+}
+
+/// Eigenvalues of a symmetric 3×3 matrix, ascending: `[least, minor, major]`.
+///
+/// Uses the trigonometric closed form; falls back to the diagonal for
+/// (near-)diagonal input to avoid cancellation noise.
+pub fn sym3_eigenvalues(m: Sym3) -> [f64; 3] {
+    let p1 = m.xy * m.xy + m.xz * m.xz + m.yz * m.yz;
+    if p1 < 1e-300 {
+        // Already diagonal.
+        let mut d = [m.xx, m.yy, m.zz];
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        return d;
+    }
+    let q = m.trace() / 3.0;
+    let dxx = m.xx - q;
+    let dyy = m.yy - q;
+    let dzz = m.zz - q;
+    let p2 = dxx * dxx + dyy * dyy + dzz * dzz + 2.0 * p1;
+    let p = (p2 / 6.0).sqrt();
+    // B = (A - q I) / p ; r = det(B) / 2 clamped to [-1, 1].
+    let b = Sym3 {
+        xx: dxx / p,
+        yy: dyy / p,
+        zz: dzz / p,
+        xy: m.xy / p,
+        xz: m.xz / p,
+        yz: m.yz / p,
+    };
+    let detb = b.xx * (b.yy * b.zz - b.yz * b.yz) - b.xy * (b.xy * b.zz - b.yz * b.xz)
+        + b.xz * (b.xy * b.yz - b.yy * b.xz);
+    let r = (detb / 2.0).clamp(-1.0, 1.0);
+    let phi = r.acos() / 3.0;
+    let e1 = q + 2.0 * p * phi.cos(); // largest
+    let e3 = q + 2.0 * p * (phi + 2.0 * std::f64::consts::PI / 3.0).cos(); // smallest
+    let e2 = 3.0 * q - e1 - e3;
+    [e3, e2, e1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let m = Sym3 { xx: 3.0, yy: 1.0, zz: 2.0, ..Default::default() };
+        let e = sym3_eigenvalues(m);
+        assert_eq!(e, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn known_symmetric() {
+        // [[2,1,0],[1,2,0],[0,0,3]] → eigenvalues 1, 3, 3.
+        let m = Sym3 { xx: 2.0, yy: 2.0, zz: 3.0, xy: 1.0, xz: 0.0, yz: 0.0 };
+        let e = sym3_eigenvalues(m);
+        // repeated eigenvalues: the trigonometric form is ~1e-8 accurate
+        assert_close(e[0], 1.0, 1e-7);
+        assert_close(e[1], 3.0, 1e-7);
+        assert_close(e[2], 3.0, 1e-7);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let m = Sym3 { xx: 4.0, yy: -1.0, zz: 2.5, xy: 0.3, xz: -0.7, yz: 1.2 };
+        let e = sym3_eigenvalues(m);
+        assert_close(e.iter().sum::<f64>(), m.trace(), 1e-10);
+        // ascending
+        assert!(e[0] <= e[1] && e[1] <= e[2]);
+    }
+
+    #[test]
+    fn characteristic_polynomial_root() {
+        let m = Sym3 { xx: 4.0, yy: -1.0, zz: 2.5, xy: 0.3, xz: -0.7, yz: 1.2 };
+        for lam in sym3_eigenvalues(m) {
+            // det(A - lam I) ≈ 0
+            let a = m.xx - lam;
+            let b = m.yy - lam;
+            let c = m.zz - lam;
+            let det = a * (b * c - m.yz * m.yz) - m.xy * (m.xy * c - m.yz * m.xz)
+                + m.xz * (m.xy * m.yz - b * m.xz);
+            assert!(det.abs() < 1e-8, "det={det} for lam={lam}");
+        }
+    }
+
+    #[test]
+    fn covariance_of_axis_aligned_cloud() {
+        // Points along x at ±1: variance 1 on x, 0 elsewhere.
+        let s = Sym3::covariance(2.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        let e = sym3_eigenvalues(s);
+        assert_close(e[2], 1.0, 1e-12);
+        assert_close(e[0], 0.0, 1e-12);
+        assert_close(e[1], 0.0, 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small 3D geometry substrate: vectors, bounding boxes, triangles and a
+//! symmetric 3×3 eigensolver (needed for the PCA-based axis-length features).
+//!
+//! Everything here is dependency-free and heavily unit-tested: the shape
+//! features in [`crate::features`] and the marching-cubes mesher in
+//! [`crate::mc`] are built on top of these primitives.
+
+mod vec3;
+mod aabb;
+mod triangle;
+mod eigen;
+
+pub use aabb::Aabb;
+pub use eigen::{sym3_eigenvalues, Sym3};
+pub use triangle::Triangle;
+pub use vec3::Vec3;

@@ -1,0 +1,119 @@
+//! Triangle primitive with the two accumulations the paper fuses into its
+//! marching-cubes kernel: signed tetrahedron volume and surface area.
+
+use super::Vec3;
+
+/// One oriented mesh triangle (vertices in world/mm coordinates).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Triangle {
+    pub a: Vec3,
+    pub b: Vec3,
+    pub c: Vec3,
+}
+
+impl Triangle {
+    pub fn new(a: Vec3, b: Vec3, c: Vec3) -> Self {
+        Triangle { a, b, c }
+    }
+
+    /// Signed volume of the tetrahedron (origin, a, b, c):
+    /// `det(a, b, c) / 6`. Summed over a closed, consistently-oriented mesh
+    /// this yields the enclosed (mesh) volume — PyRadiomics' `MeshVolume`.
+    #[inline]
+    pub fn signed_volume(&self) -> f64 {
+        self.a.dot(self.b.cross(self.c)) / 6.0
+    }
+
+    /// Triangle area: `|(b-a) × (c-a)| / 2` — summed this is `SurfaceArea`.
+    #[inline]
+    pub fn area(&self) -> f64 {
+        (self.b - self.a).cross(self.c - self.a).norm() / 2.0
+    }
+
+    /// Centroid (used by the synthetic generator's sanity checks).
+    #[inline]
+    pub fn centroid(&self) -> Vec3 {
+        (self.a + self.b + self.c) / 3.0
+    }
+
+    /// Flip orientation (swaps the sign of [`Self::signed_volume`]).
+    pub fn flipped(&self) -> Triangle {
+        Triangle::new(self.a, self.c, self.b)
+    }
+
+    /// Degenerate triangles (zero area) are what the AOT artifacts use as
+    /// padding; they contribute nothing to either accumulator.
+    pub fn is_degenerate(&self) -> bool {
+        self.area() == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_right_triangle() -> Triangle {
+        Triangle::new(
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(1.0, 0.0, 1.0),
+            Vec3::new(0.0, 1.0, 1.0),
+        )
+    }
+
+    #[test]
+    fn area_of_unit_right_triangle() {
+        assert!((unit_right_triangle().area() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn signed_volume_flips_with_orientation() {
+        let t = unit_right_triangle();
+        assert!((t.signed_volume() + t.flipped().signed_volume()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_tetrahedron_volume() {
+        // Regular tetrahedron on unit axes: volume = 1/6.
+        let o = Vec3::ZERO;
+        let x = Vec3::new(1.0, 0.0, 0.0);
+        let y = Vec3::new(0.0, 1.0, 0.0);
+        let z = Vec3::new(0.0, 0.0, 1.0);
+        // Outward-oriented faces.
+        let faces = [
+            Triangle::new(o, y, x),
+            Triangle::new(o, x, z),
+            Triangle::new(o, z, y),
+            Triangle::new(x, y, z),
+        ];
+        let vol: f64 = faces.iter().map(|t| t.signed_volume()).sum();
+        assert!((vol.abs() - 1.0 / 6.0).abs() < 1e-12, "vol={vol}");
+        let area: f64 = faces.iter().map(|t| t.area()).sum();
+        // 3 right triangles of area 1/2 + equilateral side sqrt(2): sqrt(3)/2.
+        let expect = 1.5 + (3.0f64).sqrt() / 2.0;
+        assert!((area - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_padding_contributes_nothing() {
+        let t = Triangle::new(Vec3::ZERO, Vec3::ZERO, Vec3::ZERO);
+        assert!(t.is_degenerate());
+        assert_eq!(t.area(), 0.0);
+        assert_eq!(t.signed_volume(), 0.0);
+    }
+
+    #[test]
+    fn translation_invariance_of_closed_mesh_volume() {
+        let o = Vec3::new(10.0, -4.0, 2.5);
+        let x = o + Vec3::new(1.0, 0.0, 0.0);
+        let y = o + Vec3::new(0.0, 1.0, 0.0);
+        let z = o + Vec3::new(0.0, 0.0, 1.0);
+        let faces = [
+            Triangle::new(o, y, x),
+            Triangle::new(o, x, z),
+            Triangle::new(o, z, y),
+            Triangle::new(x, y, z),
+        ];
+        let vol: f64 = faces.iter().map(|t| t.signed_volume()).sum();
+        assert!((vol.abs() - 1.0 / 6.0).abs() < 1e-9, "vol={vol}");
+    }
+}

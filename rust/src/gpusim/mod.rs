@@ -1,0 +1,22 @@
+//! SIMT device cost model — the hardware-substitution substrate.
+//!
+//! The paper benchmarks its kernels on H100, RTX 4070 and T4 GPUs plus
+//! three CPUs (Table 1). None of that silicon exists on this testbed, so
+//! Fig. 1 / Fig. 2 are regenerated through a first-order SIMT cost model:
+//! each [`crate::parallel::Strategy`] run tallies a [`WorkProfile`]
+//! (pairs, atomics, block reductions, staged tile bytes, index arithmetic)
+//! and the model prices that profile on a device description.
+//!
+//! The model is deliberately simple (roofline compute/memory term + serial
+//! synchronisation terms) and *calibrated* against the paper's published
+//! numbers (Table 2's ≈18× desktop computation speedup, Fig. 1's strategy
+//! ordering per device, Fig. 2's 8–24× T4 / 50–2000× H100 speedups); the
+//! calibration constants are documented inline. It answers the question
+//! "which strategy wins on which device class, and by roughly how much" —
+//! the *shape* of the paper's results, per DESIGN.md §Substitutions.
+
+mod model;
+mod profiles;
+
+pub use model::{estimate_kernel_time, estimate_transfer_time, SimReport};
+pub use profiles::{cpu_profiles, gpu_profiles, DeviceClass, DeviceProfile};

@@ -1,0 +1,197 @@
+//! Dataset manifest: the on-disk index the pipeline's scanner stage reads.
+//!
+//! `cases.txt` format, one case per line (whitespace-separated key=value):
+//!
+//! ```text
+//! case=00000-1 mask=00000-1.rvol.gz dims=231x104x264 target_vertices=124406
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::volume::Dims;
+
+/// One case in a dataset manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseEntry {
+    pub case_id: String,
+    /// Mask volume path, relative to the manifest directory.
+    pub mask: PathBuf,
+    /// Declared dims (validated against the file on read).
+    pub dims: Dims,
+    /// The vertex count this case was generated to approximate (paper
+    /// Table 2 column); 0 when unknown.
+    pub target_vertices: usize,
+}
+
+/// A scanned dataset: root directory + parsed entries.
+#[derive(Debug, Clone)]
+pub struct DatasetManifest {
+    pub root: PathBuf,
+    pub cases: Vec<CaseEntry>,
+}
+
+impl DatasetManifest {
+    /// Absolute path of a case's mask file.
+    pub fn mask_path(&self, e: &CaseEntry) -> PathBuf {
+        self.root.join(&e.mask)
+    }
+
+    /// Serialise back to the manifest format.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        for e in &self.cases {
+            s.push_str(&format!(
+                "case={} mask={} dims={} target_vertices={}\n",
+                e.case_id,
+                e.mask.display(),
+                e.dims,
+                e.target_vertices
+            ));
+        }
+        s
+    }
+
+    pub fn save(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.root)?;
+        std::fs::write(self.root.join("cases.txt"), self.to_string())
+            .context("write cases.txt")
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Dims> {
+    let parts: Vec<_> = s.split('x').collect();
+    if parts.len() != 3 {
+        bail!("bad dims '{s}'");
+    }
+    Ok(Dims::new(parts[0].parse()?, parts[1].parse()?, parts[2].parse()?))
+}
+
+fn parse_line(line: &str) -> Result<CaseEntry> {
+    let mut case_id = None;
+    let mut mask = None;
+    let mut dims = None;
+    let mut target = 0usize;
+    for tok in line.split_whitespace() {
+        let Some((k, v)) = tok.split_once('=') else {
+            bail!("bad token '{tok}'");
+        };
+        match k {
+            "case" => case_id = Some(v.to_string()),
+            "mask" => mask = Some(PathBuf::from(v)),
+            "dims" => dims = Some(parse_dims(v)?),
+            "target_vertices" => target = v.parse().context("target_vertices")?,
+            _ => {} // forward-compatible: ignore unknown keys
+        }
+    }
+    Ok(CaseEntry {
+        case_id: case_id.context("missing case=")?,
+        mask: mask.context("missing mask=")?,
+        dims: dims.context("missing dims=")?,
+        target_vertices: target,
+    })
+}
+
+/// Read and validate `<root>/cases.txt`.
+pub fn scan_dataset(root: &Path) -> Result<DatasetManifest> {
+    let manifest = root.join("cases.txt");
+    let text = std::fs::read_to_string(&manifest)
+        .with_context(|| format!("read {}", manifest.display()))?;
+    let mut cases = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        cases.push(parse_line(line).with_context(|| format!("cases.txt line {}", no + 1))?);
+    }
+    if cases.is_empty() {
+        bail!("dataset {} has no cases", root.display());
+    }
+    Ok(DatasetManifest { root: root.to_path_buf(), cases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("radpipe_dataset_test").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_manifest() {
+        let root = tdir("rt");
+        let m = DatasetManifest {
+            root: root.clone(),
+            cases: vec![
+                CaseEntry {
+                    case_id: "00000-1".into(),
+                    mask: "00000-1.rvol.gz".into(),
+                    dims: Dims::new(231, 104, 264),
+                    target_vertices: 124406,
+                },
+                CaseEntry {
+                    case_id: "00000-2".into(),
+                    mask: "00000-2.rvol.gz".into(),
+                    dims: Dims::new(28, 30, 59),
+                    target_vertices: 6132,
+                },
+            ],
+        };
+        m.save().unwrap();
+        let back = scan_dataset(&root).unwrap();
+        assert_eq!(back.cases, m.cases);
+        assert!(back.mask_path(&back.cases[0]).ends_with("00000-1.rvol.gz"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let root = tdir("comments");
+        std::fs::write(
+            root.join("cases.txt"),
+            "# header\n\ncase=a mask=a.rvol dims=4x4x4 target_vertices=10\n",
+        )
+        .unwrap();
+        let m = scan_dataset(&root).unwrap();
+        assert_eq!(m.cases.len(), 1);
+        assert_eq!(m.cases[0].case_id, "a");
+    }
+
+    #[test]
+    fn unknown_keys_ignored() {
+        let root = tdir("unknown");
+        std::fs::write(
+            root.join("cases.txt"),
+            "case=a mask=a.rvol dims=4x4x4 target_vertices=1 image=img.rvol extra=9\n",
+        )
+        .unwrap();
+        assert_eq!(scan_dataset(&root).unwrap().cases.len(), 1);
+    }
+
+    #[test]
+    fn missing_fields_error_with_line_number() {
+        let root = tdir("bad");
+        std::fs::write(root.join("cases.txt"), "case=a dims=4x4x4\n").unwrap();
+        let err = scan_dataset(&root).unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let root = tdir("empty");
+        std::fs::write(root.join("cases.txt"), "# nothing\n").unwrap();
+        assert!(scan_dataset(&root).is_err());
+    }
+
+    #[test]
+    fn bad_dims_rejected() {
+        let root = tdir("baddims");
+        std::fs::write(root.join("cases.txt"), "case=a mask=m dims=4x4 target_vertices=0\n")
+            .unwrap();
+        assert!(scan_dataset(&root).is_err());
+    }
+}

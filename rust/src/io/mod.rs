@@ -1,0 +1,14 @@
+//! Volume IO: the `.rvol(.gz)` container, a NIfTI-1 subset reader/writer
+//! (KiTS19-style `.nii.gz`), and the dataset manifest.
+//!
+//! The paper's Table 2 charges a large share of wall time to "file
+//! reading" (disk + decompression + normalisation + relayout); this module
+//! is that pipeline stage, and its timings feed the Table 2 reproduction.
+
+mod rvol;
+mod nifti;
+mod dataset;
+
+pub use dataset::{scan_dataset, CaseEntry, DatasetManifest};
+pub use nifti::{read_nifti, write_nifti};
+pub use rvol::{read_rvol, write_rvol};

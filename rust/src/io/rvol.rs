@@ -1,0 +1,238 @@
+//! `.rvol` — the repo's simple voxel-volume container.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   8 B   "RVOL\x01\n\0\0"
+//! dtype   u32   0 = u8, 1 = f32
+//! dims    3 × u64   (x, y, z)
+//! spacing 3 × f64   mm
+//! data    x·y·z samples, x fastest
+//! ```
+//!
+//! Files ending in `.gz` are gzip-wrapped (flate2), mirroring `.nii.gz`.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+
+use crate::geometry::Vec3;
+use crate::volume::{Dims, VoxelGrid};
+
+const MAGIC: &[u8; 8] = b"RVOL\x01\n\0\0";
+
+fn put_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+fn put_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+fn put_f64(w: &mut impl Write, v: f64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+fn get_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn get_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn get_f64(r: &mut impl Read) -> io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// Sample types storable in `.rvol`.
+pub trait RvolSample: Copy + Default {
+    const DTYPE: u32;
+    fn write_all(data: &[Self], w: &mut impl Write) -> io::Result<()>;
+    fn read_all(n: usize, r: &mut impl Read) -> io::Result<Vec<Self>>;
+}
+
+impl RvolSample for u8 {
+    const DTYPE: u32 = 0;
+    fn write_all(data: &[Self], w: &mut impl Write) -> io::Result<()> {
+        w.write_all(data)
+    }
+    fn read_all(n: usize, r: &mut impl Read) -> io::Result<Vec<Self>> {
+        let mut v = vec![0u8; n];
+        r.read_exact(&mut v)?;
+        Ok(v)
+    }
+}
+
+impl RvolSample for f32 {
+    const DTYPE: u32 = 1;
+    fn write_all(data: &[Self], w: &mut impl Write) -> io::Result<()> {
+        // chunked to avoid a full transmuted copy
+        let mut buf = Vec::with_capacity(4096 * 4);
+        for chunk in data.chunks(4096) {
+            buf.clear();
+            for v in chunk {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+    fn read_all(n: usize, r: &mut impl Read) -> io::Result<Vec<Self>> {
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Write a grid to `path`; gzip if the extension ends in `.gz`.
+pub fn write_rvol<T: RvolSample>(path: &Path, grid: &VoxelGrid<T>) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let buf = BufWriter::new(file);
+    if path.extension().is_some_and(|e| e == "gz") {
+        let mut w = GzEncoder::new(buf, flate2::Compression::fast());
+        write_body(&mut w, grid)?;
+        w.finish()?;
+    } else {
+        let mut w = buf;
+        write_body(&mut w, grid)?;
+        w.flush()?;
+    }
+    Ok(())
+}
+
+fn write_body<T: RvolSample>(w: &mut impl Write, grid: &VoxelGrid<T>) -> Result<()> {
+    w.write_all(MAGIC)?;
+    put_u32(w, T::DTYPE)?;
+    put_u64(w, grid.dims.x as u64)?;
+    put_u64(w, grid.dims.y as u64)?;
+    put_u64(w, grid.dims.z as u64)?;
+    put_f64(w, grid.spacing.x)?;
+    put_f64(w, grid.spacing.y)?;
+    put_f64(w, grid.spacing.z)?;
+    T::write_all(grid.data(), w)?;
+    Ok(())
+}
+
+/// Read a grid from `path`; transparently handles `.gz`.
+pub fn read_rvol<T: RvolSample>(path: &Path) -> Result<VoxelGrid<T>> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let buf = BufReader::new(file);
+    if path.extension().is_some_and(|e| e == "gz") {
+        read_body(&mut GzDecoder::new(buf))
+    } else {
+        read_body(&mut { buf })
+    }
+}
+
+fn read_body<T: RvolSample>(r: &mut impl Read) -> Result<VoxelGrid<T>> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("rvol header")?;
+    if &magic != MAGIC {
+        bail!("not an rvol file (bad magic)");
+    }
+    let dtype = get_u32(r)?;
+    if dtype != T::DTYPE {
+        bail!("rvol dtype mismatch: file has {dtype}, requested {}", T::DTYPE);
+    }
+    let dims = Dims::new(get_u64(r)? as usize, get_u64(r)? as usize, get_u64(r)? as usize);
+    if dims.len() > (1 << 33) {
+        bail!("rvol dims implausibly large: {dims}");
+    }
+    let spacing = Vec3::new(get_f64(r)?, get_f64(r)?, get_f64(r)?);
+    let data = T::read_all(dims.len(), r).context("rvol payload")?;
+    Ok(VoxelGrid::from_vec(dims, spacing, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mask() -> VoxelGrid<u8> {
+        let mut g = VoxelGrid::zeros(Dims::new(5, 4, 3), Vec3::new(0.5, 1.0, 2.0));
+        g.set(1, 2, 1, 1);
+        g.set(4, 3, 2, 7);
+        g
+    }
+
+    #[test]
+    fn roundtrip_plain() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.rvol");
+        let g = sample_mask();
+        write_rvol(&p, &g).unwrap();
+        let back: VoxelGrid<u8> = read_rvol(&p).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn roundtrip_gzip() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.rvol.gz");
+        let g = sample_mask();
+        write_rvol(&p, &g).unwrap();
+        let back: VoxelGrid<u8> = read_rvol(&p).unwrap();
+        assert_eq!(back, g);
+        // gz really compresses the mostly-zero grid
+        let raw = dir.join("b.rvol");
+        write_rvol(&raw, &g).unwrap();
+        let zs = std::fs::metadata(&p).unwrap().len();
+        let rs = std::fs::metadata(&raw).unwrap().len();
+        assert!(zs < rs);
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.rvol.gz");
+        let mut g: VoxelGrid<f32> =
+            VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
+        g.set(1, 1, 1, -2.75);
+        g.set(2, 0, 1, 1e-3);
+        write_rvol(&p, &g).unwrap();
+        let back: VoxelGrid<f32> = read_rvol(&p).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.rvol");
+        write_rvol(&p, &sample_mask()).unwrap();
+        let err = read_rvol::<f32>(&p).unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("e.rvol");
+        std::fs::write(&p, b"NOTRVOL_plus_some_padding_bytes____").unwrap();
+        let err = read_rvol::<u8>(&p).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("f.rvol");
+        write_rvol(&p, &sample_mask()).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(read_rvol::<u8>(&p).is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! # radpipe — PyRadiomics-cuda reproduced as a Rust + JAX + Pallas pipeline
+//!
+//! A three-layer reproduction of *"PyRadiomics-cuda: 3D features extraction
+//! from medical images for HPC using GPU acceleration"* (Lisowski et al.,
+//! CS.DC 2025):
+//!
+//! * **L3 (this crate)** — streaming coordinator: case scanning, volume IO,
+//!   ROI preprocessing, fused marching-tetrahedra meshing, transparent
+//!   accelerator dispatch with CPU fallback, metrics and the experiment
+//!   harnesses regenerating every table/figure of the paper.
+//! * **L2/L1 (python/, build-time only)** — JAX graphs composing the Pallas
+//!   kernels (pairwise diameters on the MXU, fused mesh stats), AOT-lowered
+//!   to HLO-text artifacts.
+//! * **Runtime bridge** — [`runtime`] loads the artifacts through the PJRT
+//!   CPU client (`xla` crate); Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod cli;
+pub mod config;
+pub mod dispatch;
+pub mod experiments;
+pub mod features;
+pub mod geometry;
+pub mod gpusim;
+pub mod io;
+pub mod mc;
+pub mod metrics;
+pub mod parallel;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod synth;
+pub mod testkit;
+pub mod volume;
+
+/// Crate version (surfaced by the CLI).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,5 @@
+//! `radpipe` CLI entrypoint — the launcher for extraction pipelines and the
+//! experiment harnesses. All logic lives in [`radpipe::cli`].
+fn main() -> std::process::ExitCode {
+    radpipe::cli::run(std::env::args().skip(1).collect())
+}

@@ -1,0 +1,392 @@
+//! The fused marching-tetrahedra pass: mesh + unique vertices + statistics
+//! in a single walk over the cells (the paper's "marching cubes fused
+//! parallel kernels" on the CPU side).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use super::tets::{CaseTable, CORNER_OFFSETS, TETS, TET_EDGES};
+use crate::geometry::{Triangle, Vec3};
+use crate::volume::VoxelGrid;
+
+/// Multiplicative hasher for the (already well-mixed) packed lattice-edge
+/// keys. The std SipHash was ~20 % of the whole mesh walk in profiles
+/// (EXPERIMENTS.md §Perf); splitmix64 finalisation is plenty for these keys.
+#[derive(Default)]
+struct EdgeKeyHasher(u64);
+
+impl Hasher for EdgeKeyHasher {
+    #[inline]
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("EdgeKeyHasher is only used with u64 keys");
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        // splitmix64 finaliser
+        let mut z = v.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        self.0 = z ^ (z >> 31);
+    }
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+type EdgeMap = HashMap<u64, u32, BuildHasherDefault<EdgeKeyHasher>>;
+
+/// Fused accumulators produced by the mesh walk.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeshStats {
+    /// Enclosed volume in mm³ (absolute value of the signed sum).
+    pub volume: f64,
+    /// Total surface area in mm².
+    pub area: f64,
+}
+
+/// Isosurface mesh of an ROI.
+#[derive(Debug, Clone, Default)]
+pub struct Mesh {
+    /// Unique vertices (deduplicated on lattice-edge identity), world mm.
+    pub vertices: Vec<Vec3>,
+    /// Triangles as vertex-index triples, oriented outward.
+    pub triangles: Vec<[u32; 3]>,
+    /// Fused volume/area accumulators.
+    pub stats: MeshStats,
+}
+
+impl Mesh {
+    /// Triangle geometry accessor.
+    pub fn triangle(&self, i: usize) -> Triangle {
+        let [a, b, c] = self.triangles[i];
+        Triangle::new(
+            self.vertices[a as usize],
+            self.vertices[b as usize],
+            self.vertices[c as usize],
+        )
+    }
+
+    /// Flatten to the f32[T, 9] layout of the `mesh_stats` AOT artifact.
+    pub fn triangle_soup_f32(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.triangles.len() * 9);
+        for i in 0..self.triangles.len() {
+            let t = self.triangle(i);
+            for v in [t.a, t.b, t.c] {
+                let f = v.to_f32();
+                out.extend_from_slice(&f);
+            }
+        }
+        out
+    }
+
+    /// Flatten vertices to the f32[N, 3] layout of the `diameter` artifact.
+    pub fn vertices_f32(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.vertices.len() * 3);
+        for v in &self.vertices {
+            out.extend_from_slice(&v.to_f32());
+        }
+        out
+    }
+}
+
+/// Key identifying a mesh vertex by the *absolute lattice edge* it sits on.
+/// Edges are canonicalised to (component-wise-min endpoint, direction code),
+/// so the same geometric edge referenced from neighbouring cells (or from
+/// different tets of one cell) maps to the same key — dedup is exact, with
+/// no floating-point quantisation involved.
+#[inline]
+fn edge_key(x: usize, y: usize, z: usize, c0: usize, c1: usize) -> u64 {
+    let o0 = CORNER_OFFSETS[c0];
+    let o1 = CORNER_OFFSETS[c1];
+    // absolute lattice endpoints
+    let p0 = [x as u64 + o0[0] as u64, y as u64 + o0[1] as u64, z as u64 + o0[2] as u64];
+    let p1 = [x as u64 + o1[0] as u64, y as u64 + o1[1] as u64, z as u64 + o1[2] as u64];
+    let pmin = [p0[0].min(p1[0]), p0[1].min(p1[1]), p0[2].min(p1[2])];
+    // direction bits: which components differ (edge spans 0/1 per axis)
+    let d = (p0[0] != p1[0]) as u64 | ((p0[1] != p1[1]) as u64) << 1 | ((p0[2] != p1[2]) as u64) << 2;
+    debug_assert!(pmin.iter().all(|&v| v < 1 << 19));
+    (pmin[0] << 41) | (pmin[1] << 22) | (pmin[2] << 3) | d
+}
+
+/// Marching tetrahedra over a binary mask (iso = 0.5): the fused pass.
+///
+/// Returns the watertight isosurface mesh with unique vertices, outward
+/// orientation and the volume/area accumulated on the fly. The mask should
+/// have a 1-voxel zero margin (see [`crate::volume::crop_to_roi`]); the
+/// walk spans `dims - 1` cells per axis, so a surface touching the margin
+/// is closed.
+pub fn mesh_roi(mask: &VoxelGrid<u8>) -> Mesh {
+    let table = CaseTable::get();
+    let sp = mask.spacing;
+    let (nx, ny, nz) = (mask.dims.x, mask.dims.y, mask.dims.z);
+    let mut mesh = Mesh::default();
+    let mut vert_ids = EdgeMap::default();
+    let mut signed_volume = 0.0f64;
+
+    // Corner world-position offsets, precomputed in mm.
+    let corner_mm: [Vec3; 8] = std::array::from_fn(|c| {
+        let o = CORNER_OFFSETS[c];
+        Vec3::new(o[0] as f64 * sp.x, o[1] as f64 * sp.y, o[2] as f64 * sp.z)
+    });
+
+    for z in 0..nz.saturating_sub(1) {
+        for y in 0..ny.saturating_sub(1) {
+            for x in 0..nx.saturating_sub(1) {
+                // Gather the 8 corner occupancies.
+                let mut occ = [false; 8];
+                let mut any = false;
+                let mut all = true;
+                for (c, o) in CORNER_OFFSETS.iter().enumerate() {
+                    let v = mask.get(x + o[0] as usize, y + o[1] as usize, z + o[2] as usize)
+                        != 0;
+                    occ[c] = v;
+                    any |= v;
+                    all &= v;
+                }
+                if !any || all {
+                    continue; // cell entirely outside or inside
+                }
+                let base = mask.world(x, y, z);
+                for tet in TETS.iter() {
+                    let tin: [bool; 4] = std::array::from_fn(|i| occ[tet[i]]);
+                    let case = (tin[0] as u8)
+                        | (tin[1] as u8) << 1
+                        | (tin[2] as u8) << 2
+                        | (tin[3] as u8) << 3;
+                    let n = table.ntris[case as usize];
+                    if n == 0 {
+                        continue;
+                    }
+                    // Inside/outside centroids give the outward direction.
+                    let mut cin = Vec3::ZERO;
+                    let mut cout = Vec3::ZERO;
+                    let mut n_in = 0.0;
+                    for i in 0..4 {
+                        let p = corner_mm[tet[i]];
+                        if tin[i] {
+                            cin += p;
+                            n_in += 1.0;
+                        } else {
+                            cout += p;
+                        }
+                    }
+                    let dir = cout / (4.0 - n_in) - cin / n_in;
+
+                    for tri in &table.tris[case as usize][..n] {
+                        let mut ids = [0u32; 3];
+                        let mut pts = [Vec3::ZERO; 3];
+                        for (m, &e) in tri.iter().enumerate() {
+                            let (i0, i1) = TET_EDGES[e];
+                            let (c0, c1) = (tet[i0], tet[i1]);
+                            let key = edge_key(x, y, z, c0, c1);
+                            // Binary mask ⇒ midpoint interpolation (t = ½).
+                            let p = base + (corner_mm[c0] + corner_mm[c1]) / 2.0;
+                            let next = mesh.vertices.len() as u32;
+                            let id = *vert_ids.entry(key).or_insert_with(|| {
+                                mesh.vertices.push(p);
+                                next
+                            });
+                            ids[m] = id;
+                            pts[m] = p;
+                        }
+                        // Orientation: normal must point inside → outside.
+                        let normal = (pts[1] - pts[0]).cross(pts[2] - pts[0]);
+                        if normal.dot(dir) < 0.0 {
+                            ids.swap(1, 2);
+                            pts.swap(1, 2);
+                        }
+                        let t = Triangle::new(pts[0], pts[1], pts[2]);
+                        signed_volume += t.signed_volume();
+                        mesh.stats.area += t.area();
+                        mesh.triangles.push(ids);
+                    }
+                }
+            }
+        }
+    }
+    mesh.stats.volume = signed_volume.abs();
+    mesh
+}
+
+/// Planar diameters computed by plane-grouping instead of all-pairs masking:
+/// vertices are bucketed by the shared coordinate; only intra-bucket pairs
+/// are compared. Exact same semantics as the kernel's masked reduction (and
+/// PyRadiomics `cshape`), but O(Σ nᵦ²) — used by the CPU fallback path and
+/// as an independent oracle in tests.
+///
+/// Returns squared diameters `[dxy², dyz², dxz²]`; -1 when a plane family
+/// has no pair.
+pub fn planar_diameters_grouped(vertices: &[Vec3]) -> [f64; 3] {
+    let mut out = [-1.0f64; 3];
+    // (dropped axis, output slot): z → XY, x → YZ, y → XZ.
+    for (slot, axis) in [(0usize, 2usize), (1, 0), (2, 1)] {
+        let mut groups: HashMap<u64, Vec<usize>> = HashMap::new();
+        for (i, v) in vertices.iter().enumerate() {
+            // Exact grouping on the f64 bit pattern (mesh coordinates are
+            // derived identically for co-planar vertices).
+            groups.entry(v[axis].to_bits()).or_default().push(i);
+        }
+        let mut best = -1.0f64;
+        for idxs in groups.values() {
+            for (k, &i) in idxs.iter().enumerate() {
+                for &j in &idxs[k..] {
+                    let d = vertices[i].dist_sq(vertices[j]);
+                    if d > best {
+                        best = d;
+                    }
+                }
+            }
+        }
+        out[slot] = best;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::{Dims, VoxelGrid};
+
+    fn sphere_mask(n: usize, r: f64) -> VoxelGrid<u8> {
+        let mut m = VoxelGrid::zeros(Dims::new(n, n, n), Vec3::splat(1.0));
+        let c = n as f64 / 2.0;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let dx = x as f64 - c;
+                    let dy = y as f64 - c;
+                    let dz = z as f64 - c;
+                    if dx * dx + dy * dy + dz * dz <= r * r {
+                        m.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn empty_mask_empty_mesh() {
+        let m = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        let mesh = mesh_roi(&m);
+        assert!(mesh.vertices.is_empty());
+        assert!(mesh.triangles.is_empty());
+        assert_eq!(mesh.stats, MeshStats::default());
+    }
+
+    #[test]
+    fn single_voxel_octahedron() {
+        let mut m = VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
+        m.set(1, 1, 1, 1);
+        let mesh = mesh_roi(&m);
+        // Python oracle (mt_stats_ref): volume 0.5, area 3.6213203.
+        assert!((mesh.stats.volume - 0.5).abs() < 1e-9, "{:?}", mesh.stats);
+        assert!((mesh.stats.area - 3.621_320_343_559_642).abs() < 1e-9);
+        assert!(!mesh.vertices.is_empty());
+    }
+
+    #[test]
+    fn sphere_volume_and_area_close_to_analytic() {
+        let r = 8.0;
+        let mesh = mesh_roi(&sphere_mask(24, r));
+        let vol = 4.0 / 3.0 * std::f64::consts::PI * r * r * r;
+        let area = 4.0 * std::f64::consts::PI * r * r;
+        assert!((mesh.stats.volume - vol).abs() / vol < 0.05, "{}", mesh.stats.volume);
+        // MT on binary masks facets the surface: area overshoots ~25 %.
+        assert!(mesh.stats.area > area && mesh.stats.area < 1.45 * area);
+    }
+
+    #[test]
+    fn sphere_matches_python_oracle() {
+        // Locked against ref.mt_stats_ref(sphere(24, r=8)) = [2099.0, 1004.24225].
+        let mesh = mesh_roi(&sphere_mask(24, 8.0));
+        assert!((mesh.stats.volume - 2099.0).abs() < 0.5, "{}", mesh.stats.volume);
+        assert!((mesh.stats.area - 1004.242).abs() < 0.5, "{}", mesh.stats.area);
+    }
+
+    #[test]
+    fn watertight_signed_volume_translation_invariant() {
+        let mesh = mesh_roi(&sphere_mask(16, 5.0));
+        let shift = Vec3::new(17.0, -3.0, 9.0);
+        let mut signed0 = 0.0;
+        let mut signed1 = 0.0;
+        for i in 0..mesh.triangles.len() {
+            let t = mesh.triangle(i);
+            signed0 += t.signed_volume();
+            let t2 = Triangle::new(t.a + shift, t.b + shift, t.c + shift);
+            signed1 += t2.signed_volume();
+        }
+        assert!((signed0 - signed1).abs() < 1e-6 * signed0.abs().max(1.0));
+    }
+
+    #[test]
+    fn vertices_are_unique() {
+        let mesh = mesh_roi(&sphere_mask(16, 5.0));
+        let mut seen = std::collections::HashSet::new();
+        for v in &mesh.vertices {
+            let key = (v.x.to_bits(), v.y.to_bits(), v.z.to_bits());
+            assert!(seen.insert(key), "duplicate vertex {v:?}");
+        }
+    }
+
+    #[test]
+    fn triangle_indices_in_range() {
+        let mesh = mesh_roi(&sphere_mask(12, 4.0));
+        for t in &mesh.triangles {
+            for &i in t {
+                assert!((i as usize) < mesh.vertices.len());
+            }
+        }
+    }
+
+    #[test]
+    fn anisotropic_spacing_scales_volume() {
+        let mut iso = sphere_mask(12, 4.0);
+        iso.spacing = Vec3::splat(1.0);
+        let v1 = mesh_roi(&iso).stats.volume;
+        let mut aniso = iso.clone();
+        aniso.spacing = Vec3::new(2.0, 1.0, 1.0);
+        let v2 = mesh_roi(&aniso).stats.volume;
+        assert!((v2 - 2.0 * v1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grouped_planar_matches_brute_force() {
+        let mesh = mesh_roi(&sphere_mask(14, 4.5));
+        let v = &mesh.vertices;
+        let grouped = planar_diameters_grouped(v);
+        // brute force with the same exact-equality semantics
+        let mut brute = [-1.0f64; 3];
+        for (slot, axis) in [(0usize, 2usize), (1, 0), (2, 1)] {
+            for i in 0..v.len() {
+                for j in i..v.len() {
+                    if v[i][axis] == v[j][axis] {
+                        brute[slot] = brute[slot].max(v[i].dist_sq(v[j]));
+                    }
+                }
+            }
+        }
+        for k in 0..3 {
+            assert!((grouped[k] - brute[k]).abs() < 1e-12, "slot {k}");
+        }
+    }
+
+    #[test]
+    fn surface_touching_border_is_closed() {
+        // Mask fills the whole grid: with no margin the mesher still closes
+        // the surface at the walkable boundary (dims-1 cells) — callers use
+        // crop_to_roi to add the margin; this just checks watertightness.
+        let mut m = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        for z in 1..3 {
+            for y in 1..3 {
+                for x in 1..3 {
+                    m.set(x, y, z, 1);
+                }
+            }
+        }
+        let mesh = mesh_roi(&m);
+        // 2×2×2 solid: volume must be close to 8 minus bevel.
+        assert!(mesh.stats.volume > 5.0 && mesh.stats.volume <= 8.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Isosurface meshing: marching tetrahedra over the Freudenthal
+//! decomposition, with the paper's *fused* statistics accumulation.
+//!
+//! PyRadiomics uses a table-driven marching cubes; this repo substitutes
+//! marching tetrahedra (see DESIGN.md §Substitutions): the 16 per-tet cases
+//! are generated mechanically (no transcribed tables to get wrong), the
+//! Freudenthal 6-tet decomposition tiles space consistently so the surface
+//! is watertight, and the same generator exists in
+//! `python/compile/kernels/mt_tables.py` — cross-language agreement is
+//! integration-tested.
+//!
+//! [`mesh_roi`] is the fused pass the paper describes: one walk over the
+//! cells produces the triangle mesh, the unique-vertex list (for the
+//! diameter kernels) and the volume/area accumulators simultaneously.
+
+mod tets;
+mod mesher;
+
+pub use mesher::{mesh_roi, planar_diameters_grouped, Mesh, MeshStats};
+pub use tets::{case_triangles, CaseTable, CORNER_OFFSETS, TETS, TET_EDGES};

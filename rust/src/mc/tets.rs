@@ -1,0 +1,180 @@
+//! Generated marching-tetrahedra tables (mirror of
+//! `python/compile/kernels/mt_tables.py` — keep the two in sync).
+
+use once_cell::sync::Lazy;
+
+/// Cube corner id = `x | y << 1 | z << 2`; offsets in `(x, y, z)`.
+pub const CORNER_OFFSETS: [[i32; 3]; 8] = [
+    [0, 0, 0],
+    [1, 0, 0],
+    [0, 1, 0],
+    [1, 1, 0],
+    [0, 0, 1],
+    [1, 0, 1],
+    [0, 1, 1],
+    [1, 1, 1],
+];
+
+/// The 6 tetrahedra of the Freudenthal decomposition: monotone lattice paths
+/// from corner 0 to corner 7, one per permutation of the three axes
+/// (enumerated in the same order as `itertools.permutations(range(3))`).
+pub const TETS: [[usize; 4]; 6] = [
+    [0, 1, 3, 7], // x, y, z
+    [0, 1, 5, 7], // x, z, y
+    [0, 2, 3, 7], // y, x, z
+    [0, 2, 6, 7], // y, z, x
+    [0, 4, 5, 7], // z, x, y
+    [0, 4, 6, 7], // z, y, x
+];
+
+/// The 6 edges of a tetrahedron as (vertex, vertex) index pairs.
+pub const TET_EDGES: [(usize, usize); 6] = [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
+
+fn edge_id(a: usize, b: usize) -> usize {
+    let (a, b) = if a < b { (a, b) } else { (b, a) };
+    TET_EDGES
+        .iter()
+        .position(|&(x, y)| (x, y) == (a, b))
+        .expect("valid tet edge")
+}
+
+/// Triangles (as tet-edge-id triples) for one of the 16 inside/outside
+/// cases. Bit `i` of `case` set ⇔ tet vertex `i` is inside. Orientation of
+/// the triples is arbitrary; the mesher normalises it geometrically.
+pub fn case_triangles(case: u8) -> Vec<[usize; 3]> {
+    let inside: Vec<usize> = (0..4).filter(|i| case >> i & 1 == 1).collect();
+    let outside: Vec<usize> = (0..4).filter(|i| case >> i & 1 == 0).collect();
+    match inside.len() {
+        0 | 4 => vec![],
+        1 => {
+            let a = inside[0];
+            let e: Vec<usize> = outside.iter().map(|&o| edge_id(a, o)).collect();
+            vec![[e[0], e[1], e[2]]]
+        }
+        3 => {
+            let a = outside[0];
+            let e: Vec<usize> = inside.iter().map(|&i| edge_id(a, i)).collect();
+            vec![[e[0], e[1], e[2]]]
+        }
+        2 => {
+            // 2-2 split: cyclic quad e(a,c) — e(a,d) — e(b,d) — e(b,c).
+            let (a, b) = (inside[0], inside[1]);
+            let (c, d) = (outside[0], outside[1]);
+            let q = [edge_id(a, c), edge_id(a, d), edge_id(b, d), edge_id(b, c)];
+            vec![[q[0], q[1], q[2]], [q[0], q[2], q[3]]]
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Dense case table: `tris[case]` holds up to 2 triangles (edge-id triples),
+/// `ntris[case]` the count. Built once, lazily.
+pub struct CaseTable {
+    pub tris: [[[usize; 3]; 2]; 16],
+    pub ntris: [usize; 16],
+}
+
+impl CaseTable {
+    pub fn get() -> &'static CaseTable {
+        static TABLE: Lazy<CaseTable> = Lazy::new(|| {
+            let mut tris = [[[0usize; 3]; 2]; 16];
+            let mut ntris = [0usize; 16];
+            for case in 0..16u8 {
+                let ts = case_triangles(case);
+                ntris[case as usize] = ts.len();
+                for (k, t) in ts.iter().enumerate() {
+                    tris[case as usize][k] = *t;
+                }
+            }
+            CaseTable { tris, ntris }
+        });
+        &TABLE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tets_are_monotone_paths() {
+        for tet in TETS {
+            assert_eq!(tet[0], 0);
+            assert_eq!(tet[3], 7);
+            for w in tet.windows(2) {
+                let d = w[0] ^ w[1];
+                assert!(d == 1 || d == 2 || d == 4, "one axis bit per step");
+            }
+        }
+    }
+
+    #[test]
+    fn tets_tile_the_cube() {
+        // Σ |det| / 6 over the 6 tets = unit cube volume.
+        let mut total = 0.0f64;
+        for tet in TETS {
+            let p: Vec<[f64; 3]> = tet
+                .iter()
+                .map(|&c| {
+                    let o = CORNER_OFFSETS[c];
+                    [o[0] as f64, o[1] as f64, o[2] as f64]
+                })
+                .collect();
+            let u = [p[1][0] - p[0][0], p[1][1] - p[0][1], p[1][2] - p[0][2]];
+            let v = [p[2][0] - p[0][0], p[2][1] - p[0][1], p[2][2] - p[0][2]];
+            let w = [p[3][0] - p[0][0], p[3][1] - p[0][1], p[3][2] - p[0][2]];
+            let det = u[0] * (v[1] * w[2] - v[2] * w[1]) - u[1] * (v[0] * w[2] - v[2] * w[0])
+                + u[2] * (v[0] * w[1] - v[1] * w[0]);
+            total += det.abs() / 6.0;
+        }
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn case_triangle_counts() {
+        for case in 0..16u8 {
+            let inside = (case.count_ones()) as usize;
+            let expect = [0, 1, 2, 1, 0][inside];
+            assert_eq!(case_triangles(case).len(), expect, "case {case}");
+        }
+    }
+
+    #[test]
+    fn case_edges_cross_the_boundary() {
+        for case in 1..15u8 {
+            for t in case_triangles(case) {
+                for e in t {
+                    let (a, b) = TET_EDGES[e];
+                    let ain = case >> a & 1 == 1;
+                    let bin = case >> b & 1 == 1;
+                    assert_ne!(ain, bin, "edge must cross the isosurface");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn complementary_cases_share_edges() {
+        for case in 1..8u8 {
+            let mut a: Vec<usize> =
+                case_triangles(case).into_iter().flatten().collect();
+            let mut b: Vec<usize> =
+                case_triangles(15 - case).into_iter().flatten().collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "case {case}");
+        }
+    }
+
+    #[test]
+    fn dense_table_matches_generator() {
+        let t = CaseTable::get();
+        for case in 0..16u8 {
+            let ts = case_triangles(case);
+            assert_eq!(t.ntris[case as usize], ts.len());
+            for (k, tri) in ts.iter().enumerate() {
+                assert_eq!(&t.tris[case as usize][k], tri);
+            }
+        }
+    }
+}

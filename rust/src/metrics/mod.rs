@@ -1,0 +1,187 @@
+//! Pipeline metrics: thread-safe counters, timers and duration histograms,
+//! aggregated into per-stage reports. The experiment harnesses read these to
+//! produce the Table 2 breakdown columns.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Log-scale duration histogram (µs buckets, powers of two) + exact sum.
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket i counts durations in [2^i, 2^(i+1)) µs; 40 buckets ≈ 12 days.
+    buckets: [AtomicU64; 40],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(39);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> Duration {
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+        }
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Registry of named histograms + counters, shared across pipeline stages.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    timers: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch-or-create a histogram by name.
+    pub fn timer(&self, name: &str) -> std::sync::Arc<Histogram> {
+        let mut g = self.timers.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Fetch-or-create a counter by name.
+    pub fn counter(&self, name: &str) -> std::sync::Arc<AtomicU64> {
+        let mut g = self.counters.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Time a closure into the named histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = self.timer(name);
+        let start = Instant::now();
+        let out = f();
+        t.record(start.elapsed());
+        out
+    }
+
+    /// Render a sorted plain-text report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, h) in self.timers.lock().unwrap().iter() {
+            s.push_str(&format!(
+                "{name}: n={} total={:.3}s mean={:.3}ms p99~{:.3}ms max={:.3}ms\n",
+                h.count(),
+                h.total().as_secs_f64(),
+                h.mean().as_secs_f64() * 1e3,
+                h.quantile(0.99).as_secs_f64() * 1e3,
+                h.max().as_secs_f64() * 1e3,
+            ));
+        }
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            s.push_str(&format!("{name}: {}\n", c.load(Ordering::Relaxed)));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(1000));
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.total(), Duration::from_micros(1110));
+        assert_eq!(h.mean(), Duration::from_micros(370));
+        assert_eq!(h.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= Duration::from_micros(256)); // upper edge of the 2^8 bucket
+        assert!(p99 <= Duration::from_micros(2048));
+    }
+
+    #[test]
+    fn registry_time_and_report() {
+        let m = Metrics::new();
+        let out = m.time("stage.read", || 42);
+        assert_eq!(out, 42);
+        m.counter("cases").fetch_add(3, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("stage.read: n=1"));
+        assert!(r.contains("cases: 3"));
+    }
+
+    #[test]
+    fn same_name_same_histogram() {
+        let m = Metrics::new();
+        m.time("x", || ());
+        m.time("x", || ());
+        assert_eq!(m.timer("x").count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's five diameter-kernel optimisation strategies (§3),
+//! re-implemented as CPU thread kernels with the same *structure* as the
+//! CUDA originals (DESIGN.md §Substitutions: the silicon is simulated by
+//! [`crate::gpusim`], the algorithms are real and measured).
+//!
+//! | # | paper strategy                         | here                                   |
+//! |---|----------------------------------------|----------------------------------------|
+//! | 1 | baseline, equal thread load-balancing  | [`Strategy::EqualSplit`]               |
+//! | 2 | block-based atomic reductions          | [`Strategy::BlockReduction`]           |
+//! | 3 | 2D structures in shared memory         | [`Strategy::Tiled2D`] (cache-blocked)  |
+//! | 4 | local thread accumulators              | [`Strategy::LocalAccumulators`]        |
+//! | 5 | simplified 1D memory access            | [`Strategy::Flat1D`]                   |
+//!
+//! Every strategy returns bit-identical `Diameters` (property-tested) —
+//! they differ only in work decomposition and synchronisation, exactly like
+//! the paper's kernels.
+
+mod strategies;
+mod stats;
+
+pub use stats::{KernelStats, WorkProfile};
+pub use strategies::{compute_diameters, Strategy};

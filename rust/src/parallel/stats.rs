@@ -1,0 +1,67 @@
+//! Work profiles: the operation counts each strategy performs. These are
+//! *measured by construction* (the kernels tally them) and feed the
+//! [`crate::gpusim`] device cost model that prices the same strategy on
+//! H100 / RTX 4070 / T4 silicon for the Fig. 1 / Fig. 2 reproductions.
+
+/// Synchronisation/memory behaviour of one kernel execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WorkProfile {
+    /// Total vertex pairs examined.
+    pub pairs: u64,
+    /// Distance evaluations (= pairs; kept separate for clarity).
+    pub distance_ops: u64,
+    /// Global atomic / locked updates (paper: global-memory atomics).
+    pub global_atomics: u64,
+    /// Block-level reductions (paper: shared-memory block reductions).
+    pub block_reductions: u64,
+    /// Bytes staged through the tile buffer (paper: shared-memory traffic).
+    pub tile_bytes: u64,
+    /// Logical thread count the strategy would launch on a GPU.
+    pub logical_threads: u64,
+    /// Index-arithmetic operations (strategy 5 reduces these).
+    pub index_ops: u64,
+}
+
+impl WorkProfile {
+    pub fn merge(&self, o: &WorkProfile) -> WorkProfile {
+        WorkProfile {
+            pairs: self.pairs + o.pairs,
+            distance_ops: self.distance_ops + o.distance_ops,
+            global_atomics: self.global_atomics + o.global_atomics,
+            block_reductions: self.block_reductions + o.block_reductions,
+            tile_bytes: self.tile_bytes + o.tile_bytes,
+            logical_threads: self.logical_threads.max(o.logical_threads),
+            index_ops: self.index_ops + o.index_ops,
+        }
+    }
+}
+
+/// Result metadata of one strategy run: wall time + work profile.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelStats {
+    pub wall: std::time::Duration,
+    pub profile: WorkProfile,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_and_maxes() {
+        let a = WorkProfile {
+            pairs: 10,
+            distance_ops: 10,
+            global_atomics: 1,
+            block_reductions: 2,
+            tile_bytes: 100,
+            logical_threads: 64,
+            index_ops: 5,
+        };
+        let b = WorkProfile { logical_threads: 128, pairs: 5, ..Default::default() };
+        let m = a.merge(&b);
+        assert_eq!(m.pairs, 15);
+        assert_eq!(m.logical_threads, 128);
+        assert_eq!(m.global_atomics, 1);
+    }
+}

@@ -1,0 +1,487 @@
+//! The five optimisation strategies. Each produces identical results and a
+//! [`WorkProfile`] tallying the synchronisation events the corresponding
+//! CUDA kernel would perform — the input to the gpusim device pricing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::stats::{KernelStats, WorkProfile};
+use crate::features::Diameters;
+use crate::geometry::Vec3;
+
+/// The paper's five diameter-kernel strategies (§3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// (1) equal contiguous row split, global update per row.
+    EqualSplit,
+    /// (2) block work-queue + block-level reduction, one global atomic per
+    /// block.
+    BlockReduction,
+    /// (3) 2D tiling with explicit tile staging ("shared memory").
+    Tiled2D,
+    /// (4) per-thread local accumulators, one global update per thread.
+    LocalAccumulators,
+    /// (5) flattened 1D pair indexing with simplified address arithmetic.
+    Flat1D,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::EqualSplit,
+        Strategy::BlockReduction,
+        Strategy::Tiled2D,
+        Strategy::LocalAccumulators,
+        Strategy::Flat1D,
+    ];
+
+    /// Paper label (Fig. 1 legend order).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::EqualSplit => "1-baseline-equal-split",
+            Strategy::BlockReduction => "2-block-reduction",
+            Strategy::Tiled2D => "3-2d-shared-tiles",
+            Strategy::LocalAccumulators => "4-local-accumulators",
+            Strategy::Flat1D => "5-flat-1d-index",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Strategy> {
+        Strategy::ALL.iter().copied().find(|st| {
+            st.label() == s || st.label().starts_with(&format!("{}-", s))
+        })
+    }
+}
+
+/// Scan one row `i` against columns `j ∈ [i, n)`, updating `acc`.
+#[inline]
+fn scan_row(v: &[Vec3], i: usize, acc: &mut Diameters) {
+    let vi = v[i];
+    for &vj in &v[i..] {
+        let dsq = vi.dist_sq(vj);
+        if dsq > acc.d3d_sq {
+            acc.d3d_sq = dsq;
+        }
+        if vi.z == vj.z && dsq > acc.dxy_sq {
+            acc.dxy_sq = dsq;
+        }
+        if vi.x == vj.x && dsq > acc.dyz_sq {
+            acc.dyz_sq = dsq;
+        }
+        if vi.y == vj.y && dsq > acc.dxz_sq {
+            acc.dxz_sq = dsq;
+        }
+    }
+}
+
+/// Row block size for the queue-based strategies (the CUDA block dim).
+const BLOCK_ROWS: usize = 256;
+/// Tile edge for the 2D-tiling strategy (sized like a shared-memory tile).
+const TILE: usize = 1024;
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `strategy` over `vertices` with `threads` CPU workers (0 = auto).
+/// All strategies return identical diameters; they differ in decomposition,
+/// synchronisation pattern and the [`WorkProfile`] they tally.
+pub fn compute_diameters(
+    strategy: Strategy,
+    vertices: &[Vec3],
+    threads: usize,
+) -> (Diameters, KernelStats) {
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let start = Instant::now();
+    let n = vertices.len();
+    if n == 0 {
+        return (Diameters::EMPTY, KernelStats::default());
+    }
+    let (d, profile) = match strategy {
+        Strategy::EqualSplit => equal_split(vertices, threads),
+        Strategy::BlockReduction => block_reduction(vertices, threads),
+        Strategy::Tiled2D => tiled_2d(vertices, threads),
+        Strategy::LocalAccumulators => local_accumulators(vertices, threads),
+        Strategy::Flat1D => flat_1d(vertices, threads),
+    };
+    (d, KernelStats { wall: start.elapsed(), profile })
+}
+
+fn pair_count(n: u64) -> u64 {
+    n * (n + 1) / 2
+}
+
+/// (1) Contiguous equal row ranges; the triangular workload makes the first
+/// range do far more pairs than the last — the paper's baseline imbalance.
+/// The global accumulator is updated under a lock once per *row*.
+fn equal_split(v: &[Vec3], threads: usize) -> (Diameters, WorkProfile) {
+    let n = v.len();
+    let global = Mutex::new(Diameters::EMPTY);
+    let rows_per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let global = &global;
+            s.spawn(move || {
+                let lo = (t * rows_per).min(n);
+                let hi = ((t + 1) * rows_per).min(n);
+                for i in lo..hi {
+                    let mut acc = Diameters::EMPTY;
+                    scan_row(v, i, &mut acc);
+                    let mut g = global.lock().unwrap();
+                    *g = g.merge(&acc);
+                }
+            });
+        }
+    });
+    let d = global.into_inner().unwrap();
+    let profile = WorkProfile {
+        pairs: pair_count(n as u64),
+        distance_ops: pair_count(n as u64),
+        global_atomics: n as u64, // one global update per row
+        block_reductions: 0,
+        tile_bytes: 0,
+        logical_threads: n as u64,
+        index_ops: 2 * pair_count(n as u64), // 2D index arithmetic per pair
+    };
+    (d, profile)
+}
+
+/// (2) Dynamic block queue + per-block reduction, one global atomic per
+/// block — balanced load, few global atomics.
+fn block_reduction(v: &[Vec3], threads: usize) -> (Diameters, WorkProfile) {
+    let n = v.len();
+    let next = AtomicUsize::new(0);
+    let global = Mutex::new(Diameters::EMPTY);
+    let nblocks = n.div_ceil(BLOCK_ROWS);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let global = &global;
+            s.spawn(move || loop {
+                let b = next.fetch_add(1, Ordering::Relaxed);
+                if b >= nblocks {
+                    break;
+                }
+                let lo = b * BLOCK_ROWS;
+                let hi = ((b + 1) * BLOCK_ROWS).min(n);
+                // block-level reduction in "shared memory"
+                let mut acc = Diameters::EMPTY;
+                for i in lo..hi {
+                    scan_row(v, i, &mut acc);
+                }
+                let mut g = global.lock().unwrap();
+                *g = g.merge(&acc);
+            });
+        }
+    });
+    let d = global.into_inner().unwrap();
+    let profile = WorkProfile {
+        pairs: pair_count(n as u64),
+        distance_ops: pair_count(n as u64),
+        global_atomics: nblocks as u64,
+        block_reductions: nblocks as u64,
+        tile_bytes: 0,
+        logical_threads: n as u64,
+        index_ops: 2 * pair_count(n as u64),
+    };
+    (d, profile)
+}
+
+/// (3) 2D (TILE × TILE) tiling with explicit staging of the column tile
+/// into a local buffer — the CPU analogue of shared-memory tiles.
+fn tiled_2d(v: &[Vec3], threads: usize) -> (Diameters, WorkProfile) {
+    let n = v.len();
+    let ntiles_i = n.div_ceil(TILE);
+    let next = AtomicUsize::new(0);
+    let global = Mutex::new(Diameters::EMPTY);
+    let tiles_staged = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let global = &global;
+            let tiles_staged = &tiles_staged;
+            s.spawn(move || {
+                let mut stage: Vec<Vec3> = Vec::with_capacity(TILE);
+                loop {
+                    let ti = next.fetch_add(1, Ordering::Relaxed);
+                    if ti >= ntiles_i {
+                        break;
+                    }
+                    let ilo = ti * TILE;
+                    let ihi = ((ti + 1) * TILE).min(n);
+                    let mut acc = Diameters::EMPTY;
+                    // stage column tiles j ≥ tile i
+                    let mut jlo = ilo;
+                    while jlo < n {
+                        let jhi = (jlo + TILE).min(n);
+                        stage.clear();
+                        stage.extend_from_slice(&v[jlo..jhi]);
+                        tiles_staged.fetch_add(1, Ordering::Relaxed);
+                        for i in ilo..ihi {
+                            let vi = v[i];
+                            let jstart = if jlo <= i { i - jlo } else { 0 };
+                            for &vj in &stage[jstart.min(stage.len())..] {
+                                let dsq = vi.dist_sq(vj);
+                                if dsq > acc.d3d_sq {
+                                    acc.d3d_sq = dsq;
+                                }
+                                if vi.z == vj.z && dsq > acc.dxy_sq {
+                                    acc.dxy_sq = dsq;
+                                }
+                                if vi.x == vj.x && dsq > acc.dyz_sq {
+                                    acc.dyz_sq = dsq;
+                                }
+                                if vi.y == vj.y && dsq > acc.dxz_sq {
+                                    acc.dxz_sq = dsq;
+                                }
+                            }
+                        }
+                        jlo = jhi;
+                    }
+                    let mut g = global.lock().unwrap();
+                    *g = g.merge(&acc);
+                }
+            });
+        }
+    });
+    let d = global.into_inner().unwrap();
+    let staged = tiles_staged.load(Ordering::Relaxed) as u64;
+    let profile = WorkProfile {
+        pairs: pair_count(n as u64),
+        distance_ops: pair_count(n as u64),
+        global_atomics: ntiles_i as u64,
+        block_reductions: staged,
+        tile_bytes: staged * (TILE as u64) * 12, // 3 × f32 per vertex
+        logical_threads: n as u64,
+        index_ops: pair_count(n as u64), // tile-local indexing is cheaper
+    };
+    (d, profile)
+}
+
+/// (4) Per-thread local accumulators over a dynamic row-block queue; the
+/// only synchronisation is one global merge per thread at the very end.
+fn local_accumulators(v: &[Vec3], threads: usize) -> (Diameters, WorkProfile) {
+    let n = v.len();
+    let next = AtomicUsize::new(0);
+    let global = Mutex::new(Diameters::EMPTY);
+    let nblocks = n.div_ceil(BLOCK_ROWS);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let global = &global;
+            s.spawn(move || {
+                let mut acc = Diameters::EMPTY; // lives for the whole thread
+                loop {
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= nblocks {
+                        break;
+                    }
+                    let lo = b * BLOCK_ROWS;
+                    let hi = ((b + 1) * BLOCK_ROWS).min(n);
+                    for i in lo..hi {
+                        scan_row(v, i, &mut acc);
+                    }
+                }
+                let mut g = global.lock().unwrap();
+                *g = g.merge(&acc);
+            });
+        }
+    });
+    let d = global.into_inner().unwrap();
+    let profile = WorkProfile {
+        pairs: pair_count(n as u64),
+        distance_ops: pair_count(n as u64),
+        global_atomics: threads as u64,
+        block_reductions: 0,
+        tile_bytes: 0,
+        logical_threads: n as u64,
+        index_ops: 2 * pair_count(n as u64),
+    };
+    (d, profile)
+}
+
+/// (5) Flattened triangular pair index: pair k → (i, j) via the triangular
+/// root, processed in 1D chunks — minimal address arithmetic per step, the
+/// paper's "just 1D arrays" simplification.
+fn flat_1d(v: &[Vec3], threads: usize) -> (Diameters, WorkProfile) {
+    let n = v.len() as u64;
+    let total = pair_count(n);
+    const CHUNK: u64 = 1 << 16;
+    let next = AtomicUsize::new(0);
+    let nchunks = total.div_ceil(CHUNK);
+    let global = Mutex::new(Diameters::EMPTY);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let global = &global;
+            s.spawn(move || {
+                let mut acc = Diameters::EMPTY;
+                loop {
+                    let c = next.fetch_add(1, Ordering::Relaxed) as u64;
+                    if c >= nchunks {
+                        break;
+                    }
+                    let klo = c * CHUNK;
+                    let khi = (klo + CHUNK).min(total);
+                    // triangular-root decode once per chunk, then walk
+                    let (mut i, mut j) = triangular_decode(klo, n);
+                    for _ in klo..khi {
+                        let vi = v[i as usize];
+                        let vj = v[j as usize];
+                        let dsq = vi.dist_sq(vj);
+                        if dsq > acc.d3d_sq {
+                            acc.d3d_sq = dsq;
+                        }
+                        if vi.z == vj.z && dsq > acc.dxy_sq {
+                            acc.dxy_sq = dsq;
+                        }
+                        if vi.x == vj.x && dsq > acc.dyz_sq {
+                            acc.dyz_sq = dsq;
+                        }
+                        if vi.y == vj.y && dsq > acc.dxz_sq {
+                            acc.dxz_sq = dsq;
+                        }
+                        j += 1;
+                        if j == n {
+                            i += 1;
+                            j = i;
+                        }
+                    }
+                }
+                let mut g = global.lock().unwrap();
+                *g = g.merge(&acc);
+            });
+        }
+    });
+    let d = global.into_inner().unwrap();
+    let profile = WorkProfile {
+        pairs: total,
+        distance_ops: total,
+        global_atomics: threads as u64,
+        block_reductions: 0,
+        tile_bytes: 0,
+        logical_threads: total.min(1 << 31),
+        index_ops: nchunks, // one decode per chunk instead of per pair
+    };
+    (d, profile)
+}
+
+/// Decode flat pair index `k` into (row, col) of the upper-triangular
+/// (including diagonal) pair enumeration with row-major order.
+fn triangular_decode(k: u64, n: u64) -> (u64, u64) {
+    // Row i starts at offset s(i) = i*n - i*(i-1)/2 + ... solve via the
+    // quadratic formula on pairs-remaining, then fix up.
+    // Pairs before row i: P(i) = Σ_{r<i} (n - r) = i*n - i(i-1)/2.
+    // Find the largest i with P(i) <= k.
+    let fk = k as f64;
+    let fnn = n as f64;
+    let mut i = ((2.0 * fnn + 1.0 - ((2.0 * fnn + 1.0) * (2.0 * fnn + 1.0) - 8.0 * fk).sqrt())
+        / 2.0)
+        .floor()
+        .max(0.0) as u64;
+    let p = |i: u64| i * n - i * (i.saturating_sub(1)) / 2;
+    while i > 0 && p(i) > k {
+        i -= 1;
+    }
+    while i + 1 <= n && p(i + 1) <= k {
+        i += 1;
+    }
+    let j = i + (k - p(i));
+    (i, j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::brute_force_diameters;
+
+    fn cloud(n: usize, seed: u64) -> Vec<Vec3> {
+        let mut rng = crate::testkit::Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                Vec3::new(
+                    (rng.next_u32() % 100) as f64 / 7.0,
+                    (rng.next_u32() % 100) as f64 / 7.0,
+                    (rng.next_u32() % 16) as f64 / 2.0, // quantised z planes
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn triangular_decode_enumerates_all_pairs() {
+        let n = 13u64;
+        let mut seen = std::collections::HashSet::new();
+        let total = n * (n + 1) / 2;
+        for k in 0..total {
+            let (i, j) = triangular_decode(k, n);
+            assert!(i <= j && j < n, "k={k} -> ({i},{j})");
+            assert!(seen.insert((i, j)));
+        }
+        assert_eq!(seen.len() as u64, total);
+    }
+
+    #[test]
+    fn all_strategies_match_brute_force() {
+        for n in [1usize, 2, 7, 100, 300, 1500] {
+            let v = cloud(n, n as u64);
+            let want = brute_force_diameters(&v);
+            for strat in Strategy::ALL {
+                for threads in [1usize, 2, 4] {
+                    let (got, _) = compute_diameters(strat, &v, threads);
+                    assert_eq!(
+                        got.as_array(),
+                        want.as_array(),
+                        "{strat:?} n={n} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn profiles_count_all_pairs() {
+        let v = cloud(500, 1);
+        let total = 500u64 * 501 / 2;
+        for strat in Strategy::ALL {
+            let (_, stats) = compute_diameters(strat, &v, 2);
+            assert_eq!(stats.profile.pairs, total, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn strategy_sync_profiles_differ_as_designed() {
+        let v = cloud(2000, 2);
+        let (_, s1) = compute_diameters(Strategy::EqualSplit, &v, 2);
+        let (_, s2) = compute_diameters(Strategy::BlockReduction, &v, 2);
+        let (_, s4) = compute_diameters(Strategy::LocalAccumulators, &v, 2);
+        let (_, s3) = compute_diameters(Strategy::Tiled2D, &v, 2);
+        // baseline: one atomic per row; block: one per 256-row block;
+        // local accumulators: one per thread.
+        assert_eq!(s1.profile.global_atomics, 2000);
+        assert_eq!(s2.profile.global_atomics, 2000u64.div_ceil(256));
+        assert_eq!(s4.profile.global_atomics, 2);
+        assert!(s3.profile.tile_bytes > 0, "2D tiles must stage memory");
+        assert_eq!(s1.profile.tile_bytes, 0);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::from_label(s.label()), Some(s));
+        }
+        assert_eq!(Strategy::from_label("nope"), None);
+    }
+
+    #[test]
+    fn empty_and_single_vertex() {
+        for strat in Strategy::ALL {
+            let (d, _) = compute_diameters(strat, &[], 2);
+            assert_eq!(d, Diameters::EMPTY);
+            let v = [Vec3::new(1.0, 2.0, 3.0)];
+            let (d, _) = compute_diameters(strat, &v, 2);
+            assert_eq!(d.d3d_sq, 0.0); // self-pair
+            assert_eq!(d.dxy_sq, 0.0);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Bounded MPMC channel (Mutex + Condvar). `std::sync::mpsc` is MPSC-only
+//! and its `sync_channel` cannot be shared by multiple consumers; pipeline
+//! stages need N producers *and* M consumers, so this is a small purpose-
+//! built channel with close semantics and queue-depth introspection (the
+//! backpressure signal the Table-2 harness plots).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Shared<T> {
+    q: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Sending half; clone for multiple producers.
+pub struct Sender<T>(Arc<Shared<T>>);
+
+/// Receiving half; clone for multiple consumers.
+pub struct Receiver<T>(Arc<Shared<T>>);
+
+/// Error: all receivers dropped.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Error: channel empty and all senders dropped.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Create a bounded channel of the given capacity (≥ 1).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity >= 1, "capacity must be >= 1");
+    let shared = Arc::new(Shared {
+        q: Mutex::new(Inner { items: VecDeque::new(), senders: 1, receivers: 1 }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity,
+    });
+    (Sender(shared.clone()), Receiver(shared))
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut g = self.0.q.lock().unwrap();
+        g.senders -= 1;
+        if g.senders == 0 {
+            drop(g);
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().receivers += 1;
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut g = self.0.q.lock().unwrap();
+        g.receivers -= 1;
+        if g.receivers == 0 {
+            drop(g);
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send with backpressure; fails when all receivers are gone.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut g = self.0.q.lock().unwrap();
+        loop {
+            if g.receivers == 0 {
+                return Err(SendError(value));
+            }
+            if g.items.len() < self.0.capacity {
+                g.items.push_back(value);
+                drop(g);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.0.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Current queue depth (sampling hook for backpressure metrics).
+    pub fn depth(&self) -> usize {
+        self.0.q.lock().unwrap().items.len()
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `Err(RecvError)` once empty and senders are gone.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut g = self.0.q.lock().unwrap();
+        loop {
+            if let Some(v) = g.items.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if g.senders == 0 {
+                return Err(RecvError);
+            }
+            g = self.0.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Drain into an iterator (consumes until closed).
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_single_thread() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+    }
+
+    #[test]
+    fn recv_fails_after_senders_drop() {
+        let (tx, rx) = bounded::<i32>(2);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_fails_after_receivers_drop() {
+        let (tx, rx) = bounded::<i32>(2);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError(1)));
+    }
+
+    #[test]
+    fn backpressure_blocks_until_recv() {
+        let (tx, rx) = bounded::<i32>(1);
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until a recv happens
+            tx.depth()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.recv(), Ok(1));
+        t.join().unwrap();
+        assert_eq!(rx.recv(), Ok(2));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let (tx, rx) = bounded::<usize>(8);
+        let n_items = 1000;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n_items / 4 {
+                        tx.send(p * (n_items / 4) + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<usize> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..n_items).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        let _ = bounded::<i32>(0);
+    }
+}

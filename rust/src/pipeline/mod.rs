@@ -1,0 +1,16 @@
+//! The streaming coordinator: a staged, backpressured pipeline
+//!
+//! ```text
+//! scanner → [read workers] → [preprocess+mesh workers] → [feature workers] → sink
+//! ```
+//!
+//! built on an in-repo bounded MPMC channel (no tokio offline; the thread
+//! runtime is part of the deliverable). Every stage records per-case phase
+//! timings into [`crate::metrics::Metrics`]; the sink aggregates
+//! [`CaseResult`]s for the experiment harnesses.
+
+mod channel;
+mod stages;
+
+pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
+pub use stages::{run_pipeline, CaseResult, PipelineReport};

@@ -1,0 +1,263 @@
+//! The staged pipeline proper.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::channel::bounded;
+use crate::config::PipelineConfig;
+use crate::dispatch::{CaseTiming, FeatureExtractor, PathTaken};
+use crate::features::ShapeFeatures;
+use crate::io::DatasetManifest;
+use crate::metrics::Metrics;
+use crate::volume::VoxelGrid;
+
+/// Fully-processed case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub case_id: String,
+    pub features: ShapeFeatures,
+    pub timing: CaseTiming,
+    pub path: PathTaken,
+}
+
+/// Pipeline outcome: ordered case results + failures + the metrics dump.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub results: Vec<CaseResult>,
+    pub failures: Vec<(String, String)>,
+    pub metrics_text: String,
+    pub wall: std::time::Duration,
+}
+
+struct ReadItem {
+    case_id: String,
+    mask: VoxelGrid<u8>,
+    read: std::time::Duration,
+}
+
+/// Run the full streaming pipeline over a dataset.
+///
+/// Stage topology (bounded channels of `cfg.queue_capacity` between each):
+/// scanner (inline) → read pool → extract pool (preprocess + mesh +
+/// dispatch) → sink (inline). The extractor is shared: its engine handle is
+/// cloneable and the engine thread serialises artifact executions, which
+/// matches the one-accelerator deployment of the paper.
+pub fn run_pipeline(
+    manifest: &DatasetManifest,
+    cfg: &PipelineConfig,
+    extractor: &FeatureExtractor,
+) -> Result<PipelineReport> {
+    let start = Instant::now();
+    let metrics = Arc::new(Metrics::new());
+
+    let (case_tx, case_rx) = bounded::<(String, PathBuf)>(cfg.queue_capacity);
+    let (read_tx, read_rx) = bounded::<ReadItem>(cfg.queue_capacity);
+    let (out_tx, out_rx) = bounded::<Result<CaseResult, (String, String)>>(cfg.queue_capacity);
+
+    let n_cases = manifest.cases.len();
+
+    std::thread::scope(|scope| {
+        // scanner: feed case paths
+        {
+            let case_tx = case_tx;
+            let manifest = manifest.clone();
+            scope.spawn(move || {
+                for e in &manifest.cases {
+                    let path = manifest.mask_path(e);
+                    if case_tx.send((e.case_id.clone(), path)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+
+        // read pool
+        for _ in 0..cfg.read_workers.max(1) {
+            let case_rx = case_rx.clone();
+            let read_tx = read_tx.clone();
+            let out_tx = out_tx.clone();
+            let metrics = metrics.clone();
+            scope.spawn(move || {
+                while let Ok((case_id, path)) = case_rx.recv() {
+                    let t0 = Instant::now();
+                    let loaded = if path.to_string_lossy().contains(".nii") {
+                        crate::io::read_nifti(&path)
+                    } else {
+                        crate::io::read_rvol(&path)
+                    };
+                    let read = t0.elapsed();
+                    metrics.timer("stage.read").record(read);
+                    match loaded {
+                        Ok(mask) => {
+                            if read_tx.send(ReadItem { case_id, mask, read }).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            metrics.counter("errors.read").fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if out_tx.send(Err((case_id, format!("read: {e:#}")))).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        drop(case_rx);
+        drop(read_tx);
+
+        // extract pool (preprocess + mesh + dispatch + derive)
+        for _ in 0..cfg.feature_workers.max(1) {
+            let read_rx = read_rx.clone();
+            let out_tx = out_tx.clone();
+            let metrics = metrics.clone();
+            scope.spawn(move || {
+                while let Ok(item) = read_rx.recv() {
+                    let res = extractor.execute_mask(&item.mask);
+                    let msg = match res {
+                        Ok(mut ex) => {
+                            ex.timing.read = item.read;
+                            metrics.timer("stage.mesh").record(ex.timing.marching);
+                            metrics.timer("stage.diameters").record(ex.timing.diameters);
+                            metrics.timer("stage.transfer").record(ex.timing.transfer);
+                            metrics
+                                .counter(match ex.path {
+                                    PathTaken::Accelerated => "path.accelerated",
+                                    PathTaken::CpuFallback => "path.cpu",
+                                })
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            Ok(CaseResult {
+                                case_id: item.case_id,
+                                features: ex.features,
+                                timing: ex.timing,
+                                path: ex.path,
+                            })
+                        }
+                        Err(e) => Err((item.case_id, format!("extract: {e:#}"))),
+                    };
+                    if out_tx.send(msg).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(read_rx);
+        drop(out_tx);
+
+        // sink (inline in the scope so `results` lives on this stack)
+        let mut results = Vec::with_capacity(n_cases);
+        let mut failures = Vec::new();
+        while let Ok(msg) = out_rx.recv() {
+            match msg {
+                Ok(r) => results.push(r),
+                Err(f) => failures.push(f),
+            }
+        }
+        // stable order: manifest order
+        let order: std::collections::HashMap<&str, usize> = manifest
+            .cases
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.case_id.as_str(), i))
+            .collect();
+        results.sort_by_key(|r| order.get(r.case_id.as_str()).copied().unwrap_or(usize::MAX));
+
+        Ok(PipelineReport {
+            results,
+            failures,
+            metrics_text: metrics.report(),
+            wall: start.elapsed(),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::synth::{generate_dataset, GenOptions};
+
+    fn tiny_dataset(tag: &str) -> DatasetManifest {
+        let root = std::env::temp_dir().join(format!("radpipe_pipeline_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        generate_dataset(&root, &GenOptions { scale: 0.003, seed: 5 }).unwrap()
+    }
+
+    fn cpu_cfg() -> PipelineConfig {
+        PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn processes_all_cases_in_manifest_order() {
+        let m = tiny_dataset("order");
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        assert_eq!(report.results.len(), 20);
+        let ids: Vec<_> = report.results.iter().map(|r| r.case_id.as_str()).collect();
+        let want: Vec<_> = m.cases.iter().map(|e| e.case_id.as_str()).collect();
+        assert_eq!(ids, want);
+        assert!(report.metrics_text.contains("stage.read"));
+    }
+
+    #[test]
+    fn multiworker_matches_single_worker() {
+        let m = tiny_dataset("workers");
+        let cfg1 = cpu_cfg();
+        let ex1 = FeatureExtractor::new(&cfg1).unwrap();
+        let r1 = run_pipeline(&m, &cfg1, &ex1).unwrap();
+
+        let cfg4 = PipelineConfig {
+            read_workers: 3,
+            feature_workers: 4,
+            queue_capacity: 2,
+            ..cpu_cfg()
+        };
+        let ex4 = FeatureExtractor::new(&cfg4).unwrap();
+        let r4 = run_pipeline(&m, &cfg4, &ex4).unwrap();
+
+        assert_eq!(r1.results.len(), r4.results.len());
+        for (a, b) in r1.results.iter().zip(&r4.results) {
+            assert_eq!(a.case_id, b.case_id);
+            assert_eq!(a.features.mesh_volume, b.features.mesh_volume);
+            assert_eq!(a.features.maximum_3d_diameter, b.features.maximum_3d_diameter);
+        }
+    }
+
+    #[test]
+    fn missing_file_reported_not_fatal() {
+        let mut m = tiny_dataset("missing");
+        m.cases[3].mask = PathBuf::from("does-not-exist.rvol.gz");
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 19);
+        assert_eq!(report.failures.len(), 1);
+        assert_eq!(report.failures[0].0, m.cases[3].case_id);
+        assert!(report.failures[0].1.contains("read"));
+    }
+
+    #[test]
+    fn corrupt_file_reported_not_fatal() {
+        let m = tiny_dataset("corrupt");
+        std::fs::write(m.mask_path(&m.cases[0]), b"garbage").unwrap();
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 19);
+        assert_eq!(report.failures.len(), 1);
+    }
+
+    #[test]
+    fn tiny_queue_capacity_still_completes() {
+        let m = tiny_dataset("queue");
+        let cfg = PipelineConfig { queue_capacity: 1, feature_workers: 2, ..cpu_cfg() };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 20);
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal JSON document builder (output only; the pipeline never parses
+//! JSON). Handles escaping, NaN→null (JSON has no NaN) and stable key
+//! order for diffable outputs.
+
+use std::collections::BTreeMap;
+use std::fmt::Write;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    pub fn obj() -> JsonValue {
+        JsonValue::Obj(BTreeMap::new())
+    }
+
+    /// Insert into an object (panics on non-objects — builder misuse).
+    pub fn set(&mut self, key: &str, value: impl Into<JsonValue>) -> &mut Self {
+        match self {
+            JsonValue::Obj(m) => {
+                m.insert(key.to_string(), value.into());
+            }
+            _ => panic!("set() on non-object"),
+        }
+        self
+    }
+
+    fn escape(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(n) => {
+                if n.is_finite() {
+                    let _ = write!(out, "{n}");
+                } else {
+                    out.push_str("null"); // NaN/inf are not JSON
+                }
+            }
+            JsonValue::Str(s) => Self::escape(s, out),
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::escape(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+}
+
+impl From<f64> for JsonValue {
+    fn from(v: f64) -> Self {
+        JsonValue::Num(v)
+    }
+}
+impl From<usize> for JsonValue {
+    fn from(v: usize) -> Self {
+        JsonValue::Num(v as f64)
+    }
+}
+impl From<bool> for JsonValue {
+    fn from(v: bool) -> Self {
+        JsonValue::Bool(v)
+    }
+}
+impl From<&str> for JsonValue {
+    fn from(v: &str) -> Self {
+        JsonValue::Str(v.to_string())
+    }
+}
+impl From<String> for JsonValue {
+    fn from(v: String) -> Self {
+        JsonValue::Str(v)
+    }
+}
+impl<T: Into<JsonValue>> From<Vec<T>> for JsonValue {
+    fn from(v: Vec<T>) -> Self {
+        JsonValue::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_nested_documents() {
+        let mut doc = JsonValue::obj();
+        doc.set("name", "case-1").set("vol", 12.5).set("ok", true);
+        doc.set("diams", vec![1.0, 2.0]);
+        let mut inner = JsonValue::obj();
+        inner.set("n", 3usize);
+        doc.set("meta", inner);
+        assert_eq!(
+            doc.to_string(),
+            r#"{"diams":[1,2],"meta":{"n":3},"name":"case-1","ok":true,"vol":12.5}"#
+        );
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        let mut doc = JsonValue::obj();
+        doc.set("d", f64::NAN);
+        assert_eq!(doc.to_string(), r#"{"d":null}"#);
+    }
+
+    #[test]
+    fn strings_escaped() {
+        let v = JsonValue::from("a\"b\\c\nd\u{1}");
+        assert_eq!(v.to_string(), "\"a\\\"b\\\\c\\nd\\u0001\"");
+    }
+
+    #[test]
+    fn stable_key_order() {
+        let mut a = JsonValue::obj();
+        a.set("z", 1.0).set("a", 2.0);
+        assert_eq!(a.to_string(), r#"{"a":2,"z":1}"#);
+    }
+}

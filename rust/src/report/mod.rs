@@ -1,0 +1,8 @@
+//! Report emitters: markdown tables, CSV and a minimal JSON writer for the
+//! experiment harnesses (no serde offline — part of the deliverable).
+
+mod json;
+mod table;
+
+pub use json::JsonValue;
+pub use table::Table;

@@ -1,0 +1,99 @@
+//! Size-bucket policy shared with `python/compile/model.py`: route a
+//! dynamic size to the smallest static AOT bucket that fits, pad the data
+//! in a result-preserving way.
+
+use anyhow::{bail, Result};
+
+/// Smallest bucket ≥ `count`. `buckets` must be sorted ascending.
+pub fn bucket_for(count: usize, buckets: &[usize]) -> Result<usize> {
+    for &b in buckets {
+        if count <= b {
+            return Ok(b);
+        }
+    }
+    bail!(
+        "count {count} exceeds the largest AOT bucket {:?} — regenerate artifacts with --full",
+        buckets.last()
+    )
+}
+
+/// Pad f32[n,3] vertex data to `bucket` rows by duplicating the first
+/// vertex (duplicates can never increase a max-distance reduction).
+pub fn pad_vertices(verts: &[f32], bucket: usize) -> Result<Vec<f32>> {
+    if verts.len() % 3 != 0 {
+        bail!("vertex buffer length {} not divisible by 3", verts.len());
+    }
+    let n = verts.len() / 3;
+    if n == 0 {
+        bail!("cannot pad an empty vertex buffer");
+    }
+    if n > bucket {
+        bail!("{n} vertices exceed bucket {bucket}");
+    }
+    let mut out = Vec::with_capacity(bucket * 3);
+    out.extend_from_slice(verts);
+    let first = [verts[0], verts[1], verts[2]];
+    for _ in n..bucket {
+        out.extend_from_slice(&first);
+    }
+    Ok(out)
+}
+
+/// Pad f32[t,9] triangle-soup data to `bucket` rows with degenerate
+/// all-zero triangles (zero area, zero signed volume).
+pub fn pad_triangles(tris: &[f32], bucket: usize) -> Result<Vec<f32>> {
+    if tris.len() % 9 != 0 {
+        bail!("triangle buffer length {} not divisible by 9", tris.len());
+    }
+    let t = tris.len() / 9;
+    if t > bucket {
+        bail!("{t} triangles exceed bucket {bucket}");
+    }
+    let mut out = Vec::with_capacity(bucket * 9);
+    out.extend_from_slice(tris);
+    out.resize(bucket * 9, 0.0);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_policy() {
+        let b = [512usize, 1024, 4096];
+        assert_eq!(bucket_for(1, &b).unwrap(), 512);
+        assert_eq!(bucket_for(512, &b).unwrap(), 512);
+        assert_eq!(bucket_for(513, &b).unwrap(), 1024);
+        assert_eq!(bucket_for(4096, &b).unwrap(), 4096);
+        assert!(bucket_for(4097, &b).is_err());
+    }
+
+    #[test]
+    fn vertex_padding_duplicates_first() {
+        let v = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = pad_vertices(&v, 4).unwrap();
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[..6], &v[..]);
+        assert_eq!(&p[6..9], &[1.0, 2.0, 3.0]);
+        assert_eq!(&p[9..12], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn vertex_padding_errors() {
+        assert!(pad_vertices(&[1.0, 2.0], 4).is_err()); // not /3
+        assert!(pad_vertices(&[], 4).is_err()); // empty
+        let v = vec![0.0f32; 15];
+        assert!(pad_vertices(&v, 4).is_err()); // 5 > 4
+    }
+
+    #[test]
+    fn triangle_padding_zero_fills() {
+        let t = vec![1.0f32; 9];
+        let p = pad_triangles(&t, 3).unwrap();
+        assert_eq!(p.len(), 27);
+        assert!(p[9..].iter().all(|&v| v == 0.0));
+        // empty soup is fine for triangles (volume 0)
+        assert_eq!(pad_triangles(&[], 2).unwrap(), vec![0.0; 18]);
+    }
+}

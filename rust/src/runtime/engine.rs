@@ -1,0 +1,300 @@
+//! The PJRT engine thread: owns the non-`Send` client, compiles artifacts
+//! lazily, executes requests, reports per-phase timings.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::buckets::{bucket_for, pad_triangles, pad_vertices};
+use super::registry::ArtifactRegistry;
+use crate::features::Diameters;
+
+/// Phase timings of one artifact execution — the Table 2 GPU columns.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Host → device buffer upload ("D. tran").
+    pub transfer: Duration,
+    /// Executable run + result download.
+    pub execute: Duration,
+    /// Lazily-compiled-this-call compile time (0 when cached).
+    pub compile: Duration,
+    /// Bucket the request was routed to.
+    pub bucket: usize,
+}
+
+enum Request {
+    Diameters {
+        verts: Vec<f32>,
+        reply: mpsc::Sender<Result<(Diameters, ExecTiming)>>,
+    },
+    MeshStats {
+        tris: Vec<f32>,
+        reply: mpsc::Sender<Result<([f64; 2], ExecTiming)>>,
+    },
+    /// Pre-compile every artifact (warm start), reply with count.
+    WarmUp {
+        reply: mpsc::Sender<Result<usize>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// The engine: spawn with [`Engine::start`], talk through [`EngineHandle`].
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the engine thread over an artifact directory. Fails fast (in
+    /// the caller's thread) if the manifest is unreadable; PJRT client
+    /// construction happens on the engine thread and surfaces on first use.
+    pub fn start(artifact_dir: &std::path::Path) -> Result<Engine> {
+        let registry = ArtifactRegistry::load(artifact_dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(registry, rx))
+            .context("spawn pjrt-engine")?;
+        Ok(Engine { handle: EngineHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Max 3D + planar diameters of f32[n,3] vertices via the AOT artifact.
+    /// Returns squared diameters (artifact returns lengths; squared here
+    /// for interface parity with the CPU path) and phase timings.
+    pub fn diameters(&self, verts: Vec<f32>) -> Result<(Diameters, ExecTiming)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Diameters { verts, reply })
+            .map_err(|_| anyhow!("pjrt engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped the request"))?
+    }
+
+    /// Fused [volume, area] of an f32[t,9] triangle soup.
+    pub fn mesh_stats(&self, tris: Vec<f32>) -> Result<([f64; 2], ExecTiming)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::MeshStats { tris, reply })
+            .map_err(|_| anyhow!("pjrt engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped the request"))?
+    }
+
+    /// Compile all artifacts now; returns how many were compiled.
+    pub fn warm_up(&self) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::WarmUp { reply })
+            .map_err(|_| anyhow!("pjrt engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped the request"))?
+    }
+}
+
+/// Engine-thread state.
+struct EngineState {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    /// (kernel, bucket-key) → compiled executable.
+    cache: HashMap<(String, String), xla::PjRtLoadedExecutable>,
+}
+
+fn engine_main(registry: ArtifactRegistry, rx: mpsc::Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Drain requests, failing each with the construction error.
+            for req in rx {
+                let msg = format!("PJRT client init failed: {e}");
+                match req {
+                    Request::Diameters { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!(msg)));
+                    }
+                    Request::MeshStats { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!(msg)));
+                    }
+                    Request::WarmUp { reply } => {
+                        let _ = reply.send(Err(anyhow!(msg)));
+                    }
+                    Request::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    let mut state = EngineState { client, registry, cache: HashMap::new() };
+    for req in rx {
+        match req {
+            Request::Diameters { verts, reply } => {
+                let _ = reply.send(run_diameters(&mut state, &verts));
+            }
+            Request::MeshStats { tris, reply } => {
+                let _ = reply.send(run_mesh_stats(&mut state, &tris));
+            }
+            Request::WarmUp { reply } => {
+                let _ = reply.send(warm_up(&mut state));
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+fn compile<'a>(
+    state: &'a mut EngineState,
+    name: &str,
+    bucket_key: &str,
+) -> Result<(Duration, &'a xla::PjRtLoadedExecutable)> {
+    let key = (name.to_string(), bucket_key.to_string());
+    let mut took = Duration::ZERO;
+    if !state.cache.contains_key(&key) {
+        let spec = state
+            .registry
+            .get(name, bucket_key)
+            .with_context(|| format!("no artifact {name}[{bucket_key}]"))?
+            .clone();
+        let path: PathBuf = state.registry.path(&spec);
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = state
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}[{bucket_key}]: {e}"))?;
+        took = start.elapsed();
+        state.cache.insert(key.clone(), exe);
+    }
+    Ok((took, state.cache.get(&key).unwrap()))
+}
+
+fn run_diameters(state: &mut EngineState, verts: &[f32]) -> Result<(Diameters, ExecTiming)> {
+    let n = verts.len() / 3;
+    let buckets = state.registry.numeric_buckets("diameter");
+    if buckets.is_empty() {
+        bail!("no diameter artifacts in registry");
+    }
+    let bucket = bucket_for(n, &buckets)?;
+    let padded = pad_vertices(verts, bucket)?;
+
+    let (compile_t, _) = compile(state, "diameter", &bucket.to_string())?;
+
+    // transfer phase: host → device buffer
+    let t0 = Instant::now();
+    let buf = state
+        .client
+        .buffer_from_host_buffer::<f32>(&padded, &[bucket, 3], None)
+        .map_err(|e| anyhow!("upload: {e}"))?;
+    let transfer = t0.elapsed();
+
+    // execute phase (+ result download)
+    let exe = state.cache.get(&("diameter".to_string(), bucket.to_string())).unwrap();
+    let t1 = Instant::now();
+    let result = exe.execute_b::<xla::PjRtBuffer>(&[buf]).map_err(|e| anyhow!("execute: {e}"))?;
+    let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("download: {e}"))?;
+    let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+    let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+    let execute = t1.elapsed();
+
+    if vals.len() != 4 {
+        bail!("diameter artifact returned {} values, want 4", vals.len());
+    }
+    // Artifact yields diameter *lengths* (NaN for empty planes); the
+    // in-process interface speaks squared distances with -1 sentinels.
+    let sq = |v: f32| {
+        if v.is_nan() {
+            -1.0
+        } else {
+            (v as f64) * (v as f64)
+        }
+    };
+    let d = Diameters {
+        d3d_sq: sq(vals[0]),
+        dxy_sq: sq(vals[1]),
+        dyz_sq: sq(vals[2]),
+        dxz_sq: sq(vals[3]),
+    };
+    Ok((d, ExecTiming { transfer, execute, compile: compile_t, bucket }))
+}
+
+fn run_mesh_stats(state: &mut EngineState, tris: &[f32]) -> Result<([f64; 2], ExecTiming)> {
+    let t = tris.len() / 9;
+    let buckets = state.registry.numeric_buckets("mesh_stats");
+    if buckets.is_empty() {
+        bail!("no mesh_stats artifacts in registry");
+    }
+    let bucket = bucket_for(t, &buckets)?;
+    let padded = pad_triangles(tris, bucket)?;
+
+    let (compile_t, _) = compile(state, "mesh_stats", &bucket.to_string())?;
+
+    let t0 = Instant::now();
+    let buf = state
+        .client
+        .buffer_from_host_buffer::<f32>(&padded, &[bucket, 9], None)
+        .map_err(|e| anyhow!("upload: {e}"))?;
+    let transfer = t0.elapsed();
+
+    let exe = state.cache.get(&("mesh_stats".to_string(), bucket.to_string())).unwrap();
+    let t1 = Instant::now();
+    let result = exe.execute_b::<xla::PjRtBuffer>(&[buf]).map_err(|e| anyhow!("execute: {e}"))?;
+    let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("download: {e}"))?;
+    let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+    let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+    let execute = t1.elapsed();
+
+    if vals.len() != 2 {
+        bail!("mesh_stats artifact returned {} values, want 2", vals.len());
+    }
+    Ok((
+        [vals[0] as f64, vals[1] as f64],
+        ExecTiming { transfer, execute, compile: compile_t, bucket },
+    ))
+}
+
+fn warm_up(state: &mut EngineState) -> Result<usize> {
+    let mut compiled = 0;
+    let pairs: Vec<(String, String)> = state
+        .registry
+        .kernel_names()
+        .iter()
+        .flat_map(|name| {
+            state
+                .registry
+                .specs(name)
+                .unwrap_or_default()
+                .iter()
+                .map(|s| (s.name.clone(), s.bucket.clone()))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    for (name, bucket) in pairs {
+        let (took, _) = compile(state, &name, &bucket)?;
+        if took > Duration::ZERO {
+            compiled += 1;
+        }
+    }
+    Ok(compiled)
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the request path. Python is never involved here.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the whole
+//! PJRT world is confined to one dedicated **engine thread** (the moral
+//! equivalent of a CUDA stream): pipeline workers talk to it through an
+//! MPSC request channel and get replies over per-request channels. The
+//! engine compiles executables lazily per (kernel, bucket) and caches them.
+
+mod registry;
+mod engine;
+mod buckets;
+
+pub use buckets::{bucket_for, pad_triangles, pad_vertices};
+pub use engine::{Engine, EngineHandle, ExecTiming};
+pub use registry::{ArtifactRegistry, ArtifactSpec};

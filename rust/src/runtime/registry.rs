@@ -1,0 +1,177 @@
+//! Artifact registry: parses `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) and indexes the available (kernel, bucket)
+//! pairs. This is also the dispatcher's "is an accelerator present?" probe.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub bucket: String,
+    pub file: PathBuf,
+    /// Declared input shapes, e.g. `["f32[4096,3]"]`.
+    pub inputs: Vec<String>,
+    pub outputs: usize,
+}
+
+/// Index over the artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    /// name → sorted numeric buckets (for `diameter` / `mesh_stats`).
+    by_name: BTreeMap<String, Vec<ArtifactSpec>>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.txt`; verifies each referenced file exists.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {}", manifest.display()))?;
+        let mut by_name: BTreeMap<String, Vec<ArtifactSpec>> = BTreeMap::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let spec = parse_line(line).with_context(|| format!("manifest line {}", no + 1))?;
+            let path = dir.join(&spec.file);
+            if !path.exists() {
+                bail!("manifest references missing artifact {}", path.display());
+            }
+            by_name.entry(spec.name.clone()).or_default().push(spec);
+        }
+        if by_name.is_empty() {
+            bail!("empty artifact manifest {}", manifest.display());
+        }
+        // sort numeric buckets ascending for bucket_for
+        for specs in by_name.values_mut() {
+            specs.sort_by_key(|s| s.bucket.parse::<usize>().unwrap_or(usize::MAX));
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), by_name })
+    }
+
+    /// All specs for a kernel name.
+    pub fn specs(&self, name: &str) -> Option<&[ArtifactSpec]> {
+        self.by_name.get(name).map(|v| v.as_slice())
+    }
+
+    /// Sorted numeric buckets for a kernel name.
+    pub fn numeric_buckets(&self, name: &str) -> Vec<usize> {
+        self.specs(name)
+            .map(|s| s.iter().filter_map(|a| a.bucket.parse().ok()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Spec for an exact (name, bucket-key) pair.
+    pub fn get(&self, name: &str, bucket: &str) -> Option<&ArtifactSpec> {
+        self.specs(name)?.iter().find(|s| s.bucket == bucket)
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.by_name.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn parse_line(line: &str) -> Result<ArtifactSpec> {
+    let mut name = None;
+    let mut bucket = None;
+    let mut file = None;
+    let mut inputs = Vec::new();
+    let mut outputs = 1usize;
+    for tok in line.split_whitespace() {
+        let Some((k, v)) = tok.split_once('=') else {
+            bail!("bad token '{tok}'");
+        };
+        match k {
+            "name" => name = Some(v.to_string()),
+            "bucket" => bucket = Some(v.to_string()),
+            "file" => file = Some(PathBuf::from(v)),
+            "inputs" => inputs = v.split(';').map(|s| s.to_string()).collect(),
+            "outputs" => outputs = v.parse().context("outputs")?,
+            _ => {}
+        }
+    }
+    Ok(ArtifactSpec {
+        name: name.context("missing name=")?,
+        bucket: bucket.context("missing bucket=")?,
+        file: file.context("missing file=")?,
+        inputs,
+        outputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_registry(dir: &Path, lines: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+    }
+
+    #[test]
+    fn loads_and_sorts_buckets() {
+        let dir = std::env::temp_dir().join("radpipe_registry_sorts");
+        write_registry(
+            &dir,
+            "name=diameter bucket=4096 file=d4096.hlo.txt inputs=f32[4096,3] outputs=1\n\
+             name=diameter bucket=512 file=d512.hlo.txt inputs=f32[512,3] outputs=1\n\
+             name=mc_grid bucket=33x40x40 file=g.hlo.txt inputs=f32[33,40,40];f32[3] outputs=1\n",
+            &["d4096.hlo.txt", "d512.hlo.txt", "g.hlo.txt"],
+        );
+        let r = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(r.numeric_buckets("diameter"), vec![512, 4096]);
+        assert_eq!(r.kernel_names(), vec!["diameter", "mc_grid"]);
+        let g = r.get("mc_grid", "33x40x40").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert!(r.path(g).exists());
+        assert!(r.get("diameter", "9999").is_none());
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("radpipe_registry_missing");
+        write_registry(
+            &dir,
+            "name=diameter bucket=512 file=absent.hlo.txt inputs=f32[512,3] outputs=1\n",
+            &[],
+        );
+        let err = ArtifactRegistry::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing artifact"));
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        let dir = std::env::temp_dir().join("radpipe_registry_empty");
+        write_registry(&dir, "# nothing\n", &[]);
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, validate the real bundle.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return; // artifacts not built in this environment
+        }
+        let r = ArtifactRegistry::load(&dir).unwrap();
+        assert!(r.specs("diameter").is_some());
+        assert!(r.specs("mesh_stats").is_some());
+        assert!(r.specs("mc_grid").is_some());
+        let buckets = r.numeric_buckets("diameter");
+        assert!(buckets.windows(2).all(|w| w[0] < w[1]), "sorted: {buckets:?}");
+    }
+}

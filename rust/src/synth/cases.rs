@@ -1,0 +1,126 @@
+//! The paper's Table 2 case list: image dims, vertex counts and the
+//! published timings (used for paper-vs-measured comparison columns).
+
+use crate::volume::Dims;
+
+/// One row of the paper's Table 2.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperCase {
+    pub case_id: &'static str,
+    pub dims: Dims,
+    /// "vertices in 3D space" column.
+    pub vertices: usize,
+    /// File-reading time, ms (PyRadiomics column).
+    pub t_read_ms: f64,
+    /// Marching-cubes time, ms (CPU).
+    pub t_mc_cpu_ms: f64,
+    /// Diameter time, ms (CPU).
+    pub t_diam_cpu_ms: f64,
+    /// GPU transfer / MC / diameter / total, ms (RTX 4070).
+    pub t_tran_gpu_ms: f64,
+    pub t_mc_gpu_ms: f64,
+    pub t_diam_gpu_ms: f64,
+    /// Published computation speedup ("Comp." column).
+    pub speedup_comp: f64,
+    /// Published overall speedup (incl. file reading).
+    pub speedup_overall: f64,
+}
+
+pub const PAPER_CASE_COUNT: usize = 20;
+
+/// All 20 rows of Table 2, transcribed from the paper.
+pub fn paper_cases() -> Vec<PaperCase> {
+    let c = |case_id,
+             (dx, dy, dz),
+             vertices,
+             t_read_ms,
+             t_mc_cpu_ms,
+             t_diam_cpu_ms,
+             t_tran_gpu_ms,
+             t_mc_gpu_ms,
+             t_diam_gpu_ms,
+             speedup_comp,
+             speedup_overall| PaperCase {
+        case_id,
+        dims: Dims::new(dx, dy, dz),
+        vertices,
+        t_read_ms,
+        t_mc_cpu_ms,
+        t_diam_cpu_ms,
+        t_tran_gpu_ms,
+        t_mc_gpu_ms,
+        t_diam_gpu_ms,
+        speedup_comp,
+        speedup_overall,
+    };
+    vec![
+        c("00000-1", (231, 104, 264), 124406, 2346.0, 20.7, 9516.5, 8.0, 7.2, 514.8, 18.0, 4.1),
+        c("00000-2", (28, 30, 59), 6132, 2350.0, 0.4, 25.3, 0.3, 0.2, 2.4, 8.8, 1.0),
+        c("00001-1", (322, 126, 219), 236588, 2494.0, 29.5, 34210.3, 9.7, 11.0, 1855.8, 18.2, 8.4),
+        c("00001-2", (51, 62, 135), 8928, 2521.0, 2.3, 51.4, 0.7, 0.6, 3.4, 11.5, 1.0),
+        c("00002-1", (230, 109, 163), 83098, 1032.0, 13.4, 4256.2, 5.1, 4.8, 231.8, 17.7, 4.2),
+        c("00002-2", (50, 45, 44), 9206, 1024.0, 0.6, 56.9, 0.5, 0.3, 3.9, 12.3, 1.1),
+        c("00003-1", (237, 122, 135), 77560, 1105.0, 12.7, 3731.0, 4.8, 4.6, 204.1, 17.5, 3.7),
+        c("00003-2", (39, 35, 31), 4568, 1097.0, 0.2, 14.7, 0.3, 0.2, 1.6, 7.1, 1.0),
+        c("00004-1", (254, 70, 36), 31838, 254.0, 2.5, 677.2, 0.8, 1.1, 37.8, 17.1, 3.2),
+        c("00004-2", (35, 37, 10), 2742, 255.0, 0.1, 5.7, 0.3, 0.1, 1.1, 4.0, 1.0),
+        c("00005-1", (167, 94, 285), 126446, 3150.0, 15.0, 9780.9, 5.6, 5.6, 531.5, 18.1, 3.5),
+        c("00005-2", (51, 53, 121), 22024, 3203.0, 1.9, 305.6, 0.6, 0.7, 18.0, 15.9, 1.1),
+        c("00006-1", (308, 102, 36), 65436, 710.0, 4.4, 2828.1, 1.1, 2.0, 153.7, 18.1, 4.1),
+        c("00006-2", (41, 43, 13), 3676, 712.0, 0.1, 10.0, 0.3, 0.2, 1.1, 6.5, 1.0),
+        c("00007-1", (265, 101, 39), 49912, 255.0, 4.1, 1634.9, 1.0, 1.7, 90.1, 17.7, 5.4),
+        c("00007-2", (39, 43, 12), 3498, 250.0, 0.1, 9.3, 0.3, 0.1, 1.2, 6.0, 1.0),
+        c("00008-1", (288, 177, 54), 57362, 967.0, 9.3, 2089.4, 3.3, 3.1, 113.7, 17.5, 2.8),
+        c("00008-2", (127, 154, 41), 47484, 972.0, 3.2, 1436.9, 0.8, 1.4, 78.7, 17.8, 2.3),
+        c("00009-1", (241, 95, 47), 37576, 337.0, 3.8, 916.2, 1.1, 1.5, 50.5, 17.4, 3.2),
+        c("00009-2", (39, 33, 11), 2700, 340.0, 0.1, 5.7, 0.3, 0.1, 1.1, 3.9, 1.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_cases() {
+        let cases = paper_cases();
+        assert_eq!(cases.len(), PAPER_CASE_COUNT);
+        // vertex range from the paper's abstract/§3
+        let min = cases.iter().map(|c| c.vertices).min().unwrap();
+        let max = cases.iter().map(|c| c.vertices).max().unwrap();
+        assert_eq!(min, 2700);
+        assert_eq!(max, 236588);
+    }
+
+    #[test]
+    fn diameter_dominates_cpu_time() {
+        // §3: diameter is 95.7–99.9 % of post-read processing time.
+        for c in paper_cases() {
+            let frac = c.t_diam_cpu_ms / (c.t_diam_cpu_ms + c.t_mc_cpu_ms);
+            assert!(frac > 0.955, "{}: {frac}", c.case_id);
+        }
+    }
+
+    #[test]
+    fn published_comp_speedups_consistent() {
+        // Comp. ≈ cpu_total / gpu_total (within rounding of the table).
+        for c in paper_cases() {
+            let cpu = c.t_mc_cpu_ms + c.t_diam_cpu_ms;
+            let gpu = c.t_tran_gpu_ms + c.t_mc_gpu_ms + c.t_diam_gpu_ms;
+            let ratio = cpu / gpu;
+            assert!(
+                (ratio - c.speedup_comp).abs() / c.speedup_comp < 0.35,
+                "{}: table={} recomputed={ratio:.1}",
+                c.case_id,
+                c.speedup_comp
+            );
+        }
+    }
+
+    #[test]
+    fn ids_unique() {
+        let cases = paper_cases();
+        let ids: std::collections::HashSet<_> = cases.iter().map(|c| c.case_id).collect();
+        assert_eq!(ids.len(), cases.len());
+    }
+}

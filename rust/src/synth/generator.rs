@@ -1,0 +1,254 @@
+//! The deterministic ROI generator.
+//!
+//! Shape model: a lobulated ellipsoid. For a voxel at unit-sphere direction
+//! `u` from the centre, the inside test is
+//!
+//! ```text
+//! |p_ellip(u)| ≤ 1 + Σₖ aₖ·sin(fₖ·θ + φₖ)·sin(gₖ·φ + ψₖ)
+//! ```
+//!
+//! i.e. an ellipsoid whose radius is modulated by a few low-frequency
+//! angular harmonics — a decent stand-in for kidney/tumour ROIs: smooth but
+//! not spherical, occasionally bi-lobed. All randomness comes from
+//! [`Pcg32`] seeded with the case index: datasets are bit-reproducible.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::cases::{paper_cases, PaperCase};
+use crate::geometry::Vec3;
+use crate::io::{write_rvol, CaseEntry, DatasetManifest};
+use crate::mc::mesh_roi;
+use crate::testkit::Pcg32;
+use crate::volume::{Dims, VoxelGrid};
+
+/// Generator options.
+#[derive(Debug, Clone)]
+pub struct GenOptions {
+    /// Global vertex-count scale relative to the paper (1.0 = paper scale).
+    /// The default dataset uses 1/8 — see DESIGN.md (single-core testbed).
+    pub scale: f64,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions { scale: 0.125, seed: 7 }
+    }
+}
+
+/// Angular harmonic of the radius modulation.
+#[derive(Debug, Clone, Copy)]
+struct Harmonic {
+    amp: f64,
+    f_theta: f64,
+    f_phi: f64,
+    p_theta: f64,
+    p_phi: f64,
+}
+
+/// Vertex count of a blob scales with its surface area in voxel units;
+/// calibration on spheres gives ≈ 4.4 vertices per voxel² of area, so
+/// r ≈ sqrt(target / (4.4·4π)).
+fn radius_for_vertices(target: f64) -> f64 {
+    (target / (4.4 * 4.0 * std::f64::consts::PI)).sqrt()
+}
+
+/// Generate one case mask. The ROI is scaled from the paper dims by
+/// `opts.scale` in vertex count (√scale in linear size), bounding dims
+/// shrink accordingly (keeping proportions), and the actual mesh vertex
+/// count is measured and returned.
+pub fn generate_case(case: &PaperCase, opts: &GenOptions) -> (VoxelGrid<u8>, usize) {
+    let mut rng = Pcg32::with_stream(opts.seed, case_stream(case.case_id));
+
+    // Linear shrink factor: vertex count ~ area ~ linear².
+    let lin = opts.scale.sqrt();
+    let dims = Dims::new(
+        ((case.dims.x as f64 * lin).ceil() as usize).max(8),
+        ((case.dims.y as f64 * lin).ceil() as usize).max(8),
+        ((case.dims.z as f64 * lin).ceil() as usize).max(8),
+    );
+    // KiTS-like anisotropic spacing.
+    let spacing = Vec3::new(0.78, 0.78, 3.0 * rng.range_f64(0.25, 0.5));
+
+    let target = case.vertices as f64 * opts.scale;
+    let r_base = radius_for_vertices(target);
+
+    // Ellipsoid semi-axes: random eccentricity around r_base, clamped into
+    // the volume.
+    let half = Vec3::new(
+        dims.x as f64 * 0.5 - 2.0,
+        dims.y as f64 * 0.5 - 2.0,
+        dims.z as f64 * 0.5 - 2.0,
+    );
+    let ecc = [rng.range_f64(0.7, 1.4), rng.range_f64(0.7, 1.4), rng.range_f64(0.7, 1.4)];
+    // Normalise eccentricities so the geometric-mean radius stays r_base.
+    let gm = (ecc[0] * ecc[1] * ecc[2]).cbrt();
+    let axes = Vec3::new(
+        (r_base * ecc[0] / gm).min(half.x).max(2.0),
+        (r_base * ecc[1] / gm).min(half.y).max(2.0),
+        (r_base * ecc[2] / gm).min(half.z).max(2.0),
+    );
+
+    let nharm = 3 + rng.below(3) as usize;
+    let harmonics: Vec<Harmonic> = (0..nharm)
+        .map(|_| Harmonic {
+            amp: rng.range_f64(0.03, 0.12),
+            f_theta: rng.below(4) as f64 + 1.0,
+            f_phi: rng.below(4) as f64 + 1.0,
+            p_theta: rng.range_f64(0.0, std::f64::consts::TAU),
+            p_phi: rng.range_f64(0.0, std::f64::consts::TAU),
+        })
+        .collect();
+
+    let centre = Vec3::new(dims.x as f64 / 2.0, dims.y as f64 / 2.0, dims.z as f64 / 2.0);
+    let mut mask = VoxelGrid::zeros(dims, spacing);
+    for z in 0..dims.z {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                let d = Vec3::new(
+                    (x as f64 - centre.x) / axes.x,
+                    (y as f64 - centre.y) / axes.y,
+                    (z as f64 - centre.z) / axes.z,
+                );
+                let r = d.norm();
+                if r > 1.35 {
+                    continue; // outside even max modulation
+                }
+                let theta = d.z.atan2(d.x.hypot(d.y).max(1e-12));
+                let phi = d.y.atan2(d.x);
+                let mut rho = 1.0;
+                for h in &harmonics {
+                    rho += h.amp
+                        * (h.f_theta * theta + h.p_theta).sin()
+                        * (h.f_phi * phi + h.p_phi).sin();
+                }
+                if r <= rho {
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+    }
+    let vertex_count = mesh_roi(&mask).vertices.len();
+    (mask, vertex_count)
+}
+
+/// Synthesize a CT-like intensity image for a mask: smooth background
+/// gradient, elevated ROI contrast, deterministic voxel noise. Feeds the
+/// first-order feature class ([`crate::features::compute_first_order`]).
+pub fn synthesize_image(mask: &VoxelGrid<u8>, seed: u64) -> VoxelGrid<f32> {
+    let mut rng = Pcg32::with_stream(seed, 0x1234);
+    let dims = mask.dims;
+    let mut img: VoxelGrid<f32> = VoxelGrid::zeros(dims, mask.spacing);
+    for z in 0..dims.z {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                let bg = -80.0
+                    + 30.0 * (x as f64 / dims.x.max(1) as f64)
+                    + 20.0 * (z as f64 / dims.z.max(1) as f64);
+                let roi = if mask.get(x, y, z) != 0 { 120.0 } else { 0.0 };
+                let noise = rng.normal() * 12.0;
+                img.set(x, y, z, (bg + roi + noise) as f32);
+            }
+        }
+    }
+    img
+}
+
+fn case_stream(case_id: &str) -> u64 {
+    // FNV-1a over the id — stable stream per case.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in case_id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Generate the full 20-case dataset into `root` (rvol.gz + cases.txt).
+pub fn generate_dataset(root: &Path, opts: &GenOptions) -> Result<DatasetManifest> {
+    std::fs::create_dir_all(root)?;
+    let mut entries = Vec::new();
+    for case in paper_cases() {
+        let (mask, nverts) = generate_case(&case, opts);
+        let fname = format!("{}.rvol.gz", case.case_id);
+        write_rvol(&root.join(&fname), &mask)?;
+        entries.push(CaseEntry {
+            case_id: case.case_id.to_string(),
+            mask: fname.into(),
+            dims: mask.dims,
+            target_vertices: nverts, // record the *measured* vertex count
+        });
+    }
+    let manifest = DatasetManifest { root: root.to_path_buf(), cases: entries };
+    manifest.save()?;
+    Ok(manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> GenOptions {
+        GenOptions { scale: 0.02, seed: 7 }
+    }
+
+    #[test]
+    fn deterministic() {
+        let case = &paper_cases()[9]; // 00004-2, smallest dims
+        let (a, na) = generate_case(case, &small_opts());
+        let (b, nb) = generate_case(case, &small_opts());
+        assert_eq!(a, b);
+        assert_eq!(na, nb);
+    }
+
+    #[test]
+    fn different_cases_differ() {
+        let cases = paper_cases();
+        let (a, _) = generate_case(&cases[9], &small_opts());
+        let (b, _) = generate_case(&cases[19], &small_opts());
+        assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn vertex_count_tracks_target() {
+        // With scale s, measured vertices should be within ~3× of
+        // target·s (the generator is calibrated, not exact).
+        let case = &paper_cases()[3]; // 00001-2: 8928 vertices
+        let opts = GenOptions { scale: 0.125, seed: 7 };
+        let (_, n) = generate_case(case, &opts);
+        let target = case.vertices as f64 * opts.scale;
+        assert!(
+            n as f64 > target / 3.0 && (n as f64) < target * 3.0,
+            "n={n} target={target}"
+        );
+    }
+
+    #[test]
+    fn roi_not_touching_border() {
+        let case = &paper_cases()[9];
+        let (mask, _) = generate_case(case, &small_opts());
+        for (x, y, z) in mask.iter_roi() {
+            assert!(x > 0 && y > 0 && z > 0);
+            assert!(x < mask.dims.x - 1 && y < mask.dims.y - 1 && z < mask.dims.z - 1);
+        }
+    }
+
+    #[test]
+    fn generate_dataset_writes_manifest_and_files() {
+        let root = std::env::temp_dir().join("radpipe_synth_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let opts = GenOptions { scale: 0.005, seed: 3 };
+        let m = generate_dataset(&root, &opts).unwrap();
+        assert_eq!(m.cases.len(), 20);
+        for e in &m.cases {
+            assert!(m.mask_path(e).exists(), "{:?}", e.mask);
+            assert!(e.target_vertices > 0, "{}: no vertices", e.case_id);
+        }
+        // reload via scanner
+        let back = crate::io::scan_dataset(&root).unwrap();
+        assert_eq!(back.cases.len(), 20);
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic KiTS19-like dataset generator (DESIGN.md §Substitutions #2).
+//!
+//! The paper selects 20 KiTS19 cases spanning 2 700 – 236 588 mesh vertices
+//! (Table 2). That data is not redistributable here, so this module
+//! generates deterministic kidney/tumour-like ROIs — a lobulated ellipsoid
+//! with low-frequency angular perturbation — sized per case to the paper's
+//! image dimensions and tuned to approximate the paper's vertex counts.
+//! Every generated mask records its *actual* mesh vertex count in the
+//! manifest; the experiment harnesses report those.
+
+mod cases;
+mod generator;
+
+pub use cases::{paper_cases, PaperCase, PAPER_CASE_COUNT};
+pub use generator::{generate_case, generate_dataset, synthesize_image, GenOptions};

@@ -1,0 +1,9 @@
+//! In-repo testing substrate: a deterministic PRNG and a miniature
+//! property-testing framework (the offline mirror has no `proptest`/`rand`,
+//! so these are part of the deliverable — see DESIGN.md).
+
+mod pcg;
+mod prop;
+
+pub use pcg::Pcg32;
+pub use prop::{f64_range, forall, int_range, vec_of, Gen};

@@ -1,0 +1,128 @@
+//! Miniature property-testing framework: generator combinators + a
+//! `forall` runner with iteration-deepening shrink-lite (re-running the
+//! predicate on "smaller" regenerations rather than structural shrinking —
+//! enough to pin down minimal sizes in practice).
+
+use super::Pcg32;
+
+/// A value generator: size-aware, deterministic given the RNG.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Pcg32, usize) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Pcg32, usize) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32, size: usize) -> T {
+        (self.f)(rng, size)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng, size| g(self.sample(rng, size)))
+    }
+}
+
+/// Integers in `[lo, hi]`.
+pub fn int_range(lo: i64, hi: i64) -> Gen<i64> {
+    assert!(lo <= hi);
+    Gen::new(move |rng, _| lo + (rng.next_u64() % (hi - lo + 1) as u64) as i64)
+}
+
+/// Floats in `[lo, hi)`.
+pub fn f64_range(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng, _| rng.range_f64(lo, hi))
+}
+
+/// Vectors whose length grows with the size parameter (≤ size).
+pub fn vec_of<T: 'static>(elem: Gen<T>) -> Gen<Vec<T>> {
+    Gen::new(move |rng, size| {
+        let len = (rng.next_u32() as usize) % (size.max(1));
+        (0..len).map(|_| elem.sample(rng, size)).collect()
+    })
+}
+
+/// Run `prop` on `cases` generated inputs with growing size; on failure,
+/// retry with progressively smaller sizes to report a small counterexample.
+///
+/// Panics (test failure) with the seed + smallest failing input debug dump.
+pub fn forall<T: std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    prop: impl Fn(&T) -> bool,
+) {
+    let base_seed = 0x5eed_0000u64 ^ name.len() as u64;
+    for case in 0..cases {
+        let size = 2 + case * 64 / cases.max(1);
+        let mut rng = Pcg32::with_stream(base_seed + case as u64, 17);
+        let value = gen.sample(&mut rng, size);
+        if !prop(&value) {
+            // shrink-lite: regenerate at smaller sizes from the same stream
+            let mut smallest = value;
+            for s in (1..size).rev() {
+                let mut rng = Pcg32::with_stream(base_seed + case as u64, 17);
+                let candidate = gen.sample(&mut rng, s);
+                if !prop(&candidate) {
+                    smallest = candidate;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {}):\n{smallest:#?}",
+                base_seed + case as u64
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_range_respects_bounds() {
+        let g = int_range(-5, 5);
+        let mut rng = Pcg32::new(1);
+        for _ in 0..1000 {
+            let v = g.sample(&mut rng, 10);
+            assert!((-5..=5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn vec_lengths_scale_with_size() {
+        let g = vec_of(int_range(0, 9));
+        let mut rng = Pcg32::new(2);
+        let small: Vec<usize> = (0..100).map(|_| g.sample(&mut rng, 3).len()).collect();
+        assert!(small.iter().all(|&l| l < 3));
+    }
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall("sum-commutes", &vec_of(int_range(0, 100)), 50, |v| {
+            let s1: i64 = v.iter().sum();
+            let mut r = v.clone();
+            r.reverse();
+            let s2: i64 = r.iter().sum();
+            s1 == s2
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn forall_reports_failures() {
+        forall("always-fails", &int_range(0, 10), 5, |_| false);
+    }
+
+    #[test]
+    fn map_transforms() {
+        let g = int_range(1, 3).map(|v| v * 100);
+        let mut rng = Pcg32::new(5);
+        for _ in 0..50 {
+            let v = g.sample(&mut rng, 4);
+            assert!(v == 100 || v == 200 || v == 300);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! The voxel grid container.
+
+use crate::geometry::Vec3;
+
+/// Grid dimensions in voxels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dims {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+}
+
+impl Dims {
+    pub const fn new(x: usize, y: usize, z: usize) -> Self {
+        Dims { x, y, z }
+    }
+
+    /// Total voxel count.
+    pub fn len(&self) -> usize {
+        self.x * self.y * self.z
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Display for Dims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.x, self.y, self.z)
+    }
+}
+
+/// A dense 3D scalar volume.
+///
+/// Generic over the sample type: the pipeline uses `VoxelGrid<u8>` for
+/// segmentation masks and `VoxelGrid<f32>` for image intensities. Spacing is
+/// the physical voxel size in millimetres per axis — all shape features are
+/// computed in physical space, so anisotropic spacing is respected
+/// everywhere (mesher, diameters, PCA axes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VoxelGrid<T> {
+    pub dims: Dims,
+    pub spacing: Vec3,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> VoxelGrid<T> {
+    /// Zero-filled grid.
+    pub fn zeros(dims: Dims, spacing: Vec3) -> Self {
+        VoxelGrid { dims, spacing, data: vec![T::default(); dims.len()] }
+    }
+
+    /// Wrap an existing buffer; `data.len()` must equal `dims.len()`.
+    pub fn from_vec(dims: Dims, spacing: Vec3, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), dims.len(), "buffer/dims mismatch");
+        VoxelGrid { dims, spacing, data }
+    }
+
+    #[inline]
+    pub fn index(&self, x: usize, y: usize, z: usize) -> usize {
+        debug_assert!(x < self.dims.x && y < self.dims.y && z < self.dims.z);
+        x + self.dims.x * (y + self.dims.y * z)
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize, z: usize) -> T {
+        self.data[self.index(x, y, z)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: T) {
+        let i = self.index(x, y, z);
+        self.data[i] = v;
+    }
+
+    /// Out-of-bounds reads return `T::default()` (zero) — the mesher walks
+    /// one cell beyond each face so that surfaces touching the image border
+    /// are closed, exactly like PyRadiomics' padded `calculate_coefficients`.
+    #[inline]
+    pub fn get_padded(&self, x: isize, y: isize, z: isize) -> T {
+        if x < 0
+            || y < 0
+            || z < 0
+            || x as usize >= self.dims.x
+            || y as usize >= self.dims.y
+            || z as usize >= self.dims.z
+        {
+            T::default()
+        } else {
+            self.get(x as usize, y as usize, z as usize)
+        }
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Physical position of a voxel *index* (its corner lattice point).
+    #[inline]
+    pub fn world(&self, x: usize, y: usize, z: usize) -> Vec3 {
+        Vec3::new(
+            x as f64 * self.spacing.x,
+            y as f64 * self.spacing.y,
+            z as f64 * self.spacing.z,
+        )
+    }
+
+    /// Volume of a single voxel in mm³.
+    pub fn voxel_volume(&self) -> f64 {
+        self.spacing.x * self.spacing.y * self.spacing.z
+    }
+
+    /// Map a function over every sample, producing a new grid.
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> VoxelGrid<U> {
+        VoxelGrid {
+            dims: self.dims,
+            spacing: self.spacing,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+}
+
+impl VoxelGrid<u8> {
+    /// Count of non-zero (ROI) voxels.
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Iterate coordinates of all non-zero voxels.
+    pub fn iter_roi(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        let dims = self.dims;
+        self.data.iter().enumerate().filter(|(_, &v)| v != 0).map(move |(i, _)| {
+            let x = i % dims.x;
+            let y = (i / dims.x) % dims.y;
+            let z = i / (dims.x * dims.y);
+            (x, y, z)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let dims = Dims::new(4, 5, 6);
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        g.set(3, 4, 5, 7);
+        g.set(0, 0, 0, 1);
+        g.set(1, 2, 3, 9);
+        assert_eq!(g.get(3, 4, 5), 7);
+        assert_eq!(g.get(0, 0, 0), 1);
+        assert_eq!(g.get(1, 2, 3), 9);
+        assert_eq!(g.count_nonzero(), 3);
+    }
+
+    #[test]
+    fn x_fastest_layout() {
+        let dims = Dims::new(3, 2, 2);
+        let g: VoxelGrid<u8> = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        assert_eq!(g.index(1, 0, 0), 1);
+        assert_eq!(g.index(0, 1, 0), 3);
+        assert_eq!(g.index(0, 0, 1), 6);
+    }
+
+    #[test]
+    fn padded_reads() {
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(2, 2, 2), Vec3::splat(1.0));
+        g.set(0, 0, 0, 5);
+        assert_eq!(g.get_padded(0, 0, 0), 5);
+        assert_eq!(g.get_padded(-1, 0, 0), 0);
+        assert_eq!(g.get_padded(0, 2, 0), 0);
+        assert_eq!(g.get_padded(0, 0, 100), 0);
+    }
+
+    #[test]
+    fn world_coordinates_respect_spacing() {
+        let g: VoxelGrid<u8> =
+            VoxelGrid::zeros(Dims::new(2, 2, 2), Vec3::new(0.5, 2.0, 3.0));
+        assert_eq!(g.world(1, 1, 1), Vec3::new(0.5, 2.0, 3.0));
+        assert_eq!(g.voxel_volume(), 3.0);
+    }
+
+    #[test]
+    fn iter_roi_yields_coordinates() {
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
+        g.set(2, 1, 0, 1);
+        g.set(0, 2, 2, 1);
+        let pts: Vec<_> = g.iter_roi().collect();
+        assert_eq!(pts, vec![(2, 1, 0), (0, 2, 2)]);
+    }
+
+    #[test]
+    fn map_converts_type() {
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(2, 1, 1), Vec3::splat(1.0));
+        g.set(0, 0, 0, 3);
+        let f = g.map(|v| v as f32 * 2.0);
+        assert_eq!(f.get(0, 0, 0), 6.0);
+        assert_eq!(f.get(1, 0, 0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer/dims mismatch")]
+    fn from_vec_checks_len() {
+        let _ = VoxelGrid::<u8>::from_vec(Dims::new(2, 2, 2), Vec3::splat(1.0), vec![0; 7]);
+    }
+}

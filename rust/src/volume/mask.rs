@@ -1,0 +1,182 @@
+//! Mask statistics and ROI cropping (the "preprocess" pipeline stage).
+
+use super::{Dims, VoxelGrid};
+use crate::geometry::{Sym3, Vec3};
+
+/// First- and second-order statistics of a segmentation mask, accumulated in
+/// one pass. Feeds `VoxelVolume` and the PCA axis features.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaskStats {
+    /// Non-zero voxel count.
+    pub count: usize,
+    /// Inclusive voxel-index bounding box `(min, max)`, if any voxel is set.
+    pub bbox: Option<((usize, usize, usize), (usize, usize, usize))>,
+    /// Physical centroid (mm).
+    pub centroid: Vec3,
+    /// Population covariance of physical voxel-centre coordinates (mm²).
+    pub covariance: Sym3,
+}
+
+impl MaskStats {
+    /// Single pass over the mask: count, bbox, centroid, covariance.
+    pub fn compute(mask: &VoxelGrid<u8>) -> MaskStats {
+        let mut count = 0usize;
+        let (mut minx, mut miny, mut minz) = (usize::MAX, usize::MAX, usize::MAX);
+        let (mut maxx, mut maxy, mut maxz) = (0usize, 0usize, 0usize);
+        let (mut sx, mut sy, mut sz) = (0.0f64, 0.0, 0.0);
+        let (mut sxx, mut syy, mut szz) = (0.0f64, 0.0, 0.0);
+        let (mut sxy, mut sxz, mut syz) = (0.0f64, 0.0, 0.0);
+        let sp = mask.spacing;
+        for (x, y, z) in mask.iter_roi() {
+            count += 1;
+            minx = minx.min(x);
+            miny = miny.min(y);
+            minz = minz.min(z);
+            maxx = maxx.max(x);
+            maxy = maxy.max(y);
+            maxz = maxz.max(z);
+            let px = x as f64 * sp.x;
+            let py = y as f64 * sp.y;
+            let pz = z as f64 * sp.z;
+            sx += px;
+            sy += py;
+            sz += pz;
+            sxx += px * px;
+            syy += py * py;
+            szz += pz * pz;
+            sxy += px * py;
+            sxz += px * pz;
+            syz += py * pz;
+        }
+        if count == 0 {
+            return MaskStats::default();
+        }
+        let n = count as f64;
+        MaskStats {
+            count,
+            bbox: Some(((minx, miny, minz), (maxx, maxy, maxz))),
+            centroid: Vec3::new(sx / n, sy / n, sz / n),
+            covariance: Sym3::covariance(n, sx, sy, sz, sxx, syy, szz, sxy, sxz, syz),
+        }
+    }
+}
+
+/// Crop a mask to its ROI bounding box plus a 1-voxel zero margin.
+///
+/// The margin guarantees the marching-cubes isosurface closes at the crop
+/// boundary; PyRadiomics performs the same `boundingBox + padDistance` crop
+/// before meshing. Returns the cropped grid and the voxel-index offset of
+/// the crop origin in the original volume.
+pub fn crop_to_roi(mask: &VoxelGrid<u8>) -> (VoxelGrid<u8>, (usize, usize, usize)) {
+    let stats = MaskStats::compute(mask);
+    let Some(((minx, miny, minz), (maxx, maxy, maxz))) = stats.bbox else {
+        // Empty mask: return a 1-voxel empty grid.
+        return (VoxelGrid::zeros(Dims::new(1, 1, 1), mask.spacing), (0, 0, 0));
+    };
+    // 1-voxel margin, clamped at the low side by construction of offsets.
+    let ox = minx.saturating_sub(1);
+    let oy = miny.saturating_sub(1);
+    let oz = minz.saturating_sub(1);
+    let dims = Dims::new(
+        (maxx - ox + 2).min(mask.dims.x - ox + 1),
+        (maxy - oy + 2).min(mask.dims.y - oy + 1),
+        (maxz - oz + 2).min(mask.dims.z - oz + 1),
+    );
+    let mut out = VoxelGrid::zeros(dims, mask.spacing);
+    for z in 0..dims.z {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                let (gx, gy, gz) = (ox + x, oy + y, oz + z);
+                if gx < mask.dims.x && gy < mask.dims.y && gz < mask.dims.z {
+                    let v = mask.get(gx, gy, gz);
+                    if v != 0 {
+                        out.set(x, y, z, v);
+                    }
+                }
+            }
+        }
+    }
+    (out, (ox, oy, oz))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn single_voxel_mask() -> VoxelGrid<u8> {
+        let mut m = VoxelGrid::zeros(Dims::new(10, 10, 10), Vec3::splat(1.0));
+        m.set(4, 5, 6, 1);
+        m
+    }
+
+    #[test]
+    fn stats_of_single_voxel() {
+        let s = MaskStats::compute(&single_voxel_mask());
+        assert_eq!(s.count, 1);
+        assert_eq!(s.bbox, Some(((4, 5, 6), (4, 5, 6))));
+        assert_eq!(s.centroid, Vec3::new(4.0, 5.0, 6.0));
+        assert_eq!(s.covariance.trace(), 0.0);
+    }
+
+    #[test]
+    fn stats_of_empty_mask() {
+        let m = VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
+        let s = MaskStats::compute(&m);
+        assert_eq!(s.count, 0);
+        assert!(s.bbox.is_none());
+    }
+
+    #[test]
+    fn stats_respect_spacing() {
+        let mut m = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::new(2.0, 1.0, 0.5));
+        m.set(0, 0, 0, 1);
+        m.set(2, 0, 0, 1);
+        let s = MaskStats::compute(&m);
+        assert_eq!(s.centroid, Vec3::new(2.0, 0.0, 0.0));
+        // x coordinates 0 and 4 mm → population variance 4.
+        assert!((s.covariance.xx - 4.0).abs() < 1e-12);
+        assert_eq!(s.covariance.yy, 0.0);
+    }
+
+    #[test]
+    fn crop_keeps_margin_and_offset() {
+        let (cropped, off) = crop_to_roi(&single_voxel_mask());
+        assert_eq!(off, (3, 4, 5));
+        assert_eq!(cropped.dims, Dims::new(3, 3, 3));
+        assert_eq!(cropped.get(1, 1, 1), 1);
+        assert_eq!(cropped.count_nonzero(), 1);
+    }
+
+    #[test]
+    fn crop_clamps_at_volume_edges() {
+        let mut m = VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
+        m.set(0, 0, 0, 1);
+        m.set(2, 2, 2, 1);
+        let (cropped, off) = crop_to_roi(&m);
+        assert_eq!(off, (0, 0, 0));
+        // bbox spans whole grid; margin extends one past the far face only.
+        assert_eq!(cropped.dims, Dims::new(4, 4, 4));
+        assert_eq!(cropped.count_nonzero(), 2);
+    }
+
+    #[test]
+    fn crop_of_empty_mask() {
+        let m = VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
+        let (cropped, off) = crop_to_roi(&m);
+        assert_eq!(off, (0, 0, 0));
+        assert_eq!(cropped.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn crop_preserves_mask_content() {
+        let mut m = VoxelGrid::zeros(Dims::new(8, 8, 8), Vec3::splat(1.0));
+        for (x, y, z) in [(2, 2, 2), (3, 2, 2), (2, 3, 2), (2, 2, 3)] {
+            m.set(x, y, z, 1);
+        }
+        let (cropped, (ox, oy, oz)) = crop_to_roi(&m);
+        assert_eq!(cropped.count_nonzero(), 4);
+        for (x, y, z) in cropped.iter_roi() {
+            assert_eq!(m.get(x + ox, y + oy, z + oz), 1);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Voxel-volume substrate: the 3D image/mask container the whole pipeline
+//! flows through, plus mask statistics and ROI cropping.
+//!
+//! Axis convention: `(x, y, z)` with `x` fastest-varying in memory
+//! (`idx = x + dims.x * (y + dims.y * z)`), physical coordinates are
+//! `index * spacing` in millimetres.
+
+mod grid;
+mod mask;
+
+pub use grid::{Dims, VoxelGrid};
+pub use mask::{crop_to_roi, MaskStats};

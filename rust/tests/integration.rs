@@ -1,0 +1,167 @@
+//! Cross-module integration tests: synthetic data → IO → pipeline →
+//! features, exercised through the public API only.
+
+use radpipe::config::{Backend, PipelineConfig};
+use radpipe::dispatch::FeatureExtractor;
+use radpipe::geometry::Vec3;
+use radpipe::io::{read_nifti, read_rvol, scan_dataset, write_nifti, write_rvol};
+use radpipe::mc::mesh_roi;
+use radpipe::pipeline::run_pipeline;
+use radpipe::synth::{generate_case, generate_dataset, paper_cases, GenOptions};
+use radpipe::volume::{crop_to_roi, Dims, MaskStats, VoxelGrid};
+
+fn tdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("radpipe_integration_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn synthetic_case_features_are_physically_plausible() {
+    let case = &paper_cases()[4]; // 00002-1
+    let (mask, nverts) = generate_case(case, &GenOptions { scale: 0.01, seed: 7 });
+    let stats = MaskStats::compute(&mask);
+    assert!(stats.count > 0);
+
+    let cfg = PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let out = ex.execute_mask(&mask).unwrap();
+    let f = &out.features;
+
+    assert_eq!(f.vertex_count, nverts);
+    // mesh volume within 25% of voxel volume (MT bevel + lobulation)
+    assert!((f.mesh_volume - f.voxel_volume).abs() / f.voxel_volume < 0.25);
+    // isoperimetric inequality: sphericity in (0, 1]
+    assert!(f.sphericity > 0.0 && f.sphericity <= 1.0);
+    // diameter bounded by the physical AABB diagonal of the mask
+    let diag = Vec3::new(
+        mask.dims.x as f64 * mask.spacing.x,
+        mask.dims.y as f64 * mask.spacing.y,
+        mask.dims.z as f64 * mask.spacing.z,
+    )
+    .norm();
+    assert!(f.maximum_3d_diameter <= diag);
+    // planar diameters never exceed the 3D diameter
+    assert!(f.maximum_2d_diameter_slice <= f.maximum_3d_diameter + 1e-9);
+    assert!(f.maximum_2d_diameter_column <= f.maximum_3d_diameter + 1e-9);
+    assert!(f.maximum_2d_diameter_row <= f.maximum_3d_diameter + 1e-9);
+    // axis ordering
+    assert!(f.major_axis_length >= f.minor_axis_length);
+    assert!(f.minor_axis_length >= f.least_axis_length);
+}
+
+#[test]
+fn rvol_and_nifti_agree_through_the_extractor() {
+    let dir = tdir("formats");
+    let case = &paper_cases()[9];
+    let (mask, _) = generate_case(case, &GenOptions { scale: 0.005, seed: 3 });
+    let p_rvol = dir.join("m.rvol.gz");
+    let p_nii = dir.join("m.nii.gz");
+    write_rvol(&p_rvol, &mask).unwrap();
+    write_nifti(&p_nii, &mask).unwrap();
+
+    // float32 spacing in the NIfTI header loses f64 precision; compare the
+    // voxel payloads exactly and features approximately.
+    let a = read_rvol::<u8>(&p_rvol).unwrap();
+    let b = read_nifti(&p_nii).unwrap();
+    assert_eq!(a.data(), b.data());
+
+    let cfg = PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let fa = ex.execute(&p_rvol).unwrap().features;
+    let fb = ex.execute(&p_nii).unwrap().features;
+    assert!((fa.mesh_volume - fb.mesh_volume).abs() / fa.mesh_volume < 1e-5);
+    assert_eq!(fa.voxel_count, fb.voxel_count);
+}
+
+#[test]
+fn crop_does_not_change_features() {
+    let case = &paper_cases()[19];
+    let (mask, _) = generate_case(case, &GenOptions { scale: 0.01, seed: 9 });
+    let (cropped, _) = crop_to_roi(&mask);
+
+    // meshing the full mask and the cropped mask yields identical stats
+    let full = mesh_roi(&mask);
+    let crop = mesh_roi(&cropped);
+    assert_eq!(full.vertices.len(), crop.vertices.len());
+    assert!((full.stats.volume - crop.stats.volume).abs() < 1e-9);
+    assert!((full.stats.area - crop.stats.area).abs() < 1e-9);
+}
+
+#[test]
+fn dataset_roundtrip_and_pipeline() {
+    let dir = tdir("dataset");
+    let m = generate_dataset(&dir, &GenOptions { scale: 0.002, seed: 1 }).unwrap();
+    let re = scan_dataset(&dir).unwrap();
+    assert_eq!(m.cases.len(), re.cases.len());
+
+    let cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 1,
+        read_workers: 2,
+        feature_workers: 2,
+        ..Default::default()
+    };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let report = run_pipeline(&re, &cfg, &ex).unwrap();
+    assert!(report.failures.is_empty());
+    assert_eq!(report.results.len(), 20);
+    // vertex counts recorded in the manifest match the pipeline's
+    for (r, e) in report.results.iter().zip(&re.cases) {
+        assert_eq!(r.features.vertex_count, e.target_vertices, "{}", r.case_id);
+    }
+}
+
+#[test]
+fn diameter_share_claim_holds_on_larger_cases() {
+    // §3: diameter dominates post-read time (95.7–99.9 % at paper scale;
+    // on scaled-down cases the share shrinks but must still dominate).
+    let case = &paper_cases()[2]; // the largest case
+    let (mask, _) = generate_case(case, &GenOptions { scale: 0.04, seed: 7 });
+    let cfg = PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let out = ex.execute_mask(&mask).unwrap();
+    let mc = out.timing.marching.as_secs_f64();
+    let diam = out.timing.diameters.as_secs_f64();
+    assert!(
+        diam / (diam + mc) > 0.5,
+        "diameter share {:.1}% (mc {mc:.4}s diam {diam:.4}s)",
+        100.0 * diam / (diam + mc)
+    );
+}
+
+#[test]
+fn empty_and_single_voxel_masks_do_not_break_the_pipeline() {
+    let cfg = PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+
+    let empty = VoxelGrid::zeros(Dims::new(5, 5, 5), Vec3::splat(1.0));
+    let out = ex.execute_mask(&empty).unwrap();
+    assert_eq!(out.features.voxel_count, 0);
+
+    let mut single = VoxelGrid::zeros(Dims::new(5, 5, 5), Vec3::splat(1.0));
+    single.set(2, 2, 2, 1);
+    let out = ex.execute_mask(&single).unwrap();
+    assert_eq!(out.features.voxel_count, 1);
+    assert!((out.features.mesh_volume - 0.5).abs() < 1e-9); // MT octahedron
+    assert!(out.features.maximum_3d_diameter > 0.0);
+}
+
+#[test]
+fn first_order_features_over_synthetic_image() {
+    let case = &paper_cases()[0];
+    let (mask, _) = generate_case(case, &GenOptions { scale: 0.005, seed: 2 });
+    let image = radpipe::synth::synthesize_image(&mask, 42);
+    let f = radpipe::features::compute_first_order(&image, &mask, 25.0).unwrap();
+    // ROI is background(+grad −80..−30) + 120 contrast + σ=12 noise
+    assert!(f.mean > 0.0 && f.mean < 90.0, "mean {}", f.mean);
+    assert!(f.variance > 50.0, "variance {}", f.variance);
+    assert!(f.minimum < f.percentile10 && f.percentile10 < f.median);
+    assert!(f.median < f.percentile90 && f.percentile90 <= f.maximum);
+    assert!(f.entropy > 0.5, "entropy {}", f.entropy);
+    // deterministic across calls
+    let image2 = radpipe::synth::synthesize_image(&mask, 42);
+    let f2 = radpipe::features::compute_first_order(&image2, &mask, 25.0).unwrap();
+    assert_eq!(f, f2);
+}

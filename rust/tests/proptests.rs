@@ -1,0 +1,210 @@
+//! Property-based tests (via the in-repo testkit) on the coordinator's
+//! core invariants: routing/bucketing, batching/padding, diameter-strategy
+//! equivalence, mesh invariants and channel state.
+
+use radpipe::features::{brute_force_diameters, Diameters};
+use radpipe::geometry::{Aabb, Vec3};
+use radpipe::mc::{mesh_roi, planar_diameters_grouped};
+use radpipe::parallel::{compute_diameters, Strategy};
+use radpipe::pipeline::bounded;
+use radpipe::runtime::{bucket_for, pad_triangles, pad_vertices};
+use radpipe::testkit::{forall, int_range, Gen, Pcg32};
+use radpipe::volume::{crop_to_roi, Dims, VoxelGrid};
+
+/// Random vertex cloud with quantised planes (mesh-like).
+fn cloud_gen() -> Gen<Vec<Vec3>> {
+    Gen::new(|rng: &mut Pcg32, size: usize| {
+        let n = 1 + (rng.next_u32() as usize) % (size * 24 + 8);
+        (0..n)
+            .map(|_| {
+                Vec3::new(
+                    (rng.below(200) as f64) * 0.5,
+                    (rng.below(200) as f64) * 0.5,
+                    (rng.below(32) as f64) * 1.5,
+                )
+            })
+            .collect()
+    })
+}
+
+/// Random small mask volume.
+fn mask_gen() -> Gen<VoxelGrid<u8>> {
+    Gen::new(|rng: &mut Pcg32, size: usize| {
+        let d = 4 + (rng.next_u32() as usize) % (size / 4 + 4).min(12);
+        let mut m = VoxelGrid::zeros(
+            Dims::new(d, d, d),
+            Vec3::new(rng.range_f64(0.5, 2.0), rng.range_f64(0.5, 2.0), rng.range_f64(0.5, 3.0)),
+        );
+        let fill = rng.range_f64(0.05, 0.5);
+        for z in 1..d - 1 {
+            for y in 1..d - 1 {
+                for x in 1..d - 1 {
+                    if rng.next_f64() < fill {
+                        m.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        m
+    })
+}
+
+#[test]
+fn prop_all_strategies_equal_brute_force() {
+    forall("strategies-equal-brute", &cloud_gen(), 40, |v| {
+        let want = brute_force_diameters(v);
+        Strategy::ALL.into_iter().all(|s| {
+            let (got, _) = compute_diameters(s, v, 3);
+            got.as_array() == want.as_array()
+        })
+    });
+}
+
+#[test]
+fn prop_diameter_bounded_by_aabb_diagonal() {
+    forall("diameter-le-diagonal", &cloud_gen(), 40, |v| {
+        let d = brute_force_diameters(v);
+        let diag = Aabb::from_points(v.iter().copied()).diagonal();
+        d.d3d_sq.sqrt() <= diag + 1e-9
+    });
+}
+
+#[test]
+fn prop_planar_diameters_bounded_by_3d() {
+    forall("planar-le-3d", &cloud_gen(), 40, |v| {
+        let d = brute_force_diameters(v);
+        [d.dxy_sq, d.dyz_sq, d.dxz_sq].into_iter().all(|p| p <= d.d3d_sq + 1e-9)
+    });
+}
+
+#[test]
+fn prop_grouped_planars_match_brute_force() {
+    forall("grouped-planar-equiv", &cloud_gen(), 30, |v| {
+        let brute = brute_force_diameters(v);
+        let grouped = planar_diameters_grouped(v);
+        (grouped[0] - brute.dxy_sq).abs() < 1e-9
+            && (grouped[1] - brute.dyz_sq).abs() < 1e-9
+            && (grouped[2] - brute.dxz_sq).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_vertex_padding_preserves_diameters() {
+    forall("padding-invariant", &cloud_gen(), 30, |v| {
+        let base = brute_force_diameters(v);
+        let f32s: Vec<f32> = v.iter().flat_map(|p| p.to_f32()).collect();
+        let bucket = (v.len() + 17).next_power_of_two();
+        let padded = pad_vertices(&f32s, bucket).unwrap();
+        let back: Vec<Vec3> = padded
+            .chunks_exact(3)
+            .map(|c| Vec3::from([c[0], c[1], c[2]]))
+            .collect();
+        let after = brute_force_diameters(&back);
+        // f32 roundtrip: exact because inputs are f32-representable halves
+        base.as_array()
+            .iter()
+            .zip(after.as_array())
+            .all(|(a, b)| (a - b).abs() < 1e-6 * a.abs().max(1.0))
+    });
+}
+
+#[test]
+fn prop_bucket_routing_is_minimal_and_fits() {
+    let buckets = [512usize, 1024, 2048, 4096, 8192];
+    forall("bucket-minimal", &int_range(1, 8192), 200, |&n| {
+        let b = bucket_for(n as usize, &buckets).unwrap();
+        let fits = n as usize <= b;
+        let minimal = buckets.iter().all(|&x| x >= b || x < n as usize);
+        fits && minimal
+    });
+}
+
+#[test]
+fn prop_triangle_padding_never_changes_soup_stats() {
+    forall("tri-padding", &int_range(0, 60), 30, |&t| {
+        let mut rng = Pcg32::new(t as u64);
+        let tris: Vec<f32> = (0..t * 9).map(|_| rng.range_f64(-5.0, 5.0) as f32).collect();
+        let padded = pad_triangles(&tris, (t as usize + 13).next_power_of_two()).unwrap();
+        // volume/area contributions of padding rows must be exactly zero
+        padded[tris.len()..].iter().all(|&v| v == 0.0)
+    });
+}
+
+#[test]
+fn prop_mesh_watertight_and_consistent() {
+    forall("mesh-watertight", &mask_gen(), 25, |mask| {
+        let mesh = mesh_roi(mask);
+        if mesh.triangles.is_empty() {
+            return mask.count_nonzero() == 0 || mesh.stats.volume == 0.0;
+        }
+        // (a) vertices unique
+        let mut seen = std::collections::HashSet::new();
+        for v in &mesh.vertices {
+            if !seen.insert((v.x.to_bits(), v.y.to_bits(), v.z.to_bits())) {
+                return false;
+            }
+        }
+        // (b) signed volume is translation invariant (closed surface)
+        let shift = Vec3::new(11.0, -7.0, 5.0);
+        let mut s0 = 0.0;
+        let mut s1 = 0.0;
+        for i in 0..mesh.triangles.len() {
+            let t = mesh.triangle(i);
+            s0 += t.signed_volume();
+            let t2 = radpipe::geometry::Triangle::new(t.a + shift, t.b + shift, t.c + shift);
+            s1 += t2.signed_volume();
+        }
+        if (s0 - s1).abs() > 1e-6 * s0.abs().max(1.0) {
+            return false;
+        }
+        // (c) volume ≤ voxel volume of the mask (bevelled isosurface)
+        let voxvol = mask.count_nonzero() as f64 * mask.voxel_volume();
+        mesh.stats.volume <= voxvol + 1e-9
+    });
+}
+
+#[test]
+fn prop_crop_preserves_mesh_stats() {
+    forall("crop-preserves-stats", &mask_gen(), 25, |mask| {
+        let full = mesh_roi(mask);
+        let (cropped, _) = crop_to_roi(mask);
+        let crop = mesh_roi(&cropped);
+        full.vertices.len() == crop.vertices.len()
+            && (full.stats.volume - crop.stats.volume).abs() < 1e-9
+            && (full.stats.area - crop.stats.area).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_diameters_merge_commutative_idempotent() {
+    let dgen = Gen::new(|rng: &mut Pcg32, _| Diameters {
+        d3d_sq: rng.range_f64(-1.0, 100.0),
+        dxy_sq: rng.range_f64(-1.0, 100.0),
+        dyz_sq: rng.range_f64(-1.0, 100.0),
+        dxz_sq: rng.range_f64(-1.0, 100.0),
+    });
+    let pair = Gen::new(move |rng: &mut Pcg32, s| (dgen.sample(rng, s), dgen.sample(rng, s)));
+    forall("merge-algebra", &pair, 50, |(a, b)| {
+        a.merge(b).as_array() == b.merge(a).as_array()
+            && a.merge(a).as_array() == a.as_array()
+    });
+}
+
+#[test]
+fn prop_channel_delivers_exactly_once_under_permuted_sizes() {
+    forall("channel-exactly-once", &int_range(1, 300), 15, |&n| {
+        let n = n as usize;
+        let (tx, rx) = bounded::<usize>(3);
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        while let Ok(v) = rx.recv() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        got == (0..n).collect::<Vec<_>>()
+    });
+}
