@@ -21,6 +21,7 @@ USAGE:
   radpipe gen-data  --out DIR [--scale F] [--seed N]
   radpipe extract   --data DIR [--config FILE] [--backend auto|cpu|accelerated]
                     [--artifacts DIR] [--json FILE] [--workers N]
+                    [--engine-count N] [--batch-size N] [--batch-linger-ms MS]
   radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
   radpipe fig1      --data DIR [--threads N]
   radpipe fig2      --data DIR
@@ -86,6 +87,15 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(w) = args.opt_parse::<usize>("workers")? {
         cfg.read_workers = w;
         cfg.feature_workers = w;
+    }
+    if let Some(n) = args.opt_parse::<usize>("engine-count")? {
+        cfg.engine_count = n.max(1);
+    }
+    if let Some(n) = args.opt_parse::<usize>("batch-size")? {
+        cfg.batch_size = n.max(1);
+    }
+    if let Some(ms) = args.opt_parse::<u64>("batch-linger-ms")? {
+        cfg.batch_linger_ms = ms;
     }
     Ok(cfg)
 }
@@ -261,5 +271,34 @@ mod tests {
     fn unknown_flag_rejected() {
         let err = dispatch(argv(&["devices", "--wat"])).unwrap_err();
         assert!(err.to_string().contains("--wat"));
+    }
+
+    #[test]
+    fn extract_accepts_batching_flags() {
+        let dir = std::env::temp_dir().join("radpipe_cli_batch_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        dispatch(argv(&[
+            "extract",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "cpu",
+            "--engine-count",
+            "2",
+            "--batch-size",
+            "4",
+            "--batch-linger-ms",
+            "1",
+        ]))
+        .unwrap();
+        let err = dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--batch-size", "nope",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("--batch-size"));
     }
 }

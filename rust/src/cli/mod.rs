@@ -3,6 +3,7 @@
 //! ```text
 //! radpipe gen-data  --out DIR [--scale F] [--seed N]
 //! radpipe extract   --data DIR [--config FILE] [--backend auto|cpu|accelerated] [--json FILE]
+//!                   [--engine-count N] [--batch-size N] [--batch-linger-ms MS]
 //! radpipe table2    --data DIR [--backend ...]        # Table 2 harness
 //! radpipe fig1      [--vertices N[,N..]]              # Fig 1 harness
 //! radpipe fig2      [--list-devices]                  # Fig 2 harness

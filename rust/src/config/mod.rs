@@ -56,6 +56,13 @@ pub struct PipelineConfig {
     pub cpu_threads: usize,
     /// Diameter strategy for the CPU path.
     pub strategy: crate::parallel::Strategy,
+    /// Engine threads in the accelerated pool (sharded round-robin).
+    pub engine_count: usize,
+    /// Cases per fused engine batch (1 = per-case dispatch, the classic
+    /// behaviour; ≥ 2 enables pad-bucket batching).
+    pub batch_size: usize,
+    /// Max milliseconds a partial batch waits for co-batchable cases.
+    pub batch_linger_ms: u64,
 }
 
 impl Default for PipelineConfig {
@@ -69,6 +76,9 @@ impl Default for PipelineConfig {
             backend: Backend::Auto,
             cpu_threads: 0,
             strategy: crate::parallel::Strategy::LocalAccumulators,
+            engine_count: 1,
+            batch_size: 1,
+            batch_linger_ms: 2,
         }
     }
 }
@@ -100,6 +110,9 @@ impl PipelineConfig {
                     cfg.strategy = crate::parallel::Strategy::from_label(value.as_str()?)
                         .with_context(|| format!("unknown strategy '{}'", value.as_str().unwrap_or("")))?
                 }
+                "engine_count" => cfg.engine_count = value.as_usize()?.max(1),
+                "batch_size" => cfg.batch_size = value.as_usize()?.max(1),
+                "batch_linger_ms" => cfg.batch_linger_ms = value.as_usize()? as u64,
                 other => bail!("unknown [pipeline] key '{other}'"),
             }
         }
@@ -131,6 +144,9 @@ queue_capacity = 16
 backend = "cpu"
 cpu_threads = 8
 strategy = "2-block-reduction"
+engine_count = 3
+batch_size = 16
+batch_linger_ms = 5
 "#;
         let c = PipelineConfig::from_toml(text).unwrap();
         assert_eq!(c.read_workers, 2);
@@ -140,6 +156,25 @@ strategy = "2-block-reduction"
         assert_eq!(c.backend, Backend::Cpu);
         assert_eq!(c.cpu_threads, 8);
         assert_eq!(c.strategy, crate::parallel::Strategy::BlockReduction);
+        assert_eq!(c.engine_count, 3);
+        assert_eq!(c.batch_size, 16);
+        assert_eq!(c.batch_linger_ms, 5);
+    }
+
+    #[test]
+    fn batching_defaults_preserve_per_case_dispatch() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.engine_count, 1);
+        assert_eq!(c.batch_size, 1);
+        assert!(c.batch_linger_ms > 0);
+    }
+
+    #[test]
+    fn zero_engine_count_and_batch_size_clamp_to_one() {
+        let c = PipelineConfig::from_toml("[pipeline]\nengine_count = 0\nbatch_size = 0\n")
+            .unwrap();
+        assert_eq!(c.engine_count, 1);
+        assert_eq!(c.batch_size, 1);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! code" (§2), and tested to produce equal values on both paths.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -18,7 +19,9 @@ use crate::config::{Backend, PipelineConfig};
 use crate::features::{brute_force_diameters, compute_shape_features, ShapeFeatures};
 use crate::mc::{mesh_roi, planar_diameters_grouped};
 use crate::parallel::{compute_diameters, Strategy};
-use crate::runtime::{Engine, EngineHandle, ExecTiming};
+use crate::runtime::{
+    BatchConfig, BatchStatsSnapshot, Batcher, EngineHandle, EnginePool, ExecTiming,
+};
 use crate::volume::{crop_to_roi, MaskStats, VoxelGrid};
 
 /// Which path actually computed a result.
@@ -61,8 +64,15 @@ pub struct Extraction {
 }
 
 /// The PyRadiomics-compatible extractor with the transparent dispatcher.
+///
+/// The accelerated side is an [`EnginePool`] (`cfg.engine_count` engine
+/// threads, round-robin sharded) fronted by a [`Batcher`] that groups
+/// concurrent diameter requests by pad-bucket (`cfg.batch_size`,
+/// `cfg.batch_linger_ms`). With the defaults (1 engine, batch size 1) the
+/// behaviour is identical to per-case dispatch.
 pub struct FeatureExtractor {
-    engine: Option<Engine>,
+    pool: Option<Arc<EnginePool>>,
+    batcher: Option<Batcher>,
     backend: Backend,
     strategy: Strategy,
     cpu_threads: usize,
@@ -71,20 +81,20 @@ pub struct FeatureExtractor {
 impl FeatureExtractor {
     /// Build from config: probes the accelerator per the backend policy.
     ///
-    /// * `Auto` — try to start the engine; on any failure fall back to CPU
-    ///   silently (the paper's "gracefully falls back" behaviour; the
+    /// * `Auto` — try to start the engine pool; on any failure fall back to
+    ///   CPU silently (the paper's "gracefully falls back" behaviour; the
     ///   reason is logged to stderr).
     /// * `Accelerated` — engine start failures are hard errors.
     /// * `Cpu` — never probes.
     pub fn new(cfg: &PipelineConfig) -> Result<FeatureExtractor> {
-        let engine = match cfg.backend {
+        let pool = match cfg.backend {
             Backend::Cpu => None,
             Backend::Accelerated => Some(
-                Self::probe(&cfg.artifact_dir)
+                Self::probe(cfg)
                     .context("backend=accelerated but the accelerator probe failed")?,
             ),
-            Backend::Auto => match Self::probe(&cfg.artifact_dir) {
-                Ok(e) => Some(e),
+            Backend::Auto => match Self::probe(cfg) {
+                Ok(p) => Some(p),
                 Err(err) => {
                     eprintln!(
                         "radpipe: accelerator unavailable ({err:#}); falling back to CPU"
@@ -93,43 +103,59 @@ impl FeatureExtractor {
                 }
             },
         };
+        let batcher = pool.as_ref().map(|p| {
+            let backend: Arc<dyn crate::runtime::BatchBackend> = p.clone();
+            Batcher::new(
+                backend,
+                BatchConfig {
+                    batch_size: cfg.batch_size.max(1),
+                    linger: Duration::from_millis(cfg.batch_linger_ms),
+                },
+            )
+        });
         Ok(FeatureExtractor {
-            engine,
+            pool,
+            batcher,
             backend: cfg.backend,
             strategy: cfg.strategy,
             cpu_threads: cfg.cpu_threads,
         })
     }
 
-    fn probe(artifact_dir: &Path) -> Result<Engine> {
-        let engine = Engine::start(artifact_dir)?;
-        // Touch the engine so PJRT init errors surface during the probe,
+    fn probe(cfg: &PipelineConfig) -> Result<Arc<EnginePool>> {
+        let pool = EnginePool::start(&cfg.artifact_dir, cfg.engine_count.max(1))?;
+        // Touch every engine so PJRT init errors surface during the probe,
         // not mid-pipeline. A tiny request compiles the smallest bucket.
-        engine
-            .handle()
-            .diameters(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0])
-            .context("accelerator smoke test")?;
-        Ok(engine)
+        pool.smoke_test().context("accelerator smoke test")?;
+        Ok(Arc::new(pool))
     }
 
     /// True when the accelerated path is live.
     pub fn accelerated(&self) -> bool {
-        self.engine.is_some()
+        self.pool.is_some()
     }
 
     pub fn engine_handle(&self) -> Option<EngineHandle> {
-        self.engine.as_ref().map(|e| e.handle())
+        self.pool.as_ref().map(|p| p.handle())
+    }
+
+    /// The engine pool, when the accelerated path is live.
+    pub fn engine_pool(&self) -> Option<&EnginePool> {
+        self.pool.as_deref()
+    }
+
+    /// Batching counters (None on the pure-CPU path).
+    pub fn batch_stats(&self) -> Option<BatchStatsSnapshot> {
+        self.batcher.as_ref().map(|b| b.stats())
     }
 
     /// PyRadiomics-style entry point: read image+mask paths, return the
     /// feature map (see `examples/quickstart.rs` for the 4-line usage).
+    /// The mask format is detected from the extension (`.nii[.gz]`,
+    /// `.rvol[.gz]`); unknown extensions are a clear error.
     pub fn execute(&self, mask_path: &Path) -> Result<Extraction> {
         let t0 = Instant::now();
-        let mask: VoxelGrid<u8> = if mask_path.to_string_lossy().contains(".nii") {
-            crate::io::read_nifti(mask_path)?
-        } else {
-            crate::io::read_rvol(mask_path)?
-        };
+        let mask: VoxelGrid<u8> = crate::io::read_mask(mask_path)?;
         let read = t0.elapsed();
         let mut ex = self.execute_mask(&mask)?;
         ex.timing.read = read;
@@ -150,8 +176,8 @@ impl FeatureExtractor {
         timing.marching = t.elapsed();
 
         let vertex_count = mesh.vertices.len();
-        let (diam, path) = if let Some(engine) = &self.engine {
-            match self.accelerated_diameters(engine, &mesh) {
+        let (diam, path) = if let Some(batcher) = &self.batcher {
+            match self.accelerated_diameters(batcher, &mesh) {
                 Ok((d, exec)) => {
                     timing.transfer = exec.transfer;
                     timing.diameters = exec.execute;
@@ -183,14 +209,14 @@ impl FeatureExtractor {
 
     fn accelerated_diameters(
         &self,
-        engine: &Engine,
+        batcher: &Batcher,
         mesh: &crate::mc::Mesh,
     ) -> Result<(crate::features::Diameters, ExecTiming)> {
         if mesh.vertices.is_empty() {
             // nothing to offload; keep the artifact contract (non-empty)
             return Ok((crate::features::Diameters::EMPTY, ExecTiming::default()));
         }
-        engine.handle().diameters(mesh.vertices_f32())
+        batcher.diameters(mesh.vertices_f32())
     }
 
     fn cpu_diameters(&self, mesh: &crate::mc::Mesh) -> crate::features::Diameters {
@@ -305,5 +331,55 @@ mod tests {
         let out = ex.execute_mask(&m).unwrap();
         assert_eq!(out.features.voxel_count, 0);
         assert!(out.features.maximum_3d_diameter.is_nan());
+    }
+
+    #[test]
+    fn execute_rejects_unknown_mask_extension() {
+        let dir = std::env::temp_dir().join("radpipe_dispatch_fmt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mask.dat");
+        std::fs::write(&path, b"whatever").unwrap();
+        let ex = cpu_extractor();
+        let err = ex.execute(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unrecognised mask format"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn execute_reads_both_containers_via_detection() {
+        use crate::io::{write_nifti, write_rvol};
+        let dir = std::env::temp_dir().join("radpipe_dispatch_fmt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mask = sphere_mask(12, 4.0);
+        let p_rvol = dir.join("m.rvol.gz");
+        let p_nii = dir.join("m.nii.gz");
+        write_rvol(&p_rvol, &mask).unwrap();
+        write_nifti(&p_nii, &mask).unwrap();
+        let ex = cpu_extractor();
+        let a = ex.execute(&p_rvol).unwrap();
+        let b = ex.execute(&p_nii).unwrap();
+        assert_eq!(a.features.voxel_count, b.features.voxel_count);
+    }
+
+    #[test]
+    fn batching_knobs_fall_back_with_auto_backend() {
+        // engine_count / batch_size plumbing must not disturb the graceful
+        // CPU fallback when no artifacts exist.
+        let cfg = PipelineConfig {
+            backend: Backend::Auto,
+            artifact_dir: std::path::PathBuf::from("/nonexistent/artifacts"),
+            cpu_threads: 1,
+            engine_count: 4,
+            batch_size: 8,
+            batch_linger_ms: 1,
+            ..Default::default()
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        assert!(!ex.accelerated());
+        assert!(ex.batch_stats().is_none(), "no batcher on the CPU path");
+        let out = ex.execute_mask(&sphere_mask(12, 4.0)).unwrap();
+        assert_eq!(out.path, PathTaken::CpuFallback);
     }
 }

@@ -1,0 +1,142 @@
+//! Mask-file format detection by extension.
+//!
+//! The seed dispatched on `to_string_lossy().contains(".nii")`, which
+//! misroutes names like `not.nii.backup.rvol` and silently treats every
+//! unknown extension as `.rvol`. This module matches real extensions
+//! (case-insensitively, with an optional `.gz` layer) and rejects unknown
+//! ones with an actionable error.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::volume::VoxelGrid;
+
+/// Supported mask container formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskFormat {
+    /// NIfTI-1 (`.nii` / `.nii.gz`).
+    Nifti,
+    /// The repo's rvol container (`.rvol` / `.rvol.gz`).
+    Rvol,
+}
+
+/// Detect the mask format from the file name's extension(s).
+///
+/// Accepts `.nii`, `.nii.gz`, `.rvol`, `.rvol.gz` (any case); anything else
+/// is an error naming the offending path and the accepted extensions.
+pub fn detect_mask_format(path: &Path) -> Result<MaskFormat> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or_default()
+        .to_ascii_lowercase();
+    let stem = name.strip_suffix(".gz").unwrap_or(&name);
+    if stem.ends_with(".nii") {
+        Ok(MaskFormat::Nifti)
+    } else if stem.ends_with(".rvol") {
+        Ok(MaskFormat::Rvol)
+    } else {
+        bail!(
+            "unrecognised mask format for '{}' (expected .nii, .nii.gz, .rvol or .rvol.gz)",
+            path.display()
+        )
+    }
+}
+
+/// Read a mask volume, dispatching on the detected format.
+pub fn read_mask(path: &Path) -> Result<VoxelGrid<u8>> {
+    match detect_mask_format(path)? {
+        MaskFormat::Nifti => super::read_nifti(path),
+        MaskFormat::Rvol => super::read_rvol(path),
+    }
+}
+
+/// True when the path carries a `.gz` layer (case-insensitive, matching
+/// [`detect_mask_format`]'s extension handling). Shared by the rvol and
+/// NIfTI readers/writers so a `MASK.NII.GZ` routed as NIfTI is also
+/// decompressed, not parsed as raw bytes.
+pub(crate) fn has_gz_suffix(path: &Path) -> bool {
+    path.extension().is_some_and(|e| e.eq_ignore_ascii_case("gz"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn detect(name: &str) -> Result<MaskFormat> {
+        detect_mask_format(&PathBuf::from(name))
+    }
+
+    #[test]
+    fn nii_plain() {
+        assert_eq!(detect("case.nii").unwrap(), MaskFormat::Nifti);
+    }
+
+    #[test]
+    fn nii_gz() {
+        assert_eq!(detect("/data/kits/case_00000.nii.gz").unwrap(), MaskFormat::Nifti);
+    }
+
+    #[test]
+    fn rvol_plain() {
+        assert_eq!(detect("mask.rvol").unwrap(), MaskFormat::Rvol);
+    }
+
+    #[test]
+    fn rvol_gz() {
+        assert_eq!(detect("00009-2.rvol.gz").unwrap(), MaskFormat::Rvol);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert_eq!(detect("MASK.NII.GZ").unwrap(), MaskFormat::Nifti);
+        assert_eq!(detect("MASK.RVOL").unwrap(), MaskFormat::Rvol);
+    }
+
+    #[test]
+    fn nii_substring_in_middle_is_not_nifti() {
+        // the seed's contains(".nii") would have misrouted this one
+        assert_eq!(detect("not.nii.backup.rvol").unwrap(), MaskFormat::Rvol);
+    }
+
+    #[test]
+    fn unknown_extension_rejected_with_clear_error() {
+        for name in ["mask.txt", "mask", "mask.gz", "mask.niix", "mask.rvolx.gz"] {
+            let err = detect(name).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("unrecognised mask format"), "{name}: {msg}");
+            assert!(msg.contains(".rvol.gz"), "{name}: {msg}");
+        }
+    }
+
+    #[test]
+    fn read_mask_reports_unknown_extension() {
+        let err = read_mask(&PathBuf::from("/tmp/whatever.dat")).unwrap_err();
+        assert!(err.to_string().contains("unrecognised mask format"));
+    }
+
+    #[test]
+    fn gz_suffix_detection_is_case_insensitive() {
+        assert!(has_gz_suffix(&PathBuf::from("m.rvol.gz")));
+        assert!(has_gz_suffix(&PathBuf::from("M.RVOL.GZ")));
+        assert!(has_gz_suffix(&PathBuf::from("m.nii.Gz")));
+        assert!(!has_gz_suffix(&PathBuf::from("m.rvol")));
+        assert!(!has_gz_suffix(&PathBuf::from("m.nii")));
+    }
+
+    #[test]
+    fn uppercase_gz_name_roundtrips_through_read_mask() {
+        use crate::geometry::Vec3;
+        use crate::volume::{Dims, VoxelGrid};
+        let dir = std::env::temp_dir().join("radpipe_format_upper");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(4, 3, 2), Vec3::splat(1.0));
+        g.set(1, 1, 1, 1);
+        let p = dir.join("MASK.RVOL.GZ");
+        crate::io::write_rvol(&p, &g).unwrap();
+        let back = read_mask(&p).unwrap();
+        assert_eq!(back.data(), g.data());
+    }
+}

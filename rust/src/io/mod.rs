@@ -8,7 +8,9 @@
 mod rvol;
 mod nifti;
 mod dataset;
+mod format;
 
 pub use dataset::{scan_dataset, CaseEntry, DatasetManifest};
+pub use format::{detect_mask_format, read_mask, MaskFormat};
 pub use nifti::{read_nifti, write_nifti};
 pub use rvol::{read_rvol, write_rvol};

@@ -36,7 +36,7 @@ fn rd_f32(b: &[u8], off: usize) -> f32 {
 /// treats segmentation masks of any storage type.
 pub fn read_nifti(path: &Path) -> Result<VoxelGrid<u8>> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut reader: Box<dyn Read> = if path.to_string_lossy().ends_with(".gz") {
+    let mut reader: Box<dyn Read> = if super::format::has_gz_suffix(path) {
         Box::new(GzDecoder::new(BufReader::new(file)))
     } else {
         Box::new(BufReader::new(file))
@@ -127,7 +127,7 @@ pub fn write_nifti(path: &Path, grid: &VoxelGrid<u8>) -> Result<()> {
 
     let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
     let buf = BufWriter::new(file);
-    if path.to_string_lossy().ends_with(".gz") {
+    if super::format::has_gz_suffix(path) {
         let mut w = GzEncoder::new(buf, flate2::Compression::fast());
         w.write_all(&hdr)?;
         w.write_all(grid.data())?;

@@ -97,7 +97,7 @@ impl RvolSample for f32 {
 pub fn write_rvol<T: RvolSample>(path: &Path, grid: &VoxelGrid<T>) -> Result<()> {
     let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
     let buf = BufWriter::new(file);
-    if path.extension().is_some_and(|e| e == "gz") {
+    if super::format::has_gz_suffix(path) {
         let mut w = GzEncoder::new(buf, flate2::Compression::fast());
         write_body(&mut w, grid)?;
         w.finish()?;
@@ -126,7 +126,7 @@ fn write_body<T: RvolSample>(w: &mut impl Write, grid: &VoxelGrid<T>) -> Result<
 pub fn read_rvol<T: RvolSample>(path: &Path) -> Result<VoxelGrid<T>> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let buf = BufReader::new(file);
-    if path.extension().is_some_and(|e| e == "gz") {
+    if super::format::has_gz_suffix(path) {
         read_body(&mut GzDecoder::new(buf))
     } else {
         read_body(&mut { buf })

@@ -1,7 +1,7 @@
 //! Generated marching-tetrahedra tables (mirror of
 //! `python/compile/kernels/mt_tables.py` — keep the two in sync).
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 /// Cube corner id = `x | y << 1 | z << 2`; offsets in `(x, y, z)`.
 pub const CORNER_OFFSETS: [[i32; 3]; 8] = [
@@ -76,7 +76,8 @@ pub struct CaseTable {
 
 impl CaseTable {
     pub fn get() -> &'static CaseTable {
-        static TABLE: Lazy<CaseTable> = Lazy::new(|| {
+        static TABLE: OnceLock<CaseTable> = OnceLock::new();
+        TABLE.get_or_init(|| {
             let mut tris = [[[0usize; 3]; 2]; 16];
             let mut ntris = [0usize; 16];
             for case in 0..16u8 {
@@ -87,8 +88,7 @@ impl CaseTable {
                 }
             }
             CaseTable { tris, ntris }
-        });
-        &TABLE
+        })
     }
 }
 

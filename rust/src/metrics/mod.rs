@@ -101,6 +101,12 @@ impl Metrics {
         g.entry(name.to_string()).or_default().clone()
     }
 
+    /// Set a counter to an absolute value (gauge-style snapshot metrics,
+    /// e.g. the batch-occupancy counters folded in at pipeline end).
+    pub fn set_counter(&self, name: &str, value: u64) {
+        self.counter(name).store(value, Ordering::Relaxed);
+    }
+
     /// Time a closure into the named histogram.
     pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         let t = self.timer(name);
@@ -176,6 +182,15 @@ mod tests {
         m.time("x", || ());
         m.time("x", || ());
         assert_eq!(m.timer("x").count(), 2);
+    }
+
+    #[test]
+    fn set_counter_is_absolute() {
+        let m = Metrics::new();
+        m.counter("batch.flushes").fetch_add(7, Ordering::Relaxed);
+        m.set_counter("batch.flushes", 3);
+        assert_eq!(m.counter("batch.flushes").load(Ordering::Relaxed), 3);
+        assert!(m.report().contains("batch.flushes: 3"));
     }
 
     #[test]

@@ -25,10 +25,25 @@ pub struct ExecTiming {
     pub bucket: usize,
 }
 
+/// One case of a batched execution: its vertex data and the per-item reply
+/// channel the engine answers on. Grouping is done upstream by
+/// [`super::batcher::Batcher`]; the engine executes the group in one
+/// request round-trip and splits results per item.
+pub struct BatchItem {
+    pub verts: Vec<f32>,
+    pub reply: mpsc::Sender<Result<(Diameters, ExecTiming)>>,
+}
+
 enum Request {
     Diameters {
         verts: Vec<f32>,
         reply: mpsc::Sender<Result<(Diameters, ExecTiming)>>,
+    },
+    /// A pad-bucket group of diameter cases executed back-to-back in one
+    /// channel round-trip (executable cache hot after the first item);
+    /// each item keeps its own upload/launch and [`ExecTiming`].
+    DiametersBatch {
+        items: Vec<BatchItem>,
     },
     MeshStats {
         tris: Vec<f32>,
@@ -59,6 +74,12 @@ impl Engine {
     /// construction happens on the engine thread and surfaces on first use.
     pub fn start(artifact_dir: &std::path::Path) -> Result<Engine> {
         let registry = ArtifactRegistry::load(artifact_dir)?;
+        Self::with_registry(registry)
+    }
+
+    /// Start an engine thread over an already-loaded registry (the pool
+    /// loads the manifest once and hands a clone to each engine).
+    pub fn with_registry(registry: ArtifactRegistry) -> Result<Engine> {
         let (tx, rx) = mpsc::channel::<Request>();
         let join = std::thread::Builder::new()
             .name("pjrt-engine".into())
@@ -86,20 +107,66 @@ impl EngineHandle {
     /// Returns squared diameters (artifact returns lengths; squared here
     /// for interface parity with the CPU path) and phase timings.
     pub fn diameters(&self, verts: Vec<f32>) -> Result<(Diameters, ExecTiming)> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Diameters { verts, reply })
+        let rx = self
+            .diameters_async(verts)
             .map_err(|_| anyhow!("pjrt engine is down"))?;
         rx.recv().map_err(|_| anyhow!("pjrt engine dropped the request"))?
     }
 
+    /// Non-blocking submit of a diameters request. On engine death the
+    /// vertex buffer is handed back so the caller can retry on another
+    /// engine (the [`super::pool::EnginePool`] failover path).
+    pub fn diameters_async(
+        &self,
+        verts: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Result<(Diameters, ExecTiming)>>, Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        match self.tx.send(Request::Diameters { verts, reply }) {
+            Ok(()) => Ok(rx),
+            Err(e) => match e.0 {
+                Request::Diameters { verts, .. } => Err(verts),
+                _ => unreachable!("send returned a different request"),
+            },
+        }
+    }
+
+    /// Submit a fused batch. On engine death the items (with their intact
+    /// reply channels) are handed back for re-dispatch elsewhere.
+    pub fn submit_batch(
+        &self,
+        items: Vec<BatchItem>,
+    ) -> std::result::Result<(), Vec<BatchItem>> {
+        match self.tx.send(Request::DiametersBatch { items }) {
+            Ok(()) => Ok(()),
+            Err(e) => match e.0 {
+                Request::DiametersBatch { items } => Err(items),
+                _ => unreachable!("send returned a different request"),
+            },
+        }
+    }
+
     /// Fused [volume, area] of an f32[t,9] triangle soup.
     pub fn mesh_stats(&self, tris: Vec<f32>) -> Result<([f64; 2], ExecTiming)> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::MeshStats { tris, reply })
+        let rx = self
+            .mesh_stats_async(tris)
             .map_err(|_| anyhow!("pjrt engine is down"))?;
         rx.recv().map_err(|_| anyhow!("pjrt engine dropped the request"))?
+    }
+
+    /// Non-blocking submit of a mesh-stats request; hands the triangle soup
+    /// back on engine death (pool failover).
+    pub fn mesh_stats_async(
+        &self,
+        tris: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Result<([f64; 2], ExecTiming)>>, Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        match self.tx.send(Request::MeshStats { tris, reply }) {
+            Ok(()) => Ok(rx),
+            Err(e) => match e.0 {
+                Request::MeshStats { tris, .. } => Err(tris),
+                _ => unreachable!("send returned a different request"),
+            },
+        }
     }
 
     /// Compile all artifacts now; returns how many were compiled.
@@ -131,6 +198,11 @@ fn engine_main(registry: ArtifactRegistry, rx: mpsc::Receiver<Request>) {
                     Request::Diameters { reply, .. } => {
                         let _ = reply.send(Err(anyhow!(msg)));
                     }
+                    Request::DiametersBatch { items } => {
+                        for item in items {
+                            let _ = item.reply.send(Err(anyhow!("{msg}")));
+                        }
+                    }
                     Request::MeshStats { reply, .. } => {
                         let _ = reply.send(Err(anyhow!(msg)));
                     }
@@ -148,6 +220,11 @@ fn engine_main(registry: ArtifactRegistry, rx: mpsc::Receiver<Request>) {
         match req {
             Request::Diameters { verts, reply } => {
                 let _ = reply.send(run_diameters(&mut state, &verts));
+            }
+            Request::DiametersBatch { items } => {
+                for item in items {
+                    let _ = item.reply.send(run_diameters(&mut state, &item.verts));
+                }
             }
             Request::MeshStats { tris, reply } => {
                 let _ = reply.send(run_mesh_stats(&mut state, &tris));

@@ -1,16 +1,27 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
 //! the request path. Python is never involved here.
 //!
-//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the whole
-//! PJRT world is confined to one dedicated **engine thread** (the moral
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each PJRT
+//! client is confined to one dedicated **engine thread** (the moral
 //! equivalent of a CUDA stream): pipeline workers talk to it through an
 //! MPSC request channel and get replies over per-request channels. The
 //! engine compiles executables lazily per (kernel, bucket) and caches them.
+//!
+//! Scale-out layers on top:
+//! * [`EnginePool`] — `engine_count` engine threads over one artifact
+//!   bundle, fed round-robin with failure-aware rebalancing;
+//! * [`Batcher`] — groups concurrent diameter requests by pad-bucket and
+//!   flushes each group as one fused execution (size- or linger-triggered),
+//!   amortising the per-case dispatch round-trip that dominates small ROIs.
 
 mod registry;
 mod engine;
 mod buckets;
+mod batcher;
+mod pool;
 
+pub use batcher::{BatchBackend, BatchConfig, BatchStatsSnapshot, Batcher, CpuLoopbackBackend};
 pub use buckets::{bucket_for, pad_triangles, pad_vertices};
-pub use engine::{Engine, EngineHandle, ExecTiming};
+pub use engine::{BatchItem, Engine, EngineHandle, ExecTiming};
+pub use pool::EnginePool;
 pub use registry::{ArtifactRegistry, ArtifactSpec};

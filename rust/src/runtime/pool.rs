@@ -1,0 +1,250 @@
+//! Multi-engine sharding: a pool of [`Engine`] threads fed round-robin,
+//! with failure-aware rebalancing.
+//!
+//! The single-engine design serialises every artifact execution on one
+//! thread — the right model for one accelerator, but a scale-out ceiling
+//! for dataset serving. `EnginePool` spins up `engine_count` engines over
+//! the same artifact bundle (the moral equivalent of multiple devices or
+//! streams) and shards work across them. An engine whose request channel
+//! has died is marked dead and skipped; in-flight work is re-dispatched to
+//! the next live engine, so a single wedged engine degrades throughput
+//! instead of failing cases.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::batcher::BatchBackend;
+use super::engine::{BatchItem, Engine, EngineHandle, ExecTiming};
+use super::registry::ArtifactRegistry;
+use crate::features::Diameters;
+
+/// A pool of engine threads over one artifact directory.
+pub struct EnginePool {
+    engines: Vec<Engine>,
+    alive: Vec<AtomicBool>,
+    cursor: AtomicUsize,
+    diameter_buckets: Vec<usize>,
+}
+
+impl EnginePool {
+    /// Start `count` engines (at least one) over `artifact_dir`. Fails fast
+    /// if the manifest is unreadable; PJRT construction surfaces per-engine
+    /// on first use, exactly like [`Engine::start`].
+    pub fn start(artifact_dir: &Path, count: usize) -> Result<EnginePool> {
+        let count = count.max(1);
+        // Load the registry once up front: fail-fast validation, the
+        // diameter bucket list the batcher groups by, and one parse shared
+        // by every engine instead of count+1 manifest reads.
+        let registry = ArtifactRegistry::load(artifact_dir)?;
+        let diameter_buckets = registry.numeric_buckets("diameter");
+        let mut engines = Vec::with_capacity(count);
+        for _ in 0..count {
+            engines.push(Engine::with_registry(registry.clone())?);
+        }
+        let alive = (0..count).map(|_| AtomicBool::new(true)).collect();
+        Ok(EnginePool { engines, alive, cursor: AtomicUsize::new(0), diameter_buckets })
+    }
+
+    /// Number of engines the pool was started with.
+    pub fn engine_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Engines still accepting work.
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::Relaxed)).count()
+    }
+
+    /// Sorted diameter pad-buckets of the artifact bundle.
+    pub fn diameter_buckets(&self) -> &[usize] {
+        &self.diameter_buckets
+    }
+
+    /// A handle to the next live engine (round-robin); falls back to engine
+    /// 0 when everything is marked dead (the call will then error cleanly).
+    pub fn handle(&self) -> EngineHandle {
+        match self.next_alive() {
+            Some(i) => self.engines[i].handle(),
+            None => self.engines[0].handle(),
+        }
+    }
+
+    fn next_alive(&self) -> Option<usize> {
+        let n = self.engines.len();
+        for _ in 0..n {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
+            if self.alive[i].load(Ordering::Relaxed) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    fn mark_dead(&self, i: usize) {
+        self.alive[i].store(false, Ordering::Relaxed);
+        eprintln!("radpipe: engine {i} is down; rebalancing onto the remaining pool");
+    }
+
+    /// Diameters with engine failover: a dead engine returns the buffer,
+    /// which is resubmitted to the next live one.
+    pub fn diameters(&self, verts: Vec<f32>) -> Result<(Diameters, ExecTiming)> {
+        let mut verts = verts;
+        for _ in 0..self.engines.len() {
+            let Some(i) = self.next_alive() else { break };
+            match self.engines[i].handle().diameters_async(verts) {
+                Ok(rx) => {
+                    return rx
+                        .recv()
+                        .map_err(|_| anyhow!("engine {i} dropped the request"))?;
+                }
+                Err(back) => {
+                    self.mark_dead(i);
+                    verts = back;
+                }
+            }
+        }
+        bail!("engine pool exhausted: no live engines")
+    }
+
+    /// Mesh stats with the same failover policy.
+    pub fn mesh_stats(&self, tris: Vec<f32>) -> Result<([f64; 2], ExecTiming)> {
+        let mut tris = tris;
+        for _ in 0..self.engines.len() {
+            let Some(i) = self.next_alive() else { break };
+            match self.engines[i].handle().mesh_stats_async(tris) {
+                Ok(rx) => {
+                    return rx
+                        .recv()
+                        .map_err(|_| anyhow!("engine {i} dropped the request"))?;
+                }
+                Err(back) => {
+                    self.mark_dead(i);
+                    tris = back;
+                }
+            }
+        }
+        bail!("engine pool exhausted: no live engines")
+    }
+
+    /// Probe **every** engine with a tiny request so per-engine PJRT init
+    /// errors surface at startup rather than mid-pipeline once the batcher
+    /// shards work onto a broken engine.
+    pub fn smoke_test(&self) -> Result<()> {
+        for (i, engine) in self.engines.iter().enumerate() {
+            engine
+                .handle()
+                .diameters(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0])
+                .with_context(|| format!("engine {i} smoke test"))?;
+        }
+        Ok(())
+    }
+
+    /// Warm every live engine's executable cache; returns the total number
+    /// of fresh compilations across the pool.
+    pub fn warm_up(&self) -> Result<usize> {
+        let mut compiled = 0;
+        for (i, engine) in self.engines.iter().enumerate() {
+            if self.alive[i].load(Ordering::Relaxed) {
+                compiled += engine.handle().warm_up()?;
+            }
+        }
+        Ok(compiled)
+    }
+
+    /// Shard one batch onto the next live engine; on engine death the items
+    /// come back intact and are re-dispatched. If the whole pool is down,
+    /// every item's reply channel receives an error (no caller hangs).
+    pub fn submit_batch(&self, items: Vec<BatchItem>) -> Result<()> {
+        let mut items = items;
+        for _ in 0..self.engines.len() {
+            let Some(i) = self.next_alive() else { break };
+            match self.engines[i].handle().submit_batch(items) {
+                Ok(()) => return Ok(()),
+                Err(back) => {
+                    self.mark_dead(i);
+                    items = back;
+                }
+            }
+        }
+        for item in items {
+            let _ = item.reply.send(Err(anyhow!("engine pool exhausted: no live engines")));
+        }
+        bail!("engine pool exhausted: no live engines")
+    }
+}
+
+impl BatchBackend for EnginePool {
+    fn buckets(&self) -> &[usize] {
+        &self.diameter_buckets
+    }
+
+    fn execute_group(&self, _bucket: usize, items: Vec<BatchItem>) {
+        // Per-item errors were already delivered on total failure.
+        let _ = self.submit_batch(items);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn missing_artifacts_fail_fast() {
+        let err = EnginePool::start(&PathBuf::from("/nonexistent/artifacts"), 3).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest"));
+    }
+
+    fn fake_artifact_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("radpipe_pool_test_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("d512.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "name=diameter bucket=512 file=d512.hlo.txt inputs=f32[512,3] outputs=1\n",
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn pool_starts_engines_and_reads_buckets() {
+        let dir = fake_artifact_dir("buckets");
+        let pool = EnginePool::start(&dir, 2).unwrap();
+        assert_eq!(pool.engine_count(), 2);
+        assert_eq!(pool.alive_count(), 2);
+        assert_eq!(pool.diameter_buckets(), &[512]);
+    }
+
+    #[test]
+    fn requests_error_cleanly_without_pjrt() {
+        // Engines start, but the vendored PJRT stub fails at client
+        // construction — requests must return errors, not hang, and the
+        // engines stay "alive" (the channel is fine; the runtime is not).
+        let dir = fake_artifact_dir("nopjrt");
+        let pool = EnginePool::start(&dir, 2).unwrap();
+        let err = pool.diameters(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("PJRT") || msg.contains("unavailable"), "{msg}");
+        assert_eq!(pool.alive_count(), 2, "runtime errors must not kill engines");
+    }
+
+    #[test]
+    fn smoke_test_surfaces_engine_init_failures() {
+        // With the PJRT stub every engine fails init; the smoke test must
+        // report it (per-engine) instead of passing on a lucky round-robin.
+        let dir = fake_artifact_dir("smoke");
+        let pool = EnginePool::start(&dir, 3).unwrap();
+        let err = pool.smoke_test().unwrap_err();
+        assert!(format!("{err:#}").contains("engine 0 smoke test"), "{err:#}");
+    }
+
+    #[test]
+    fn zero_engine_request_is_clamped_to_one() {
+        let dir = fake_artifact_dir("clamp");
+        let pool = EnginePool::start(&dir, 0).unwrap();
+        assert_eq!(pool.engine_count(), 1);
+    }
+}

@@ -1,0 +1,346 @@
+//! Golden-value conformance suite: synthetic masks with closed-form
+//! geometry, checked end-to-end through the public extractor API on the
+//! CPU path, and through the batch scheduler on the batched path
+//! (batched == unbatched bit-for-bit).
+//!
+//! Golden constants were generated with the cross-language oracle
+//! (`python/compile/kernels/ref.py`: `mt_stats_ref` / `mt_vertices_ref` /
+//! `diameters_ref`) on bit-identical masks; closed-form values and their
+//! documented tolerances bound the discretisation error:
+//!
+//! * volumes: the marching-tetrahedra isosurface bevels edges, so mesh
+//!   volume sits slightly *below* the analytic solid volume (−3 % spheres,
+//!   −1 % boxes) and voxelised curved solids sit slightly above;
+//! * areas: faceting over-counts curved surfaces (up to +25 % for spheres
+//!   at this resolution) and under-counts box edges (−5 %);
+//! * box diameters are exact: the extreme mesh vertices sit on the face
+//!   planes at ±half a voxel outside the filled region, so every diameter
+//!   family equals its closed form exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use radpipe::config::{Backend, PipelineConfig};
+use radpipe::dispatch::FeatureExtractor;
+use radpipe::features::brute_force_diameters;
+use radpipe::geometry::Vec3;
+use radpipe::mc::mesh_roi;
+use radpipe::runtime::{BatchConfig, Batcher, CpuLoopbackBackend};
+use radpipe::volume::{crop_to_roi, Dims, VoxelGrid};
+
+fn cpu_extractor() -> FeatureExtractor {
+    let cfg = PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() };
+    FeatureExtractor::new(&cfg).unwrap()
+}
+
+fn rel_close(got: f64, want: f64, rel: f64) -> bool {
+    (got - want).abs() <= rel * want.abs().max(1e-12)
+}
+
+// ---------------------------------------------------------------- shapes
+
+fn sphere_mask(n: usize, r: f64, spacing: Vec3) -> VoxelGrid<u8> {
+    let mut m = VoxelGrid::zeros(Dims::new(n, n, n), spacing);
+    let c = n as f64 / 2.0;
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let (dx, dy, dz) = (x as f64 - c, y as f64 - c, z as f64 - c);
+                if dx * dx + dy * dy + dz * dz <= r * r {
+                    m.set(x, y, z, 1);
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Solid box over inclusive voxel-index ranges.
+fn box_mask(
+    dims: Dims,
+    xr: (usize, usize),
+    yr: (usize, usize),
+    zr: (usize, usize),
+    spacing: Vec3,
+) -> VoxelGrid<u8> {
+    let mut m = VoxelGrid::zeros(dims, spacing);
+    for z in zr.0..=zr.1 {
+        for y in yr.0..=yr.1 {
+            for x in xr.0..=xr.1 {
+                m.set(x, y, z, 1);
+            }
+        }
+    }
+    m
+}
+
+/// Axis-aligned cylinder: radius r around the centre voxel, z in [z0, z1].
+fn cylinder_mask(n: usize, nz: usize, r: f64, z0: usize, z1: usize) -> VoxelGrid<u8> {
+    let mut m = VoxelGrid::zeros(Dims::new(n, n, nz), Vec3::splat(1.0));
+    // centre voxel index (10, 10) for n = 21 — matches the oracle run that
+    // produced the golden constants
+    let (cx, cy) = ((n / 2) as f64, (n / 2) as f64);
+    for z in z0..=z1 {
+        for y in 0..n {
+            for x in 0..n {
+                let (dx, dy) = (x as f64 - cx, y as f64 - cy);
+                if dx * dx + dy * dy <= r * r {
+                    m.set(x, y, z, 1);
+                }
+            }
+        }
+    }
+    m
+}
+
+// ------------------------------------------------------- CPU-path goldens
+
+#[test]
+fn sphere_conformance_cpu_path() {
+    use std::f64::consts::PI;
+    let (r, n) = (8.0f64, 24);
+    let f = cpu_extractor().execute_mask(&sphere_mask(n, r, Vec3::splat(1.0))).unwrap().features;
+
+    // closed form with documented tolerance
+    let v_analytic = 4.0 / 3.0 * PI * r * r * r;
+    let a_analytic = 4.0 * PI * r * r;
+    assert!(rel_close(f.mesh_volume, v_analytic, 0.05), "V {} vs {v_analytic}", f.mesh_volume);
+    assert!(
+        f.surface_area >= a_analytic && f.surface_area <= 1.3 * a_analytic,
+        "A {} vs {a_analytic}",
+        f.surface_area
+    );
+    assert!((f.maximum_3d_diameter - 2.0 * r).abs() < 2.0);
+
+    // oracle locks (mt_stats_ref / diameters_ref on the identical mask)
+    assert!(rel_close(f.mesh_volume, 2099.0, 1e-3), "V {}", f.mesh_volume);
+    assert!(rel_close(f.surface_area, 1004.2422, 1e-3), "A {}", f.surface_area);
+    let d_sq = [299.0, 290.0, 290.0, 290.0];
+    assert!(rel_close(f.maximum_3d_diameter.powi(2), d_sq[0], 1e-6));
+    assert!(rel_close(f.maximum_2d_diameter_slice.powi(2), d_sq[1], 1e-6));
+    assert!(rel_close(f.maximum_2d_diameter_column.powi(2), d_sq[2], 1e-6));
+    assert!(rel_close(f.maximum_2d_diameter_row.powi(2), d_sq[3], 1e-6));
+}
+
+#[test]
+fn box_conformance_cpu_path_isotropic() {
+    // 12 × 10 × 8 voxels in a 20³ grid, spacing 1 → extents (12, 10, 8) mm
+    let mask = box_mask(Dims::new(20, 20, 20), (4, 15), (5, 14), (6, 13), Vec3::splat(1.0));
+    let f = cpu_extractor().execute_mask(&mask).unwrap().features;
+
+    // voxel volume is exact by construction
+    assert_eq!(f.voxel_count, 12 * 10 * 8);
+    assert!((f.voxel_volume - 960.0).abs() < 1e-9);
+
+    // closed forms: V slightly below L³ (edge bevel), A slightly below 2ΣLL
+    let (v_cf, a_cf) = (960.0, 592.0);
+    assert!(f.mesh_volume <= v_cf && f.mesh_volume >= 0.98 * v_cf, "V {}", f.mesh_volume);
+    assert!(f.surface_area <= a_cf && f.surface_area >= 0.95 * a_cf, "A {}", f.surface_area);
+    // oracle locks
+    assert!(rel_close(f.mesh_volume, 952.75, 1e-3));
+    assert!(rel_close(f.surface_area, 573.8051, 1e-3));
+
+    // diameters are exactly the closed forms (see module docs)
+    assert!((f.maximum_3d_diameter.powi(2) - (144.0 + 100.0 + 64.0)).abs() < 1e-6);
+    assert!((f.maximum_2d_diameter_slice.powi(2) - (144.0 + 100.0)).abs() < 1e-6);
+    assert!((f.maximum_2d_diameter_column.powi(2) - (100.0 + 64.0)).abs() < 1e-6);
+    assert!((f.maximum_2d_diameter_row.powi(2) - (144.0 + 64.0)).abs() < 1e-6);
+}
+
+#[test]
+fn box_conformance_cpu_path_anisotropic() {
+    // same voxel box, spacing (0.5, 0.5, 2.0) → extents (6, 5, 16) mm
+    let mask = box_mask(
+        Dims::new(20, 20, 20),
+        (4, 15),
+        (5, 14),
+        (6, 13),
+        Vec3::new(0.5, 0.5, 2.0),
+    );
+    let f = cpu_extractor().execute_mask(&mask).unwrap().features;
+
+    assert!((f.voxel_volume - 480.0).abs() < 1e-9);
+    let (v_cf, a_cf) = (480.0, 412.0);
+    assert!(f.mesh_volume <= v_cf && f.mesh_volume >= 0.98 * v_cf);
+    assert!(f.surface_area <= a_cf && f.surface_area >= 0.95 * a_cf);
+    assert!(rel_close(f.mesh_volume, 476.375, 1e-3));
+    assert!(rel_close(f.surface_area, 401.8779, 1e-3));
+
+    // exact closed-form diameters in physical mm
+    assert!((f.maximum_3d_diameter.powi(2) - (36.0 + 25.0 + 256.0)).abs() < 1e-6);
+    assert!((f.maximum_2d_diameter_slice.powi(2) - (36.0 + 25.0)).abs() < 1e-6);
+    assert!((f.maximum_2d_diameter_column.powi(2) - (25.0 + 256.0)).abs() < 1e-6);
+    assert!((f.maximum_2d_diameter_row.powi(2) - (36.0 + 256.0)).abs() < 1e-6);
+}
+
+#[test]
+fn cylinder_conformance_cpu_path() {
+    use std::f64::consts::PI;
+    // r = 6.5, height 10 (z in 3..=12), 21×21×16 grid, spacing 1
+    let (r, h) = (6.5f64, 10.0f64);
+    let mask = cylinder_mask(21, 16, r, 3, 12);
+    let f = cpu_extractor().execute_mask(&mask).unwrap().features;
+
+    // closed forms: the voxelised disc overshoots πr² slightly, flat caps
+    // are exact → V within +4 %/−1 %, A within +12 %/−2 %
+    let v_cf = PI * r * r * h;
+    let a_cf = 2.0 * PI * r * r + 2.0 * PI * r * h;
+    assert!(
+        f.mesh_volume >= 0.99 * v_cf && f.mesh_volume <= 1.04 * v_cf,
+        "V {} vs {v_cf}",
+        f.mesh_volume
+    );
+    assert!(
+        f.surface_area >= 0.98 * a_cf && f.surface_area <= 1.12 * a_cf,
+        "A {} vs {a_cf}",
+        f.surface_area
+    );
+    // oracle locks
+    assert!(rel_close(f.mesh_volume, 1361.75, 1e-3));
+    assert!(rel_close(f.surface_area, 738.6114, 1e-3));
+    assert!(rel_close(f.maximum_3d_diameter.powi(2), 302.0, 1e-6));
+    assert!(rel_close(f.maximum_2d_diameter_slice.powi(2), 202.0, 1e-6));
+    assert!(rel_close(f.maximum_2d_diameter_column.powi(2), 269.0, 1e-6));
+    assert!(rel_close(f.maximum_2d_diameter_row.powi(2), 269.0, 1e-6));
+}
+
+#[test]
+fn single_voxel_conformance() {
+    // one voxel: MT volume exactly 1/2, oracle area, diameters [3, 2, 2, 2]
+    let mut mask = VoxelGrid::zeros(Dims::new(5, 5, 5), Vec3::splat(1.0));
+    mask.set(2, 2, 2, 1);
+    let f = cpu_extractor().execute_mask(&mask).unwrap().features;
+    assert!((f.mesh_volume - 0.5).abs() < 1e-9);
+    assert!(rel_close(f.surface_area, 3.6213202, 1e-6));
+    assert!((f.maximum_3d_diameter.powi(2) - 3.0).abs() < 1e-9);
+    assert!((f.maximum_2d_diameter_slice.powi(2) - 2.0).abs() < 1e-9);
+    assert!((f.maximum_2d_diameter_column.powi(2) - 2.0).abs() < 1e-9);
+    assert!((f.maximum_2d_diameter_row.powi(2) - 2.0).abs() < 1e-9);
+}
+
+// ------------------------------------------------------ batched path
+
+/// All conformance meshes as f32 vertex buffers (the engine input layout).
+fn conformance_vertex_sets() -> Vec<Vec<f32>> {
+    let masks = vec![
+        sphere_mask(24, 8.0, Vec3::splat(1.0)),
+        box_mask(Dims::new(20, 20, 20), (4, 15), (5, 14), (6, 13), Vec3::splat(1.0)),
+        box_mask(Dims::new(20, 20, 20), (4, 15), (5, 14), (6, 13), Vec3::new(0.5, 0.5, 2.0)),
+        cylinder_mask(21, 16, 6.5, 3, 12),
+    ];
+    masks
+        .iter()
+        .map(|m| {
+            let (cropped, _) = crop_to_roi(m);
+            mesh_roi(&cropped).vertices_f32()
+        })
+        .collect()
+}
+
+fn batcher(batch_size: usize) -> Batcher {
+    Batcher::new(
+        Arc::new(CpuLoopbackBackend::new(Duration::ZERO)),
+        BatchConfig { batch_size, linger: Duration::from_millis(1) },
+    )
+}
+
+#[test]
+fn batched_path_is_bit_identical_to_unbatched() {
+    let sets = conformance_vertex_sets();
+
+    // unbatched (per-case dispatch) through the same scheduler/backend
+    let direct = batcher(1);
+    let unbatched: Vec<[f64; 4]> = sets
+        .iter()
+        .map(|v| direct.diameters(v.clone()).unwrap().0.as_array())
+        .collect();
+
+    // batched: concurrent submission so pad-bucket groups actually form
+    let grouped = batcher(4);
+    let batched: Vec<[f64; 4]> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sets
+            .iter()
+            .map(|v| {
+                let grouped = &grouped;
+                let v = v.clone();
+                scope.spawn(move || grouped.diameters(v).unwrap().0.as_array())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(unbatched, batched, "batched and unbatched paths must agree bit-for-bit");
+
+    // and both equal the reference oracle on the identical f32 input
+    for (v, got) in sets.iter().zip(&unbatched) {
+        let pts: Vec<Vec3> =
+            v.chunks_exact(3).map(|c| Vec3::from([c[0], c[1], c[2]])).collect();
+        assert_eq!(*got, brute_force_diameters(&pts).as_array());
+    }
+    assert_eq!(grouped.stats().flushed_items, sets.len() as u64);
+}
+
+#[test]
+fn batched_path_hits_the_golden_diameters() {
+    // mesh coordinates of every conformance shape are dyadic rationals, so
+    // the f32 engine layout is exact and the batched path must reproduce
+    // the golden squared diameters exactly
+    let golden: Vec<[f64; 4]> = vec![
+        [299.0, 290.0, 290.0, 290.0],              // sphere
+        [308.0, 244.0, 164.0, 208.0],              // box, spacing 1
+        [317.0, 61.0, 281.0, 292.0],               // box, spacing (.5, .5, 2)
+        [302.0, 202.0, 269.0, 269.0],              // cylinder
+    ];
+    let grouped = batcher(4);
+    let sets = conformance_vertex_sets();
+    let got: Vec<[f64; 4]> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sets
+            .into_iter()
+            .map(|v| {
+                let grouped = &grouped;
+                scope.spawn(move || grouped.diameters(v).unwrap().0.as_array())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (g, want) in got.iter().zip(&golden) {
+        for (a, b) in g.iter().zip(want) {
+            assert!((a - b).abs() < 1e-9, "{g:?} vs {want:?}");
+        }
+    }
+}
+
+// ------------------------------------- engine-backed batching (artifacts)
+
+#[test]
+fn engine_batched_matches_unbatched_when_artifacts_exist() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let unbatched_cfg = PipelineConfig {
+        backend: Backend::Accelerated,
+        artifact_dir: dir.clone(),
+        ..Default::default()
+    };
+    let batched_cfg = PipelineConfig {
+        backend: Backend::Accelerated,
+        artifact_dir: dir,
+        engine_count: 2,
+        batch_size: 4,
+        batch_linger_ms: 1,
+        ..Default::default()
+    };
+    let unbatched = FeatureExtractor::new(&unbatched_cfg).unwrap();
+    let batched = FeatureExtractor::new(&batched_cfg).unwrap();
+    let mask = sphere_mask(20, 6.0, Vec3::new(0.8, 0.8, 2.5));
+    let a = unbatched.execute_mask(&mask).unwrap().features;
+    let b = batched.execute_mask(&mask).unwrap().features;
+    for ((name, va), (_, vb)) in a.named().iter().zip(b.named()) {
+        if va.is_nan() && vb.is_nan() {
+            continue;
+        }
+        assert_eq!(*va, vb, "{name}: batched {vb} vs unbatched {va}");
+    }
+}

@@ -60,6 +60,79 @@ fn prop_all_strategies_equal_brute_force() {
     });
 }
 
+/// Degenerate point-cloud families: 0/1/2 points, collinear runs, coplanar
+/// sheets, and all-identical clusters — the shapes where decomposition
+/// edge-cases (empty blocks, single-row tiles, zero pair counts) bite.
+fn degenerate_cloud_gen() -> Gen<Vec<Vec3>> {
+    Gen::new(|rng: &mut Pcg32, size: usize| {
+        let family = rng.below(6);
+        let n = 1 + (rng.next_u32() as usize) % (size * 8 + 4);
+        let q = |rng: &mut Pcg32| (rng.below(64) as f64) * 0.25;
+        match family {
+            0 => Vec::new(),
+            1 => vec![Vec3::new(q(rng), q(rng), q(rng))],
+            2 => vec![Vec3::new(q(rng), q(rng), q(rng)), Vec3::new(q(rng), q(rng), q(rng))],
+            3 => {
+                // collinear: p + t·d with quantised t (exact arithmetic)
+                let p = Vec3::new(q(rng), q(rng), q(rng));
+                let d = Vec3::new(q(rng) - 8.0, q(rng) - 8.0, q(rng) - 8.0);
+                (0..n).map(|i| p + d * (i as f64)).collect()
+            }
+            4 => {
+                // coplanar: constant z sheet
+                let z = q(rng);
+                (0..n).map(|_| Vec3::new(q(rng), q(rng), z)).collect()
+            }
+            _ => {
+                // all-identical cluster
+                let p = Vec3::new(q(rng), q(rng), q(rng));
+                vec![p; n]
+            }
+        }
+    })
+}
+
+#[test]
+fn prop_strategies_equal_brute_force_on_degenerate_inputs() {
+    forall("strategies-degenerate", &degenerate_cloud_gen(), 120, |v| {
+        let want = brute_force_diameters(v);
+        Strategy::ALL.into_iter().all(|s| {
+            [1usize, 2, 5].into_iter().all(|threads| {
+                let (got, _) = compute_diameters(s, v, threads);
+                got.as_array() == want.as_array()
+            })
+        })
+    });
+}
+
+#[test]
+fn strategies_equal_brute_force_on_tiny_fixed_inputs() {
+    // the explicit 0-, 1- and 2-point cases, plus exact collinear and
+    // coplanar micro-fixtures (no RNG so failures are trivially replayable)
+    let fixtures: Vec<Vec<Vec3>> = vec![
+        vec![],
+        vec![Vec3::new(1.0, 2.0, 3.0)],
+        vec![Vec3::new(0.0, 0.0, 0.0), Vec3::new(1.0, 1.0, 1.0)],
+        vec![Vec3::new(0.0, 0.0, 0.0), Vec3::new(0.0, 0.0, 0.0)],
+        (0..5).map(|i| Vec3::new(i as f64, 2.0 * i as f64, -(i as f64))).collect(),
+        (0..7).map(|i| Vec3::new(i as f64, (i * i) as f64, 4.0)).collect(),
+    ];
+    for v in &fixtures {
+        let want = brute_force_diameters(v);
+        for s in Strategy::ALL {
+            for threads in [1usize, 3] {
+                let (got, _) = compute_diameters(s, v, threads);
+                assert_eq!(
+                    got.as_array(),
+                    want.as_array(),
+                    "{s:?} threads={threads} n={}",
+                    v.len()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_diameter_bounded_by_aabb_diagonal() {
     forall("diameter-le-diagonal", &cloud_gen(), 40, |v| {

@@ -1,0 +1,249 @@
+//! Offline workalike of the `anyhow` crate — the subset radpipe uses.
+//!
+//! Provides [`Error`] (a context-chain error), [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros and the [`Context`] extension trait for
+//! `Result` and `Option`. Formatting matches anyhow's conventions:
+//! `{}` shows the outermost message, `{:#}` shows the whole chain joined
+//! with `": "`, `{:?}` shows the message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// A dynamic error with a chain of context messages.
+///
+/// `chain[0]` is the outermost (most recently attached) context; the last
+/// element is the root cause. Like `anyhow::Error`, this type deliberately
+/// does **not** implement `std::error::Error`, which is what makes the
+/// blanket `From<E: std::error::Error>` impl below coherent.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single displayable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_msg(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the chain from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        // Fold the source chain into context entries so `{:#}` shows it.
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(e.to_string(), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.contains("reading config"));
+        assert!(full.contains("file missing"));
+        assert!(full.contains(": "));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let v2: Option<i32> = Some(3);
+        assert_eq!(v2.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        fn inner() -> Result<()> {
+            bail!("root cause")
+        }
+        fn outer() -> Result<()> {
+            inner().context("outer layer")
+        }
+        let e = outer().unwrap_err();
+        assert_eq!(e.to_string(), "outer layer");
+        assert_eq!(e.root_cause(), "root cause");
+        assert_eq!(format!("{e:#}"), "outer layer: root cause");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            ensure!(x != 1);
+            if x == 2 {
+                bail!("two is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("negative input -1"));
+        assert!(f(1).unwrap_err().to_string().contains("condition failed"));
+        assert!(f(2).unwrap_err().to_string().contains("two"));
+        let msg = String::from("owned message");
+        let e = anyhow!(msg);
+        assert_eq!(e.to_string(), "owned message");
+    }
+
+    #[test]
+    fn debug_format_lists_causes() {
+        let e: Error = io_err().into();
+        let e = e.context("ctx");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx"));
+        assert!(dbg.contains("Caused by"));
+    }
+}

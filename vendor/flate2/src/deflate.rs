@@ -1,0 +1,165 @@
+//! DEFLATE compression: one fixed-Huffman block (RFC 1951 §3.2.6) over a
+//! greedy LZ77 token stream with a single-candidate 3-byte hash matcher.
+
+/// Length-code bases for symbols 257..=285 (index 0 = symbol 257).
+pub(crate) const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99,
+    115, 131, 163, 195, 227, 258,
+];
+pub(crate) const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+
+/// Distance-code bases for symbols 0..=29.
+pub(crate) const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025,
+    1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+pub(crate) const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12,
+    12, 13, 13,
+];
+
+/// LSB-first bit accumulator (DEFLATE bit order); Huffman codes are pushed
+/// through [`BitWriter::huff`], which bit-reverses them as the spec requires.
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u32,
+    n: u32,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter { out: Vec::new(), acc: 0, n: 0 }
+    }
+
+    fn bits(&mut self, v: u32, n: u32) {
+        debug_assert!(n <= 16);
+        self.acc |= (v & ((1u32 << n) - 1)) << self.n;
+        self.n += n;
+        while self.n >= 8 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.n -= 8;
+        }
+    }
+
+    /// Huffman codes are packed most-significant-bit first.
+    fn huff(&mut self, code: u32, n: u32) {
+        let mut rev = 0u32;
+        let mut c = code;
+        for _ in 0..n {
+            rev = (rev << 1) | (c & 1);
+            c >>= 1;
+        }
+        self.bits(rev, n);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.n > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+/// Emit one literal/length symbol with the fixed code assignment.
+fn fixed_lit(w: &mut BitWriter, sym: u32) {
+    if sym <= 143 {
+        w.huff(0x30 + sym, 8);
+    } else if sym <= 255 {
+        w.huff(0x190 + sym - 144, 9);
+    } else if sym <= 279 {
+        w.huff(sym - 256, 7);
+    } else {
+        w.huff(0xC0 + sym - 280, 8);
+    }
+}
+
+/// (symbol offset from 257, extra value, extra bits) for a match length.
+fn len_sym(len: usize) -> (u32, u32, u8) {
+    for i in (0..29).rev() {
+        if len >= LEN_BASE[i] as usize {
+            return (i as u32, (len - LEN_BASE[i] as usize) as u32, LEN_EXTRA[i]);
+        }
+    }
+    unreachable!("match length below 3")
+}
+
+/// (distance symbol, extra value, extra bits) for a match distance.
+fn dist_sym(dist: usize) -> (u32, u32, u8) {
+    for i in (0..30).rev() {
+        if dist >= DIST_BASE[i] as usize {
+            return (i as u32, (dist - DIST_BASE[i] as usize) as u32, DIST_EXTRA[i]);
+        }
+    }
+    unreachable!("match distance below 1")
+}
+
+const HASH_BITS: u32 = 15;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+const MAX_DIST: usize = 32768;
+const MAX_LEN: usize = 258;
+
+#[inline]
+fn hash3(data: &[u8], p: usize) -> usize {
+    (((data[p] as usize) << 10) ^ ((data[p + 1] as usize) << 5) ^ data[p + 2] as usize)
+        & (HASH_SIZE - 1)
+}
+
+/// Compress `data` into a single BFINAL fixed-Huffman DEFLATE block.
+pub(crate) fn deflate_fixed(data: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.bits(1, 1); // BFINAL
+    w.bits(1, 2); // BTYPE = 01 (fixed Huffman)
+
+    let n = data.len();
+    let mut head = vec![usize::MAX; HASH_SIZE];
+    let mut pos = 0usize;
+    while pos < n {
+        let mut match_len = 0usize;
+        let mut match_dist = 0usize;
+        if pos + 3 <= n {
+            let h = hash3(data, pos);
+            let cand = head[h];
+            if cand != usize::MAX
+                && pos - cand <= MAX_DIST
+                && data[cand..cand + 3] == data[pos..pos + 3]
+            {
+                let limit = MAX_LEN.min(n - pos);
+                let mut l = 3usize;
+                while l < limit && data[cand + l] == data[pos + l] {
+                    l += 1;
+                }
+                match_len = l;
+                match_dist = pos - cand;
+            }
+            head[h] = pos;
+        }
+        if match_len >= 3 {
+            let (si, extra, eb) = len_sym(match_len);
+            fixed_lit(&mut w, 257 + si);
+            if eb > 0 {
+                w.bits(extra, eb as u32);
+            }
+            let (ds, dextra, deb) = dist_sym(match_dist);
+            w.huff(ds, 5);
+            if deb > 0 {
+                w.bits(dextra, deb as u32);
+            }
+            // index the positions the match skipped over
+            let end = pos + match_len;
+            let mut p = pos + 1;
+            while p < end && p + 3 <= n {
+                head[hash3(data, p)] = p;
+                p += 1;
+            }
+            pos = end;
+        } else {
+            fixed_lit(&mut w, data[pos] as u32);
+            pos += 1;
+        }
+    }
+    fixed_lit(&mut w, 256); // end of block
+    w.finish()
+}

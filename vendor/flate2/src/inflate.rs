@@ -1,0 +1,232 @@
+//! DEFLATE decompression (RFC 1951): stored, fixed-Huffman and
+//! dynamic-Huffman blocks, using the canonical per-bit Huffman walk
+//! (the `puff.c` reference structure).
+
+use std::io;
+
+use super::deflate::{DIST_BASE, DIST_EXTRA, LEN_BASE, LEN_EXTRA};
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// LSB-first bit reader over a byte slice.
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u32,
+    n: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> BitReader<'a> {
+        BitReader { data, pos: 0, acc: 0, n: 0 }
+    }
+
+    fn bits(&mut self, need: u32) -> io::Result<u32> {
+        debug_assert!(need <= 16);
+        while self.n < need {
+            let Some(&b) = self.data.get(self.pos) else {
+                return Err(bad("deflate stream truncated"));
+            };
+            self.acc |= (b as u32) << self.n;
+            self.pos += 1;
+            self.n += 8;
+        }
+        let v = self.acc & ((1u32 << need) - 1);
+        self.acc >>= need;
+        self.n -= need;
+        Ok(v)
+    }
+
+    /// Drop partial bits to re-align on a byte boundary (stored blocks).
+    fn align(&mut self) {
+        self.acc = 0;
+        self.n = 0;
+    }
+}
+
+/// Canonical Huffman decoding table: per-length symbol counts + the
+/// symbols sorted by (length, symbol order).
+struct Huffman {
+    count: [u16; 16],
+    symbol: Vec<u16>,
+}
+
+impl Huffman {
+    fn new(lengths: &[u8]) -> io::Result<Huffman> {
+        let mut count = [0u16; 16];
+        for &l in lengths {
+            if l > 15 {
+                return Err(bad("code length > 15"));
+            }
+            count[l as usize] += 1;
+        }
+        count[0] = 0;
+        let mut offs = [0u16; 16];
+        for l in 1..16 {
+            offs[l] = offs[l - 1] + count[l - 1];
+        }
+        let total: usize = count.iter().map(|&c| c as usize).sum();
+        let mut symbol = vec![0u16; total];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbol[offs[l as usize] as usize] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { count, symbol })
+    }
+
+    /// Walk the code one bit at a time (MSB-first code order).
+    fn decode(&self, br: &mut BitReader) -> io::Result<u16> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..16 {
+            code |= br.bits(1)? as i32;
+            let cnt = self.count[len] as i32;
+            if code - first < cnt {
+                return Ok(self.symbol[(index + (code - first)) as usize]);
+            }
+            index += cnt;
+            first += cnt;
+            first <<= 1;
+            code <<= 1;
+        }
+        Err(bad("invalid huffman code"))
+    }
+}
+
+fn fixed_tables() -> io::Result<(Huffman, Huffman)> {
+    let mut litlen = [0u8; 288];
+    for (sym, l) in litlen.iter_mut().enumerate() {
+        *l = match sym {
+            0..=143 => 8,
+            144..=255 => 9,
+            256..=279 => 7,
+            _ => 8,
+        };
+    }
+    let lit = Huffman::new(&litlen)?;
+    let dist = Huffman::new(&[5u8; 30])?;
+    Ok((lit, dist))
+}
+
+/// Order in which dynamic-block code-length code lengths are stored.
+const CLCL_ORDER: [usize; 19] =
+    [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+fn dynamic_tables(br: &mut BitReader) -> io::Result<(Huffman, Huffman)> {
+    let hlit = br.bits(5)? as usize + 257;
+    let hdist = br.bits(5)? as usize + 1;
+    let hclen = br.bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err(bad("dynamic block header out of range"));
+    }
+    let mut clcl = [0u8; 19];
+    for &idx in CLCL_ORDER.iter().take(hclen) {
+        clcl[idx] = br.bits(3)? as u8;
+    }
+    let clh = Huffman::new(&clcl)?;
+    let mut lengths: Vec<u8> = Vec::with_capacity(hlit + hdist);
+    while lengths.len() < hlit + hdist {
+        let sym = clh.decode(br)?;
+        match sym {
+            0..=15 => lengths.push(sym as u8),
+            16 => {
+                let Some(&prev) = lengths.last() else {
+                    return Err(bad("repeat with no previous length"));
+                };
+                let n = 3 + br.bits(2)? as usize;
+                lengths.extend(std::iter::repeat(prev).take(n));
+            }
+            17 => {
+                let n = 3 + br.bits(3)? as usize;
+                lengths.extend(std::iter::repeat(0u8).take(n));
+            }
+            18 => {
+                let n = 11 + br.bits(7)? as usize;
+                lengths.extend(std::iter::repeat(0u8).take(n));
+            }
+            _ => return Err(bad("bad code-length symbol")),
+        }
+    }
+    if lengths.len() != hlit + hdist {
+        return Err(bad("code lengths overflow the header counts"));
+    }
+    let lit = Huffman::new(&lengths[..hlit])?;
+    let dist = Huffman::new(&lengths[hlit..])?;
+    Ok((lit, dist))
+}
+
+/// Inflate a raw DEFLATE stream (no gzip/zlib framing).
+pub(crate) fn inflate(data: &[u8]) -> io::Result<Vec<u8>> {
+    let mut br = BitReader::new(data);
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let bfinal = br.bits(1)?;
+        let btype = br.bits(2)?;
+        match btype {
+            0 => {
+                // stored block
+                br.align();
+                if br.pos + 4 > br.data.len() {
+                    return Err(bad("truncated stored-block header"));
+                }
+                let len =
+                    br.data[br.pos] as usize | ((br.data[br.pos + 1] as usize) << 8);
+                let nlen =
+                    br.data[br.pos + 2] as usize | ((br.data[br.pos + 3] as usize) << 8);
+                br.pos += 4;
+                if len ^ 0xFFFF != nlen {
+                    return Err(bad("stored-block length check failed"));
+                }
+                if br.pos + len > br.data.len() {
+                    return Err(bad("stored block truncated"));
+                }
+                out.extend_from_slice(&br.data[br.pos..br.pos + len]);
+                br.pos += len;
+            }
+            1 | 2 => {
+                let (lit, dist) = if btype == 1 {
+                    fixed_tables()?
+                } else {
+                    dynamic_tables(&mut br)?
+                };
+                loop {
+                    let sym = lit.decode(&mut br)?;
+                    if sym < 256 {
+                        out.push(sym as u8);
+                    } else if sym == 256 {
+                        break;
+                    } else {
+                        let i = sym as usize - 257;
+                        if i >= 29 {
+                            return Err(bad("invalid length symbol"));
+                        }
+                        let len = LEN_BASE[i] as usize
+                            + br.bits(LEN_EXTRA[i] as u32)? as usize;
+                        let ds = dist.decode(&mut br)? as usize;
+                        if ds >= 30 {
+                            return Err(bad("invalid distance symbol"));
+                        }
+                        let d = DIST_BASE[ds] as usize
+                            + br.bits(DIST_EXTRA[ds] as u32)? as usize;
+                        if d > out.len() {
+                            return Err(bad("distance beyond output start"));
+                        }
+                        for _ in 0..len {
+                            let b = out[out.len() - d];
+                            out.push(b);
+                        }
+                    }
+                }
+            }
+            _ => return Err(bad("reserved block type")),
+        }
+        if bfinal == 1 {
+            return Ok(out);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! PJRT binding surface **stub**.
+//!
+//! The real `xla` crate links the XLA/PJRT C++ runtime, which cannot be
+//! built in the offline mirror. This stub exposes the exact API surface the
+//! radpipe engine uses so the crate compiles and the dispatcher's probe
+//! fails *cleanly*: [`PjRtClient::cpu`] returns an error, the engine thread
+//! reports it per-request, and the `auto` backend falls back to the CPU
+//! path — the paper's graceful-degradation behaviour, exercised end to end.
+//!
+//! Swapping this path dependency for the real crate re-enables the
+//! accelerated path with no source changes in radpipe.
+
+use std::fmt;
+
+/// Error type: a plain message (the real crate's `Error` is also opaque and
+/// only ever formatted by radpipe).
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "XLA/PJRT runtime not linked in this build (vendor/xla stub); \
+         the accelerated path is unavailable"
+            .to_string(),
+    )
+}
+
+/// PJRT client handle (never constructible through the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real binding constructs a CPU PJRT client; the stub reports the
+    /// runtime as missing, which the engine surfaces on first use.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A host literal (tensor value).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: Copy + Default>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("unavailable") || msg.contains("not linked"), "{msg}");
+    }
+
+    #[test]
+    fn hlo_parse_reports_unavailable() {
+        assert!(HloModuleProto::from_text_file("/tmp/whatever.hlo.txt").is_err());
+    }
+}
