@@ -117,3 +117,198 @@ def mt_vertices_ref(grid: np.ndarray, spacing, iso: float = 0.5) -> np.ndarray:
         return np.zeros((0, 3), dtype=np.float32)
     pts = tris.reshape(-1, 3)
     return np.unique(pts.round(decimals=9), axis=0).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Intensity-class oracles (first-order + texture), mirroring the Rust
+# feature classes in rust/src/features/. These generate the golden
+# constants locked in rust/tests/conformance.rs.
+# --------------------------------------------------------------------------
+
+TEXTURE_ANGLES_13 = [
+    (1, 0, 0), (0, 1, 0), (0, 0, 1),
+    (1, 1, 0), (1, -1, 0), (1, 0, 1), (1, 0, -1), (0, 1, 1), (0, 1, -1),
+    (1, 1, 1), (1, 1, -1), (1, -1, 1), (1, -1, -1),
+]
+
+
+def firstorder_ref(vals: np.ndarray, bin_width: float = 25.0) -> dict:
+    """The 18 PyRadiomics first-order features of an ROI value vector.
+
+    Mirrors ``radpipe::features::compute_first_order`` (voxel volume 1, so
+    TotalEnergy == Energy; scale it by the physical voxel volume when
+    comparing anisotropic cases).
+    """
+    v = np.sort(np.asarray(vals, dtype=np.float64))
+    n = v.size
+    minimum, maximum = v[0], v[-1]
+    mean = v.sum() / n
+    energy = (v**2).sum()
+    variance = ((v - mean) ** 2).sum() / n
+    std = np.sqrt(variance)
+    p10, p25, p50, p75, p90 = np.percentile(v, [10, 25, 50, 75, 90])
+    mad = np.abs(v - mean).sum() / n
+    robust = v[(v >= p10) & (v <= p90)]
+    rmad = (
+        np.abs(robust - robust.sum() / robust.size).sum() / robust.size
+        if robust.size
+        else 0.0
+    )
+    if std > 1e-12:
+        skew = ((v - mean) ** 3).sum() / n / std**3
+        kurt = ((v - mean) ** 4).sum() / n / variance**2
+    else:
+        skew = kurt = 0.0
+    lo = np.floor(minimum / bin_width) * bin_width
+    nbins = max(int(np.floor((maximum - lo) / bin_width)) + 1, 1)
+    hist = np.zeros(nbins)
+    for i in np.minimum(np.floor((v - lo) / bin_width).astype(int), nbins - 1):
+        hist[i] += 1
+    p = hist[hist > 0] / n
+    return {
+        "Energy": energy,
+        "TotalEnergy": energy,
+        "Entropy": -(p * np.log2(p)).sum(),
+        "Minimum": minimum,
+        "10Percentile": p10,
+        "90Percentile": p90,
+        "Maximum": maximum,
+        "Mean": mean,
+        "Median": p50,
+        "InterquartileRange": p75 - p25,
+        "Range": maximum - minimum,
+        "MeanAbsoluteDeviation": mad,
+        "RobustMeanAbsoluteDeviation": rmad,
+        "RootMeanSquared": np.sqrt(energy / n),
+        "Skewness": skew,
+        "Kurtosis": kurt,
+        "Variance": variance,
+        "Uniformity": (p**2).sum(),
+    }
+
+
+def glcm_ref(levels: np.ndarray, distances=(1,)) -> np.ndarray:
+    """Symmetric 3D GLCM count matrices ``[n_matrices, ng, ng]``.
+
+    ``levels`` is int[(x, y, z)] with 0 = outside the ROI, 1..ng inside —
+    the output of the fixed-width/fixed-count discretizer. One matrix per
+    (distance, angle); both orderings of each voxel pair are counted.
+    """
+    ng = int(levels.max())
+    nx, ny, nz = levels.shape
+    mats = np.zeros((len(distances) * len(TEXTURE_ANGLES_13), ng, ng), dtype=np.int64)
+    for di, d in enumerate(distances):
+        for ai, (dx, dy, dz) in enumerate(TEXTURE_ANGLES_13):
+            m = mats[di * len(TEXTURE_ANGLES_13) + ai]
+            for x in range(nx):
+                for y in range(ny):
+                    for z in range(nz):
+                        li = levels[x, y, z]
+                        if li == 0:
+                            continue
+                        qx, qy, qz = x + dx * d, y + dy * d, z + dz * d
+                        if not (0 <= qx < nx and 0 <= qy < ny and 0 <= qz < nz):
+                            continue
+                        lj = levels[qx, qy, qz]
+                        if lj == 0:
+                            continue
+                        m[li - 1, lj - 1] += 1
+                        m[lj - 1, li - 1] += 1
+    return mats
+
+
+def glcm_features_ref(mats: np.ndarray) -> np.ndarray:
+    """The 9 derived GLCM features, averaged over non-empty matrices:
+    [autocorrelation, contrast, correlation, joint energy, joint entropy,
+    Idm, Idn, cluster shade, cluster prominence]."""
+    ng = mats.shape[1]
+    i = np.arange(1, ng + 1)[:, None] * np.ones((1, ng))
+    j = i.T
+    feats = []
+    for m in mats:
+        total = m.sum()
+        if total == 0:
+            continue
+        p = m / total
+        px = p.sum(1)
+        mu = (np.arange(1, ng + 1) * px).sum()
+        sigma_sq = (((np.arange(1, ng + 1) - mu) ** 2) * px).sum()
+        autocorr = (i * j * p).sum()
+        corr = (autocorr - mu * mu) / sigma_sq if sigma_sq > 1e-12 else 1.0
+        nzp = p[p > 0]
+        dev = i + j - 2 * mu
+        feats.append([
+            autocorr,
+            (((i - j) ** 2) * p).sum(),
+            corr,
+            (p**2).sum(),
+            -(nzp * np.log2(nzp)).sum(),
+            (p / (1 + (i - j) ** 2)).sum(),
+            (p / (1 + np.abs(i - j) / ng)).sum(),
+            (dev**3 * p).sum(),
+            (dev**4 * p).sum(),
+        ])
+    return np.mean(feats, axis=0)
+
+
+def glrlm_ref(levels: np.ndarray) -> np.ndarray:
+    """13-direction run-length count matrices ``[13, ng, max_len]``.
+
+    Runs are maximal same-level segments along each direction's lattice
+    lines; out-of-ROI voxels (level 0) break runs.
+    """
+    nx, ny, nz = levels.shape
+    ng = int(levels.max())
+    max_len = max(nx, ny, nz)
+    mats = np.zeros((len(TEXTURE_ANGLES_13), ng, max_len), dtype=np.int64)
+    for di, (dx, dy, dz) in enumerate(TEXTURE_ANGLES_13):
+        m = mats[di]
+        for x in range(nx):
+            for y in range(ny):
+                for z in range(nz):
+                    px, py, pz = x - dx, y - dy, z - dz
+                    if 0 <= px < nx and 0 <= py < ny and 0 <= pz < nz:
+                        continue  # not a line start
+                    cx, cy, cz = x, y, z
+                    run_level, run_len = 0, 0
+                    while 0 <= cx < nx and 0 <= cy < ny and 0 <= cz < nz:
+                        lvl = levels[cx, cy, cz]
+                        if lvl == run_level and lvl != 0:
+                            run_len += 1
+                        else:
+                            if run_level != 0:
+                                m[run_level - 1, run_len - 1] += 1
+                            run_level, run_len = lvl, 1
+                        cx, cy, cz = cx + dx, cy + dy, cz + dz
+                    if run_level != 0:
+                        m[run_level - 1, run_len - 1] += 1
+    return mats
+
+
+def glrlm_features_ref(mats: np.ndarray, n_voxels: int) -> np.ndarray:
+    """The 11 derived GLRLM features, averaged over non-empty directions:
+    [SRE, LRE, GLN, RLN, RP, LGLRE, HGLRE, SRLGLE, SRHGLE, LRLGLE,
+    LRHGLE]."""
+    _, ng, max_len = mats.shape
+    gi = np.arange(1, ng + 1)[:, None] ** 2 * np.ones((1, max_len))
+    lj = (np.arange(1, max_len + 1)[None, :] ** 2) * np.ones((ng, 1))
+    feats = []
+    for m in mats:
+        nr = m.sum()
+        if nr == 0:
+            continue
+        r = m.astype(float)
+        feats.append([
+            (r / lj).sum() / nr,
+            (r * lj).sum() / nr,
+            (r.sum(1) ** 2).sum() / nr,
+            (r.sum(0) ** 2).sum() / nr,
+            nr / n_voxels,
+            (r / gi).sum() / nr,
+            (r * gi).sum() / nr,
+            (r / (gi * lj)).sum() / nr,
+            (r * gi / lj).sum() / nr,
+            (r * lj / gi).sum() / nr,
+            (r * gi * lj).sum() / nr,
+        ])
+    return np.mean(feats, axis=0)

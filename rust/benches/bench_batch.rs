@@ -72,8 +72,8 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let n_cases = 64;
-    let verts = 300; // "small ROI" regime: fixed overhead dominates
+    let n_cases = if common::quick() { 32 } else { 64 };
+    let verts = if common::quick() { 150 } else { 300 }; // small-ROI regime
     let overhead = Duration::from_micros(500);
     let workers = 8;
     let inputs = cases(n_cases, verts);

@@ -10,7 +10,13 @@ use radpipe::experiments::{fig1, run_fig1};
 fn main() -> anyhow::Result<()> {
     // Fig 1's winner pattern is scale-sensitive (H100's memory-term
     // advantage needs ≥ ~30k-vertex cases); use at least 1/8 paper scale.
-    let scale = common::bench_scale().max(0.125);
+    // Quick mode keeps the tiny smoke dataset instead (winners are then
+    // not meaningful; the run only proves the harness works).
+    let scale = if common::quick() {
+        common::bench_scale()
+    } else {
+        common::bench_scale().max(0.125)
+    };
     std::env::set_var("RADPIPE_BENCH_SCALE", scale.to_string());
     let manifest = common::bench_dataset();
     common::banner(&format!(

@@ -46,12 +46,16 @@ fn cloud(n: usize) -> Vec<Vec3> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let mesher_sizes: &[usize] = if common::quick() { &[16, 24] } else { &[32, 64, 96] };
+    let diam_sizes: &[usize] =
+        if common::quick() { &[500, 1500] } else { &[2000, 8000, 16000] };
+
     common::banner("MESHER — fused marching-tetrahedra walk");
     let mut t = Table::new(vec!["volume", "voxels", "verts", "best[ms]", "Mcells/s"]);
-    for n in [32usize, 64, 96] {
+    for &n in mesher_sizes {
         let mask = sphere(n, n as f64 * 0.4);
         let mesh = mesh_roi(&mask); // warm result for the verts column
-        let (best, _) = common::measure(3, || {
+        let (best, _) = common::measure(common::iters(3), || {
             std::hint::black_box(mesh_roi(&mask));
         });
         let cells = (n - 1).pow(3) as f64;
@@ -67,11 +71,11 @@ fn main() -> anyhow::Result<()> {
 
     common::banner("DIAMETER — CPU strategies (Mpairs/s, this machine)");
     let mut t = Table::new(vec!["N", "strategy", "best[ms]", "Mpairs/s"]);
-    for n in [2000usize, 8000, 16000] {
+    for &n in diam_sizes {
         let v = cloud(n);
         let pairs = (n as f64) * (n as f64 + 1.0) / 2.0;
         // brute-force single-thread reference first
-        let (best, _) = common::measure(2, || {
+        let (best, _) = common::measure(common::iters(2), || {
             std::hint::black_box(brute_force_diameters(&v));
         });
         t.row(vec![
@@ -81,7 +85,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", pairs / best / 1e6),
         ]);
         for s in Strategy::ALL {
-            let (best, _) = common::measure(2, || {
+            let (best, _) = common::measure(common::iters(2), || {
                 std::hint::black_box(compute_diameters(s, &v, 0));
             });
             t.row(vec![

@@ -12,13 +12,15 @@ use radpipe::report::Table;
 
 fn main() -> anyhow::Result<()> {
     let manifest = common::bench_dataset();
+    let queues: &[usize] = if common::quick() { &[1, 4] } else { &[1, 4, 16] };
+    let worker_counts: &[usize] = if common::quick() { &[1, 2] } else { &[1, 2, 4] };
 
     common::banner("PIPELINE — queue capacity × workers (CPU path, 20 cases)");
     let mut t = Table::new(vec![
         "queue", "read-workers", "feat-workers", "wall[s]", "cases/s",
     ]);
-    for queue in [1usize, 4, 16] {
-        for workers in [1usize, 2, 4] {
+    for &queue in queues {
+        for &workers in worker_counts {
             let cfg = PipelineConfig {
                 backend: Backend::Cpu,
                 cpu_threads: 1,

@@ -1,0 +1,154 @@
+//! Texture-matrix accumulation: serial vs parallel on a ≥ 64³ synthetic
+//! ROI. The GLCM/GLRLM hot loop is per-voxel (13 angles × distances per
+//! voxel), the workload PR 2 opens for acceleration; this bench measures
+//! how the chunked per-thread partial matrices scale and verifies the
+//! deterministic-accumulation contract (parallel == serial bit-for-bit).
+//!
+//! Run: `cargo bench --offline --bench bench_texture`
+//! Quick mode: `RADPIPE_BENCH_QUICK=1` (CI smoke budget).
+
+mod common;
+
+use radpipe::features::texture::{
+    accumulate_glcm, accumulate_glrlm, discretize, glcm_features, glrlm_features,
+    Discretization,
+};
+use radpipe::geometry::Vec3;
+use radpipe::parallel::Strategy;
+use radpipe::report::Table;
+use radpipe::testkit::Pcg32;
+use radpipe::volume::{Dims, VoxelGrid};
+
+/// Spherical ROI of edge `n` with a banded + noisy intensity pattern —
+/// enough gray-level structure that the matrices are dense.
+fn synthetic_case(n: usize) -> (VoxelGrid<f32>, VoxelGrid<u8>) {
+    let dims = Dims::new(n, n, n);
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut rng = Pcg32::new(7);
+    let c = n as f64 / 2.0;
+    let r = n as f64 * 0.45;
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let v = ((x / 3 + y / 2 + z) % 24) as f64 * 10.0 + rng.normal() * 6.0;
+                img.set(x, y, z, v as f32);
+                let (dx, dy, dz) = (x as f64 - c, y as f64 - c, z as f64 - c);
+                if dx * dx + dy * dy + dz * dz <= r * r {
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+    }
+    (img, mask)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = if common::quick() { 64 } else { 96 };
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    // best-of-3 even in quick mode: the serial-vs-parallel assertion below
+    // would be flaky on one-sample timings from a contended CI runner, and
+    // the quick volume keeps three iterations well under a second
+    let iters = 3;
+    let distances = [1usize, 2];
+
+    let (img, mask) = synthetic_case(n);
+    let roi = discretize(&img, &mask, Discretization::BinCount(16))?
+        .expect("non-empty synthetic ROI");
+    common::banner(&format!(
+        "TEXTURE ACCUMULATION — {n}³ volume, {} ROI voxels, Ng={}, {} angles × {} \
+         distances, {threads} threads",
+        roi.n_voxels,
+        roi.ng,
+        radpipe::features::texture::ANGLES_13.len(),
+        distances.len(),
+    ));
+
+    // serial reference (1 thread, static split)
+    let glcm_ref = accumulate_glcm(&roi, &distances, Strategy::EqualSplit, 1);
+    let glrlm_ref = accumulate_glrlm(&roi, Strategy::EqualSplit, 1);
+    let (serial_glcm, _) = common::measure(iters, || {
+        std::hint::black_box(accumulate_glcm(&roi, &distances, Strategy::EqualSplit, 1));
+    });
+    let (serial_glrlm, _) = common::measure(iters, || {
+        std::hint::black_box(accumulate_glrlm(&roi, Strategy::EqualSplit, 1));
+    });
+    let serial = serial_glcm + serial_glrlm;
+
+    let mut t = Table::new(vec![
+        "strategy", "threads", "glcm[ms]", "glrlm[ms]", "total[ms]", "speedup-vs-serial",
+    ]);
+    t.row(vec![
+        "serial-reference".to_string(),
+        "1".to_string(),
+        format!("{:.1}", serial_glcm * 1e3),
+        format!("{:.1}", serial_glrlm * 1e3),
+        format!("{:.1}", serial * 1e3),
+        "1.00".to_string(),
+    ]);
+
+    let mut best_parallel = f64::INFINITY;
+    for strategy in Strategy::ALL {
+        let (p_glcm, _) = common::measure(iters, || {
+            std::hint::black_box(accumulate_glcm(&roi, &distances, strategy, threads));
+        });
+        let (p_glrlm, _) = common::measure(iters, || {
+            std::hint::black_box(accumulate_glrlm(&roi, strategy, threads));
+        });
+        let total = p_glcm + p_glrlm;
+        best_parallel = best_parallel.min(total);
+        t.row(vec![
+            strategy.label().to_string(),
+            threads.to_string(),
+            format!("{:.1}", p_glcm * 1e3),
+            format!("{:.1}", p_glrlm * 1e3),
+            format!("{:.1}", total * 1e3),
+            format!("{:.2}", serial / total),
+        ]);
+
+        // determinism contract: parallel matrices equal the serial ones
+        let g = accumulate_glcm(&roi, &distances, strategy, threads);
+        anyhow::ensure!(g == glcm_ref, "GLCM diverged under {strategy:?}");
+        let r = accumulate_glrlm(&roi, strategy, threads);
+        anyhow::ensure!(r == glrlm_ref, "GLRLM diverged under {strategy:?}");
+    }
+    print!("{}", t.to_text());
+
+    let fg = glcm_features(&glcm_ref).expect("dense GLCM");
+    let fr = glrlm_features(&glrlm_ref).expect("dense GLRLM");
+    println!(
+        "\nGLCM contrast {:.4}, joint entropy {:.4}; GLRLM RP {:.4}, SRE {:.4}",
+        fg.contrast, fg.joint_entropy, fr.run_percentage, fr.short_run_emphasis
+    );
+    println!("parallel == serial verified bit-for-bit for all 5 strategies");
+
+    if threads >= 2 {
+        // quick mode runs on contended shared CI runners where a wall-clock
+        // comparison can invert spuriously — report there, assert locally
+        if best_parallel < serial {
+            println!(
+                "best parallel beats serial: {:.1} ms vs {:.1} ms ({:.2}x)",
+                best_parallel * 1e3,
+                serial * 1e3,
+                serial / best_parallel
+            );
+        } else if common::quick() {
+            println!(
+                "WARNING: parallel ({:.1} ms) did not beat serial ({:.1} ms) on this \
+                 contended quick-mode run",
+                best_parallel * 1e3,
+                serial * 1e3
+            );
+        } else {
+            anyhow::bail!(
+                "expected parallel accumulation ({:.1} ms) to beat serial ({:.1} ms) \
+                 with {threads} threads",
+                best_parallel * 1e3,
+                serial * 1e3
+            );
+        }
+    } else {
+        println!("single-core machine: speedup assertion skipped");
+    }
+    Ok(())
+}

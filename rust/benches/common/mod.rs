@@ -7,13 +7,32 @@ use std::time::Instant;
 use radpipe::io::DatasetManifest;
 use radpipe::synth::{generate_dataset, GenOptions};
 
+/// True when `RADPIPE_BENCH_QUICK` is set to a non-empty, non-`0` value:
+/// the CI bench-smoke mode. Benches shrink their iteration budgets and
+/// problem sizes so every target *runs* (not just compiles) in seconds.
+pub fn quick() -> bool {
+    std::env::var("RADPIPE_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// Iteration budget: `full` normally, 1 in quick mode.
+pub fn iters(full: usize) -> usize {
+    if quick() {
+        1
+    } else {
+        full
+    }
+}
+
 /// Vertex-count scale for bench datasets; override with
 /// `RADPIPE_BENCH_SCALE` (1.0 = paper scale — hours on this testbed).
+/// Quick mode defaults to a much smaller dataset.
 pub fn bench_scale() -> f64 {
     std::env::var("RADPIPE_BENCH_SCALE")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(0.05)
+        .unwrap_or(if quick() { 0.004 } else { 0.05 })
 }
 
 /// Generate (or reuse) the deterministic bench dataset.

@@ -20,8 +20,10 @@ radpipe — PyRadiomics-cuda reproduction pipeline
 USAGE:
   radpipe gen-data  --out DIR [--scale F] [--seed N]
   radpipe extract   --data DIR [--config FILE] [--backend auto|cpu|accelerated]
-                    [--artifacts DIR] [--json FILE] [--workers N]
+                    [--artifacts DIR] [--json FILE] [--csv FILE] [--workers N]
                     [--engine-count N] [--batch-size N] [--batch-linger-ms MS]
+                    [--features shape,firstorder,glcm,glrlm|texture|all]
+                    [--bin-width F] [--bin-count N] [--glcm-distances 1,2]
   radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
   radpipe fig1      --data DIR [--threads N]
   radpipe fig2      --data DIR
@@ -97,30 +99,71 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(ms) = args.opt_parse::<u64>("batch-linger-ms")? {
         cfg.batch_linger_ms = ms;
     }
+    if let Some(list) = args.opt("features") {
+        cfg.feature_classes = crate::config::FeatureClasses::parse(list)?;
+    }
+    if let Some(w) = args.opt_parse::<f64>("bin-width")? {
+        anyhow::ensure!(w > 0.0 && w.is_finite(), "--bin-width must be positive");
+        cfg.bin_width = w;
+    }
+    if let Some(n) = args.opt_parse::<usize>("bin-count")? {
+        let max = crate::features::texture::MAX_GRAY_LEVELS;
+        anyhow::ensure!(n <= max, "--bin-count {n} exceeds the maximum of {max}");
+        cfg.bin_count = n;
+    }
+    if let Some(list) = args.opt("glcm-distances") {
+        cfg.glcm_distances =
+            crate::config::parse_distances(list).context("--glcm-distances")?;
+    }
     Ok(cfg)
+}
+
+/// Every computed (name, value) pair of one case, in stable class order:
+/// shape, then first-order, then texture.
+fn case_named_features(r: &crate::pipeline::CaseResult) -> Vec<(&'static str, f64)> {
+    let mut out = r.features.named();
+    if let Some(fo) = &r.first_order {
+        out.extend(fo.named());
+    }
+    if let Some(tex) = &r.texture {
+        out.extend(tex.named());
+    }
+    out
 }
 
 fn extract(args: &Args) -> Result<()> {
     let data = PathBuf::from(args.req("data")?);
     let cfg = load_config(args)?;
     let json_out = args.opt("json").map(PathBuf::from);
+    let csv_out = args.opt("csv").map(PathBuf::from);
     args.finish()?;
 
     let manifest = crate::io::scan_dataset(&data)?;
     let extractor = FeatureExtractor::new(&cfg)?;
     let report = run_pipeline(&manifest, &cfg, &extractor)?;
 
-    let mut t = Table::new(vec!["case", "verts", "MeshVolume", "SurfaceArea", "Max3DDiam", "path", "total[ms]"]);
+    let texture_on = cfg.feature_classes.texture();
+    let mut headers =
+        vec!["case", "verts", "MeshVolume", "SurfaceArea", "Max3DDiam", "path"];
+    if texture_on {
+        headers.push("texture[ms]");
+    }
+    headers.push("total[ms]");
+    let mut t = Table::new(headers);
     for r in &report.results {
-        t.row(vec![
+        let mut row = vec![
             r.case_id.clone(),
             r.features.vertex_count.to_string(),
             format!("{:.1}", r.features.mesh_volume),
             format!("{:.1}", r.features.surface_area),
             format!("{:.2}", r.features.maximum_3d_diameter),
             format!("{:?}", r.path),
-            format!("{:.1}", r.timing.total().as_secs_f64() * 1e3),
-        ]);
+        ];
+        if texture_on {
+            row.push(format!("{:.1}", r.timing.texture.as_secs_f64() * 1e3));
+        }
+        row.push(format!("{:.1}", r.timing.total().as_secs_f64() * 1e3));
+        t.row(row);
     }
     print!("{}", t.to_text());
     for (case, err) in &report.failures {
@@ -136,7 +179,7 @@ fn extract(args: &Args) -> Result<()> {
             let mut c = JsonValue::obj();
             c.set("case", r.case_id.as_str());
             c.set("path", format!("{:?}", r.path));
-            for (name, value) in r.features.named() {
+            for (name, value) in case_named_features(r) {
                 c.set(name, value);
             }
             cases.push(c);
@@ -144,6 +187,35 @@ fn extract(args: &Args) -> Result<()> {
         doc.set("cases", JsonValue::Arr(cases));
         doc.set("failures", report.failures.len());
         std::fs::write(&path, doc.to_string())
+            .with_context(|| format!("write {}", path.display()))?;
+        eprintln!("wrote {}", path.display());
+    }
+
+    if let Some(path) = csv_out {
+        // header: union of feature names in first-seen order (cases with an
+        // empty ROI miss the intensity classes; their cells read NaN)
+        let mut names: Vec<&'static str> = Vec::new();
+        for r in &report.results {
+            for (name, _) in case_named_features(r) {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+        let mut headers = vec!["case".to_string(), "path".to_string()];
+        headers.extend(names.iter().map(|n| n.to_string()));
+        let mut csv = Table::new(headers);
+        for r in &report.results {
+            let have: std::collections::HashMap<&str, f64> =
+                case_named_features(r).into_iter().collect();
+            let mut row = vec![r.case_id.clone(), format!("{:?}", r.path)];
+            row.extend(names.iter().map(|n| match have.get(n) {
+                Some(v) => format!("{v}"),
+                None => "NaN".to_string(),
+            }));
+            csv.row(row);
+        }
+        std::fs::write(&path, csv.to_csv())
             .with_context(|| format!("write {}", path.display()))?;
         eprintln!("wrote {}", path.display());
     }
@@ -271,6 +343,52 @@ mod tests {
     fn unknown_flag_rejected() {
         let err = dispatch(argv(&["devices", "--wat"])).unwrap_err();
         assert!(err.to_string().contains("--wat"));
+    }
+
+    #[test]
+    fn extract_computes_texture_classes_and_writes_reports() {
+        let dir = std::env::temp_dir().join("radpipe_cli_texture_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        let json = dir.join("out.json");
+        let csv = dir.join("out.csv");
+        dispatch(argv(&[
+            "extract",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "cpu",
+            "--features",
+            "all",
+            "--bin-count",
+            "8",
+            "--glcm-distances",
+            "1,2",
+            "--json",
+            json.to_str().unwrap(),
+            "--csv",
+            csv.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let json_text = std::fs::read_to_string(&json).unwrap();
+        assert!(json_text.contains("Glcm_Contrast"), "texture features in JSON");
+        assert!(json_text.contains("Glrlm_RunPercentage"));
+        assert!(json_text.contains("Entropy"), "first-order features in JSON");
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("case,path,MeshVolume"));
+        assert!(csv_text.contains("Glcm_Autocorrelation"));
+        // bad knobs are clear errors
+        assert!(dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--features", "bogus",
+        ]))
+        .is_err());
+        assert!(dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--glcm-distances", "0",
+        ]))
+        .is_err());
     }
 
     #[test]

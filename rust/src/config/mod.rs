@@ -37,6 +37,99 @@ impl Backend {
     }
 }
 
+/// Which feature classes the extractor computes.
+///
+/// Shape is always on — it is the paper's pipeline and every report keys
+/// off it; the flag exists so `"shape"` parses in class lists. The
+/// intensity classes (first-order, GLCM, GLRLM) are opt-in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureClasses {
+    pub shape: bool,
+    pub first_order: bool,
+    pub glcm: bool,
+    pub glrlm: bool,
+}
+
+impl Default for FeatureClasses {
+    fn default() -> Self {
+        FeatureClasses { shape: true, first_order: false, glcm: false, glrlm: false }
+    }
+}
+
+impl FeatureClasses {
+    /// Parse a comma-separated class list, e.g. `"shape,glcm,glrlm"`.
+    /// Accepted names: `shape`, `firstorder`, `glcm`, `glrlm`,
+    /// `texture` (= glcm + glrlm), `all`. At least one class must be
+    /// named — an empty list is an error, not a silent shape-only run.
+    pub fn parse(s: &str) -> Result<FeatureClasses> {
+        let mut c = FeatureClasses::default();
+        let mut recognized = 0usize;
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if !tok.is_empty() {
+                recognized += 1;
+            }
+            match tok {
+                "" => {}
+                "shape" => c.shape = true,
+                "firstorder" | "first-order" | "first_order" => c.first_order = true,
+                "glcm" => c.glcm = true,
+                "glrlm" => c.glrlm = true,
+                "texture" => {
+                    c.glcm = true;
+                    c.glrlm = true;
+                }
+                "all" => {
+                    c.first_order = true;
+                    c.glcm = true;
+                    c.glrlm = true;
+                }
+                other => bail!(
+                    "unknown feature class '{other}' \
+                     (shape|firstorder|glcm|glrlm|texture|all)"
+                ),
+            }
+        }
+        if recognized == 0 {
+            bail!("feature class list is empty; name at least one class, e.g. \"shape\"");
+        }
+        Ok(c)
+    }
+
+    /// True when any enabled class needs image intensities.
+    pub fn needs_image(&self) -> bool {
+        self.first_order || self.glcm || self.glrlm
+    }
+
+    /// True when a texture matrix class is enabled.
+    pub fn texture(&self) -> bool {
+        self.glcm || self.glrlm
+    }
+}
+
+/// Parse a comma-separated distance list, e.g. `"1,2"` (GLCM offsets).
+/// Shared by the TOML key and the `--glcm-distances` CLI flag.
+pub fn parse_distances(s: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let d: usize = tok
+            .parse()
+            .with_context(|| format!("bad glcm distance '{tok}' (positive integers)"))?;
+        if d == 0 {
+            bail!("glcm distances must be >= 1");
+        }
+        out.push(d);
+    }
+    if out.is_empty() {
+        bail!("glcm_distances must name at least one distance, e.g. \"1\"");
+    }
+    Ok(out)
+}
+
 /// Typed pipeline configuration (defaults reflect the single-core testbed).
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -63,6 +156,17 @@ pub struct PipelineConfig {
     pub batch_size: usize,
     /// Max milliseconds a partial batch waits for co-batchable cases.
     pub batch_linger_ms: u64,
+    /// Feature classes to compute (shape is always on).
+    pub feature_classes: FeatureClasses,
+    /// Gray-level bin width for first-order histograms and texture
+    /// discretization (PyRadiomics default 25), used when `bin_count` is 0.
+    pub bin_width: f64,
+    /// Fixed gray-level bin count for texture discretization and the
+    /// first-order histogram; `0` selects fixed-width binning via
+    /// `bin_width`.
+    pub bin_count: usize,
+    /// GLCM neighbour distances in voxels.
+    pub glcm_distances: Vec<usize>,
 }
 
 impl Default for PipelineConfig {
@@ -79,6 +183,10 @@ impl Default for PipelineConfig {
             engine_count: 1,
             batch_size: 1,
             batch_linger_ms: 2,
+            feature_classes: FeatureClasses::default(),
+            bin_width: 25.0,
+            bin_count: 0,
+            glcm_distances: vec![1],
         }
     }
 }
@@ -113,6 +221,23 @@ impl PipelineConfig {
                 "engine_count" => cfg.engine_count = value.as_usize()?.max(1),
                 "batch_size" => cfg.batch_size = value.as_usize()?.max(1),
                 "batch_linger_ms" => cfg.batch_linger_ms = value.as_usize()? as u64,
+                "feature_classes" => {
+                    cfg.feature_classes = FeatureClasses::parse(value.as_str()?)?
+                }
+                "bin_width" => {
+                    cfg.bin_width = value.as_f64()?;
+                    if cfg.bin_width <= 0.0 || !cfg.bin_width.is_finite() {
+                        bail!("bin_width must be a positive number");
+                    }
+                }
+                "bin_count" => {
+                    cfg.bin_count = value.as_usize()?;
+                    let max = crate::features::texture::MAX_GRAY_LEVELS;
+                    if cfg.bin_count > max {
+                        bail!("bin_count {} exceeds the maximum of {max}", cfg.bin_count);
+                    }
+                }
+                "glcm_distances" => cfg.glcm_distances = parse_distances(value.as_str()?)?,
                 other => bail!("unknown [pipeline] key '{other}'"),
             }
         }
@@ -201,5 +326,63 @@ batch_linger_ms = 5
         assert_eq!(Backend::parse("auto").unwrap(), Backend::Auto);
         assert_eq!(Backend::parse("gpu").unwrap(), Backend::Accelerated);
         assert!(Backend::parse("x").is_err());
+    }
+
+    #[test]
+    fn feature_class_defaults_are_shape_only() {
+        let c = PipelineConfig::default();
+        assert!(c.feature_classes.shape);
+        assert!(!c.feature_classes.needs_image());
+        assert_eq!(c.bin_width, 25.0);
+        assert_eq!(c.bin_count, 0);
+        assert_eq!(c.glcm_distances, vec![1]);
+    }
+
+    #[test]
+    fn feature_class_list_parses() {
+        let c = FeatureClasses::parse("shape, glcm").unwrap();
+        assert!(c.shape && c.glcm && !c.glrlm && !c.first_order);
+        let c = FeatureClasses::parse("texture").unwrap();
+        assert!(c.glcm && c.glrlm && !c.first_order);
+        let c = FeatureClasses::parse("all").unwrap();
+        assert!(c.first_order && c.glcm && c.glrlm && c.needs_image() && c.texture());
+        assert!(FeatureClasses::parse("bogus").is_err());
+        // an empty list is a user error, not a silent shape-only run
+        assert!(FeatureClasses::parse("").is_err());
+        assert!(FeatureClasses::parse(" , ").is_err());
+    }
+
+    #[test]
+    fn texture_knobs_parse_from_toml() {
+        let text = r#"
+[pipeline]
+feature_classes = "firstorder,texture"
+bin_width = 10.5
+bin_count = 16
+glcm_distances = "1, 2,3"
+"#;
+        let c = PipelineConfig::from_toml(text).unwrap();
+        assert!(c.feature_classes.first_order && c.feature_classes.glcm);
+        assert_eq!(c.bin_width, 10.5);
+        assert_eq!(c.bin_count, 16);
+        assert_eq!(c.glcm_distances, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bad_texture_knobs_rejected() {
+        assert!(PipelineConfig::from_toml("[pipeline]\nbin_width = 0\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nbin_width = -5.0\n").is_err());
+        // out-of-range bin_count fails at config time, not per-case at runtime
+        assert!(PipelineConfig::from_toml("[pipeline]\nbin_count = 600\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nbin_count = 512\n").is_ok());
+        assert!(
+            PipelineConfig::from_toml("[pipeline]\nglcm_distances = \"0\"\n").is_err()
+        );
+        assert!(
+            PipelineConfig::from_toml("[pipeline]\nglcm_distances = \"\"\n").is_err()
+        );
+        assert!(
+            PipelineConfig::from_toml("[pipeline]\nfeature_classes = \"wat\"\n").is_err()
+        );
     }
 }

@@ -15,14 +15,23 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::{Backend, PipelineConfig};
-use crate::features::{brute_force_diameters, compute_shape_features, ShapeFeatures};
+use crate::config::{Backend, FeatureClasses, PipelineConfig};
+use crate::features::texture::Discretization;
+use crate::features::{
+    brute_force_diameters, compute_first_order_with, compute_shape_features,
+    compute_texture, FirstOrderFeatures, ShapeFeatures, TextureFeatures, TextureOptions,
+};
 use crate::mc::{mesh_roi, planar_diameters_grouped};
 use crate::parallel::{compute_diameters, Strategy};
 use crate::runtime::{
     BatchConfig, BatchStatsSnapshot, Batcher, EngineHandle, EnginePool, ExecTiming,
 };
-use crate::volume::{crop_to_roi, MaskStats, VoxelGrid};
+use crate::volume::{crop_box, crop_to_roi, MaskStats, VoxelGrid};
+
+/// Seed for the synthetic stand-in intensities used when a case has no
+/// image volume (the dataset format currently ships masks only); fixed so
+/// intensity features are reproducible run-to-run.
+const SYNTH_IMAGE_SEED: u64 = 42;
 
 /// Which path actually computed a result.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,7 +42,9 @@ pub enum PathTaken {
     CpuFallback,
 }
 
-/// Per-phase timing breakdown of one case — the Table 2 row ingredients.
+/// Per-phase timing breakdown of one case — the Table 2 row ingredients
+/// plus the intensity-class phase (`texture` covers image synthesis /
+/// cropping, discretization, first-order and the texture matrices).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CaseTiming {
     pub read: Duration,
@@ -41,13 +52,19 @@ pub struct CaseTiming {
     pub marching: Duration,
     pub transfer: Duration,
     pub diameters: Duration,
+    pub texture: Duration,
     pub derive: Duration,
 }
 
 impl CaseTiming {
     /// Post-read computation total (the paper's "Comp." denominator base).
     pub fn compute_total(&self) -> Duration {
-        self.preprocess + self.marching + self.transfer + self.diameters + self.derive
+        self.preprocess
+            + self.marching
+            + self.transfer
+            + self.diameters
+            + self.texture
+            + self.derive
     }
 
     pub fn total(&self) -> Duration {
@@ -55,10 +72,13 @@ impl CaseTiming {
     }
 }
 
-/// One extraction result.
+/// One extraction result. `first_order`/`texture` are present when the
+/// corresponding feature class is enabled and the ROI is non-empty.
 #[derive(Debug, Clone)]
 pub struct Extraction {
     pub features: ShapeFeatures,
+    pub first_order: Option<FirstOrderFeatures>,
+    pub texture: Option<TextureFeatures>,
     pub timing: CaseTiming,
     pub path: PathTaken,
 }
@@ -76,6 +96,10 @@ pub struct FeatureExtractor {
     backend: Backend,
     strategy: Strategy,
     cpu_threads: usize,
+    classes: FeatureClasses,
+    bin_width: f64,
+    bin_count: usize,
+    glcm_distances: Vec<usize>,
 }
 
 impl FeatureExtractor {
@@ -119,6 +143,10 @@ impl FeatureExtractor {
             backend: cfg.backend,
             strategy: cfg.strategy,
             cpu_threads: cfg.cpu_threads,
+            classes: cfg.feature_classes,
+            bin_width: cfg.bin_width,
+            bin_count: cfg.bin_count,
+            glcm_distances: cfg.glcm_distances.clone(),
         })
     }
 
@@ -162,12 +190,42 @@ impl FeatureExtractor {
         Ok(ex)
     }
 
-    /// Extraction over an in-memory mask (pipeline stages use this).
+    /// Extraction over an in-memory mask (pipeline stages use this). When
+    /// intensity classes are enabled and no image is supplied, a
+    /// deterministic synthetic image stands in (see
+    /// [`crate::synth::synthesize_image`]).
     pub fn execute_mask(&self, mask: &VoxelGrid<u8>) -> Result<Extraction> {
+        self.execute_case(mask, None)
+    }
+
+    /// Extraction over a mask plus an optional aligned intensity image
+    /// (same dims/spacing). The image is only read when an intensity
+    /// feature class (first-order / GLCM / GLRLM) is enabled.
+    pub fn execute_case(
+        &self,
+        mask: &VoxelGrid<u8>,
+        image: Option<&VoxelGrid<f32>>,
+    ) -> Result<Extraction> {
+        if let Some(img) = image {
+            anyhow::ensure!(
+                img.dims == mask.dims,
+                "image dims {} do not match mask dims {}",
+                img.dims,
+                mask.dims
+            );
+            // TotalEnergy scales with the image voxel volume, so a spacing
+            // mismatch would silently corrupt it
+            anyhow::ensure!(
+                img.spacing == mask.spacing,
+                "image spacing {:?} does not match mask spacing {:?}",
+                img.spacing,
+                mask.spacing
+            );
+        }
         let mut timing = CaseTiming::default();
 
         let t = Instant::now();
-        let (cropped, _offset) = crop_to_roi(mask);
+        let (cropped, offset) = crop_to_roi(mask);
         let mask_stats = MaskStats::compute(&cropped);
         timing.preprocess = t.elapsed();
 
@@ -204,7 +262,53 @@ impl FeatureExtractor {
             compute_shape_features(&cropped, &mask_stats, &mesh.stats, &diam, vertex_count);
         timing.derive = t.elapsed();
 
-        Ok(Extraction { features, timing, path })
+        let (first_order, texture) = if self.classes.needs_image() {
+            let t = Instant::now();
+            let cropped_image = match image {
+                Some(img) => crop_box(img, offset, cropped.dims),
+                None => crate::synth::synthesize_image(&cropped, SYNTH_IMAGE_SEED),
+            };
+            let first_order = if self.classes.first_order {
+                compute_first_order_with(&cropped_image, &cropped, self.discretization())
+            } else {
+                None
+            };
+            let texture = if self.classes.texture() {
+                compute_texture(&cropped_image, &cropped, &self.texture_options())?
+            } else {
+                None
+            };
+            timing.texture = t.elapsed();
+            (first_order, texture)
+        } else {
+            (None, None)
+        };
+
+        Ok(Extraction { features, first_order, texture, timing, path })
+    }
+
+    /// The configured gray-level binning — shared by first-order
+    /// (Entropy/Uniformity histogram) and the texture matrices so one
+    /// `bin_count`/`bin_width` knob governs every discretized feature.
+    fn discretization(&self) -> Discretization {
+        if self.bin_count > 0 {
+            Discretization::BinCount(self.bin_count)
+        } else {
+            Discretization::BinWidth(self.bin_width)
+        }
+    }
+
+    /// The texture knobs as a [`TextureOptions`] (single source of truth
+    /// for the dispatcher and the pipeline feature stage).
+    pub fn texture_options(&self) -> TextureOptions {
+        TextureOptions {
+            discretization: self.discretization(),
+            distances: self.glcm_distances.clone(),
+            strategy: self.strategy,
+            threads: self.cpu_threads,
+            glcm: self.classes.glcm,
+            glrlm: self.classes.glrlm,
+        }
     }
 
     fn accelerated_diameters(
@@ -361,6 +465,89 @@ mod tests {
         let a = ex.execute(&p_rvol).unwrap();
         let b = ex.execute(&p_nii).unwrap();
         assert_eq!(a.features.voxel_count, b.features.voxel_count);
+    }
+
+    fn all_classes_cfg(cpu_threads: usize) -> PipelineConfig {
+        PipelineConfig {
+            backend: Backend::Cpu,
+            cpu_threads,
+            feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn intensity_classes_ride_along_when_enabled() {
+        let ex = FeatureExtractor::new(&all_classes_cfg(1)).unwrap();
+        let out = ex.execute_mask(&sphere_mask(14, 5.0)).unwrap();
+        let fo = out.first_order.expect("first-order enabled");
+        assert!(fo.variance >= 0.0);
+        let tex = out.texture.expect("texture enabled");
+        assert_eq!(tex.named().len(), 20, "9 GLCM + 11 GLRLM");
+        assert!(tex.named().iter().all(|(_, v)| v.is_finite()));
+        assert!(out.timing.texture > Duration::ZERO);
+        // shape path is untouched by the extra classes
+        let plain = cpu_extractor().execute_mask(&sphere_mask(14, 5.0)).unwrap();
+        assert_eq!(out.features.mesh_volume, plain.features.mesh_volume);
+    }
+
+    #[test]
+    fn default_config_skips_intensity_classes() {
+        let out = cpu_extractor().execute_mask(&sphere_mask(12, 4.0)).unwrap();
+        assert!(out.first_order.is_none());
+        assert!(out.texture.is_none());
+        assert_eq!(out.timing.texture, Duration::ZERO);
+    }
+
+    #[test]
+    fn texture_is_identical_for_one_and_many_threads() {
+        let mask = sphere_mask(16, 5.5);
+        let a = FeatureExtractor::new(&all_classes_cfg(1))
+            .unwrap()
+            .execute_mask(&mask)
+            .unwrap();
+        let b = FeatureExtractor::new(&all_classes_cfg(4))
+            .unwrap()
+            .execute_mask(&mask)
+            .unwrap();
+        assert_eq!(a.texture, b.texture, "bit-for-bit across thread counts");
+        assert_eq!(a.first_order, b.first_order);
+    }
+
+    #[test]
+    fn explicit_image_is_used_and_checked() {
+        let mask = sphere_mask(12, 4.0);
+        let mut img: VoxelGrid<f32> = VoxelGrid::zeros(mask.dims, mask.spacing);
+        for z in 0..12 {
+            for y in 0..12 {
+                for x in 0..12 {
+                    img.set(x, y, z, ((x + y + z) % 7) as f32 * 10.0);
+                }
+            }
+        }
+        let ex = FeatureExtractor::new(&all_classes_cfg(1)).unwrap();
+        let with_img = ex.execute_case(&mask, Some(&img)).unwrap();
+        let synth = ex.execute_case(&mask, None).unwrap();
+        assert!(with_img.first_order.is_some());
+        assert_ne!(
+            with_img.first_order, synth.first_order,
+            "explicit image must actually be read"
+        );
+        // dims and spacing mismatches are clear errors
+        let bad: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
+        assert!(ex.execute_case(&mask, Some(&bad)).is_err());
+        let wrong_spacing: VoxelGrid<f32> = VoxelGrid::zeros(mask.dims, Vec3::splat(1.0));
+        let err = ex.execute_case(&mask, Some(&wrong_spacing)).unwrap_err();
+        assert!(format!("{err:#}").contains("spacing"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_mask_has_no_intensity_features() {
+        let ex = FeatureExtractor::new(&all_classes_cfg(1)).unwrap();
+        let m = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        let out = ex.execute_mask(&m).unwrap();
+        assert!(out.first_order.is_none());
+        assert!(out.texture.is_none());
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! image volume, computed in one sort + two passes.
 //!
 //! Definitions follow `radiomics.firstorder` (bin width 25 for the
-//! histogram features, voxel volume `c` for Energy/TotalEnergy).
+//! histogram features, voxel volume `c` for Energy/TotalEnergy). The
+//! Entropy/Uniformity histogram honours the same discretization settings
+//! as the texture classes — see [`compute_first_order_with`].
 
+use super::texture::Discretization;
 use crate::volume::VoxelGrid;
 
 /// The PyRadiomics first-order feature vector (18 features).
@@ -79,6 +82,27 @@ pub fn compute_first_order(
     mask: &VoxelGrid<u8>,
     bin_width: f64,
 ) -> Option<FirstOrderFeatures> {
+    compute_first_order_with(image, mask, Discretization::BinWidth(bin_width))
+}
+
+/// Histogram size ceiling: a pathological `bin_width` (say `1e-9` over a
+/// wide intensity range) must degrade gracefully — excess values clamp
+/// into the last bin — rather than attempt an unbounded allocation.
+const MAX_HIST_BINS: usize = 1 << 20;
+
+/// [`compute_first_order`] with the full discretization policy: the
+/// Entropy/Uniformity histogram uses edge-aligned fixed-width bins
+/// ([`Discretization::BinWidth`], PyRadiomics `binWidth`) or a fixed bin
+/// count over the ROI range ([`Discretization::BinCount`], PyRadiomics
+/// `binCount`) — matching whatever the texture classes use, so a single
+/// `bin_count` config knob governs every discretized feature. The
+/// histogram is capped at [`MAX_HIST_BINS`]. Non-finite intensities do
+/// not panic; they propagate NaN into the order statistics.
+pub fn compute_first_order_with(
+    image: &VoxelGrid<f32>,
+    mask: &VoxelGrid<u8>,
+    disc: Discretization,
+) -> Option<FirstOrderFeatures> {
     assert_eq!(image.dims, mask.dims, "image/mask dims mismatch");
     let mut vals: Vec<f64> = mask
         .iter_roi()
@@ -87,7 +111,9 @@ pub fn compute_first_order(
     if vals.is_empty() {
         return None;
     }
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total order: NaN intensities sort to the ends instead of panicking
+    // (real medical volumes do contain NaN voxels)
+    vals.sort_by(|a, b| a.total_cmp(b));
     let n = vals.len() as f64;
 
     let minimum = vals[0];
@@ -123,8 +149,32 @@ pub fn compute_first_order(
     };
 
     // discretised histogram for Entropy / Uniformity
-    let lo = (minimum / bin_width).floor() * bin_width;
-    let nbins = (((maximum - lo) / bin_width).floor() as usize + 1).max(1);
+    let (lo, bin_width, nbins) = match disc {
+        Discretization::BinWidth(w) => {
+            // same precondition style as the dims assert above: an invalid
+            // width is a programmer error (config/CLI validate user input),
+            // not something to silently rewrite
+            assert!(w > 0.0 && w.is_finite(), "bin width must be positive, got {w}");
+            let lo = (minimum / w).floor() * w;
+            let raw = ((maximum - lo) / w).floor();
+            let nbins = if raw.is_finite() && raw < (MAX_HIST_BINS - 1) as f64 {
+                raw as usize + 1
+            } else if raw.is_finite() {
+                MAX_HIST_BINS
+            } else {
+                1 // NaN range (non-finite intensities): degenerate histogram
+            };
+            (lo, w, nbins.max(1))
+        }
+        Discretization::BinCount(n) => {
+            let n = n.clamp(1, MAX_HIST_BINS);
+            if maximum > minimum {
+                (minimum, (maximum - minimum) / n as f64, n)
+            } else {
+                (minimum, 1.0, 1) // constant ROI: one bin
+            }
+        }
+    };
     let mut hist = vec![0u64; nbins];
     for &v in &vals {
         let b = (((v - lo) / bin_width).floor() as usize).min(nbins - 1);
@@ -221,6 +271,56 @@ mod tests {
         let f = compute_first_order(&img, &mask, 25.0).unwrap();
         assert!((f.entropy - 1.0).abs() < 1e-12);
         assert!((f.uniformity - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bin_count_histogram_matches_fixed_count_semantics() {
+        // values [1..5], 2 bins over [1, 5]: [1,3) holds {1,2}, [3,5]
+        // holds {3,4,5} (max clamps into the last bin)
+        let (img, mask) = fixture();
+        let f =
+            compute_first_order_with(&img, &mask, Discretization::BinCount(2)).unwrap();
+        let want_entropy = -(0.4f64 * 0.4f64.log2() + 0.6 * 0.6f64.log2());
+        assert!((f.entropy - want_entropy).abs() < 1e-12, "{}", f.entropy);
+        assert!((f.uniformity - 0.52).abs() < 1e-12, "{}", f.uniformity);
+        // non-histogram features are unaffected by the discretization policy
+        let g = compute_first_order(&img, &mask, 25.0).unwrap();
+        assert_eq!(f.mean, g.mean);
+        assert_eq!(f.variance, g.variance);
+        assert_eq!(f.energy, g.energy);
+    }
+
+    #[test]
+    fn pathological_bin_settings_do_not_blow_up() {
+        // tiny width over a wide range must clamp the histogram, not OOM
+        let dims = Dims::new(2, 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        img.set(0, 0, 0, 0.0);
+        img.set(1, 0, 0, 1e9);
+        mask.set(0, 0, 0, 1);
+        mask.set(1, 0, 0, 1);
+        let f = compute_first_order(&img, &mask, 1e-9).unwrap();
+        assert!(f.entropy.is_finite());
+        let f = compute_first_order_with(&img, &mask, Discretization::BinCount(usize::MAX))
+            .unwrap();
+        assert!(f.entropy.is_finite());
+    }
+
+    #[test]
+    fn nan_intensity_propagates_without_panicking() {
+        let dims = Dims::new(3, 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for x in 0..3 {
+            img.set(x, 0, 0, if x == 1 { f32::NAN } else { x as f32 });
+            mask.set(x, 0, 0, 1);
+        }
+        let f = compute_first_order(&img, &mask, 25.0).unwrap();
+        // NaN sorts to an end under total order and taints the statistics
+        // honestly instead of crashing the extract worker
+        assert!(f.maximum.is_nan() || f.minimum.is_nan());
+        assert!(f.mean.is_nan());
     }
 
     #[test]

@@ -1,16 +1,20 @@
-//! The complete PyRadiomics *Shape (3D)* feature class.
+//! The PyRadiomics feature classes: *Shape (3D)*, *first-order* statistics
+//! and the *texture* matrices (GLCM + GLRLM).
 //!
-//! Feature definitions follow the PyRadiomics documentation exactly; all are
-//! computed in physical (mm) space. The expensive inputs (mesh volume,
-//! surface area, diameters) come either from the CPU path
+//! Feature definitions follow the PyRadiomics documentation; shape is
+//! computed in physical (mm) space. The expensive shape inputs (mesh
+//! volume, surface area, diameters) come either from the CPU path
 //! ([`crate::mc::mesh_roi`] + [`crate::parallel`]) or from the PJRT
 //! artifacts ([`crate::dispatch`]); the cheap closed-form features are
-//! derived here.
+//! derived here. The texture matrices are accumulated in parallel with
+//! deterministic results — see [`texture`].
 
 mod shape;
 mod diameters;
 mod firstorder;
+pub mod texture;
 
 pub use diameters::{brute_force_diameters, Diameters};
-pub use firstorder::{compute_first_order, FirstOrderFeatures};
+pub use firstorder::{compute_first_order, compute_first_order_with, FirstOrderFeatures};
 pub use shape::{compute_shape_features, ShapeFeatures};
+pub use texture::{compute_texture, TextureFeatures, TextureOptions};

@@ -80,27 +80,19 @@ pub fn compute_shape_features(
     let a = mesh.area;
     let voxel_volume = mask_stats.count as f64 * mask.voxel_volume();
 
-    // Sphericity family (PyRadiomics definitions).
-    let sphericity = if a > 0.0 {
-        (36.0 * PI * v * v).cbrt() / a
-    } else {
-        f64::NAN
-    };
-    let compactness1 = if v > 0.0 && a > 0.0 {
-        v / (PI.sqrt() * a.powf(1.5))
-    } else {
-        f64::NAN
-    };
-    let compactness2 = if a > 0.0 {
-        36.0 * PI * v * v / (a * a * a)
-    } else {
-        f64::NAN
-    };
-    let spherical_disproportion = if sphericity.is_finite() && sphericity != 0.0 {
-        1.0 / sphericity
-    } else {
-        f64::NAN
-    };
+    // Sphericity family (PyRadiomics definitions). Degenerate meshes —
+    // empty masks, or meshes collapsed to zero volume/area — would turn
+    // every ratio into NaN/inf; they are *defined as zero* instead so that
+    // downstream consumers (reports, CSV, aggregation) see a sentinel that
+    // is unambiguous and sorts/serialises cleanly. A zero is unambiguous
+    // here because every one of these ratios is strictly positive for any
+    // non-degenerate mesh.
+    let degenerate = v <= 0.0 || a <= 0.0;
+    let sphericity = if degenerate { 0.0 } else { (36.0 * PI * v * v).cbrt() / a };
+    let compactness1 = if degenerate { 0.0 } else { v / (PI.sqrt() * a.powf(1.5)) };
+    let compactness2 = if degenerate { 0.0 } else { 36.0 * PI * v * v / (a * a * a) };
+    let spherical_disproportion = if degenerate { 0.0 } else { 1.0 / sphericity };
+    let surface_volume_ratio = if degenerate { 0.0 } else { a / v };
 
     // PCA axis lengths: 4·sqrt(λ) over the physical-coordinate covariance.
     let eig = sym3_eigenvalues(mask_stats.covariance);
@@ -118,7 +110,7 @@ pub fn compute_shape_features(
         mesh_volume: v,
         voxel_volume,
         surface_area: a,
-        surface_volume_ratio: if v > 0.0 { a / v } else { f64::NAN },
+        surface_volume_ratio,
         sphericity,
         compactness1,
         compactness2,
@@ -240,14 +232,54 @@ mod tests {
     }
 
     #[test]
-    fn empty_mask_yields_nans_not_panics() {
+    fn empty_mask_yields_defined_zeros_not_nans() {
         let m = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
         let stats = MaskStats::compute(&m);
         let mesh = mesh_roi(&m);
         let d = brute_force_diameters(&[]);
         let f = compute_shape_features(&m, &stats, &mesh.stats, &d, 0);
         assert_eq!(f.voxel_volume, 0.0);
-        assert!(f.sphericity.is_nan());
+        // degenerate-mesh ratio family: defined zeros (no NaN/inf)
+        assert_eq!(f.sphericity, 0.0);
+        assert_eq!(f.compactness1, 0.0);
+        assert_eq!(f.compactness2, 0.0);
+        assert_eq!(f.spherical_disproportion, 0.0);
+        assert_eq!(f.surface_volume_ratio, 0.0);
+        // diameters keep PyRadiomics' NaN for "no vertex pair"
         assert!(f.maximum_3d_diameter.is_nan());
+    }
+
+    #[test]
+    fn zero_area_mesh_stats_yield_zeros_not_infinities() {
+        // a fabricated degenerate mesh (zero area, nonzero volume and the
+        // reverse) must never produce NaN or inf in the ratio family
+        let m = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        let stats = MaskStats::compute(&m);
+        let d = brute_force_diameters(&[]);
+        for mesh in [
+            MeshStats { volume: 3.0, area: 0.0 },
+            MeshStats { volume: 0.0, area: 5.0 },
+            MeshStats { volume: 0.0, area: 0.0 },
+        ] {
+            let f = compute_shape_features(&m, &stats, &mesh, &d, 0);
+            for value in [
+                f.sphericity,
+                f.compactness1,
+                f.compactness2,
+                f.spherical_disproportion,
+                f.surface_volume_ratio,
+            ] {
+                assert_eq!(value, 0.0, "mesh {mesh:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_degenerate_mesh_keeps_exact_ratio_identities() {
+        // the guard must not perturb the regular path
+        let f = features_of(&sphere(16, 5.0));
+        assert!(f.sphericity > 0.0);
+        assert!((f.surface_volume_ratio - f.surface_area / f.mesh_volume).abs() < 1e-12);
+        assert!((f.spherical_disproportion - 1.0 / f.sphericity).abs() < 1e-12);
     }
 }

@@ -1,0 +1,207 @@
+//! Gray-level discretization — the shared front half of every texture
+//! matrix (PyRadiomics `imageoperations.binImage` semantics).
+
+use anyhow::{bail, Result};
+
+use crate::volume::VoxelGrid;
+
+/// Upper bound on the discretized gray-level count: a GLCM is `Ng²` cells
+/// per angle, so a runaway bin width would silently allocate gigabytes.
+pub const MAX_GRAY_LEVELS: usize = 512;
+
+/// How to map ROI intensities onto gray levels `1..=Ng`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Discretization {
+    /// Fixed bin width: `level = floor(x/w) - floor(min/w) + 1`
+    /// (PyRadiomics `binWidth`, default 25). Bin edges are aligned to
+    /// multiples of `w`, so levels are comparable across cases.
+    BinWidth(f64),
+    /// Fixed bin count: `level = min(floor((x-min)/((max-min)/n)) + 1, n)`
+    /// (PyRadiomics `binCount`). A constant ROI maps to the single level 1.
+    BinCount(usize),
+}
+
+/// A discretized ROI: per-voxel gray levels with `0 = outside the mask`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiscretizedRoi {
+    /// Gray level per voxel; `0` outside the ROI, `1..=ng` inside.
+    pub levels: VoxelGrid<u32>,
+    /// Number of gray levels (`Ng`).
+    pub ng: usize,
+    /// ROI voxel count (`Np`).
+    pub n_voxels: usize,
+}
+
+/// Discretize `image` over `mask != 0`.
+///
+/// Returns `Ok(None)` for an empty ROI; errors when the requested binning
+/// would produce more than [`MAX_GRAY_LEVELS`] levels.
+pub fn discretize(
+    image: &VoxelGrid<f32>,
+    mask: &VoxelGrid<u8>,
+    disc: Discretization,
+) -> Result<Option<DiscretizedRoi>> {
+    assert_eq!(image.dims, mask.dims, "image/mask dims mismatch");
+
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    let mut n_voxels = 0usize;
+    for (x, y, z) in mask.iter_roi() {
+        let v = image.get(x, y, z) as f64;
+        // NaN slips through min/max folding, and ±inf would overflow the
+        // level arithmetic below — reject both with a located error
+        if !v.is_finite() {
+            bail!("non-finite intensity {v} at voxel ({x}, {y}, {z}) inside the ROI");
+        }
+        min = min.min(v);
+        max = max.max(v);
+        n_voxels += 1;
+    }
+    if n_voxels == 0 {
+        return Ok(None);
+    }
+
+    let mut levels: VoxelGrid<u32> = VoxelGrid::zeros(mask.dims, mask.spacing);
+    let ng = match disc {
+        Discretization::BinWidth(w) => {
+            if w <= 0.0 || !w.is_finite() {
+                bail!("bin_width must be a positive finite number, got {w}");
+            }
+            let base = (min / w).floor();
+            let ng = ((max / w).floor() - base) as usize + 1;
+            if ng > MAX_GRAY_LEVELS {
+                bail!(
+                    "bin_width {w} over intensity range [{min}, {max}] yields {ng} gray \
+                     levels (max {MAX_GRAY_LEVELS}); raise bin_width or use bin_count"
+                );
+            }
+            for (x, y, z) in mask.iter_roi() {
+                let v = image.get(x, y, z) as f64;
+                let lvl = ((v / w).floor() - base) as u32 + 1;
+                levels.set(x, y, z, lvl.min(ng as u32));
+            }
+            ng
+        }
+        Discretization::BinCount(n) => {
+            if n == 0 {
+                bail!("bin_count must be >= 1");
+            }
+            if n > MAX_GRAY_LEVELS {
+                bail!("bin_count {n} exceeds the maximum of {MAX_GRAY_LEVELS}");
+            }
+            let range = max - min;
+            if range <= 0.0 {
+                // constant ROI: every voxel is level 1
+                for (x, y, z) in mask.iter_roi() {
+                    levels.set(x, y, z, 1);
+                }
+                1
+            } else {
+                let width = range / n as f64;
+                for (x, y, z) in mask.iter_roi() {
+                    let v = image.get(x, y, z) as f64;
+                    let lvl = (((v - min) / width).floor() as u32 + 1).min(n as u32);
+                    levels.set(x, y, z, lvl);
+                }
+                n
+            }
+        }
+    };
+    Ok(Some(DiscretizedRoi { levels, ng, n_voxels }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::Dims;
+
+    fn line_image(vals: &[f32]) -> (VoxelGrid<f32>, VoxelGrid<u8>) {
+        let dims = Dims::new(vals.len(), 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for (x, &v) in vals.iter().enumerate() {
+            img.set(x, 0, 0, v);
+            mask.set(x, 0, 0, 1);
+        }
+        (img, mask)
+    }
+
+    #[test]
+    fn bin_width_levels_are_edge_aligned() {
+        // width 25: values 0..24 → level 1, 25..49 → level 2, 60 → level 3
+        let (img, mask) = line_image(&[0.0, 10.0, 24.9, 25.0, 49.0, 60.0]);
+        let r = discretize(&img, &mask, Discretization::BinWidth(25.0)).unwrap().unwrap();
+        assert_eq!(r.ng, 3);
+        assert_eq!(r.n_voxels, 6);
+        let got: Vec<u32> = (0..6).map(|x| r.levels.get(x, 0, 0)).collect();
+        assert_eq!(got, vec![1, 1, 1, 2, 2, 3]);
+    }
+
+    #[test]
+    fn bin_width_negative_min_keeps_level_one_based() {
+        // min −30 → base floor(−30/25) = −2; levels start at 1
+        let (img, mask) = line_image(&[-30.0, -1.0, 0.0, 30.0]);
+        let r = discretize(&img, &mask, Discretization::BinWidth(25.0)).unwrap().unwrap();
+        assert_eq!(r.ng, 4); // bins [−50,−25), [−25,0), [0,25), [25,50)
+        let got: Vec<u32> = (0..4).map(|x| r.levels.get(x, 0, 0)).collect();
+        assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bin_count_spans_min_to_max() {
+        let (img, mask) = line_image(&[0.0, 1.0, 2.0, 3.0, 4.0]);
+        let r = discretize(&img, &mask, Discretization::BinCount(2)).unwrap().unwrap();
+        assert_eq!(r.ng, 2);
+        let got: Vec<u32> = (0..5).map(|x| r.levels.get(x, 0, 0)).collect();
+        // width 2: [0,2) → 1, [2,4] → 2 (max clamps into the last bin)
+        assert_eq!(got, vec![1, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn constant_roi_is_single_level() {
+        let (img, mask) = line_image(&[7.0, 7.0, 7.0]);
+        let r = discretize(&img, &mask, Discretization::BinCount(16)).unwrap().unwrap();
+        assert_eq!(r.ng, 1);
+        assert!((0..3).all(|x| r.levels.get(x, 0, 0) == 1));
+    }
+
+    #[test]
+    fn empty_roi_is_none() {
+        let dims = Dims::new(3, 1, 1);
+        let img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        assert!(discretize(&img, &mask, Discretization::BinWidth(25.0)).unwrap().is_none());
+    }
+
+    #[test]
+    fn runaway_level_count_is_an_error() {
+        let (img, mask) = line_image(&[0.0, 1e6]);
+        let err = discretize(&img, &mask, Discretization::BinWidth(0.5)).unwrap_err();
+        assert!(err.to_string().contains("gray levels"), "{err}");
+        assert!(discretize(&img, &mask, Discretization::BinWidth(0.0)).is_err());
+        assert!(discretize(&img, &mask, Discretization::BinCount(0)).is_err());
+    }
+
+    #[test]
+    fn non_finite_roi_intensities_are_clear_errors() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let (img, mask) = line_image(&[1.0, bad, 3.0]);
+            let err = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "{err}");
+        }
+        // non-finite voxels *outside* the mask are ignored
+        let (img, mut mask) = line_image(&[1.0, f32::NAN, 3.0]);
+        mask.set(1, 0, 0, 0);
+        assert!(discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().is_some());
+    }
+
+    #[test]
+    fn outside_mask_is_level_zero() {
+        let (img, mut mask) = line_image(&[1.0, 2.0, 3.0]);
+        mask.set(1, 0, 0, 0);
+        let r = discretize(&img, &mask, Discretization::BinCount(2)).unwrap().unwrap();
+        assert_eq!(r.levels.get(1, 0, 0), 0);
+        assert_eq!(r.n_voxels, 2);
+    }
+}

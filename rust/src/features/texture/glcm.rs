@@ -1,0 +1,383 @@
+//! Gray Level Co-occurrence Matrix (3D, 13 angles, symmetric) and its
+//! derived features — PyRadiomics `radiomics.glcm` semantics: one matrix
+//! per (distance, angle), features computed per matrix, then averaged over
+//! all non-empty matrices.
+
+use std::ops::Range;
+
+use super::discretize::DiscretizedRoi;
+use crate::parallel::{fold_chunks, Strategy};
+
+/// The 13 unique 3D directions (half of the 26-neighbourhood; the other
+/// half is covered by matrix symmetry).
+pub const ANGLES_13: [(isize, isize, isize); 13] = [
+    (1, 0, 0),
+    (0, 1, 0),
+    (0, 0, 1),
+    (1, 1, 0),
+    (1, -1, 0),
+    (1, 0, 1),
+    (1, 0, -1),
+    (0, 1, 1),
+    (0, 1, -1),
+    (1, 1, 1),
+    (1, 1, -1),
+    (1, -1, 1),
+    (1, -1, -1),
+];
+
+/// Voxels per work unit for the parallel accumulation. Small enough that
+/// even modest cropped ROIs split across threads (each unit still does
+/// `13 × distances` neighbour probes per voxel).
+const CHUNK: usize = 512;
+
+/// Co-occurrence count matrices: one `ng × ng` block per (distance, angle).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlcmMatrices {
+    /// `counts[m * ng * ng + (i-1) * ng + (j-1)]` for matrix `m`.
+    pub counts: Vec<u64>,
+    pub ng: usize,
+    /// Number of matrices (`13 × distances.len()`).
+    pub n_matrices: usize,
+}
+
+impl GlcmMatrices {
+    /// Counts of one matrix as an `ng × ng` row-major slice.
+    pub fn matrix(&self, m: usize) -> &[u64] {
+        let s = self.ng * self.ng;
+        &self.counts[m * s..(m + 1) * s]
+    }
+}
+
+/// The derived GLCM feature vector (mean over non-empty matrices).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GlcmFeatures {
+    pub autocorrelation: f64,
+    pub contrast: f64,
+    pub correlation: f64,
+    pub joint_energy: f64,
+    pub joint_entropy: f64,
+    pub idm: f64,
+    pub idn: f64,
+    pub cluster_shade: f64,
+    pub cluster_prominence: f64,
+}
+
+impl GlcmFeatures {
+    /// Ordered (name, value) view, mirroring the other feature classes.
+    pub fn named(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("Glcm_Autocorrelation", self.autocorrelation),
+            ("Glcm_Contrast", self.contrast),
+            ("Glcm_Correlation", self.correlation),
+            ("Glcm_JointEnergy", self.joint_energy),
+            ("Glcm_JointEntropy", self.joint_entropy),
+            ("Glcm_Idm", self.idm),
+            ("Glcm_Idn", self.idn),
+            ("Glcm_ClusterShade", self.cluster_shade),
+            ("Glcm_ClusterProminence", self.cluster_prominence),
+        ]
+    }
+}
+
+/// Accumulate the symmetric GLCMs of `roi` for every `(distance, angle)`.
+///
+/// Each ordered voxel pair `(v, v + d·angle)` with both endpoints inside
+/// the ROI increments `(level(v), level(v+δ))` **and** its transpose —
+/// the symmetric matrix, built in one forward pass. Work is decomposed
+/// over flat voxel indices by [`fold_chunks`]; counts are integers, so the
+/// result is bit-for-bit identical for every strategy / thread count.
+pub fn accumulate_glcm(
+    roi: &DiscretizedRoi,
+    distances: &[usize],
+    strategy: Strategy,
+    threads: usize,
+) -> GlcmMatrices {
+    let ng = roi.ng;
+    let dims = roi.levels.dims;
+    let n_matrices = distances.len() * ANGLES_13.len();
+    let msize = ng * ng;
+    let data = roi.levels.data();
+
+    let fold = |counts: &mut Vec<u64>, range: Range<usize>| {
+        for idx in range {
+            let li = data[idx] as usize;
+            if li == 0 {
+                continue;
+            }
+            let x = (idx % dims.x) as isize;
+            let y = ((idx / dims.x) % dims.y) as isize;
+            let z = (idx / (dims.x * dims.y)) as isize;
+            for (di, &d) in distances.iter().enumerate() {
+                let d = d as isize;
+                for (ai, &(dx, dy, dz)) in ANGLES_13.iter().enumerate() {
+                    let (nx, ny, nz) = (x + dx * d, y + dy * d, z + dz * d);
+                    if nx < 0
+                        || ny < 0
+                        || nz < 0
+                        || nx as usize >= dims.x
+                        || ny as usize >= dims.y
+                        || nz as usize >= dims.z
+                    {
+                        continue;
+                    }
+                    let lj = roi.levels.get(nx as usize, ny as usize, nz as usize) as usize;
+                    if lj == 0 {
+                        continue;
+                    }
+                    let m = di * ANGLES_13.len() + ai;
+                    counts[m * msize + (li - 1) * ng + (lj - 1)] += 1;
+                    counts[m * msize + (lj - 1) * ng + (li - 1)] += 1;
+                }
+            }
+        }
+    };
+
+    let counts = fold_chunks(
+        strategy,
+        dims.len(),
+        CHUNK,
+        threads,
+        || vec![0u64; n_matrices * msize],
+        fold,
+        |acc: &mut Vec<u64>, part| {
+            for (a, b) in acc.iter_mut().zip(part) {
+                *a += b;
+            }
+        },
+    );
+    GlcmMatrices { counts, ng, n_matrices }
+}
+
+/// Per-matrix feature ingredients, averaged over non-empty matrices.
+///
+/// Returns `None` when every matrix is empty (e.g. a single-voxel ROI has
+/// no co-occurring pairs).
+pub fn glcm_features(mats: &GlcmMatrices) -> Option<GlcmFeatures> {
+    let ng = mats.ng;
+    let mut sums = [0.0f64; 9];
+    let mut n_valid = 0usize;
+
+    for m in 0..mats.n_matrices {
+        let counts = mats.matrix(m);
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        n_valid += 1;
+        let total = total as f64;
+
+        // marginals (symmetric matrix → px == py, σx == σy)
+        let px: Vec<f64> = (0..ng)
+            .map(|i| (0..ng).map(|j| counts[i * ng + j] as f64 / total).sum())
+            .collect();
+        let mut mu = 0.0;
+        for (i, &pxi) in px.iter().enumerate() {
+            mu += (i + 1) as f64 * pxi;
+        }
+        let mut sigma_sq = 0.0;
+        for (i, &pxi) in px.iter().enumerate() {
+            sigma_sq += ((i + 1) as f64 - mu) * ((i + 1) as f64 - mu) * pxi;
+        }
+
+        let mut autocorr = 0.0;
+        let mut contrast = 0.0;
+        let mut energy = 0.0;
+        let mut entropy = 0.0;
+        let mut idm = 0.0;
+        let mut idn = 0.0;
+        let mut shade = 0.0;
+        let mut prominence = 0.0;
+        for i in 0..ng {
+            let gi = (i + 1) as f64;
+            for j in 0..ng {
+                let c = counts[i * ng + j];
+                if c == 0 {
+                    continue;
+                }
+                let p = c as f64 / total;
+                let gj = (j + 1) as f64;
+                let diff = gi - gj;
+                let dev = gi + gj - 2.0 * mu;
+                autocorr += gi * gj * p;
+                contrast += diff * diff * p;
+                energy += p * p;
+                entropy -= p * p.log2();
+                idm += p / (1.0 + diff * diff);
+                idn += p / (1.0 + diff.abs() / ng as f64);
+                shade += dev * dev * dev * p;
+                prominence += dev * dev * dev * dev * p;
+            }
+        }
+        // PyRadiomics: correlation of a fully homogeneous matrix is 1
+        let correlation = if sigma_sq > 1e-12 { (autocorr - mu * mu) / sigma_sq } else { 1.0 };
+
+        for (s, v) in sums.iter_mut().zip([
+            autocorr, contrast, correlation, energy, entropy, idm, idn, shade, prominence,
+        ]) {
+            *s += v;
+        }
+    }
+
+    if n_valid == 0 {
+        return None;
+    }
+    let n = n_valid as f64;
+    Some(GlcmFeatures {
+        autocorrelation: sums[0] / n,
+        contrast: sums[1] / n,
+        correlation: sums[2] / n,
+        joint_energy: sums[3] / n,
+        joint_entropy: sums[4] / n,
+        idm: sums[5] / n,
+        idn: sums[6] / n,
+        cluster_shade: sums[7] / n,
+        cluster_prominence: sums[8] / n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::discretize::{discretize, Discretization};
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::{Dims, VoxelGrid};
+
+    /// 2×2×2 checkerboard: level = 1 + (x+y+z) mod 2 — the closed-form
+    /// GLCM fixture from the module docs. Angle classification: the 7
+    /// odd-parity directions (3 axis + 4 body diagonals) pair distinct
+    /// levels (p12 = p21 = ½); the 6 even-parity face diagonals pair equal
+    /// levels (p11 = p22 = ½).
+    fn checkerboard() -> DiscretizedRoi {
+        let dims = Dims::new(2, 2, 2);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..2 {
+            for y in 0..2 {
+                for x in 0..2 {
+                    img.set(x, y, z, ((x + y + z) % 2) as f32);
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+        discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap()
+    }
+
+    #[test]
+    fn checkerboard_matrices_match_closed_form() {
+        let roi = checkerboard();
+        assert_eq!(roi.ng, 2);
+        let mats = accumulate_glcm(&roi, &[1], Strategy::EqualSplit, 1);
+        assert_eq!(mats.n_matrices, 13);
+        for (a, &(dx, dy, dz)) in ANGLES_13.iter().enumerate() {
+            let m = mats.matrix(a);
+            let parity = (dx + dy + dz).rem_euclid(2);
+            // pair count per angle: axis 4, face diagonal 2, body diagonal 1
+            let pairs = match dx.abs() + dy.abs() + dz.abs() {
+                1 => 4,
+                2 => 2,
+                _ => 1,
+            } as u64;
+            if parity == 1 {
+                // distinct levels: symmetric off-diagonal counts only
+                assert_eq!(m, &[0, pairs, pairs, 0][..], "angle {a}");
+            } else {
+                // equal levels: one pair each of (1,1) and (2,2), doubled
+                assert_eq!(m, &[pairs, 0, 0, pairs][..], "angle {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn checkerboard_features_match_closed_form() {
+        // 7 odd-parity angles: contrast 1, corr −1, Idm ½, Idn ⅔, CP 0
+        // 6 even-parity angles: contrast 0, corr +1, Idm 1, Idn 1, CP 1
+        let roi = checkerboard();
+        let mats = accumulate_glcm(&roi, &[1], Strategy::EqualSplit, 1);
+        let f = glcm_features(&mats).unwrap();
+        let close = |a: f64, b: f64| (a - b).abs() < 1e-9;
+        assert!(close(f.autocorrelation, 29.0 / 13.0), "{}", f.autocorrelation);
+        assert!(close(f.contrast, 7.0 / 13.0), "{}", f.contrast);
+        assert!(close(f.correlation, -1.0 / 13.0), "{}", f.correlation);
+        assert!(close(f.joint_energy, 0.5), "{}", f.joint_energy);
+        assert!(close(f.joint_entropy, 1.0), "{}", f.joint_entropy);
+        assert!(close(f.idm, 9.5 / 13.0), "{}", f.idm);
+        assert!(close(f.idn, 32.0 / 39.0), "{}", f.idn);
+        assert!(close(f.cluster_shade, 0.0), "{}", f.cluster_shade);
+        assert!(close(f.cluster_prominence, 6.0 / 13.0), "{}", f.cluster_prominence);
+    }
+
+    #[test]
+    fn accumulation_is_deterministic_across_strategies_and_threads() {
+        // pseudo-random levels over a 12×10×8 grid (960 voxels — above the
+        // chunk size, so multi-thread runs really take the parallel path)
+        // with holes in the mask
+        let dims = Dims::new(12, 10, 8);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut rng = crate::testkit::Pcg32::new(11);
+        for z in 0..8 {
+            for y in 0..10 {
+                for x in 0..12 {
+                    img.set(x, y, z, rng.below(6) as f32);
+                    if rng.below(10) > 0 {
+                        mask.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        let want = accumulate_glcm(&roi, &[1, 2], Strategy::EqualSplit, 1);
+        for strategy in Strategy::ALL {
+            for threads in [1usize, 2, 4] {
+                let got = accumulate_glcm(&roi, &[1, 2], strategy, threads);
+                assert_eq!(got, want, "{strategy:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrices_are_symmetric_with_equal_totals_per_angle() {
+        let roi = checkerboard();
+        let mats = accumulate_glcm(&roi, &[1], Strategy::LocalAccumulators, 2);
+        for m in 0..mats.n_matrices {
+            let c = mats.matrix(m);
+            for i in 0..roi.ng {
+                for j in 0..roi.ng {
+                    assert_eq!(c[i * roi.ng + j], c[j * roi.ng + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_voxel_roi_has_no_glcm() {
+        let dims = Dims::new(3, 3, 3);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        img.set(1, 1, 1, 5.0);
+        mask.set(1, 1, 1, 1);
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        let mats = accumulate_glcm(&roi, &[1], Strategy::EqualSplit, 1);
+        assert!(mats.counts.iter().all(|&c| c == 0));
+        assert!(glcm_features(&mats).is_none());
+    }
+
+    #[test]
+    fn distance_two_skips_adjacent_voxels() {
+        // line of 3 voxels, levels 1,2,3: distance 2 pairs only (1,3)
+        let dims = Dims::new(3, 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for x in 0..3 {
+            img.set(x, 0, 0, x as f32);
+            mask.set(x, 0, 0, 1);
+        }
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        let mats = accumulate_glcm(&roi, &[2], Strategy::EqualSplit, 1);
+        let m0 = mats.matrix(0); // angle (1,0,0); row-major (i-1)*ng+(j-1)
+        assert_eq!(m0[2], 1); // (1,3)
+        assert_eq!(m0[6], 1); // (3,1)
+        assert_eq!(m0.iter().sum::<u64>(), 2);
+    }
+}

@@ -1,0 +1,201 @@
+//! The texture feature subsystem: gray-level discretization feeding 3D
+//! GLCM (13 angles, symmetric, distance-configurable) and GLRLM matrices
+//! with their standard derived features.
+//!
+//! Texture is the per-voxel hot loop the related GPU radiomics ports
+//! (cuRadiomics, Nyxus) accelerate next after shape; here the matrices are
+//! accumulated **in parallel** — per-thread partial count matrices over
+//! voxel/line chunks via [`crate::parallel::fold_chunks`], merged at the
+//! end. Counts are integers, so results are bit-for-bit deterministic
+//! regardless of strategy or thread count (tested).
+
+mod discretize;
+mod glcm;
+mod glrlm;
+
+pub use discretize::{discretize, DiscretizedRoi, Discretization, MAX_GRAY_LEVELS};
+pub use glcm::{accumulate_glcm, glcm_features, GlcmFeatures, GlcmMatrices, ANGLES_13};
+pub use glrlm::{accumulate_glrlm, glrlm_features, GlrlmFeatures, GlrlmMatrices};
+
+use anyhow::Result;
+
+use crate::parallel::Strategy;
+use crate::volume::VoxelGrid;
+
+/// Knobs for the texture computation (config/CLI plumb these through).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TextureOptions {
+    /// Gray-level binning of the ROI intensities.
+    pub discretization: Discretization,
+    /// GLCM neighbour distances in voxels (PyRadiomics default `[1]`).
+    pub distances: Vec<usize>,
+    /// Work decomposition for the parallel accumulation.
+    pub strategy: Strategy,
+    /// Worker threads (`0` = all cores, `1` = serial).
+    pub threads: usize,
+    /// Compute the GLCM class.
+    pub glcm: bool,
+    /// Compute the GLRLM class.
+    pub glrlm: bool,
+}
+
+impl Default for TextureOptions {
+    fn default() -> Self {
+        TextureOptions {
+            discretization: Discretization::BinWidth(25.0),
+            distances: vec![1],
+            strategy: Strategy::LocalAccumulators,
+            threads: 0,
+            glcm: true,
+            glrlm: true,
+        }
+    }
+}
+
+/// The combined texture feature vector of one case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TextureFeatures {
+    /// Gray levels after discretization (`Ng`).
+    pub ng: usize,
+    /// GLCM features (`None` when disabled or no co-occurring pairs).
+    pub glcm: Option<GlcmFeatures>,
+    /// GLRLM features (`None` when disabled).
+    pub glrlm: Option<GlrlmFeatures>,
+}
+
+impl TextureFeatures {
+    /// Ordered (name, value) view over every computed texture feature,
+    /// mirroring [`super::ShapeFeatures::named`].
+    pub fn named(&self) -> Vec<(&'static str, f64)> {
+        let mut out = Vec::new();
+        if let Some(g) = &self.glcm {
+            out.extend(g.named());
+        }
+        if let Some(g) = &self.glrlm {
+            out.extend(g.named());
+        }
+        out
+    }
+}
+
+/// Compute the enabled texture classes of `image` over `mask != 0`.
+///
+/// Returns `Ok(None)` for an empty ROI (consistent with
+/// [`super::compute_first_order`]); errors only on invalid discretization
+/// settings. The result is identical for any `opts.threads` value.
+pub fn compute_texture(
+    image: &VoxelGrid<f32>,
+    mask: &VoxelGrid<u8>,
+    opts: &TextureOptions,
+) -> Result<Option<TextureFeatures>> {
+    let Some(roi) = discretize(image, mask, opts.discretization)? else {
+        return Ok(None);
+    };
+    let glcm = if opts.glcm {
+        let distances = if opts.distances.is_empty() { vec![1] } else { opts.distances.clone() };
+        glcm_features(&accumulate_glcm(&roi, &distances, opts.strategy, opts.threads))
+    } else {
+        None
+    };
+    let glrlm = if opts.glrlm {
+        glrlm_features(&accumulate_glrlm(&roi, opts.strategy, opts.threads))
+    } else {
+        None
+    };
+    Ok(Some(TextureFeatures { ng: roi.ng, glcm, glrlm }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::Dims;
+
+    fn patterned(n: usize) -> (VoxelGrid<f32>, VoxelGrid<u8>) {
+        let dims = Dims::new(n, n, n);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    img.set(x, y, z, ((3 * x + 5 * y + 7 * z) % 60) as f32);
+                    let c = n as f64 / 2.0;
+                    let (dx, dy, dz) = (x as f64 - c, y as f64 - c, z as f64 - c);
+                    if dx * dx + dy * dy + dz * dz <= (n as f64 / 2.5).powi(2) {
+                        mask.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        (img, mask)
+    }
+
+    #[test]
+    fn full_texture_vector_has_20_features() {
+        let (img, mask) = patterned(12);
+        let t = compute_texture(&img, &mask, &TextureOptions::default()).unwrap().unwrap();
+        assert_eq!(t.named().len(), 9 + 11);
+        assert!(t.ng >= 2);
+        assert!(t.named().iter().all(|(_, v)| v.is_finite()));
+    }
+
+    #[test]
+    fn classes_can_be_disabled_independently() {
+        let (img, mask) = patterned(8);
+        let opts = TextureOptions { glcm: false, ..Default::default() };
+        let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+        assert!(t.glcm.is_none());
+        assert!(t.glrlm.is_some());
+        let opts = TextureOptions { glrlm: false, ..Default::default() };
+        let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+        assert!(t.glcm.is_some());
+        assert!(t.glrlm.is_none());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_a_single_bit() {
+        let (img, mask) = patterned(14);
+        let serial = TextureOptions { threads: 1, ..Default::default() };
+        let want = compute_texture(&img, &mask, &serial).unwrap().unwrap();
+        for strategy in Strategy::ALL {
+            for threads in [2usize, 3, 8] {
+                let opts = TextureOptions { threads, strategy, ..Default::default() };
+                let got = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+                assert_eq!(got, want, "{strategy:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_roi_is_none() {
+        let dims = Dims::new(4, 4, 4);
+        let img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        assert!(compute_texture(&img, &mask, &TextureOptions::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn constant_roi_is_well_defined() {
+        // one gray level: correlation defined as 1, contrast 0, SRE → long runs
+        let dims = Dims::new(6, 6, 6);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..6 {
+            for y in 0..6 {
+                for x in 0..6 {
+                    img.set(x, y, z, 42.0);
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+        let t = compute_texture(&img, &mask, &TextureOptions::default()).unwrap().unwrap();
+        assert_eq!(t.ng, 1);
+        let g = t.glcm.unwrap();
+        assert_eq!(g.contrast, 0.0);
+        assert_eq!(g.correlation, 1.0);
+        assert_eq!(g.joint_energy, 1.0);
+        let r = t.glrlm.unwrap();
+        assert!(r.long_run_emphasis > 1.0);
+        assert!(r.run_percentage < 1.0);
+    }
+}

@@ -15,8 +15,10 @@
 //! they differ only in work decomposition and synchronisation, exactly like
 //! the paper's kernels.
 
+mod chunked;
 mod strategies;
 mod stats;
 
+pub use chunked::fold_chunks;
 pub use stats::{KernelStats, WorkProfile};
 pub use strategies::{compute_diameters, Strategy};

@@ -9,16 +9,19 @@ use anyhow::Result;
 use super::channel::bounded;
 use crate::config::PipelineConfig;
 use crate::dispatch::{CaseTiming, FeatureExtractor, PathTaken};
-use crate::features::ShapeFeatures;
+use crate::features::{FirstOrderFeatures, ShapeFeatures, TextureFeatures};
 use crate::io::DatasetManifest;
 use crate::metrics::Metrics;
 use crate::volume::VoxelGrid;
 
-/// Fully-processed case.
+/// Fully-processed case. `first_order`/`texture` are populated when the
+/// corresponding feature classes are enabled in the config.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
     pub case_id: String,
     pub features: ShapeFeatures,
+    pub first_order: Option<FirstOrderFeatures>,
+    pub texture: Option<TextureFeatures>,
     pub timing: CaseTiming,
     pub path: PathTaken,
 }
@@ -121,6 +124,12 @@ pub fn run_pipeline(
                             metrics.timer("stage.mesh").record(ex.timing.marching);
                             metrics.timer("stage.diameters").record(ex.timing.diameters);
                             metrics.timer("stage.transfer").record(ex.timing.transfer);
+                            // timing.texture covers the whole intensity
+                            // phase; only attribute it to the texture stage
+                            // when texture matrices actually ran
+                            if ex.texture.is_some() {
+                                metrics.timer("stage.texture").record(ex.timing.texture);
+                            }
                             metrics
                                 .counter(match ex.path {
                                     PathTaken::Accelerated => "path.accelerated",
@@ -130,6 +139,8 @@ pub fn run_pipeline(
                             Ok(CaseResult {
                                 case_id: item.case_id,
                                 features: ex.features,
+                                first_order: ex.first_order,
+                                texture: ex.texture,
                                 timing: ex.timing,
                                 path: ex.path,
                             })
@@ -273,6 +284,59 @@ mod tests {
         let ex = FeatureExtractor::new(&cfg).unwrap();
         let report = run_pipeline(&m, &cfg, &ex).unwrap();
         assert_eq!(report.results.len(), 20);
+    }
+
+    #[test]
+    fn texture_classes_flow_through_the_pipeline_deterministically() {
+        let m = tiny_dataset("texture");
+        let classes = crate::config::FeatureClasses::parse("all").unwrap();
+        let cfg1 = PipelineConfig { feature_classes: classes, ..cpu_cfg() };
+        let ex1 = FeatureExtractor::new(&cfg1).unwrap();
+        let r1 = run_pipeline(&m, &cfg1, &ex1).unwrap();
+        assert!(r1.failures.is_empty(), "{:?}", r1.failures);
+        assert!(r1.results.iter().all(|r| r.texture.is_some() && r.first_order.is_some()));
+        assert!(r1.metrics_text.contains("stage.texture"));
+
+        // multi-worker, multi-thread accumulation: identical values
+        let cfg4 = PipelineConfig {
+            feature_workers: 3,
+            cpu_threads: 4,
+            feature_classes: classes,
+            ..cpu_cfg()
+        };
+        let ex4 = FeatureExtractor::new(&cfg4).unwrap();
+        let r4 = run_pipeline(&m, &cfg4, &ex4).unwrap();
+        for (a, b) in r1.results.iter().zip(&r4.results) {
+            assert_eq!(a.case_id, b.case_id);
+            assert_eq!(a.texture, b.texture, "{}", a.case_id);
+            assert_eq!(a.first_order, b.first_order, "{}", a.case_id);
+        }
+    }
+
+    #[test]
+    fn default_config_reports_no_texture_metrics() {
+        let m = tiny_dataset("notexture");
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.results.iter().all(|r| r.texture.is_none()));
+        assert!(!report.metrics_text.contains("stage.texture"));
+    }
+
+    #[test]
+    fn firstorder_only_runs_report_no_texture_metric() {
+        let m = tiny_dataset("fo_only");
+        let cfg = PipelineConfig {
+            feature_classes: crate::config::FeatureClasses::parse("firstorder").unwrap(),
+            ..cpu_cfg()
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        assert!(report.results.iter().all(|r| r.first_order.is_some()));
+        assert!(report.results.iter().all(|r| r.texture.is_none()));
+        // first-order time must not be misattributed to a texture stage
+        assert!(!report.metrics_text.contains("stage.texture"));
     }
 
     #[test]

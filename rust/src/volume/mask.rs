@@ -99,6 +99,35 @@ pub fn crop_to_roi(mask: &VoxelGrid<u8>) -> (VoxelGrid<u8>, (usize, usize, usize
     (out, (ox, oy, oz))
 }
 
+/// Extract the box `offset .. offset + dims` from `grid`, zero-padding
+/// where the box extends past the grid (the same convention as
+/// [`VoxelGrid::get_padded`]).
+///
+/// Companion to [`crop_to_roi`]: cropping an *image* with the mask's crop
+/// offset keeps the two volumes voxel-aligned, so intensity features see
+/// exactly the original ROI samples.
+pub fn crop_box<T: Copy + Default>(
+    grid: &VoxelGrid<T>,
+    offset: (usize, usize, usize),
+    dims: Dims,
+) -> VoxelGrid<T> {
+    let (ox, oy, oz) = offset;
+    let mut out = VoxelGrid::zeros(dims, grid.spacing);
+    for z in 0..dims.z {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                let v = grid.get_padded(
+                    (ox + x) as isize,
+                    (oy + y) as isize,
+                    (oz + z) as isize,
+                );
+                out.set(x, y, z, v);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +194,36 @@ mod tests {
         let (cropped, off) = crop_to_roi(&m);
         assert_eq!(off, (0, 0, 0));
         assert_eq!(cropped.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn crop_box_aligns_image_with_cropped_mask() {
+        let mut mask = VoxelGrid::zeros(Dims::new(8, 8, 8), Vec3::splat(1.0));
+        let mut img: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(8, 8, 8), Vec3::splat(1.0));
+        for z in 0..8 {
+            for y in 0..8 {
+                for x in 0..8 {
+                    img.set(x, y, z, (x + 10 * y + 100 * z) as f32);
+                }
+            }
+        }
+        mask.set(3, 4, 5, 1);
+        mask.set(4, 4, 5, 1);
+        let (cropped, off) = crop_to_roi(&mask);
+        let cimg = crop_box(&img, off, cropped.dims);
+        assert_eq!(cimg.dims, cropped.dims);
+        for (x, y, z) in cropped.iter_roi() {
+            assert_eq!(cimg.get(x, y, z), img.get(x + off.0, y + off.1, z + off.2));
+        }
+    }
+
+    #[test]
+    fn crop_box_zero_pads_out_of_range() {
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(2, 2, 2), Vec3::splat(1.0));
+        g.set(1, 1, 1, 9);
+        let c = crop_box(&g, (1, 1, 1), Dims::new(3, 3, 3));
+        assert_eq!(c.get(0, 0, 0), 9);
+        assert_eq!(c.get(2, 2, 2), 0); // beyond the grid → zero padding
     }
 
     #[test]

@@ -9,4 +9,4 @@ mod grid;
 mod mask;
 
 pub use grid::{Dims, VoxelGrid};
-pub use mask::{crop_to_roi, MaskStats};
+pub use mask::{crop_box, crop_to_roi, MaskStats};
