@@ -310,6 +310,165 @@ fn batched_path_hits_the_golden_diameters() {
     }
 }
 
+// ------------------------------------------ intensity-class oracle locks
+
+/// Deterministic integer-valued image `(3x + 5y + 7z) mod 97` — exact in
+/// f32, so the Rust and numpy oracles see bit-identical inputs.
+fn deterministic_image(dims: Dims) -> VoxelGrid<f32> {
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..dims.z {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                img.set(x, y, z, ((3 * x + 5 * y + 7 * z) % 97) as f32);
+            }
+        }
+    }
+    img
+}
+
+#[test]
+fn first_order_conformance_oracle_lock() {
+    // 24³ sphere r=8 (the shape-locked mask: 2109 voxels) with the
+    // deterministic image; goldens from
+    // `python/compile/kernels/ref.py::firstorder_ref` on identical values.
+    let mask = sphere_mask(24, 8.0, Vec3::splat(1.0));
+    let img = deterministic_image(mask.dims);
+    let f = radpipe::features::compute_first_order(&img, &mask, 25.0).unwrap();
+
+    // exact values (integer arithmetic below 2^53 — no rounding)
+    assert_eq!(f.minimum, 0.0);
+    assert_eq!(f.maximum, 96.0);
+    assert_eq!(f.range, 96.0);
+    assert_eq!(f.energy, 6_461_520.0);
+    assert_eq!(f.total_energy, 6_461_520.0); // unit voxel volume
+    assert_eq!(f.percentile10, 10.0);
+    assert_eq!(f.percentile90, 87.0);
+    assert_eq!(f.median, 47.0);
+    assert_eq!(f.interquartile_range, 47.0);
+
+    // oracle locks (float summation order may differ at the last ulp)
+    assert!(rel_close(f.mean, 47.90706495969654, 1e-9), "{}", f.mean);
+    assert!(rel_close(f.variance, 768.6969107311999, 1e-9), "{}", f.variance);
+    assert!(rel_close(f.entropy, 1.9959525045510498, 1e-9), "{}", f.entropy);
+    assert!(rel_close(f.uniformity, 0.2514138755061118, 1e-9), "{}", f.uniformity);
+    assert!(
+        rel_close(f.mean_absolute_deviation, 23.94760111612698, 1e-9),
+        "{}",
+        f.mean_absolute_deviation
+    );
+    assert!(
+        rel_close(f.robust_mean_absolute_deviation, 19.31748657248087, 1e-9),
+        "{}",
+        f.robust_mean_absolute_deviation
+    );
+    assert!(
+        rel_close(f.root_mean_squared, 55.35145692557499, 1e-9),
+        "{}",
+        f.root_mean_squared
+    );
+    assert!(rel_close(f.skewness, 0.029408845567998654, 1e-9), "{}", f.skewness);
+    assert!(rel_close(f.kurtosis, 1.8226732170613502, 1e-9), "{}", f.kurtosis);
+}
+
+#[test]
+fn texture_conformance_oracle_lock() {
+    // 4³ pattern `level = ((x + 2y + 3z) mod 5) + 1` (image values 0..4,
+    // bin width 1 → levels are the values + 1); goldens from
+    // `ref.py::glcm_features_ref` / `glrlm_features_ref`.
+    use radpipe::features::texture::{compute_texture, Discretization, TextureOptions};
+    use radpipe::parallel::Strategy;
+
+    let dims = Dims::new(4, 4, 4);
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..4 {
+        for y in 0..4 {
+            for x in 0..4 {
+                img.set(x, y, z, ((x + 2 * y + 3 * z) % 5) as f32);
+                mask.set(x, y, z, 1);
+            }
+        }
+    }
+
+    let compute = |threads: usize, strategy: Strategy| {
+        let opts = TextureOptions {
+            discretization: Discretization::BinWidth(1.0),
+            distances: vec![1],
+            strategy,
+            threads,
+            glcm: true,
+            glrlm: true,
+        };
+        compute_texture(&img, &mask, &opts).unwrap().unwrap()
+    };
+    let t = compute(1, Strategy::EqualSplit);
+    assert_eq!(t.ng, 5);
+
+    let g = t.glcm.as_ref().unwrap();
+    assert!(rel_close(g.autocorrelation, 8.798967236467236, 1e-9));
+    assert!(rel_close(g.contrast, 4.098468660968662, 1e-9));
+    assert!(rel_close(g.correlation, -0.031005532369152693, 1e-9));
+    assert!(rel_close(g.joint_energy, 0.11610552192149413, 1e-9));
+    assert!(rel_close(g.joint_entropy, 3.1639537500081025, 1e-9));
+    assert!(rel_close(g.idm, 0.4071759259259259, 1e-9));
+    assert!(rel_close(g.idn, 0.7748432765793876, 1e-9));
+    assert!(rel_close(g.cluster_shade, 0.07290863483997902, 1e-9));
+    assert!(rel_close(g.cluster_prominence, 34.33419886329936, 1e-9));
+
+    let r = t.glrlm.as_ref().unwrap();
+    assert!(rel_close(r.short_run_emphasis, 0.9219301719301719, 1e-9));
+    assert!(rel_close(r.long_run_emphasis, 1.6124146124146124, 1e-9));
+    assert!(rel_close(r.gray_level_non_uniformity, 11.847137659637658, 1e-9));
+    assert!(rel_close(r.run_length_non_uniformity, 55.77517077517078, 1e-9));
+    assert!(rel_close(r.run_percentage, 0.9242788461538461, 1e-9));
+    assert!(rel_close(r.low_gray_level_run_emphasis, 0.2942865199505824, 1e-9));
+    assert!(rel_close(r.high_gray_level_run_emphasis, 10.809929091179091, 1e-9));
+    assert!(rel_close(r.short_run_low_gray_level_emphasis, 0.2698205872424623, 1e-9));
+    assert!(rel_close(r.short_run_high_gray_level_emphasis, 9.971714846714848, 1e-9));
+    assert!(rel_close(r.long_run_low_gray_level_emphasis, 0.48490786932193175, 1e-9));
+    assert!(rel_close(r.long_run_high_gray_level_emphasis, 17.256394787644787, 1e-9));
+
+    // determinism: every strategy / thread count reproduces the goldens
+    // bit-for-bit (the 4³ fixture is below the parallel chunk size, so this
+    // exercises the serial shortcut path consistency)
+    for strategy in Strategy::ALL {
+        for threads in [1usize, 2, 4, 8] {
+            assert_eq!(compute(threads, strategy), t, "{strategy:?} x{threads}");
+        }
+    }
+
+    // ... and a 14³ volume (2744 voxels, above both chunk sizes) exercises
+    // the genuinely parallel accumulation paths
+    let dims = Dims::new(14, 14, 14);
+    let mut big_img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut big_mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..14 {
+        for y in 0..14 {
+            for x in 0..14 {
+                big_img.set(x, y, z, ((x + 2 * y + 3 * z) % 5) as f32);
+                big_mask.set(x, y, z, 1);
+            }
+        }
+    }
+    let compute_big = |threads: usize, strategy: Strategy| {
+        let opts = TextureOptions {
+            discretization: Discretization::BinWidth(1.0),
+            distances: vec![1, 2],
+            strategy,
+            threads,
+            glcm: true,
+            glrlm: true,
+        };
+        compute_texture(&big_img, &big_mask, &opts).unwrap().unwrap()
+    };
+    let want = compute_big(1, Strategy::EqualSplit);
+    for strategy in Strategy::ALL {
+        for threads in [2usize, 4, 8] {
+            assert_eq!(compute_big(threads, strategy), want, "{strategy:?} x{threads}");
+        }
+    }
+}
+
 // ------------------------------------- engine-backed batching (artifacts)
 
 #[test]
