@@ -285,6 +285,105 @@ def glrlm_ref(levels: np.ndarray) -> np.ndarray:
     return mats
 
 
+# --------------------------------------------------------------------------
+# Derived-image (imgproc) oracles, mirroring rust/src/imgproc/: separable
+# Gaussian / LoG filtering and the undecimated Haar decomposition. Volumes
+# are float32[nx, ny, nz] indexed [x, y, z] (axis 0 == the Rust X axis);
+# every pass accumulates in float64 and stores float32, exactly like the
+# Rust passes, so the golden constants locked in rust/tests/conformance.rs
+# agree to float32 precision.
+# --------------------------------------------------------------------------
+
+WAVELET_SUB_BANDS = ["LLL", "HLL", "LHL", "HHL", "LLH", "HLH", "LHH", "HHH"]
+
+
+def gaussian_kernel_ref(sigma_vox: float) -> np.ndarray:
+    """Sampled normalised Gaussian, radius ceil(4·sigma) (min 1)."""
+    r = max(int(np.ceil(4.0 * sigma_vox)), 1)
+    i = np.arange(-r, r + 1, dtype=np.float64)
+    k = np.exp(-(i**2) / (2.0 * sigma_vox**2))
+    return k / k.sum()
+
+
+def gaussian_d2_kernel_ref(sigma_vox: float) -> np.ndarray:
+    """Sampled second-derivative-of-Gaussian kernel, corrected to zero sum
+    and second moment exactly 2 (see imgproc::filters)."""
+    r = max(int(np.ceil(4.0 * sigma_vox)), 1)
+    i = np.arange(-r, r + 1, dtype=np.float64)
+    s2 = sigma_vox * sigma_vox
+    k = (i**2 - s2) / (s2 * s2) * np.exp(-(i**2) / (2.0 * s2))
+    k -= k.mean()
+    return k * (2.0 / (k * i**2).sum())
+
+
+def _convolve_axis_clamped(vol: np.ndarray, kernel: np.ndarray, axis: int) -> np.ndarray:
+    """1D convolution along ``axis`` with edge-clamped borders; float64
+    accumulation in kernel-tap order, float32 result."""
+    n = vol.shape[axis]
+    r = len(kernel) // 2
+    acc = np.zeros(vol.shape, dtype=np.float64)
+    for j, k in enumerate(kernel):
+        idx = np.clip(np.arange(n) + j - r, 0, n - 1)
+        acc += k * np.take(vol, idx, axis=axis).astype(np.float64)
+    return acc.astype(np.float32)
+
+
+def gaussian_smooth_ref(vol: np.ndarray, spacing, sigma_mm: float) -> np.ndarray:
+    """Separable Gaussian smoothing with a mm-denominated sigma."""
+    out = np.asarray(vol, dtype=np.float32)
+    for axis in range(3):
+        out = _convolve_axis_clamped(
+            out, gaussian_kernel_ref(sigma_mm / float(spacing[axis])), axis
+        )
+    return out
+
+
+def log_filter_ref(vol: np.ndarray, spacing, sigma_mm: float) -> np.ndarray:
+    """Scale-normalised Laplacian of Gaussian: sigma² · Σ_a ∂²/∂a² (G ∗ vol)
+    in physical (mm) units, mirroring ``imgproc::log_filter``."""
+    sig = [sigma_mm / float(s) for s in spacing]
+    terms = []
+    for d2_axis in range(3):
+        t = np.asarray(vol, dtype=np.float32)
+        for axis in range(3):
+            if axis == d2_axis:
+                k = gaussian_d2_kernel_ref(sig[axis]) / float(spacing[axis]) ** 2
+            else:
+                k = gaussian_kernel_ref(sig[axis])
+            t = _convolve_axis_clamped(t, k, axis)
+        terms.append(t)
+    acc = (
+        terms[0].astype(np.float64)
+        + terms[1].astype(np.float64)
+        + terms[2].astype(np.float64)
+    ) * (sigma_mm * sigma_mm)
+    return acc.astype(np.float32)
+
+
+def _haar_pass_ref(vol: np.ndarray, axis: int, step: int, high: bool) -> np.ndarray:
+    n = vol.shape[axis]
+    idx = np.minimum(np.arange(n) + step, n - 1)
+    a = vol.astype(np.float64)
+    b = np.take(vol, idx, axis=axis).astype(np.float64)
+    out = (a - b) / 2.0 if high else (a + b) / 2.0
+    return out.astype(np.float32)
+
+
+def wavelet_ref(vol: np.ndarray, level: int = 1) -> dict:
+    """The 8 undecimated Haar sub-bands of one decomposition level
+    (dilation step 2^(level-1)), keyed by ``WAVELET_SUB_BANDS`` — the
+    oracle for ``imgproc::haar_decompose``."""
+    step = 1 << (level - 1)
+    bands = [np.asarray(vol, dtype=np.float32)]
+    for axis in range(3):
+        nxt = []
+        for high in (False, True):
+            for g in bands:
+                nxt.append(_haar_pass_ref(g, axis, step, high))
+        bands = nxt
+    return dict(zip(WAVELET_SUB_BANDS, bands))
+
+
 def glrlm_features_ref(mats: np.ndarray, n_voxels: int) -> np.ndarray:
     """The 11 derived GLRLM features, averaged over non-empty directions:
     [SRE, LRE, GLN, RLN, RP, LGLRE, HGLRE, SRLGLE, SRHGLE, LRLGLE,

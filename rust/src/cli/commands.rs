@@ -24,6 +24,8 @@ USAGE:
                     [--engine-count N] [--batch-size N] [--batch-linger-ms MS]
                     [--features shape,firstorder,glcm,glrlm|texture|all]
                     [--bin-width F] [--bin-count N] [--glcm-distances 1,2]
+                    [--image-types original,log,wavelet|all] [--log-sigmas 1.0,3.0]
+                    [--resampled-spacing MM] [--wavelet-levels N]
   radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
   radpipe fig1      --data DIR [--threads N]
   radpipe fig2      --data DIR
@@ -115,18 +117,40 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
         cfg.glcm_distances =
             crate::config::parse_distances(list).context("--glcm-distances")?;
     }
+    if let Some(list) = args.opt("image-types") {
+        cfg.image_types =
+            crate::imgproc::ImageTypes::parse(list).context("--image-types")?;
+    }
+    if let Some(list) = args.opt("log-sigmas") {
+        cfg.log_sigmas = crate::config::parse_sigmas(list).context("--log-sigmas")?;
+    }
+    if let Some(mm) = args.opt_parse::<f64>("resampled-spacing")? {
+        anyhow::ensure!(
+            mm >= 0.0 && mm.is_finite(),
+            "--resampled-spacing must be >= 0 mm (0 disables resampling)"
+        );
+        cfg.resampled_spacing = mm;
+    }
+    if let Some(n) = args.opt_parse::<usize>("wavelet-levels")? {
+        let max = crate::config::MAX_WAVELET_LEVELS;
+        anyhow::ensure!(
+            (1..=max).contains(&n),
+            "--wavelet-levels must be in 1..={max}, got {n}"
+        );
+        cfg.wavelet_levels = n;
+    }
     Ok(cfg)
 }
 
-/// Every computed (name, value) pair of one case, in stable class order:
-/// shape, then first-order, then texture.
-fn case_named_features(r: &crate::pipeline::CaseResult) -> Vec<(&'static str, f64)> {
-    let mut out = r.features.named();
-    if let Some(fo) = &r.first_order {
-        out.extend(fo.named());
-    }
-    if let Some(tex) = &r.texture {
-        out.extend(tex.named());
+/// Every computed (name, value) pair of one case, in stable order: shape,
+/// then every derived image (original keeps the historical plain names;
+/// LoG / wavelet images carry filter-qualified names, e.g.
+/// `log-sigma-2-0-mm_firstorder_Mean`).
+fn case_named_features(r: &crate::pipeline::CaseResult) -> Vec<(String, f64)> {
+    let mut out: Vec<(String, f64)> =
+        r.features.named().into_iter().map(|(n, v)| (n.to_string(), v)).collect();
+    for d in &r.derived {
+        out.extend(d.named());
     }
     out
 }
@@ -143,8 +167,10 @@ fn extract(args: &Args) -> Result<()> {
     let report = run_pipeline(&manifest, &cfg, &extractor)?;
 
     let texture_on = cfg.feature_classes.texture();
-    let mut headers =
-        vec!["case", "verts", "MeshVolume", "SurfaceArea", "Max3DDiam", "path"];
+    let mut headers = vec![
+        "case", "verts", "MeshVolume", "SurfaceArea", "Max3DDiam", "path",
+        "preprocess[ms]",
+    ];
     if texture_on {
         headers.push("texture[ms]");
     }
@@ -158,6 +184,7 @@ fn extract(args: &Args) -> Result<()> {
             format!("{:.1}", r.features.surface_area),
             format!("{:.2}", r.features.maximum_3d_diameter),
             format!("{:?}", r.path),
+            format!("{:.1}", r.timing.preprocess.as_secs_f64() * 1e3),
         ];
         if texture_on {
             row.push(format!("{:.1}", r.timing.texture.as_secs_f64() * 1e3));
@@ -172,15 +199,23 @@ fn extract(args: &Args) -> Result<()> {
     eprintln!("--- metrics ---\n{}", report.metrics_text);
     eprintln!("wall: {:.2}s", report.wall.as_secs_f64());
 
+    // the feature list per case feeds both report writers; with derived
+    // images it is ~11× larger than before, so compute it exactly once
+    let per_case: Vec<Vec<(String, f64)>> = if json_out.is_some() || csv_out.is_some() {
+        report.results.iter().map(case_named_features).collect()
+    } else {
+        Vec::new()
+    };
+
     if let Some(path) = json_out {
         let mut doc = JsonValue::obj();
         let mut cases = Vec::new();
-        for r in &report.results {
+        for (r, features) in report.results.iter().zip(&per_case) {
             let mut c = JsonValue::obj();
             c.set("case", r.case_id.as_str());
             c.set("path", format!("{:?}", r.path));
-            for (name, value) in case_named_features(r) {
-                c.set(name, value);
+            for (name, value) in features {
+                c.set(name, *value);
             }
             cases.push(c);
         }
@@ -194,22 +229,23 @@ fn extract(args: &Args) -> Result<()> {
     if let Some(path) = csv_out {
         // header: union of feature names in first-seen order (cases with an
         // empty ROI miss the intensity classes; their cells read NaN)
-        let mut names: Vec<&'static str> = Vec::new();
-        for r in &report.results {
-            for (name, _) in case_named_features(r) {
-                if !names.contains(&name) {
-                    names.push(name);
+        let mut names: Vec<String> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for features in &per_case {
+            for (name, _) in features {
+                if seen.insert(name.clone()) {
+                    names.push(name.clone());
                 }
             }
         }
         let mut headers = vec!["case".to_string(), "path".to_string()];
-        headers.extend(names.iter().map(|n| n.to_string()));
+        headers.extend(names.iter().cloned());
         let mut csv = Table::new(headers);
-        for r in &report.results {
+        for (r, features) in report.results.iter().zip(&per_case) {
             let have: std::collections::HashMap<&str, f64> =
-                case_named_features(r).into_iter().collect();
+                features.iter().map(|(n, v)| (n.as_str(), *v)).collect();
             let mut row = vec![r.case_id.clone(), format!("{:?}", r.path)];
-            row.extend(names.iter().map(|n| match have.get(n) {
+            row.extend(names.iter().map(|n| match have.get(n.as_str()) {
                 Some(v) => format!("{v}"),
                 None => "NaN".to_string(),
             }));
@@ -389,6 +425,57 @@ mod tests {
             "extract", "--data", dir.to_str().unwrap(), "--glcm-distances", "0",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn extract_emits_filter_qualified_derived_features() {
+        let dir = std::env::temp_dir().join("radpipe_cli_imgproc_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        let json = dir.join("out.json");
+        let csv = dir.join("out.csv");
+        dispatch(argv(&[
+            "extract",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "cpu",
+            "--features",
+            "all",
+            "--image-types",
+            "all",
+            "--log-sigmas",
+            "1.0,2.0",
+            "--bin-count",
+            "8",
+            "--json",
+            json.to_str().unwrap(),
+            "--csv",
+            csv.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let json_text = std::fs::read_to_string(&json).unwrap();
+        // 11 derived images: original (plain names) + 2 LoG + 8 wavelet
+        assert!(json_text.contains("\"Entropy\""), "original keeps plain names");
+        assert!(json_text.contains("log-sigma-1-0-mm_firstorder_Mean"));
+        assert!(json_text.contains("log-sigma-2-0-mm_glcm_Contrast"));
+        assert!(json_text.contains("wavelet-LLL_firstorder_Mean"));
+        assert!(json_text.contains("wavelet-HHH_glrlm_RunPercentage"));
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.contains("log-sigma-2-0-mm_firstorder_Entropy"));
+        assert!(csv_text.contains("wavelet-LHH_glcm_Idn"));
+        // bad knobs are clear errors
+        for bad in [
+            vec!["extract", "--data", dir.to_str().unwrap(), "--image-types", "xray"],
+            vec!["extract", "--data", dir.to_str().unwrap(), "--log-sigmas", "0"],
+            vec!["extract", "--data", dir.to_str().unwrap(), "--wavelet-levels", "0"],
+            vec!["extract", "--data", dir.to_str().unwrap(), "--resampled-spacing", "-1"],
+        ] {
+            assert!(dispatch(argv(&bad)).is_err(), "{bad:?}");
+        }
     }
 
     #[test]

@@ -130,6 +130,38 @@ pub fn parse_distances(s: &str) -> Result<Vec<usize>> {
     Ok(out)
 }
 
+/// Parse a comma-separated sigma list in millimetres, e.g. `"1.0, 3.0"`
+/// (LoG scales). Shared by the TOML key and the `--log-sigmas` CLI flag.
+pub fn parse_sigmas(s: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let sigma: f64 = tok
+            .parse()
+            .with_context(|| format!("bad LoG sigma '{tok}' (positive mm values)"))?;
+        if !(sigma > 0.0 && sigma.is_finite()) {
+            bail!("LoG sigmas must be positive finite mm values, got {sigma}");
+        }
+        // duplicates would produce two derived images with the same
+        // filter-qualified name, silently colliding in JSON/CSV output
+        if out.contains(&sigma) {
+            bail!("duplicate LoG sigma {sigma}");
+        }
+        out.push(sigma);
+    }
+    if out.is_empty() {
+        bail!("log_sigmas must name at least one sigma, e.g. \"2.0\"");
+    }
+    Ok(out)
+}
+
+/// Ceiling on `wavelet_levels`: each level dilates the Haar step 2×, so
+/// anything deeper than this exceeds any realistic ROI extent.
+pub const MAX_WAVELET_LEVELS: usize = 8;
+
 /// Typed pipeline configuration (defaults reflect the single-core testbed).
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -167,6 +199,17 @@ pub struct PipelineConfig {
     pub bin_count: usize,
     /// GLCM neighbour distances in voxels.
     pub glcm_distances: Vec<usize>,
+    /// Derived-image families the intensity classes run on (original /
+    /// LoG / wavelet; shape always uses the mask geometry).
+    pub image_types: crate::imgproc::ImageTypes,
+    /// LoG sigmas in millimetres — one derived image per sigma when the
+    /// `log` image type is enabled.
+    pub log_sigmas: Vec<f64>,
+    /// Isotropic target spacing in millimetres for resampling image and
+    /// mask before extraction; `0` disables resampling (native grids).
+    pub resampled_spacing: f64,
+    /// Haar wavelet decomposition levels (each level emits 8 sub-bands).
+    pub wavelet_levels: usize,
 }
 
 impl Default for PipelineConfig {
@@ -187,6 +230,10 @@ impl Default for PipelineConfig {
             bin_width: 25.0,
             bin_count: 0,
             glcm_distances: vec![1],
+            image_types: crate::imgproc::ImageTypes::default(),
+            log_sigmas: vec![2.0],
+            resampled_spacing: 0.0,
+            wavelet_levels: 1,
         }
     }
 }
@@ -238,6 +285,26 @@ impl PipelineConfig {
                     }
                 }
                 "glcm_distances" => cfg.glcm_distances = parse_distances(value.as_str()?)?,
+                "image_types" => {
+                    cfg.image_types = crate::imgproc::ImageTypes::parse(value.as_str()?)?
+                }
+                "log_sigmas" => cfg.log_sigmas = parse_sigmas(value.as_str()?)?,
+                "resampled_spacing" => {
+                    cfg.resampled_spacing = value.as_f64()?;
+                    if !(cfg.resampled_spacing >= 0.0 && cfg.resampled_spacing.is_finite())
+                    {
+                        bail!("resampled_spacing must be >= 0 mm (0 disables resampling)");
+                    }
+                }
+                "wavelet_levels" => {
+                    cfg.wavelet_levels = value.as_usize()?;
+                    if cfg.wavelet_levels == 0 || cfg.wavelet_levels > MAX_WAVELET_LEVELS {
+                        bail!(
+                            "wavelet_levels must be in 1..={MAX_WAVELET_LEVELS}, got {}",
+                            cfg.wavelet_levels
+                        );
+                    }
+                }
                 other => bail!("unknown [pipeline] key '{other}'"),
             }
         }
@@ -366,6 +433,55 @@ glcm_distances = "1, 2,3"
         assert_eq!(c.bin_width, 10.5);
         assert_eq!(c.bin_count, 16);
         assert_eq!(c.glcm_distances, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn imgproc_defaults_are_original_only() {
+        let c = PipelineConfig::default();
+        assert!(c.image_types.original && !c.image_types.log && !c.image_types.wavelet);
+        assert_eq!(c.log_sigmas, vec![2.0]);
+        assert_eq!(c.resampled_spacing, 0.0, "resampling is opt-in");
+        assert_eq!(c.wavelet_levels, 1);
+    }
+
+    #[test]
+    fn imgproc_knobs_parse_from_toml() {
+        let text = r#"
+[pipeline]
+image_types = "original, log, wavelet"
+log_sigmas = "1.0, 2.5"
+resampled_spacing = 1.5
+wavelet_levels = 2
+"#;
+        let c = PipelineConfig::from_toml(text).unwrap();
+        assert!(c.image_types.original && c.image_types.log && c.image_types.wavelet);
+        assert_eq!(c.log_sigmas, vec![1.0, 2.5]);
+        assert_eq!(c.resampled_spacing, 1.5);
+        assert_eq!(c.wavelet_levels, 2);
+    }
+
+    #[test]
+    fn bad_imgproc_knobs_rejected() {
+        assert!(PipelineConfig::from_toml("[pipeline]\nimage_types = \"xray\"\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nlog_sigmas = \"0\"\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nlog_sigmas = \"\"\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nlog_sigmas = \"-2.0\"\n").is_err());
+        assert!(
+            PipelineConfig::from_toml("[pipeline]\nresampled_spacing = -1.0\n").is_err()
+        );
+        assert!(PipelineConfig::from_toml("[pipeline]\nwavelet_levels = 0\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nwavelet_levels = 9\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nwavelet_levels = 8\n").is_ok());
+    }
+
+    #[test]
+    fn sigma_list_parses() {
+        assert_eq!(parse_sigmas("1.0, 3").unwrap(), vec![1.0, 3.0]);
+        assert!(parse_sigmas("nope").is_err());
+        assert!(parse_sigmas("inf").is_err());
+        // "2" and "2.0" are the same sigma — one derived-image name
+        let err = parse_sigmas("2, 2.0").unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
     }
 
     #[test]

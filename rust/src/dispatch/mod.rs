@@ -9,6 +9,7 @@
 //! feature map regardless of the backend chosen — "no changes to existing
 //! code" (§2), and tested to produce equal values on both paths.
 
+use std::borrow::Cow;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -21,6 +22,8 @@ use crate::features::{
     brute_force_diameters, compute_first_order_with, compute_shape_features,
     compute_texture, FirstOrderFeatures, ShapeFeatures, TextureFeatures, TextureOptions,
 };
+use crate::geometry::Vec3;
+use crate::imgproc::{derive_images, ImgprocOptions};
 use crate::mc::{mesh_roi, planar_diameters_grouped};
 use crate::parallel::{compute_diameters, Strategy};
 use crate::runtime::{
@@ -33,6 +36,10 @@ use crate::volume::{crop_box, crop_to_roi, MaskStats, VoxelGrid};
 /// intensity features are reproducible run-to-run.
 const SYNTH_IMAGE_SEED: u64 = 42;
 
+/// Case grids after alignment (mask, optional image) — borrowed when no
+/// resampling was needed, owned when a grid had to be rebuilt.
+type PreparedGrids<'a> = (Cow<'a, VoxelGrid<u8>>, Option<Cow<'a, VoxelGrid<f32>>>);
+
 /// Which path actually computed a result.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PathTaken {
@@ -43,8 +50,10 @@ pub enum PathTaken {
 }
 
 /// Per-phase timing breakdown of one case — the Table 2 row ingredients
-/// plus the intensity-class phase (`texture` covers image synthesis /
-/// cropping, discretization, first-order and the texture matrices).
+/// plus the intensity-class phase. `preprocess` covers grid alignment
+/// (resampling), ROI cropping and derived-image filtering (LoG /
+/// wavelet); `texture` covers discretization, first-order and the texture
+/// matrices over every derived image.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CaseTiming {
     pub read: Duration,
@@ -72,13 +81,67 @@ impl CaseTiming {
     }
 }
 
-/// One extraction result. `first_order`/`texture` are present when the
-/// corresponding feature class is enabled and the ROI is non-empty.
+/// The intensity-class features of one derived image (original / LoG /
+/// wavelet sub-band).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DerivedImageFeatures {
+    /// Filter-qualified image prefix: `original`, `log-sigma-2-0-mm`,
+    /// `wavelet-LLH`, …
+    pub image: String,
+    /// First-order features, when the class is enabled.
+    pub first_order: Option<FirstOrderFeatures>,
+    /// Texture features, when a texture class is enabled.
+    pub texture: Option<TextureFeatures>,
+}
+
+impl DerivedImageFeatures {
+    /// Every computed (name, value) pair of this derived image.
+    ///
+    /// The `original` image keeps the historical plain names (`Entropy`,
+    /// `Glcm_Contrast`) so existing reports stay stable; every other
+    /// derived image is qualified in PyRadiomics convention —
+    /// `log-sigma-2-0-mm_firstorder_Mean`, `wavelet-LLH_glcm_Contrast`.
+    pub fn named(&self) -> Vec<(String, f64)> {
+        let qualify = self.image != "original";
+        let mut out = Vec::new();
+        if let Some(fo) = &self.first_order {
+            for (name, value) in fo.named() {
+                if qualify {
+                    out.push((format!("{}_firstorder_{name}", self.image), value));
+                } else {
+                    out.push((name.to_string(), value));
+                }
+            }
+        }
+        if let Some(tex) = &self.texture {
+            for (name, value) in tex.named() {
+                if qualify {
+                    // "Glcm_Contrast" → "<image>_glcm_Contrast"
+                    let (class, feat) = name.split_once('_').unwrap_or(("texture", name));
+                    out.push((
+                        format!("{}_{}_{feat}", self.image, class.to_lowercase()),
+                        value,
+                    ));
+                } else {
+                    out.push((name.to_string(), value));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One extraction result. `first_order`/`texture` mirror the *original*
+/// image's entry in `derived` (when the `original` image type and the
+/// corresponding class are enabled and the ROI is non-empty); `derived`
+/// holds one entry per enabled derived image, in
+/// [`crate::imgproc::derive_images`] order.
 #[derive(Debug, Clone)]
 pub struct Extraction {
     pub features: ShapeFeatures,
     pub first_order: Option<FirstOrderFeatures>,
     pub texture: Option<TextureFeatures>,
+    pub derived: Vec<DerivedImageFeatures>,
     pub timing: CaseTiming,
     pub path: PathTaken,
 }
@@ -100,6 +163,10 @@ pub struct FeatureExtractor {
     bin_width: f64,
     bin_count: usize,
     glcm_distances: Vec<usize>,
+    image_types: crate::imgproc::ImageTypes,
+    log_sigmas: Vec<f64>,
+    wavelet_levels: usize,
+    resampled_spacing: f64,
 }
 
 impl FeatureExtractor {
@@ -147,6 +214,10 @@ impl FeatureExtractor {
             bin_width: cfg.bin_width,
             bin_count: cfg.bin_count,
             glcm_distances: cfg.glcm_distances.clone(),
+            image_types: cfg.image_types,
+            log_sigmas: cfg.log_sigmas.clone(),
+            wavelet_levels: cfg.wavelet_levels,
+            resampled_spacing: cfg.resampled_spacing,
         })
     }
 
@@ -198,33 +269,81 @@ impl FeatureExtractor {
         self.execute_case(mask, None)
     }
 
-    /// Extraction over a mask plus an optional aligned intensity image
-    /// (same dims/spacing). The image is only read when an intensity
-    /// feature class (first-order / GLCM / GLRLM) is enabled.
+    /// Align the case grids before extraction:
+    ///
+    /// * with `resampled_spacing > 0`, the mask is nearest-neighbour
+    ///   resampled onto the isotropic target spacing;
+    /// * an image whose grid (dims *or* spacing) differs from the mask
+    ///   grid is trilinear-resampled onto it — a mismatch used to be a
+    ///   hard error, but PyRadiomics-style datasets routinely ship scans
+    ///   and segmentations on different grids. Degenerate inputs (empty
+    ///   volumes, non-positive spacings) stay located errors.
+    ///
+    /// The image is dropped (not validated, not resampled) when no
+    /// intensity feature class is enabled — shape-only runs must not pay
+    /// an O(volume) resample whose result nothing reads.
+    fn prepare_grids<'a>(
+        &self,
+        mask: &'a VoxelGrid<u8>,
+        image: Option<&'a VoxelGrid<f32>>,
+    ) -> Result<PreparedGrids<'a>> {
+        let mut mask_c = Cow::Borrowed(mask);
+        if self.resampled_spacing > 0.0 {
+            let target = Vec3::splat(self.resampled_spacing);
+            if mask.spacing != target {
+                mask_c = Cow::Owned(
+                    crate::imgproc::resample_mask(
+                        mask,
+                        target,
+                        self.strategy,
+                        self.cpu_threads,
+                    )
+                    .context("resample mask onto resampled_spacing")?,
+                );
+            }
+        }
+        let image_c = match image {
+            None => None,
+            Some(_) if !self.classes.needs_image() => None,
+            Some(img) if img.dims == mask_c.dims && img.spacing == mask_c.spacing => {
+                Some(Cow::Borrowed(img))
+            }
+            Some(img) => Some(Cow::Owned(
+                crate::imgproc::resample_image_to_grid(
+                    img,
+                    mask_c.dims,
+                    mask_c.spacing,
+                    self.strategy,
+                    self.cpu_threads,
+                )
+                .with_context(|| {
+                    format!(
+                        "auto-resample image (dims {}, spacing {:?}) onto the mask \
+                         grid (dims {}, spacing {:?})",
+                        img.dims, img.spacing, mask_c.dims, mask_c.spacing
+                    )
+                })?,
+            )),
+        };
+        Ok((mask_c, image_c))
+    }
+
+    /// Extraction over a mask plus an optional intensity image. The image
+    /// is only read when an intensity feature class (first-order / GLCM /
+    /// GLRLM) is enabled; an image on a different grid is automatically
+    /// trilinear-resampled onto the mask grid (`prepare_grids`), and with
+    /// `resampled_spacing > 0` the whole case moves to that isotropic
+    /// grid first.
     pub fn execute_case(
         &self,
         mask: &VoxelGrid<u8>,
         image: Option<&VoxelGrid<f32>>,
     ) -> Result<Extraction> {
-        if let Some(img) = image {
-            anyhow::ensure!(
-                img.dims == mask.dims,
-                "image dims {} do not match mask dims {}",
-                img.dims,
-                mask.dims
-            );
-            // TotalEnergy scales with the image voxel volume, so a spacing
-            // mismatch would silently corrupt it
-            anyhow::ensure!(
-                img.spacing == mask.spacing,
-                "image spacing {:?} does not match mask spacing {:?}",
-                img.spacing,
-                mask.spacing
-            );
-        }
         let mut timing = CaseTiming::default();
 
         let t = Instant::now();
+        let (mask_c, image_c) = self.prepare_grids(mask, image)?;
+        let mask: &VoxelGrid<u8> = &mask_c;
         let (cropped, offset) = crop_to_roi(mask);
         let mask_stats = MaskStats::compute(&cropped);
         timing.preprocess = t.elapsed();
@@ -262,29 +381,59 @@ impl FeatureExtractor {
             compute_shape_features(&cropped, &mask_stats, &mesh.stats, &diam, vertex_count);
         timing.derive = t.elapsed();
 
-        let (first_order, texture) = if self.classes.needs_image() {
+        let derived = if self.classes.needs_image() && mask_stats.count > 0 {
+            // derived-image construction is preprocessing; feature
+            // extraction over each derived image is the texture phase
             let t = Instant::now();
-            let cropped_image = match image {
-                Some(img) => crop_box(img, offset, cropped.dims),
+            let cropped_image = match &image_c {
+                Some(img) => crop_box(&**img, offset, cropped.dims),
                 None => crate::synth::synthesize_image(&cropped, SYNTH_IMAGE_SEED),
             };
-            let first_order = if self.classes.first_order {
-                compute_first_order_with(&cropped_image, &cropped, self.discretization())
-            } else {
-                None
-            };
-            let texture = if self.classes.texture() {
-                compute_texture(&cropped_image, &cropped, &self.texture_options())?
-            } else {
-                None
-            };
+            let derived_images = derive_images(&cropped_image, &self.imgproc_options())?;
+            timing.preprocess += t.elapsed();
+
+            let t = Instant::now();
+            let mut derived = Vec::with_capacity(derived_images.len());
+            for d in derived_images {
+                let first_order = if self.classes.first_order {
+                    compute_first_order_with(&d.image, &cropped, self.discretization())
+                } else {
+                    None
+                };
+                let texture = if self.classes.texture() {
+                    compute_texture(&d.image, &cropped, &self.texture_options())
+                        .with_context(|| format!("texture features of {}", d.name))?
+                } else {
+                    None
+                };
+                derived.push(DerivedImageFeatures { image: d.name, first_order, texture });
+            }
             timing.texture = t.elapsed();
-            (first_order, texture)
+            derived
         } else {
-            (None, None)
+            Vec::new()
         };
 
-        Ok(Extraction { features, first_order, texture, timing, path })
+        // legacy view: the original image's classes, when computed
+        let (first_order, texture) = derived
+            .iter()
+            .find(|d| d.image == "original")
+            .map(|d| (d.first_order.clone(), d.texture.clone()))
+            .unwrap_or((None, None));
+
+        Ok(Extraction { features, first_order, texture, derived, timing, path })
+    }
+
+    /// The derived-image knobs as an [`ImgprocOptions`] (single source of
+    /// truth for the dispatcher and the benches).
+    pub fn imgproc_options(&self) -> ImgprocOptions {
+        ImgprocOptions {
+            image_types: self.image_types,
+            log_sigmas: self.log_sigmas.clone(),
+            wavelet_levels: self.wavelet_levels,
+            strategy: self.strategy,
+            threads: self.cpu_threads,
+        }
     }
 
     /// The configured gray-level binning — shared by first-order
@@ -533,12 +682,135 @@ mod tests {
             with_img.first_order, synth.first_order,
             "explicit image must actually be read"
         );
-        // dims and spacing mismatches are clear errors
-        let bad: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(3, 3, 3), Vec3::splat(1.0));
-        assert!(ex.execute_case(&mask, Some(&bad)).is_err());
-        let wrong_spacing: VoxelGrid<f32> = VoxelGrid::zeros(mask.dims, Vec3::splat(1.0));
-        let err = ex.execute_case(&mask, Some(&wrong_spacing)).unwrap_err();
+        // a degenerate image is a clear located error, not a panic
+        let empty: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(0, 3, 3), Vec3::splat(1.0));
+        let err = ex.execute_case(&mask, Some(&empty)).unwrap_err();
+        assert!(format!("{err:#}").contains("resample"), "{err:#}");
+        let bad_spacing: VoxelGrid<f32> = VoxelGrid::zeros(mask.dims, Vec3::splat(0.0));
+        let err = ex.execute_case(&mask, Some(&bad_spacing)).unwrap_err();
         assert!(format!("{err:#}").contains("spacing"), "{err:#}");
+    }
+
+    #[test]
+    fn shape_only_runs_never_touch_the_image() {
+        // no intensity class enabled → the image must be dropped before
+        // any validation/resampling (shape-only runs pay nothing for it)
+        let ex = cpu_extractor();
+        let mask = sphere_mask(12, 4.0);
+        let bogus: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(2, 2, 2), Vec3::splat(0.0));
+        let out = ex.execute_case(&mask, Some(&bogus)).unwrap();
+        assert!(out.first_order.is_none());
+        assert!(out.derived.is_empty());
+    }
+
+    #[test]
+    fn mismatched_image_grid_is_auto_resampled_onto_the_mask() {
+        // mask spacing (0.8, 0.8, 2.0); build the image on a 1 mm grid
+        // covering the same physical extent — used to be a hard error
+        let mask = sphere_mask(12, 4.0);
+        let idims = Dims::new(10, 10, 23);
+        let mut img: VoxelGrid<f32> = VoxelGrid::zeros(idims, Vec3::splat(1.0));
+        for z in 0..idims.z {
+            for y in 0..idims.y {
+                for x in 0..idims.x {
+                    // linear-in-mm field: trilinear resampling is exact
+                    img.set(x, y, z, (2 * x + 3 * y + z) as f32);
+                }
+            }
+        }
+        let ex = FeatureExtractor::new(&all_classes_cfg(1)).unwrap();
+        let out = ex.execute_case(&mask, Some(&img)).unwrap();
+        let fo = out.first_order.expect("auto-resampled image feeds first-order");
+        // the same linear field sampled natively on the mask grid
+        let mut native: VoxelGrid<f32> = VoxelGrid::zeros(mask.dims, mask.spacing);
+        for z in 0..mask.dims.z {
+            for y in 0..mask.dims.y {
+                for x in 0..mask.dims.x {
+                    let p = native.world(x, y, z);
+                    native.set(x, y, z, (2.0 * p.x + 3.0 * p.y + p.z) as f32);
+                }
+            }
+        }
+        let want = ex.execute_case(&mask, Some(&native)).unwrap();
+        let want_fo = want.first_order.unwrap();
+        assert!(
+            (fo.mean - want_fo.mean).abs() < 1e-3,
+            "{} vs {}",
+            fo.mean,
+            want_fo.mean
+        );
+        // identical grids are passed through bit-for-bit (no resample)
+        let same = ex.execute_case(&mask, Some(&native)).unwrap();
+        assert_eq!(same.first_order, want.first_order);
+    }
+
+    #[test]
+    fn resampled_spacing_reshapes_the_case_grid() {
+        let mask = sphere_mask(16, 5.0); // spacing (0.8, 0.8, 2.0)
+        let cfg = PipelineConfig {
+            resampled_spacing: 1.0,
+            ..all_classes_cfg(1)
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let out = ex.execute_mask(&mask).unwrap();
+        assert!(out.features.voxel_count > 0);
+        // voxel volume on the isotropic grid is 1 mm³, so VoxelVolume ≈
+        // count × 1 and total volume stays within resampling error
+        let native = FeatureExtractor::new(&all_classes_cfg(1))
+            .unwrap()
+            .execute_mask(&mask)
+            .unwrap();
+        let rel = (out.features.voxel_volume - native.features.voxel_volume).abs()
+            / native.features.voxel_volume;
+        assert!(rel < 0.25, "resampled volume off by {rel}");
+        assert!(out.first_order.is_some());
+    }
+
+    #[test]
+    fn derived_images_multiply_the_feature_vector() {
+        let mask = sphere_mask(14, 5.0);
+        let cfg = PipelineConfig {
+            image_types: crate::imgproc::ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0, 2.0],
+            ..all_classes_cfg(1)
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let out = ex.execute_mask(&mask).unwrap();
+        assert_eq!(out.derived.len(), 11, "original + 2 LoG + 8 wavelet");
+        assert_eq!(out.derived[0].image, "original");
+        assert_eq!(out.first_order, out.derived[0].first_order, "legacy view");
+        for d in &out.derived {
+            assert!(d.first_order.is_some(), "{}", d.image);
+            assert!(d.texture.is_some(), "{}", d.image);
+        }
+        // qualified names follow the PyRadiomics convention
+        let names: Vec<String> =
+            out.derived.iter().flat_map(|d| d.named()).map(|(n, _)| n).collect();
+        assert!(names.iter().any(|n| n == "Entropy"), "original keeps plain names");
+        assert!(names.iter().any(|n| n == "log-sigma-1-0-mm_firstorder_Mean"));
+        assert!(names.iter().any(|n| n == "log-sigma-2-0-mm_glcm_Contrast"));
+        assert!(names.iter().any(|n| n == "wavelet-HHH_glrlm_RunPercentage"));
+        assert!(out.timing.preprocess > Duration::ZERO);
+    }
+
+    #[test]
+    fn derived_features_are_thread_and_strategy_invariant() {
+        let mask = sphere_mask(12, 4.0);
+        let mk = |threads: usize, strategy: Strategy| {
+            let cfg = PipelineConfig {
+                image_types: crate::imgproc::ImageTypes::parse("all").unwrap(),
+                log_sigmas: vec![1.5],
+                strategy,
+                ..all_classes_cfg(threads)
+            };
+            FeatureExtractor::new(&cfg).unwrap().execute_mask(&mask).unwrap().derived
+        };
+        let want = mk(1, Strategy::EqualSplit);
+        assert_eq!(want.len(), 10);
+        for strategy in Strategy::ALL {
+            let got = mk(4, strategy);
+            assert_eq!(got, want, "{strategy:?}");
+        }
     }
 
     #[test]

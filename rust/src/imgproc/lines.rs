@@ -1,0 +1,265 @@
+//! The deterministic line/slice-parallel engine behind every imgproc pass.
+//!
+//! A separable 3D pass is a 1D transform applied independently to every
+//! grid *line* along one axis. [`map_lines`] decomposes the set of lines
+//! with [`crate::parallel::fold_chunks`] — each worker computes whole
+//! output lines into a per-thread partial, and the partials are scattered
+//! into the output buffer afterwards. Every line is written exactly once
+//! and its arithmetic does not depend on the decomposition, so the result
+//! is bit-for-bit identical for any [`Strategy`] and thread count.
+
+use crate::parallel::{fold_chunks, Strategy};
+use crate::volume::{Dims, VoxelGrid};
+
+/// Lines per work unit for the dynamic-queue strategies — small enough to
+/// load-balance, large enough to amortise the queue traffic.
+const LINE_CHUNK: usize = 16;
+
+/// A grid axis. `X` is the fastest-varying storage dimension (see
+/// [`VoxelGrid::index`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// The x (fastest, stride 1) axis.
+    X,
+    /// The y (stride `dims.x`) axis.
+    Y,
+    /// The z (slowest, stride `dims.x * dims.y`) axis.
+    Z,
+}
+
+impl Axis {
+    /// All three axes in storage order.
+    pub const ALL: [Axis; 3] = [Axis::X, Axis::Y, Axis::Z];
+
+    /// Length of a line along this axis.
+    pub fn line_len(&self, dims: Dims) -> usize {
+        match self {
+            Axis::X => dims.x,
+            Axis::Y => dims.y,
+            Axis::Z => dims.z,
+        }
+    }
+
+    /// Number of lines along this axis (product of the other two dims).
+    pub fn line_count(&self, dims: Dims) -> usize {
+        match self {
+            Axis::X => dims.y * dims.z,
+            Axis::Y => dims.x * dims.z,
+            Axis::Z => dims.x * dims.y,
+        }
+    }
+
+    /// Element stride of a line along this axis.
+    fn stride(&self, dims: Dims) -> usize {
+        match self {
+            Axis::X => 1,
+            Axis::Y => dims.x,
+            Axis::Z => dims.x * dims.y,
+        }
+    }
+
+    /// Flat index of the first element of line `l` (lines are numbered
+    /// with the lower-stride perpendicular axis varying fastest).
+    fn line_base(&self, dims: Dims, l: usize) -> usize {
+        match self {
+            // l = y + dims.y * z  →  index = dims.x * l
+            Axis::X => dims.x * l,
+            // l = x + dims.x * z  →  index = x + dims.x * dims.y * z
+            Axis::Y => (l % dims.x) + dims.x * dims.y * (l / dims.x),
+            // l = x + dims.x * y  →  index = l
+            Axis::Z => l,
+        }
+    }
+}
+
+/// Apply `line_fn` to every line of `src` along `axis`, in parallel.
+///
+/// `line_fn(input, output)` receives one gathered input line and must fill
+/// `output` (cleared beforehand) with exactly `axis.line_len(dims)`
+/// samples. The function must be pure — its output may depend only on the
+/// input line — which makes the whole pass deterministic for any strategy
+/// and thread count (each output line is written exactly once).
+pub(crate) fn map_lines<F>(
+    src: &VoxelGrid<f32>,
+    axis: Axis,
+    strategy: Strategy,
+    threads: usize,
+    line_fn: F,
+) -> VoxelGrid<f32>
+where
+    F: Fn(&[f32], &mut Vec<f32>) + Sync,
+{
+    let dims = src.dims;
+    let len = axis.line_len(dims);
+    let n_lines = axis.line_count(dims);
+    let stride = axis.stride(dims);
+    let data = src.data();
+
+    // per-thread partials: (line index, computed output line)
+    let partials: Vec<(usize, Vec<f32>)> = fold_chunks(
+        strategy,
+        n_lines,
+        LINE_CHUNK,
+        threads,
+        Vec::new,
+        |acc: &mut Vec<(usize, Vec<f32>)>, range| {
+            let mut input = vec![0.0f32; len];
+            for l in range {
+                let base = axis.line_base(dims, l);
+                for (i, v) in input.iter_mut().enumerate() {
+                    *v = data[base + i * stride];
+                }
+                let mut output = Vec::with_capacity(len);
+                line_fn(&input, &mut output);
+                debug_assert_eq!(output.len(), len, "line_fn must preserve length");
+                acc.push((l, output));
+            }
+        },
+        |acc, part| acc.extend(part),
+    );
+
+    // scatter: each line index appears exactly once, so the fill order
+    // cannot change the result
+    let mut out = VoxelGrid::zeros(dims, src.spacing);
+    let out_data = out.data_mut();
+    for (l, line) in partials {
+        let base = axis.line_base(dims, l);
+        for (i, v) in line.into_iter().enumerate() {
+            out_data[base + i * stride] = v;
+        }
+    }
+    out
+}
+
+/// Build a grid of `dims`/`spacing` by computing whole z-slices in
+/// parallel: `slice_fn(z, out)` fills `out` (cleared beforehand) with the
+/// `dims.x * dims.y` samples of slice `z` in storage order. Same
+/// determinism argument as [`map_lines`].
+pub(crate) fn build_slices<T, F>(
+    dims: Dims,
+    spacing: crate::geometry::Vec3,
+    strategy: Strategy,
+    threads: usize,
+    slice_fn: F,
+) -> VoxelGrid<T>
+where
+    T: Copy + Default + Send,
+    F: Fn(usize, &mut Vec<T>) + Sync,
+{
+    let slice_len = dims.x * dims.y;
+    let partials: Vec<(usize, Vec<T>)> = fold_chunks(
+        strategy,
+        dims.z,
+        1,
+        threads,
+        Vec::new,
+        |acc: &mut Vec<(usize, Vec<T>)>, range| {
+            for z in range {
+                let mut out = Vec::with_capacity(slice_len);
+                slice_fn(z, &mut out);
+                debug_assert_eq!(out.len(), slice_len, "slice_fn must fill the slice");
+                acc.push((z, out));
+            }
+        },
+        |acc, part| acc.extend(part),
+    );
+
+    let mut out = VoxelGrid::zeros(dims, spacing);
+    let out_data = out.data_mut();
+    for (z, slice) in partials {
+        out_data[z * slice_len..(z + 1) * slice_len].copy_from_slice(&slice);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+
+    fn numbered(dims: Dims) -> VoxelGrid<f32> {
+        let mut g = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..dims.z {
+            for y in 0..dims.y {
+                for x in 0..dims.x {
+                    g.set(x, y, z, (x + 10 * y + 100 * z) as f32);
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn identity_line_fn_reproduces_the_grid() {
+        let g = numbered(Dims::new(4, 3, 5));
+        for axis in Axis::ALL {
+            let out = map_lines(&g, axis, Strategy::EqualSplit, 2, |line, out| {
+                out.extend_from_slice(line);
+            });
+            assert_eq!(out, g, "{axis:?}");
+        }
+    }
+
+    #[test]
+    fn reverse_line_fn_flips_only_that_axis() {
+        let g = numbered(Dims::new(4, 3, 2));
+        let out = map_lines(&g, Axis::X, Strategy::Flat1D, 3, |line, out| {
+            out.extend(line.iter().rev());
+        });
+        for z in 0..2 {
+            for y in 0..3 {
+                for x in 0..4 {
+                    assert_eq!(out.get(x, y, z), g.get(3 - x, y, z));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn line_geometry_covers_every_element_once() {
+        let dims = Dims::new(5, 4, 3);
+        for axis in Axis::ALL {
+            let mut seen = vec![0u32; dims.len()];
+            let stride = axis.stride(dims);
+            for l in 0..axis.line_count(dims) {
+                let base = axis.line_base(dims, l);
+                for i in 0..axis.line_len(dims) {
+                    seen[base + i * stride] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{axis:?}");
+        }
+    }
+
+    #[test]
+    fn map_lines_is_strategy_and_thread_invariant() {
+        let g = numbered(Dims::new(6, 5, 4));
+        let smooth = |line: &[f32], out: &mut Vec<f32>| {
+            for i in 0..line.len() {
+                let prev = line[i.saturating_sub(1)];
+                let next = line[(i + 1).min(line.len() - 1)];
+                out.push((prev as f64 * 0.25 + line[i] as f64 * 0.5 + next as f64 * 0.25) as f32);
+            }
+        };
+        let want = map_lines(&g, Axis::Y, Strategy::EqualSplit, 1, smooth);
+        for strategy in Strategy::ALL {
+            for threads in [1usize, 2, 3, 8] {
+                let got = map_lines(&g, Axis::Y, strategy, threads, smooth);
+                assert_eq!(got, want, "{strategy:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn build_slices_fills_in_storage_order() {
+        let dims = Dims::new(3, 2, 4);
+        let g: VoxelGrid<f32> =
+            build_slices(dims, Vec3::splat(1.0), Strategy::BlockReduction, 3, |z, out| {
+                for i in 0..6 {
+                    out.push((100 * z + i) as f32);
+                }
+            });
+        assert_eq!(g.get(0, 0, 2), 200.0);
+        assert_eq!(g.get(2, 1, 3), 305.0);
+    }
+}

@@ -1,0 +1,345 @@
+//! Derived-image preprocessing: isotropic resampling, Gaussian /
+//! Laplacian-of-Gaussian filtering and 3D Haar wavelet decomposition.
+//!
+//! In PyRadiomics the bulk of high-throughput work comes from *derived
+//! images*: every enabled image type (Original, LoG at several sigmas, the
+//! 8 wavelet sub-bands) re-runs first-order and texture extraction, which
+//! multiplies the per-case workload by the number of derived images. This
+//! module is that filter bank, organised so every pass runs through the
+//! same deterministic parallel engine:
+//!
+//! * [`resample_image`] / [`resample_mask`] — trilinear (intensity) and
+//!   nearest-neighbour (mask) resampling onto a target spacing;
+//! * [`gaussian_smooth`] / [`log_filter`] — separable Gaussian and
+//!   scale-normalised Laplacian-of-Gaussian at mm-denominated sigmas;
+//! * [`haar_decompose`] — one-level undecimated 3D Haar transform
+//!   producing the 8 LLL…HHH sub-bands (same dims as the input, so every
+//!   band stays voxel-aligned with the segmentation mask).
+//!
+//! # Determinism contract
+//!
+//! Every pass decomposes its work into *lines* (or output slices) handed
+//! to [`crate::parallel::fold_chunks`]: a [`Strategy`] picks the
+//! decomposition, workers compute disjoint output ranges into per-thread
+//! partials, and the partials are scattered into the output in fixed
+//! order. Each line's arithmetic is independent of the decomposition, so
+//! the output is **bit-for-bit identical for every strategy and thread
+//! count** — the same contract as the texture subsystem, and asserted by
+//! `tests/conformance.rs` and `benches/bench_imgproc.rs`.
+
+mod filters;
+mod lines;
+mod resample;
+mod wavelet;
+
+pub use filters::{gaussian_kernel, gaussian_smooth, log_filter, MAX_KERNEL_RADIUS};
+pub use lines::Axis;
+pub use resample::{
+    resample_image, resample_image_to_grid, resample_mask, resampled_dims,
+    MAX_RESAMPLED_VOXELS,
+};
+pub use wavelet::{haar_decompose, haar_reconstruct, SUB_BANDS};
+
+use anyhow::{bail, Result};
+
+use crate::parallel::Strategy;
+use crate::volume::VoxelGrid;
+
+/// Shared grid-spacing guard: every imgproc entry point rejects
+/// non-positive / non-finite spacings with the same located error.
+pub(crate) fn check_spacing(name: &str, sp: crate::geometry::Vec3) -> Result<()> {
+    if !(sp.x > 0.0 && sp.y > 0.0 && sp.z > 0.0)
+        || !(sp.x.is_finite() && sp.y.is_finite() && sp.z.is_finite())
+    {
+        bail!("{name} spacing must be positive and finite, got {sp:?}");
+    }
+    Ok(())
+}
+
+/// Which derived-image families the extractor computes features on.
+///
+/// `original` is the unfiltered image; `log` adds one derived image per
+/// configured sigma ([`log_filter`]); `wavelet` adds the 8 Haar sub-bands
+/// per decomposition level ([`haar_decompose`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ImageTypes {
+    /// Extract from the unfiltered image.
+    pub original: bool,
+    /// Extract from Laplacian-of-Gaussian filtered images.
+    pub log: bool,
+    /// Extract from the Haar wavelet sub-bands.
+    pub wavelet: bool,
+}
+
+impl Default for ImageTypes {
+    fn default() -> Self {
+        ImageTypes { original: true, log: false, wavelet: false }
+    }
+}
+
+impl ImageTypes {
+    /// Parse a comma-separated type list, e.g. `"original,log"`.
+    /// Accepted names: `original`, `log`, `wavelet`, `all`. At least one
+    /// type must be named — an empty list is an error.
+    pub fn parse(s: &str) -> Result<ImageTypes> {
+        let mut c = ImageTypes { original: false, log: false, wavelet: false };
+        let mut recognized = 0usize;
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if !tok.is_empty() {
+                recognized += 1;
+            }
+            match tok {
+                "" => {}
+                "original" => c.original = true,
+                "log" => c.log = true,
+                "wavelet" => c.wavelet = true,
+                "all" => {
+                    c.original = true;
+                    c.log = true;
+                    c.wavelet = true;
+                }
+                other => bail!("unknown image type '{other}' (original|log|wavelet|all)"),
+            }
+        }
+        if recognized == 0 {
+            bail!("image type list is empty; name at least one type, e.g. \"original\"");
+        }
+        Ok(c)
+    }
+
+    /// Number of derived images this selection produces per case.
+    pub fn image_count(&self, n_sigmas: usize, wavelet_levels: usize) -> usize {
+        let mut n = 0;
+        if self.original {
+            n += 1;
+        }
+        if self.log {
+            n += n_sigmas;
+        }
+        if self.wavelet {
+            n += 8 * wavelet_levels.max(1);
+        }
+        n
+    }
+}
+
+/// Knobs for [`derive_images`] (config/CLI plumb these through).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImgprocOptions {
+    /// Which derived-image families to produce.
+    pub image_types: ImageTypes,
+    /// LoG sigmas in millimetres (one derived image per sigma).
+    pub log_sigmas: Vec<f64>,
+    /// Haar decomposition levels (level `k` re-decomposes the previous
+    /// level's LLL band with a doubled dilation step); each level emits
+    /// all 8 sub-bands.
+    pub wavelet_levels: usize,
+    /// Work decomposition for the parallel passes.
+    pub strategy: Strategy,
+    /// Worker threads (`0` = all cores, `1` = serial).
+    pub threads: usize,
+}
+
+impl Default for ImgprocOptions {
+    fn default() -> Self {
+        ImgprocOptions {
+            image_types: ImageTypes::default(),
+            log_sigmas: vec![2.0],
+            wavelet_levels: 1,
+            strategy: Strategy::LocalAccumulators,
+            threads: 0,
+        }
+    }
+}
+
+/// One derived image: the filter-qualified name prefix plus the filtered
+/// volume (always the same dims/spacing as the input image).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DerivedImage {
+    /// PyRadiomics-convention image-type prefix: `original`,
+    /// `log-sigma-2-0-mm`, `wavelet-LLH`, `wavelet2-LLH`, …
+    pub name: String,
+    /// The derived volume.
+    pub image: VoxelGrid<f32>,
+}
+
+/// The PyRadiomics-convention name prefix of a LoG image, e.g.
+/// `log-sigma-2-0-mm` for `sigma = 2.0` or `log-sigma-2-25-mm` for `2.25`.
+pub fn log_sigma_name(sigma: f64) -> String {
+    let s = if sigma.fract() == 0.0 { format!("{sigma:.1}") } else { format!("{sigma}") };
+    format!("log-sigma-{}-mm", s.replace('.', "-"))
+}
+
+/// The name prefix of a wavelet sub-band: `wavelet-LLH` at level 1,
+/// `wavelet2-LLH` at level 2, …
+pub fn wavelet_band_name(level: usize, band: &str) -> String {
+    if level <= 1 {
+        format!("wavelet-{band}")
+    } else {
+        format!("wavelet{level}-{band}")
+    }
+}
+
+/// Produce every enabled derived image of `image`, in a fixed order:
+/// `original`, then one LoG image per sigma (config order), then the 8
+/// wavelet sub-bands of each level ([`SUB_BANDS`] order).
+///
+/// All filtering runs through the deterministic parallel engine (see the
+/// module docs); the output is bit-identical for any strategy / thread
+/// count. Errors on invalid sigmas and degenerate volumes.
+pub fn derive_images(
+    image: &VoxelGrid<f32>,
+    opts: &ImgprocOptions,
+) -> Result<Vec<DerivedImage>> {
+    let mut out = Vec::with_capacity(
+        opts.image_types.image_count(opts.log_sigmas.len(), opts.wavelet_levels),
+    );
+    if opts.image_types.original {
+        out.push(DerivedImage { name: "original".to_string(), image: image.clone() });
+    }
+    if opts.image_types.log {
+        if opts.log_sigmas.is_empty() {
+            bail!("image type 'log' is enabled but log_sigmas is empty");
+        }
+        for &sigma in &opts.log_sigmas {
+            let filtered = log_filter(image, sigma, opts.strategy, opts.threads)?;
+            out.push(DerivedImage { name: log_sigma_name(sigma), image: filtered });
+        }
+    }
+    if opts.image_types.wavelet {
+        let levels = opts.wavelet_levels.max(1);
+        let mut input = image.clone();
+        for level in 1..=levels {
+            let bands = haar_decompose(&input, level, opts.strategy, opts.threads)?;
+            // the LLL band seeds the next level before the move below
+            if level < levels {
+                input = bands[0].clone();
+            }
+            for (band, name) in bands.into_iter().zip(SUB_BANDS) {
+                out.push(DerivedImage {
+                    name: wavelet_band_name(level, name),
+                    image: band,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::Dims;
+
+    fn patterned(n: usize) -> VoxelGrid<f32> {
+        let mut img = VoxelGrid::zeros(Dims::new(n, n, n), Vec3::splat(1.0));
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    img.set(x, y, z, ((3 * x + 5 * y + 7 * z) % 17) as f32);
+                }
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn image_types_parse() {
+        let t = ImageTypes::parse("original, log").unwrap();
+        assert!(t.original && t.log && !t.wavelet);
+        let t = ImageTypes::parse("all").unwrap();
+        assert!(t.original && t.log && t.wavelet);
+        assert_eq!(t.image_count(2, 1), 11, "original + 2 LoG + 8 wavelet");
+        assert!(ImageTypes::parse("bogus").is_err());
+        assert!(ImageTypes::parse("").is_err());
+        assert!(ImageTypes::parse(" , ").is_err());
+    }
+
+    #[test]
+    fn log_sigma_names_follow_pyradiomics() {
+        assert_eq!(log_sigma_name(2.0), "log-sigma-2-0-mm");
+        assert_eq!(log_sigma_name(0.5), "log-sigma-0-5-mm");
+        assert_eq!(log_sigma_name(2.25), "log-sigma-2-25-mm");
+    }
+
+    #[test]
+    fn wavelet_band_names_carry_the_level() {
+        assert_eq!(wavelet_band_name(1, "LLH"), "wavelet-LLH");
+        assert_eq!(wavelet_band_name(2, "HHH"), "wavelet2-HHH");
+    }
+
+    #[test]
+    fn derive_images_order_and_count() {
+        let img = patterned(8);
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0, 2.0],
+            wavelet_levels: 1,
+            threads: 1,
+            ..Default::default()
+        };
+        let derived = derive_images(&img, &opts).unwrap();
+        assert_eq!(derived.len(), 11);
+        assert_eq!(derived[0].name, "original");
+        assert_eq!(derived[1].name, "log-sigma-1-0-mm");
+        assert_eq!(derived[2].name, "log-sigma-2-0-mm");
+        assert_eq!(derived[3].name, "wavelet-LLL");
+        assert_eq!(derived[10].name, "wavelet-HHH");
+        for d in &derived {
+            assert_eq!(d.image.dims, img.dims, "{}", d.name);
+            assert_eq!(d.image.spacing, img.spacing, "{}", d.name);
+        }
+        assert_eq!(derived[0].image, img, "original is the unfiltered image");
+    }
+
+    #[test]
+    fn multi_level_wavelet_emits_eight_bands_per_level() {
+        let img = patterned(8);
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("wavelet").unwrap(),
+            wavelet_levels: 2,
+            threads: 1,
+            ..Default::default()
+        };
+        let derived = derive_images(&img, &opts).unwrap();
+        assert_eq!(derived.len(), 16);
+        assert_eq!(derived[0].name, "wavelet-LLL");
+        assert_eq!(derived[8].name, "wavelet2-LLL");
+        assert_eq!(derived[15].name, "wavelet2-HHH");
+    }
+
+    #[test]
+    fn empty_sigma_list_with_log_enabled_is_an_error() {
+        let img = patterned(4);
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("log").unwrap(),
+            log_sigmas: vec![],
+            threads: 1,
+            ..Default::default()
+        };
+        let err = derive_images(&img, &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("log_sigmas"));
+    }
+
+    #[test]
+    fn derived_images_are_strategy_and_thread_invariant() {
+        let img = patterned(10);
+        let base = ImgprocOptions {
+            image_types: ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.5],
+            wavelet_levels: 2,
+            strategy: Strategy::EqualSplit,
+            threads: 1,
+        };
+        let want = derive_images(&img, &base).unwrap();
+        for strategy in Strategy::ALL {
+            for threads in [2usize, 3, 8] {
+                let opts = ImgprocOptions { strategy, threads, ..base.clone() };
+                let got = derive_images(&img, &opts).unwrap();
+                assert_eq!(got, want, "{strategy:?} threads={threads}");
+            }
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Grid resampling: trilinear for intensity images, nearest-neighbour for
+//! segmentation masks.
+//!
+//! Sample mapping follows the corner-lattice convention of
+//! [`VoxelGrid::world`]: output voxel `i` along an axis sits at physical
+//! position `i · new_spacing` mm, which maps to the fractional source
+//! index `i · (new_spacing / old_spacing)`. When the target spacing
+//! equals the source spacing the ratio is exactly 1 and resampling is the
+//! **bit-exact identity** (property-tested); trilinear interpolation
+//! exactly reproduces fields that are trilinear polynomials of the
+//! physical coordinates. Out-of-range corners clamp to the volume edge.
+
+use anyhow::{bail, Result};
+
+use super::check_spacing;
+use super::lines::build_slices;
+use crate::geometry::Vec3;
+use crate::parallel::Strategy;
+use crate::volume::{Dims, VoxelGrid};
+
+/// Output-volume ceiling for spacing-driven resampling: a misconfigured
+/// target (say `resampled_spacing = 1e-9`) must fail with a pointed error
+/// instead of attempting a multi-terabyte allocation. 2²⁸ voxels ≈ 1 GiB
+/// of f32 — far above any realistic medical volume.
+pub const MAX_RESAMPLED_VOXELS: usize = 1 << 28;
+
+/// Samples along one axis when resampling `n` samples at spacing `old`
+/// onto spacing `new`: every output sample whose physical position stays
+/// within the source lattice `[0, (n-1)·old]`. The epsilon absorbs the
+/// float rounding of `old/new` (0.3/0.1 is 2.999…96), which would
+/// otherwise silently drop the final in-extent sample plane; an output
+/// sample nudged just past the lattice edge reads the clamped edge value.
+fn axis_samples(n: usize, old: f64, new: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    (((n - 1) as f64 * (old / new) + 1e-9).floor() as usize) + 1
+}
+
+fn check_output_volume(dims: Dims) -> Result<()> {
+    let total = (dims.x as u128) * (dims.y as u128) * (dims.z as u128);
+    if total > MAX_RESAMPLED_VOXELS as u128 {
+        bail!(
+            "resampled grid {dims} has {total} voxels (max {MAX_RESAMPLED_VOXELS}) — \
+             check the target spacing"
+        );
+    }
+    Ok(())
+}
+
+/// Output dims when resampling `dims` at `old` spacing onto `new` spacing.
+/// Identity when the spacings are equal.
+pub fn resampled_dims(dims: Dims, old: Vec3, new: Vec3) -> Dims {
+    Dims::new(
+        axis_samples(dims.x, old.x, new.x),
+        axis_samples(dims.y, old.y, new.y),
+        axis_samples(dims.z, old.z, new.z),
+    )
+}
+
+/// Trilinear-resample `img` onto `new_spacing` (per-axis mm). The output
+/// covers the source physical extent (see [`resampled_dims`]); equal
+/// spacings return a bit-exact copy.
+pub fn resample_image(
+    img: &VoxelGrid<f32>,
+    new_spacing: Vec3,
+    strategy: Strategy,
+    threads: usize,
+) -> Result<VoxelGrid<f32>> {
+    if img.dims.is_empty() {
+        bail!("cannot resample an empty image volume {}", img.dims);
+    }
+    check_spacing("source image", img.spacing)?;
+    check_spacing("target", new_spacing)?;
+    let dims = resampled_dims(img.dims, img.spacing, new_spacing);
+    check_output_volume(dims)?;
+    resample_image_to_grid(img, dims, new_spacing, strategy, threads)
+}
+
+/// Trilinear-resample `img` onto an explicit target grid (`dims` voxels at
+/// `spacing` mm) — the workhorse behind [`resample_image`] and the
+/// dispatcher's automatic image→mask grid alignment. Output voxel
+/// positions map through the spacing ratio; source corners clamp at the
+/// volume edges. Errors on empty volumes and non-positive spacings.
+pub fn resample_image_to_grid(
+    img: &VoxelGrid<f32>,
+    dims: Dims,
+    spacing: Vec3,
+    strategy: Strategy,
+    threads: usize,
+) -> Result<VoxelGrid<f32>> {
+    if img.dims.is_empty() {
+        bail!("cannot resample an empty image volume {}", img.dims);
+    }
+    check_spacing("source image", img.spacing)?;
+    check_spacing("target", spacing)?;
+    if dims.is_empty() {
+        bail!("target grid {dims} is empty");
+    }
+    let (sd, src) = (img.dims, img.data());
+    let r = Vec3::new(
+        spacing.x / img.spacing.x,
+        spacing.y / img.spacing.y,
+        spacing.z / img.spacing.z,
+    );
+    let grid = build_slices(dims, spacing, strategy, threads, |z, out| {
+        let fz = z as f64 * r.z;
+        let z0 = (fz.floor() as usize).min(sd.z - 1);
+        let z1 = (z0 + 1).min(sd.z - 1);
+        let tz = fz - z0 as f64;
+        for y in 0..dims.y {
+            let fy = y as f64 * r.y;
+            let y0 = (fy.floor() as usize).min(sd.y - 1);
+            let y1 = (y0 + 1).min(sd.y - 1);
+            let ty = fy - y0 as f64;
+            for x in 0..dims.x {
+                let fx = x as f64 * r.x;
+                let x0 = (fx.floor() as usize).min(sd.x - 1);
+                let x1 = (x0 + 1).min(sd.x - 1);
+                let tx = fx - x0 as f64;
+                let at = |xi: usize, yi: usize, zi: usize| -> f64 {
+                    src[xi + sd.x * (yi + sd.y * zi)] as f64
+                };
+                let c00 = at(x0, y0, z0) * (1.0 - tx) + at(x1, y0, z0) * tx;
+                let c10 = at(x0, y1, z0) * (1.0 - tx) + at(x1, y1, z0) * tx;
+                let c01 = at(x0, y0, z1) * (1.0 - tx) + at(x1, y0, z1) * tx;
+                let c11 = at(x0, y1, z1) * (1.0 - tx) + at(x1, y1, z1) * tx;
+                let c0 = c00 * (1.0 - ty) + c10 * ty;
+                let c1 = c01 * (1.0 - ty) + c11 * ty;
+                out.push((c0 * (1.0 - tz) + c1 * tz) as f32);
+            }
+        }
+    });
+    Ok(grid)
+}
+
+/// Nearest-neighbour-resample a segmentation mask onto `new_spacing`:
+/// label values pass through untouched (no interpolated half-labels).
+/// Equal spacings return a bit-exact copy.
+pub fn resample_mask(
+    mask: &VoxelGrid<u8>,
+    new_spacing: Vec3,
+    strategy: Strategy,
+    threads: usize,
+) -> Result<VoxelGrid<u8>> {
+    if mask.dims.is_empty() {
+        bail!("cannot resample an empty mask volume {}", mask.dims);
+    }
+    check_spacing("source mask", mask.spacing)?;
+    check_spacing("target", new_spacing)?;
+    let dims = resampled_dims(mask.dims, mask.spacing, new_spacing);
+    check_output_volume(dims)?;
+    let (sd, src) = (mask.dims, mask.data());
+    let r = Vec3::new(
+        new_spacing.x / mask.spacing.x,
+        new_spacing.y / mask.spacing.y,
+        new_spacing.z / mask.spacing.z,
+    );
+    let grid = build_slices(dims, new_spacing, strategy, threads, |z, out| {
+        let zi = ((z as f64 * r.z).round() as usize).min(sd.z - 1);
+        for y in 0..dims.y {
+            let yi = ((y as f64 * r.y).round() as usize).min(sd.y - 1);
+            for x in 0..dims.x {
+                let xi = ((x as f64 * r.x).round() as usize).min(sd.x - 1);
+                out.push(src[xi + sd.x * (yi + sd.y * zi)]);
+            }
+        }
+    });
+    Ok(grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gradient_image(dims: Dims, spacing: Vec3) -> VoxelGrid<f32> {
+        let mut g = VoxelGrid::zeros(dims, spacing);
+        for z in 0..dims.z {
+            for y in 0..dims.y {
+                for x in 0..dims.x {
+                    let p = g.world(x, y, z);
+                    g.set(x, y, z, (2.0 * p.x + 3.0 * p.y - p.z) as f32);
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn identity_at_source_spacing_is_bit_exact() {
+        let img = gradient_image(Dims::new(5, 4, 3), Vec3::new(0.9, 1.1, 2.3));
+        let out = resample_image(&img, img.spacing, Strategy::EqualSplit, 1).unwrap();
+        assert_eq!(out, img);
+        let mut mask: VoxelGrid<u8> = VoxelGrid::zeros(img.dims, img.spacing);
+        mask.set(2, 1, 1, 1);
+        mask.set(4, 3, 2, 7);
+        let out = resample_mask(&mask, mask.spacing, Strategy::EqualSplit, 1).unwrap();
+        assert_eq!(out, mask);
+    }
+
+    #[test]
+    fn resampled_dims_cover_the_physical_extent() {
+        // 9 samples at 1 mm span 8 mm → 17 samples at 0.5 mm, 5 at 2 mm
+        let d = resampled_dims(Dims::new(9, 9, 9), Vec3::splat(1.0), Vec3::splat(0.5));
+        assert_eq!(d, Dims::new(17, 17, 17));
+        let d = resampled_dims(Dims::new(9, 9, 9), Vec3::splat(1.0), Vec3::splat(2.0));
+        assert_eq!(d, Dims::new(5, 5, 5));
+        // float rounding must not drop the final in-extent plane:
+        // 0.3/0.1 is 2.999…96 in f64, yet 8 × 0.3 mm spans exactly 24 of
+        // the 0.1 mm steps → 25 samples
+        let d = resampled_dims(Dims::new(9, 9, 9), Vec3::splat(0.3), Vec3::splat(0.1));
+        assert_eq!(d, Dims::new(25, 25, 25));
+    }
+
+    #[test]
+    fn absurd_target_spacing_is_a_located_error_not_an_allocation() {
+        let img = gradient_image(Dims::new(64, 64, 64), Vec3::splat(1.0));
+        let err =
+            resample_image(&img, Vec3::splat(1e-9), Strategy::EqualSplit, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("voxels"), "{err:#}");
+        let mask: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(64, 64, 64), Vec3::splat(1.0));
+        assert!(resample_mask(&mask, Vec3::splat(1e-9), Strategy::EqualSplit, 1).is_err());
+    }
+
+    #[test]
+    fn trilinear_reproduces_a_linear_field() {
+        let img = gradient_image(Dims::new(9, 9, 9), Vec3::splat(1.0));
+        let out = resample_image(&img, Vec3::splat(0.5), Strategy::EqualSplit, 1).unwrap();
+        assert_eq!(out.dims, Dims::new(17, 17, 17));
+        for z in 0..out.dims.z {
+            for y in 0..out.dims.y {
+                for x in 0..out.dims.x {
+                    let p = out.world(x, y, z);
+                    let want = 2.0 * p.x + 3.0 * p.y - p.z;
+                    let got = out.get(x, y, z) as f64;
+                    assert!((got - want).abs() < 1e-5, "({x},{y},{z}): {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_mask_keeps_label_values() {
+        let mut mask: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(8, 8, 8), Vec3::splat(1.0));
+        for z in 2..6 {
+            for y in 2..6 {
+                for x in 2..6 {
+                    mask.set(x, y, z, 3);
+                }
+            }
+        }
+        let out = resample_mask(&mask, Vec3::splat(0.5), Strategy::EqualSplit, 1).unwrap();
+        assert!(out.data().iter().all(|&v| v == 0 || v == 3), "no blended labels");
+        // 4³ voxels at 1 mm ≈ 7³ at 0.5 mm (corner-lattice rounding)
+        let kept = out.data().iter().filter(|&&v| v == 3).count();
+        assert!(kept >= 6 * 6 * 6 && kept <= 9 * 9 * 9, "kept {kept}");
+    }
+
+    #[test]
+    fn downsampling_halves_the_grid() {
+        let img = gradient_image(Dims::new(9, 9, 9), Vec3::splat(1.0));
+        let out = resample_image(&img, Vec3::splat(2.0), Strategy::EqualSplit, 1).unwrap();
+        assert_eq!(out.dims, Dims::new(5, 5, 5));
+        // on-lattice samples are exact
+        assert_eq!(out.get(1, 1, 1), img.get(2, 2, 2));
+    }
+
+    #[test]
+    fn to_grid_aligns_a_coarser_image_onto_a_finer_mask_grid() {
+        let img = gradient_image(Dims::new(5, 5, 5), Vec3::splat(2.0));
+        let out = resample_image_to_grid(
+            &img,
+            Dims::new(9, 9, 9),
+            Vec3::splat(1.0),
+            Strategy::EqualSplit,
+            1,
+        )
+        .unwrap();
+        assert_eq!(out.dims, Dims::new(9, 9, 9));
+        assert_eq!(out.spacing, Vec3::splat(1.0));
+        for (x, y, z) in [(0usize, 0usize, 0usize), (3, 5, 7), (8, 8, 8)] {
+            let p = out.world(x, y, z);
+            let want = 2.0 * p.x + 3.0 * p.y - p.z;
+            assert!((out.get(x, y, z) as f64 - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn resample_rejects_bad_inputs() {
+        let img = gradient_image(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        assert!(resample_image(&img, Vec3::new(0.0, 1.0, 1.0), Strategy::EqualSplit, 1)
+            .is_err());
+        assert!(resample_image(&img, Vec3::splat(f64::NAN), Strategy::EqualSplit, 1)
+            .is_err());
+        let empty = VoxelGrid::<f32>::zeros(Dims::new(0, 3, 3), Vec3::splat(1.0));
+        assert!(resample_image(&empty, Vec3::splat(1.0), Strategy::EqualSplit, 1).is_err());
+        let mask: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        assert!(resample_mask(&mask, Vec3::splat(-1.0), Strategy::EqualSplit, 1).is_err());
+    }
+}

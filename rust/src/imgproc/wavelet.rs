@@ -1,0 +1,185 @@
+//! Undecimated one-level 3D Haar wavelet decomposition.
+//!
+//! Each axis pass maps a line `x` to a low band `L_i = (x_i + x_{i+s})/2`
+//! and a high band `H_i = (x_i - x_{i+s})/2` (dilation step `s = 2^(k-1)`
+//! at level `k`, edge-clamped neighbour). The transform is *undecimated*
+//! (à trous): every sub-band keeps the input dims, so the bands stay
+//! voxel-aligned with the segmentation mask — the same property
+//! PyRadiomics gets from `pywt.swtn`. The `/2` normalisation keeps the
+//! arithmetic exact on dyadic inputs: `x_i = L_i + H_i` holds **bit-for-
+//! bit**, so decomposition followed by [`haar_reconstruct`] is exact on
+//! integer volumes (property-tested in `tests/proptests.rs`).
+
+use anyhow::{bail, Result};
+
+use super::lines::{map_lines, Axis};
+use crate::parallel::Strategy;
+use crate::volume::VoxelGrid;
+
+/// The 8 sub-band names in output order. Letter order is `[x, y, z]`:
+/// `HLL` is high-pass along x, low-pass along y and z.
+pub const SUB_BANDS: [&str; 8] = ["LLL", "HLL", "LHL", "HHL", "LLH", "HLH", "LHH", "HHH"];
+
+/// One Haar pass along `axis` with dilation `step`: low band when
+/// `high == false`, high band otherwise.
+fn haar_pass(
+    img: &VoxelGrid<f32>,
+    axis: Axis,
+    step: usize,
+    high: bool,
+    strategy: Strategy,
+    threads: usize,
+) -> VoxelGrid<f32> {
+    map_lines(img, axis, strategy, threads, |line, out| {
+        let n = line.len();
+        for (i, &a) in line.iter().enumerate() {
+            let b = line[(i + step).min(n - 1)];
+            let v = if high {
+                (a as f64 - b as f64) / 2.0
+            } else {
+                (a as f64 + b as f64) / 2.0
+            };
+            out.push(v as f32);
+        }
+    })
+}
+
+/// Decompose `img` into its 8 undecimated Haar sub-bands at `level`
+/// (dilation step `2^(level-1)`), in [`SUB_BANDS`] order.
+///
+/// Levels above 1 are meant to be fed the previous level's LLL band —
+/// the à trous construction — which [`crate::imgproc::derive_images`]
+/// does. Errors on an empty volume or a level so deep that the dilation
+/// step overflows.
+pub fn haar_decompose(
+    img: &VoxelGrid<f32>,
+    level: usize,
+    strategy: Strategy,
+    threads: usize,
+) -> Result<[VoxelGrid<f32>; 8]> {
+    if img.dims.is_empty() {
+        bail!("cannot decompose an empty volume {}", img.dims);
+    }
+    let level = level.max(1);
+    if level > 20 {
+        bail!("wavelet level {level} is out of range (max 20)");
+    }
+    let step = 1usize << (level - 1);
+    // one band per bit pattern: bit 0 = x high-pass, bit 1 = y, bit 2 = z
+    let mut bands: Vec<VoxelGrid<f32>> = vec![img.clone()];
+    for axis in Axis::ALL {
+        let mut next = Vec::with_capacity(bands.len() * 2);
+        for high in [false, true] {
+            for g in &bands {
+                next.push(haar_pass(g, axis, step, high, strategy, threads));
+            }
+        }
+        bands = next;
+    }
+    let mut it = bands.into_iter();
+    Ok(std::array::from_fn(|_| it.next().expect("8 sub-bands")))
+}
+
+/// Reconstruct the input of one [`haar_decompose`] call: with the `/2`
+/// normalisation the inverse is simply the voxel-wise sum of the 8
+/// sub-bands (`x = Σ bands`), which is exact — bit-for-bit on dyadic
+/// inputs such as integer volumes.
+pub fn haar_reconstruct(bands: &[VoxelGrid<f32>; 8]) -> VoxelGrid<f32> {
+    let mut out = VoxelGrid::zeros(bands[0].dims, bands[0].spacing);
+    let out_data = out.data_mut();
+    for band in bands {
+        for (o, &v) in out_data.iter_mut().zip(band.data()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::Dims;
+
+    fn patterned(dims: Dims) -> VoxelGrid<f32> {
+        let mut g = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..dims.z {
+            for y in 0..dims.y {
+                for x in 0..dims.x {
+                    g.set(x, y, z, ((7 * x + 11 * y + 13 * z) % 31) as f32);
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn constant_volume_concentrates_in_lll() {
+        let mut g = VoxelGrid::zeros(Dims::new(6, 5, 4), Vec3::splat(1.0));
+        g.data_mut().fill(3.5);
+        let bands = haar_decompose(&g, 1, Strategy::EqualSplit, 1).unwrap();
+        assert_eq!(bands[0], g, "LLL of a constant is the constant");
+        for (b, name) in bands.iter().zip(SUB_BANDS).skip(1) {
+            assert!(b.data().iter().all(|&v| v == 0.0), "{name} must vanish");
+        }
+    }
+
+    #[test]
+    fn known_1d_pair_decomposes_exactly() {
+        // line [6, 2]: L = [(6+2)/2, 2] = [4, 2] (edge clamp pairs the last
+        // sample with itself), H = [(6-2)/2, 0] = [2, 0]
+        let mut g = VoxelGrid::zeros(Dims::new(2, 1, 1), Vec3::splat(1.0));
+        g.set(0, 0, 0, 6.0);
+        g.set(1, 0, 0, 2.0);
+        let bands = haar_decompose(&g, 1, Strategy::EqualSplit, 1).unwrap();
+        let lll = &bands[0];
+        let hll = &bands[1];
+        assert_eq!((lll.get(0, 0, 0), lll.get(1, 0, 0)), (4.0, 2.0));
+        assert_eq!((hll.get(0, 0, 0), hll.get(1, 0, 0)), (2.0, 0.0));
+        for b in &bands[2..] {
+            assert!(b.data().iter().all(|&v| v == 0.0), "no y/z structure");
+        }
+    }
+
+    #[test]
+    fn reconstruction_is_bit_exact_on_integer_volumes() {
+        let g = patterned(Dims::new(7, 6, 5));
+        for level in 1..=2 {
+            let bands = haar_decompose(&g, level, Strategy::EqualSplit, 1).unwrap();
+            let back = haar_reconstruct(&bands);
+            assert_eq!(back, g, "level {level}");
+        }
+    }
+
+    #[test]
+    fn band_letters_match_the_axis_structure() {
+        // a field varying only along z puts all detail energy into LLH
+        let mut g = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        for z in 0..4 {
+            for y in 0..4 {
+                for x in 0..4 {
+                    g.set(x, y, z, (z * z) as f32);
+                }
+            }
+        }
+        let bands = haar_decompose(&g, 1, Strategy::EqualSplit, 1).unwrap();
+        let energy = |b: &VoxelGrid<f32>| -> f64 {
+            b.data().iter().map(|&v| (v as f64) * (v as f64)).sum()
+        };
+        let idx_llh = SUB_BANDS.iter().position(|&n| n == "LLH").unwrap();
+        assert!(energy(&bands[idx_llh]) > 0.0);
+        for (i, name) in SUB_BANDS.iter().enumerate() {
+            if i != 0 && i != idx_llh {
+                assert_eq!(energy(&bands[i]), 0.0, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn decompose_rejects_bad_inputs() {
+        let g = patterned(Dims::new(4, 4, 4));
+        assert!(haar_decompose(&g, 21, Strategy::EqualSplit, 1).is_err());
+        let empty = VoxelGrid::<f32>::zeros(Dims::new(0, 4, 4), Vec3::splat(1.0));
+        assert!(haar_decompose(&empty, 1, Strategy::EqualSplit, 1).is_err());
+    }
+}

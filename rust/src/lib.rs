@@ -24,6 +24,7 @@ pub mod experiments;
 pub mod features;
 pub mod geometry;
 pub mod gpusim;
+pub mod imgproc;
 pub mod io;
 pub mod mc;
 pub mod metrics;

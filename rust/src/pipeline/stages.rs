@@ -8,20 +8,23 @@ use anyhow::Result;
 
 use super::channel::bounded;
 use crate::config::PipelineConfig;
-use crate::dispatch::{CaseTiming, FeatureExtractor, PathTaken};
+use crate::dispatch::{CaseTiming, DerivedImageFeatures, FeatureExtractor, PathTaken};
 use crate::features::{FirstOrderFeatures, ShapeFeatures, TextureFeatures};
 use crate::io::DatasetManifest;
 use crate::metrics::Metrics;
 use crate::volume::VoxelGrid;
 
 /// Fully-processed case. `first_order`/`texture` are populated when the
-/// corresponding feature classes are enabled in the config.
+/// corresponding feature classes are enabled in the config; `derived`
+/// holds the per-derived-image feature sets (original / LoG / wavelet)
+/// when intensity classes are enabled.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
     pub case_id: String,
     pub features: ShapeFeatures,
     pub first_order: Option<FirstOrderFeatures>,
     pub texture: Option<TextureFeatures>,
+    pub derived: Vec<DerivedImageFeatures>,
     pub timing: CaseTiming,
     pub path: PathTaken,
 }
@@ -121,13 +124,16 @@ pub fn run_pipeline(
                     let msg = match res {
                         Ok(mut ex) => {
                             ex.timing.read = item.read;
+                            metrics.timer("stage.preprocess").record(ex.timing.preprocess);
                             metrics.timer("stage.mesh").record(ex.timing.marching);
                             metrics.timer("stage.diameters").record(ex.timing.diameters);
                             metrics.timer("stage.transfer").record(ex.timing.transfer);
                             // timing.texture covers the whole intensity
                             // phase; only attribute it to the texture stage
-                            // when texture matrices actually ran
-                            if ex.texture.is_some() {
+                            // when texture matrices actually ran on any
+                            // derived image (ex.texture alone mirrors just
+                            // the `original` image, which may be disabled)
+                            if ex.derived.iter().any(|d| d.texture.is_some()) {
                                 metrics.timer("stage.texture").record(ex.timing.texture);
                             }
                             metrics
@@ -141,6 +147,7 @@ pub fn run_pipeline(
                                 features: ex.features,
                                 first_order: ex.first_order,
                                 texture: ex.texture,
+                                derived: ex.derived,
                                 timing: ex.timing,
                                 path: ex.path,
                             })
@@ -227,6 +234,7 @@ mod tests {
         let want: Vec<_> = m.cases.iter().map(|e| e.case_id.as_str()).collect();
         assert_eq!(ids, want);
         assert!(report.metrics_text.contains("stage.read"));
+        assert!(report.metrics_text.contains("stage.preprocess"));
     }
 
     #[test]
@@ -337,6 +345,54 @@ mod tests {
         assert!(report.results.iter().all(|r| r.texture.is_none()));
         // first-order time must not be misattributed to a texture stage
         assert!(!report.metrics_text.contains("stage.texture"));
+    }
+
+    #[test]
+    fn derived_image_features_flow_through_the_pipeline() {
+        let m = tiny_dataset("derived");
+        let cfg = PipelineConfig {
+            feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            image_types: crate::imgproc::ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0, 2.0],
+            ..cpu_cfg()
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        for r in &report.results {
+            assert_eq!(r.derived.len(), 11, "{}", r.case_id);
+            assert!(r.derived.iter().all(|d| d.first_order.is_some()), "{}", r.case_id);
+        }
+        // multi-worker run reproduces every derived feature bit-for-bit
+        let cfg4 = PipelineConfig { feature_workers: 3, cpu_threads: 4, ..cfg.clone() };
+        let ex4 = FeatureExtractor::new(&cfg4).unwrap();
+        let r4 = run_pipeline(&m, &cfg4, &ex4).unwrap();
+        for (a, b) in report.results.iter().zip(&r4.results) {
+            assert_eq!(a.derived, b.derived, "{}", a.case_id);
+        }
+    }
+
+    #[test]
+    fn texture_metric_is_recorded_without_the_original_image_type() {
+        // image_types = "log" only: the legacy ex.texture mirror is None,
+        // but texture matrices still run on the LoG images and their time
+        // must land in stage.texture
+        let m = tiny_dataset("logonly");
+        let cfg = PipelineConfig {
+            feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            image_types: crate::imgproc::ImageTypes::parse("log").unwrap(),
+            log_sigmas: vec![1.0],
+            ..cpu_cfg()
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        for r in &report.results {
+            assert!(r.texture.is_none(), "no 'original' entry to mirror");
+            assert_eq!(r.derived.len(), 1);
+            assert!(r.derived[0].texture.is_some());
+        }
+        assert!(report.metrics_text.contains("stage.texture"));
     }
 
     #[test]

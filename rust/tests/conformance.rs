@@ -469,6 +469,194 @@ fn texture_conformance_oracle_lock() {
     }
 }
 
+// ------------------------------------- derived-image (imgproc) oracle locks
+
+/// Gaussian blob `exp(-r² / 2s²)` (s in mm) sampled on a grid, f32 like
+/// the oracle run in `ref.py`.
+fn gaussian_blob(
+    dims: Dims,
+    spacing: Vec3,
+    centre: (usize, usize, usize),
+    s: f64,
+) -> VoxelGrid<f32> {
+    let mut g = VoxelGrid::zeros(dims, spacing);
+    let c = (
+        centre.0 as f64 * spacing.x,
+        centre.1 as f64 * spacing.y,
+        centre.2 as f64 * spacing.z,
+    );
+    for z in 0..dims.z {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                let p = g.world(x, y, z);
+                let r2 = (p.x - c.0).powi(2) + (p.y - c.1).powi(2) + (p.z - c.2).powi(2);
+                g.set(x, y, z, (-r2 / (2.0 * s * s)).exp() as f32);
+            }
+        }
+    }
+    g
+}
+
+#[test]
+fn log_filter_conformance_gaussian_blob() {
+    use radpipe::imgproc::{gaussian_smooth, log_filter};
+    use radpipe::parallel::Strategy;
+
+    // 33³ blob, s = 4 mm, sigma = 2 mm. Closed forms: G_σ ∗ blob is a blob
+    // of scale t² = s² + σ² and amplitude A = (s²/t²)^{3/2}; the
+    // scale-normalised LoG at the centre is σ²·∇²(G∗f)(0) = -3σ²A/t².
+    let (s, sigma) = (4.0f64, 2.0f64);
+    let blob = gaussian_blob(Dims::new(33, 33, 33), Vec3::splat(1.0), (16, 16, 16), s);
+    let t2 = s * s + sigma * sigma;
+    let amplitude = (s * s / t2).powf(1.5);
+    let closed = -3.0 * sigma * sigma * amplitude / t2;
+
+    let sm = gaussian_smooth(&blob, sigma, Strategy::EqualSplit, 1).unwrap();
+    let got = sm.get(16, 16, 16) as f64;
+    assert!(rel_close(got, amplitude, 2e-3), "smooth centre {got} vs {amplitude}");
+    // oracle lock (ref.py::gaussian_smooth_ref on the identical volume)
+    assert!(rel_close(got, 0.7155762911, 1e-4), "smooth centre {got}");
+
+    let log = log_filter(&blob, sigma, Strategy::EqualSplit, 1).unwrap();
+    let centre = log.get(16, 16, 16) as f64;
+    assert!(rel_close(centre, closed, 2e-2), "LoG centre {centre} vs closed {closed}");
+    // oracle locks (ref.py::log_filter_ref on the identical volume)
+    assert!(rel_close(centre, -0.4300333858, 1e-4), "{centre}");
+    assert!(rel_close(log.get(16, 16, 12) as f64, -0.2113275975, 1e-4));
+    assert!(rel_close(log.get(10, 16, 16) as f64, -0.0698708147, 1e-4));
+    assert!(rel_close(log.get(16, 20, 16) as f64, -0.2113276124, 1e-4));
+
+    // anisotropic spacing: mm-denominated sigma reproduces the same
+    // physical response on a (1, 1, 2) mm grid
+    let blob2 = gaussian_blob(Dims::new(33, 33, 17), Vec3::new(1.0, 1.0, 2.0), (16, 16, 8), s);
+    let log2 = log_filter(&blob2, sigma, Strategy::EqualSplit, 1).unwrap();
+    let centre2 = log2.get(16, 16, 8) as f64;
+    assert!(rel_close(centre2, closed, 2e-2), "aniso LoG centre {centre2}");
+    assert!(rel_close(centre2, -0.4298683107, 1e-4), "{centre2}");
+}
+
+#[test]
+fn wavelet_conformance_subband_energies() {
+    use radpipe::imgproc::{haar_decompose, haar_reconstruct, SUB_BANDS};
+    use radpipe::parallel::Strategy;
+
+    // fixed 8³ pattern (3x + 5y + 7z) mod 17 — dyadic arithmetic, so the
+    // oracle (ref.py::wavelet_ref) and the Rust bands agree exactly
+    let dims = Dims::new(8, 8, 8);
+    let mut v = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..8 {
+        for y in 0..8 {
+            for x in 0..8 {
+                v.set(x, y, z, ((3 * x + 5 * y + 7 * z) % 17) as f32);
+            }
+        }
+    }
+    let bands = haar_decompose(&v, 1, Strategy::EqualSplit, 1).unwrap();
+    let golden = [
+        ("LLL", 33345.25),
+        ("HLL", 1021.8125),
+        ("LHL", 1341.1875),
+        ("HHL", 1228.25),
+        ("LLH", 2464.125),
+        ("HLH", 1210.1875),
+        ("LHH", 2908.0625),
+        ("HHH", 1264.375),
+    ];
+    for ((band, name), (gname, genergy)) in bands.iter().zip(SUB_BANDS).zip(golden) {
+        assert_eq!(name, gname);
+        let energy: f64 = band.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert!(rel_close(energy, genergy, 1e-12), "{name}: {energy} vs {genergy}");
+    }
+    // oracle value probes + exact reconstruction
+    assert_eq!(bands[0].get(4, 4, 4), 8.0);
+    assert_eq!(bands[7].get(2, 3, 1), -2.125);
+    assert_eq!(haar_reconstruct(&bands), v, "Σ bands reconstructs exactly");
+}
+
+/// Thread counts for the determinism sweeps: 1/2/4/8 by default. The CI
+/// thread-matrix leg sets `RADPIPE_TEST_THREADS` to pin the sweep to
+/// exactly that worker count (the serial reference is computed at 1
+/// thread regardless), so each leg exercises a distinct configuration
+/// instead of repeating the default list.
+fn sweep_threads() -> Vec<usize> {
+    if let Ok(v) = std::env::var("RADPIPE_TEST_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return vec![n];
+            }
+        }
+    }
+    vec![1, 2, 4, 8]
+}
+
+#[test]
+fn derived_image_determinism_sweep() {
+    use radpipe::imgproc::{derive_images, ImageTypes, ImgprocOptions};
+    use radpipe::parallel::Strategy;
+
+    // 14³ banded volume: large enough that every pass genuinely splits
+    let dims = Dims::new(14, 14, 14);
+    let mut img = VoxelGrid::zeros(dims, Vec3::new(0.9, 1.1, 1.4));
+    for z in 0..14 {
+        for y in 0..14 {
+            for x in 0..14 {
+                img.set(x, y, z, ((5 * x + 3 * y + 11 * z) % 23) as f32);
+            }
+        }
+    }
+    let base = ImgprocOptions {
+        image_types: ImageTypes::parse("all").unwrap(),
+        log_sigmas: vec![1.0, 2.5],
+        wavelet_levels: 2,
+        strategy: Strategy::EqualSplit,
+        threads: 1,
+    };
+    let want = derive_images(&img, &base).unwrap();
+    assert_eq!(want.len(), 19, "original + 2 LoG + 16 wavelet");
+    for strategy in Strategy::ALL {
+        for &threads in &sweep_threads() {
+            let opts = ImgprocOptions { strategy, threads, ..base.clone() };
+            let got = derive_images(&img, &opts).unwrap();
+            assert_eq!(got, want, "{strategy:?} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn derived_feature_determinism_sweep() {
+    use radpipe::parallel::Strategy;
+
+    // end-to-end: every derived image's first-order + texture features are
+    // bit-identical for every strategy × thread count
+    let mask = sphere_mask(14, 5.0, Vec3::new(0.8, 0.8, 2.0));
+    let extract = |threads: usize, strategy: Strategy| {
+        let cfg = PipelineConfig {
+            backend: Backend::Cpu,
+            cpu_threads: threads,
+            strategy,
+            feature_classes: radpipe::config::FeatureClasses::parse("all").unwrap(),
+            image_types: radpipe::imgproc::ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0, 2.0],
+            ..Default::default()
+        };
+        FeatureExtractor::new(&cfg).unwrap().execute_mask(&mask).unwrap()
+    };
+    let want = extract(1, Strategy::EqualSplit);
+    assert_eq!(want.derived.len(), 11);
+    assert!(want.derived.iter().all(|d| d.first_order.is_some() && d.texture.is_some()));
+    for strategy in Strategy::ALL {
+        for &threads in &sweep_threads() {
+            let got = extract(threads, strategy);
+            assert_eq!(got.derived, want.derived, "{strategy:?} threads={threads}");
+            assert_eq!(
+                got.features.named(),
+                want.features.named(),
+                "{strategy:?} threads={threads}: shape must not drift either"
+            );
+        }
+    }
+}
+
 // ------------------------------------- engine-backed batching (artifacts)
 
 #[test]

@@ -4,6 +4,7 @@
 
 use radpipe::features::{brute_force_diameters, Diameters};
 use radpipe::geometry::{Aabb, Vec3};
+use radpipe::imgproc::{haar_decompose, haar_reconstruct, resample_image, resample_mask};
 use radpipe::mc::{mesh_roi, planar_diameters_grouped};
 use radpipe::parallel::{compute_diameters, Strategy};
 use radpipe::pipeline::bounded;
@@ -260,6 +261,108 @@ fn prop_diameters_merge_commutative_idempotent() {
     forall("merge-algebra", &pair, 50, |(a, b)| {
         a.merge(b).as_array() == b.merge(a).as_array()
             && a.merge(a).as_array() == a.as_array()
+    });
+}
+
+/// Random trilinear polynomial field `Σ c_abc · x^a y^b z^c` (a,b,c ≤ 1)
+/// with small integer coefficients, sampled on a grid with dyadic spacing
+/// — every arithmetic step is exact in f32/f64, so trilinear resampling
+/// must reproduce the field exactly at the resampled positions.
+fn trilinear_field_gen() -> Gen<(VoxelGrid<f32>, [f64; 8], Vec3)> {
+    Gen::new(|rng: &mut Pcg32, _| {
+        let dy = [0.25, 0.5, 1.0, 2.0];
+        let spacing = Vec3::new(
+            dy[rng.below(4) as usize],
+            dy[rng.below(4) as usize],
+            dy[rng.below(4) as usize],
+        );
+        let new_spacing = Vec3::new(
+            dy[rng.below(4) as usize],
+            dy[rng.below(4) as usize],
+            dy[rng.below(4) as usize],
+        );
+        let d = 3 + (rng.below(6) as usize);
+        let c: [f64; 8] = std::array::from_fn(|_| (rng.below(9) as f64) - 4.0);
+        let mut g = VoxelGrid::zeros(Dims::new(d, d, d), spacing);
+        for z in 0..d {
+            for y in 0..d {
+                for x in 0..d {
+                    let p = g.world(x, y, z);
+                    g.set(x, y, z, eval_trilinear(&c, p) as f32);
+                }
+            }
+        }
+        (g, c, new_spacing)
+    })
+}
+
+fn eval_trilinear(c: &[f64; 8], p: Vec3) -> f64 {
+    c[0] + c[1] * p.x
+        + c[2] * p.y
+        + c[3] * p.z
+        + c[4] * p.x * p.y
+        + c[5] * p.x * p.z
+        + c[6] * p.y * p.z
+        + c[7] * p.x * p.y * p.z
+}
+
+#[test]
+fn prop_trilinear_resample_reproduces_trilinear_fields() {
+    forall("trilinear-exact", &trilinear_field_gen(), 60, |(g, c, new_spacing)| {
+        let out = resample_image(g, *new_spacing, Strategy::EqualSplit, 2).unwrap();
+        for z in 0..out.dims.z {
+            for y in 0..out.dims.y {
+                for x in 0..out.dims.x {
+                    let want = eval_trilinear(c, out.world(x, y, z));
+                    let got = out.get(x, y, z) as f64;
+                    if (got - want).abs() > 1e-9 * want.abs().max(1.0) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_resample_at_source_spacing_is_identity() {
+    forall("resample-identity", &trilinear_field_gen(), 40, |(g, _, _)| {
+        let img = resample_image(g, g.spacing, Strategy::EqualSplit, 3).unwrap();
+        if img != *g {
+            return false;
+        }
+        // nearest-neighbour mask path: also the bit-exact identity
+        let mask = g.map(|v| (v as i64 & 1) as u8);
+        resample_mask(&mask, mask.spacing, Strategy::EqualSplit, 3).unwrap() == mask
+    });
+}
+
+/// Random small integer volume (values exact in f32 and dyadic through
+/// the Haar `/2` normalisation).
+fn integer_volume_gen() -> Gen<VoxelGrid<f32>> {
+    Gen::new(|rng: &mut Pcg32, size: usize| {
+        let dx = 2 + (rng.next_u32() as usize) % (size / 4 + 6).min(9);
+        let dy = 2 + (rng.next_u32() as usize) % 7;
+        let dz = 1 + (rng.next_u32() as usize) % 7;
+        let mut g = VoxelGrid::zeros(Dims::new(dx, dy, dz), Vec3::splat(1.0));
+        for v in g.data_mut() {
+            *v = rng.below(256) as f32;
+        }
+        g
+    })
+}
+
+#[test]
+fn prop_haar_roundtrip_is_exact_on_integer_volumes() {
+    forall("haar-roundtrip", &integer_volume_gen(), 60, |g| {
+        for level in 1..=2 {
+            let bands = haar_decompose(g, level, Strategy::LocalAccumulators, 2).unwrap();
+            if haar_reconstruct(&bands) != *g {
+                return false;
+            }
+        }
+        true
     });
 }
 
