@@ -12,7 +12,10 @@ mod common;
 use radpipe::config::{Backend, PipelineConfig};
 use radpipe::dispatch::FeatureExtractor;
 use radpipe::geometry::Vec3;
-use radpipe::imgproc::{gaussian_smooth, haar_decompose, log_filter};
+use radpipe::imgproc::{
+    derive_images, for_each_derived_image, gaussian_smooth, haar_decompose, log_filter,
+    peak_derived_bytes, reset_peak_derived_bytes, DerivedImage, ImageTypes, ImgprocOptions,
+};
 use radpipe::parallel::Strategy;
 use radpipe::report::Table;
 use radpipe::testkit::Pcg32;
@@ -160,6 +163,92 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("single-core machine: speedup assertion skipped");
     }
+
+    // ---- streaming vs materialised derived-image flow -------------------
+    let opts = ImgprocOptions {
+        image_types: ImageTypes::parse("all")?,
+        log_sigmas: vec![1.0, 2.0],
+        wavelet_levels: 2,
+        strategy: Strategy::LocalAccumulators,
+        threads,
+    };
+    let n_derived = opts.image_types.image_count(opts.log_sigmas.len(), opts.wavelet_levels);
+    let vol_bytes = (img.dims.len() * std::mem::size_of::<f32>()) as u64;
+    let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
+    common::banner(&format!(
+        "STREAMING VS MATERIALISED — {n}³ volume, {n_derived} derived images \
+         (all types, 2 sigmas, 2 wavelet levels), one volume = {:.1} MiB",
+        mib(vol_bytes)
+    ));
+
+    // the visitor must emit exactly the collect-based list, bit for bit
+    let want = derive_images(&img, &opts)?;
+    let mut got: Vec<DerivedImage> = Vec::new();
+    let stats = for_each_derived_image(&img, &opts, |d| {
+        got.push(DerivedImage { name: d.name, image: d.image.clone() });
+        Ok(())
+    })?;
+    anyhow::ensure!(got == want, "streaming must match materialised bit-for-bit");
+    drop(got);
+    drop(want);
+
+    reset_peak_derived_bytes();
+    let (t_mat, _) = common::measure(iters, || {
+        std::hint::black_box(derive_images(&img, &opts).unwrap());
+    });
+    let peak_mat = peak_derived_bytes();
+
+    reset_peak_derived_bytes();
+    let mut sink = 0.0f64;
+    let (t_stream, _) = common::measure(iters, || {
+        // touch each volume the way a feature pass would, then drop it
+        for_each_derived_image(&img, &opts, |d| {
+            sink += d.image.data()[d.image.dims.len() / 2] as f64;
+            Ok(())
+        })
+        .unwrap();
+    });
+    let peak_stream = peak_derived_bytes();
+    std::hint::black_box(sink);
+
+    let mut t = Table::new(vec!["mode", "wall[ms]", "peak derived[MiB]", "volumes"]);
+    t.row(vec![
+        "materialised".to_string(),
+        format!("{:.1}", t_mat * 1e3),
+        format!("{:.1}", mib(peak_mat)),
+        format!("{:.1}", peak_mat as f64 / vol_bytes as f64),
+    ]);
+    t.row(vec![
+        "streaming".to_string(),
+        format!("{:.1}", t_stream * 1e3),
+        format!("{:.1}", mib(peak_stream)),
+        format!("{:.1}", peak_stream as f64 / vol_bytes as f64),
+    ]);
+    print!("{}", t.to_text());
+    println!(
+        "streaming caps residency at {:.1} volumes (target <= 3) vs {:.1} materialised",
+        peak_stream as f64 / vol_bytes as f64,
+        peak_mat as f64 / vol_bytes as f64
+    );
+    // the memory contract, measured (the bench runs single-threaded, so
+    // the process-wide meter is exactly this leg's residency)
+    anyhow::ensure!(
+        stats.peak_resident_bytes <= 3 * vol_bytes,
+        "streaming residency {} bytes exceeds 3 volumes ({})",
+        stats.peak_resident_bytes,
+        3 * vol_bytes
+    );
+    anyhow::ensure!(
+        peak_stream <= 3 * vol_bytes,
+        "streaming peak {} bytes exceeds 3 volumes ({})",
+        peak_stream,
+        3 * vol_bytes
+    );
+    anyhow::ensure!(
+        peak_mat >= n_derived as u64 * vol_bytes,
+        "materialised peak {} bytes should cover the whole {n_derived}-volume bank",
+        peak_mat
+    );
 
     // ---- end-to-end cost multiplier per added image type ----------------
     let roi = if common::quick() { 24 } else { 40 };

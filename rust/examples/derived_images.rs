@@ -44,6 +44,21 @@ fn main() -> anyhow::Result<()> {
         println!("  {:<20} range [{lo:8.2}, {hi:8.2}]", d.name);
     }
 
+    // the streaming visitor: identical images, but at most ~2 resident
+    // volumes — this is what the extractor itself uses
+    let stats = radpipe::imgproc::for_each_derived_image(&image, &opts, |d| {
+        // a real consumer extracts features here, before the volume drops
+        let _ = d.image.data().len();
+        Ok(())
+    })?;
+    println!(
+        "\nstreaming visitor: {} images, peak resident {:.2} MiB \
+         (materialised bank above holds all {} volumes at once)",
+        stats.images,
+        stats.peak_resident_bytes as f64 / (1024.0 * 1024.0),
+        derived.len()
+    );
+
     // end-to-end: features per derived image through the extractor
     let cfg = PipelineConfig {
         backend: radpipe::config::Backend::Cpu,

@@ -479,6 +479,43 @@ mod tests {
     }
 
     #[test]
+    fn wavelet_levels_are_validated_at_the_cli_boundary() {
+        // 0 and > MAX_WAVELET_LEVELS are rejected here with a clear
+        // located message — never silently clamped downstream
+        let dir = std::env::temp_dir().join("radpipe_cli_wavelet_levels_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        for bad in ["0", "9"] {
+            let err = dispatch(argv(&[
+                "extract", "--data", dir.to_str().unwrap(), "--wavelet-levels", bad,
+            ]))
+            .unwrap_err();
+            assert!(
+                err.to_string().contains("--wavelet-levels"),
+                "level {bad}: {err:#}"
+            );
+        }
+        // the boundary of the valid range still works end-to-end
+        dispatch(argv(&[
+            "extract",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "cpu",
+            "--features",
+            "firstorder",
+            "--image-types",
+            "wavelet",
+            "--wavelet-levels",
+            "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
     fn extract_accepts_batching_flags() {
         let dir = std::env::temp_dir().join("radpipe_cli_batch_test");
         let _ = std::fs::remove_dir_all(&dir);

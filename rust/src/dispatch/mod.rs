@@ -23,7 +23,7 @@ use crate::features::{
     compute_texture, FirstOrderFeatures, ShapeFeatures, TextureFeatures, TextureOptions,
 };
 use crate::geometry::Vec3;
-use crate::imgproc::{derive_images, ImgprocOptions};
+use crate::imgproc::{for_each_derived_image, ImgprocOptions};
 use crate::mc::{mesh_roi, planar_diameters_grouped};
 use crate::parallel::{compute_diameters, Strategy};
 use crate::runtime::{
@@ -382,33 +382,42 @@ impl FeatureExtractor {
         timing.derive = t.elapsed();
 
         let derived = if self.classes.needs_image() && mask_stats.count > 0 {
-            // derived-image construction is preprocessing; feature
-            // extraction over each derived image is the texture phase
+            // Stream one derived image at a time through feature
+            // extraction: each volume is filtered, consumed and dropped
+            // inside the visitor callback, so peak derived-image residency
+            // stays at ~2 crop-sized volumes however many image types /
+            // wavelet levels are configured. Filtering time (between
+            // callbacks) is preprocessing; the callbacks themselves are
+            // the texture phase.
             let t = Instant::now();
             let cropped_image = match &image_c {
                 Some(img) => crop_box(&**img, offset, cropped.dims),
                 None => crate::synth::synthesize_image(&cropped, SYNTH_IMAGE_SEED),
             };
-            let derived_images = derive_images(&cropped_image, &self.imgproc_options())?;
-            timing.preprocess += t.elapsed();
-
-            let t = Instant::now();
-            let mut derived = Vec::with_capacity(derived_images.len());
-            for d in derived_images {
+            let opts = self.imgproc_options();
+            let mut derived = Vec::with_capacity(
+                opts.image_types.image_count(opts.log_sigmas.len(), opts.wavelet_levels),
+            );
+            let mut feature_time = Duration::ZERO;
+            for_each_derived_image(&cropped_image, &opts, |d| {
+                let ft = Instant::now();
                 let first_order = if self.classes.first_order {
-                    compute_first_order_with(&d.image, &cropped, self.discretization())
+                    compute_first_order_with(d.image, &cropped, self.discretization())
                 } else {
                     None
                 };
                 let texture = if self.classes.texture() {
-                    compute_texture(&d.image, &cropped, &self.texture_options())
+                    compute_texture(d.image, &cropped, &self.texture_options())
                         .with_context(|| format!("texture features of {}", d.name))?
                 } else {
                     None
                 };
                 derived.push(DerivedImageFeatures { image: d.name, first_order, texture });
-            }
-            timing.texture = t.elapsed();
+                feature_time += ft.elapsed();
+                Ok(())
+            })?;
+            timing.preprocess += t.elapsed().saturating_sub(feature_time);
+            timing.texture = feature_time;
             derived
         } else {
             Vec::new()
@@ -810,6 +819,69 @@ mod tests {
         for strategy in Strategy::ALL {
             let got = mk(4, strategy);
             assert_eq!(got, want, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn log_only_legacy_mirrors_are_empty_not_aliased() {
+        // image_types = "log": there is no `original` entry, so the legacy
+        // first_order/texture mirrors must be None — selecting entry 0
+        // would silently alias a LoG image
+        let cfg = PipelineConfig {
+            image_types: crate::imgproc::ImageTypes::parse("log").unwrap(),
+            log_sigmas: vec![1.0],
+            ..all_classes_cfg(1)
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let out = ex.execute_mask(&sphere_mask(12, 4.0)).unwrap();
+        assert_eq!(out.derived.len(), 1);
+        assert_eq!(out.derived[0].image, "log-sigma-1-0-mm");
+        assert!(out.derived[0].first_order.is_some());
+        assert!(out.first_order.is_none(), "mirror must not alias a LoG image");
+        assert!(out.texture.is_none());
+    }
+
+    #[test]
+    fn wavelet_only_legacy_mirrors_are_empty_not_aliased() {
+        let cfg = PipelineConfig {
+            image_types: crate::imgproc::ImageTypes::parse("wavelet").unwrap(),
+            ..all_classes_cfg(1)
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let out = ex.execute_mask(&sphere_mask(12, 4.0)).unwrap();
+        assert_eq!(out.derived.len(), 8);
+        assert_eq!(out.derived[0].image, "wavelet-LLL");
+        assert!(out.derived.iter().all(|d| d.texture.is_some()));
+        assert!(out.first_order.is_none(), "mirror must not alias wavelet-LLL");
+        assert!(out.texture.is_none());
+    }
+
+    #[test]
+    fn streaming_extraction_matches_the_materialised_flow() {
+        // the streamed per-image features must equal recomputing them from
+        // the collect-based derive_images bank (names and bits)
+        use crate::imgproc::derive_images;
+        let mask = sphere_mask(12, 4.0);
+        let cfg = PipelineConfig {
+            image_types: crate::imgproc::ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.5],
+            wavelet_levels: 2,
+            ..all_classes_cfg(1)
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let out = ex.execute_mask(&mask).unwrap();
+        assert_eq!(out.derived.len(), 18, "original + 1 LoG + 16 wavelet");
+
+        let (cropped, _) = crate::volume::crop_to_roi(&mask);
+        let img = crate::synth::synthesize_image(&cropped, SYNTH_IMAGE_SEED);
+        let bank = derive_images(&img, &ex.imgproc_options()).unwrap();
+        assert_eq!(bank.len(), out.derived.len());
+        for (got, d) in out.derived.iter().zip(&bank) {
+            assert_eq!(got.image, d.name);
+            let fo = compute_first_order_with(&d.image, &cropped, ex.discretization());
+            assert_eq!(got.first_order, fo, "{}", d.name);
+            let tex = compute_texture(&d.image, &cropped, &ex.texture_options()).unwrap();
+            assert_eq!(got.texture, tex, "{}", d.name);
         }
     }
 

@@ -1,0 +1,147 @@
+//! Peak-resident derived-image byte accounting.
+//!
+//! The streaming visitor ([`crate::imgproc::for_each_derived_image`]) caps
+//! how many derived volumes are alive at once; this module is the meter
+//! that proves it. Two levels of accounting:
+//!
+//! * a **process-wide high-water mark** (atomics) that every derivation —
+//!   streaming or collect-based — feeds; the pipeline snapshots it into
+//!   the `mem.peak_derived_bytes` metric at the end of a run;
+//! * a per-call [`ResidentTally`] the visitor threads through its own
+//!   volumes, returned as `peak_resident_bytes` in
+//!   [`crate::imgproc::DeriveStats`] so tests can assert the streaming
+//!   residency cap without interference from concurrently-running cases.
+//!
+//! Only whole derived-image volumes are tracked (the in-flight image, the
+//! multi-level wavelet LLL seed, and the collected clones of the
+//! materialised wrapper). Per-pass filter scratch — the line chunks of
+//! [`crate::imgproc::lines`], the LoG f64 accumulator — is bounded by a
+//! few volume-equivalents *per case* regardless of how many derived
+//! images are configured, which is exactly the property the metric is
+//! there to watch, so it is excluded by design.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::volume::VoxelGrid;
+
+static CURRENT: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// Payload bytes of one derived f32 volume.
+pub(crate) fn grid_bytes(g: &VoxelGrid<f32>) -> u64 {
+    (g.dims.len() * std::mem::size_of::<f32>()) as u64
+}
+
+fn note_alloc(bytes: u64) {
+    let now = CURRENT.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    PEAK.fetch_max(now, Ordering::Relaxed);
+}
+
+fn note_free(bytes: u64) {
+    CURRENT.fetch_sub(bytes, Ordering::Relaxed);
+}
+
+/// Process-wide high-water mark of derived-image bytes resident at once,
+/// in bytes, since the last [`reset_peak_derived_bytes`]. Concurrent
+/// cases (e.g. `feature_workers > 1`) sum into the same meter, so this is
+/// the whole-process derived-image footprint — what actually bounds a
+/// budget device.
+pub fn peak_derived_bytes() -> u64 {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset the high-water mark to the currently-resident total (not zero:
+/// volumes held by in-flight cases stay accounted). `run_pipeline` calls
+/// this at startup so the final gauge describes that run.
+pub fn reset_peak_derived_bytes() {
+    PEAK.store(CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Single-owner tally of the volumes one derivation holds. Mirrors every
+/// hold/release into the process-wide meter; `Drop` releases whatever is
+/// still held, so an early error cannot leak global accounting.
+#[derive(Default)]
+pub(crate) struct ResidentTally {
+    current: u64,
+    peak: u64,
+}
+
+impl ResidentTally {
+    /// Account `g` as resident; returns the held byte count for the
+    /// matching [`ResidentTally::release`].
+    pub(crate) fn hold(&mut self, g: &VoxelGrid<f32>) -> u64 {
+        let bytes = grid_bytes(g);
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+        note_alloc(bytes);
+        bytes
+    }
+
+    pub(crate) fn release(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.current, "release more than held");
+        self.current -= bytes;
+        note_free(bytes);
+    }
+
+    /// Highest concurrently-held byte count this tally has seen.
+    pub(crate) fn peak(&self) -> u64 {
+        self.peak
+    }
+}
+
+impl Drop for ResidentTally {
+    fn drop(&mut self) {
+        if self.current > 0 {
+            note_free(self.current);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::Dims;
+
+    // NB: the process-wide CURRENT/PEAK atomics are shared with every
+    // concurrently-running test that derives images (dispatch, pipeline),
+    // so only the per-call tally is asserted exactly here; the global
+    // meter is exercised end-to-end by `benches/bench_imgproc.rs` (a
+    // single-threaded process) and the pipeline metric test.
+
+    #[test]
+    fn tally_tracks_a_high_water_mark() {
+        let g = VoxelGrid::<f32>::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        let bytes = grid_bytes(&g);
+        assert_eq!(bytes, 4 * 4 * 4 * 4);
+
+        let mut tally = ResidentTally::default();
+        let a = tally.hold(&g);
+        let b = tally.hold(&g);
+        assert_eq!(tally.peak(), 2 * bytes);
+        tally.release(a);
+        let c = tally.hold(&g);
+        assert_eq!(tally.peak(), 2 * bytes, "peak is a high-water mark");
+        tally.release(b);
+        tally.release(c);
+        assert_eq!(tally.peak(), 2 * bytes);
+    }
+
+    #[test]
+    fn dropping_a_loaded_tally_is_safe() {
+        // early-error path: a tally dropped with volumes still held must
+        // release its outstanding global bytes exactly once (Drop) — run
+        // many cycles so a leak would compound into an observable drift
+        let g = VoxelGrid::<f32>::zeros(Dims::new(8, 8, 8), Vec3::splat(1.0));
+        for _ in 0..64 {
+            let mut tally = ResidentTally::default();
+            tally.hold(&g);
+            tally.hold(&g);
+        }
+        // the paired-release path agrees with Drop about what was held
+        let mut tally = ResidentTally::default();
+        let a = tally.hold(&g);
+        tally.release(a);
+        assert_eq!(tally.current, 0);
+    }
+}

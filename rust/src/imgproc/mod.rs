@@ -16,6 +16,19 @@
 //!   producing the 8 LLL…HHH sub-bands (same dims as the input, so every
 //!   band stays voxel-aligned with the segmentation mask).
 //!
+//! # Streaming memory model
+//!
+//! Derived images feed the extractor through the streaming visitor
+//! [`for_each_derived_image`]: one volume is produced, handed to the
+//! callback, and dropped before the next is built, so peak derived-image
+//! residency is ≤ 2 crop-sized volumes at `wavelet_levels ≤ 2` and ≤ 3
+//! beyond (in-flight image + up to two wavelet LLL seeds at intermediate
+//! levels) **regardless of how many derived images are configured**. [`derive_images`] is the thin collect-based wrapper
+//! for callers that genuinely need the whole bank at once; both paths
+//! emit bit-identical volumes in the same order, and both feed the
+//! process-wide [`peak_derived_bytes`] meter behind the pipeline's
+//! `mem.peak_derived_bytes` metric.
+//!
 //! # Determinism contract
 //!
 //! Every pass decomposes its work into *lines* (or output slices) handed
@@ -29,16 +42,18 @@
 
 mod filters;
 mod lines;
+mod mem;
 mod resample;
 mod wavelet;
 
 pub use filters::{gaussian_kernel, gaussian_smooth, log_filter, MAX_KERNEL_RADIUS};
 pub use lines::Axis;
+pub use mem::{peak_derived_bytes, reset_peak_derived_bytes};
 pub use resample::{
     resample_image, resample_image_to_grid, resample_mask, resampled_dims,
     MAX_RESAMPLED_VOXELS,
 };
-pub use wavelet::{haar_decompose, haar_reconstruct, SUB_BANDS};
+pub use wavelet::{haar_band, haar_decompose, haar_reconstruct, SUB_BANDS};
 
 use anyhow::{bail, Result};
 
@@ -109,6 +124,9 @@ impl ImageTypes {
     }
 
     /// Number of derived images this selection produces per case.
+    /// `wavelet_levels == 0` contributes zero images — it is rejected at
+    /// the config/CLI boundary and by [`for_each_derived_image`], never
+    /// silently clamped.
     pub fn image_count(&self, n_sigmas: usize, wavelet_levels: usize) -> usize {
         let mut n = 0;
         if self.original {
@@ -118,7 +136,7 @@ impl ImageTypes {
             n += n_sigmas;
         }
         if self.wavelet {
-            n += 8 * wavelet_levels.max(1);
+            n += 8 * wavelet_levels;
         }
         n
     }
@@ -181,49 +199,152 @@ pub fn wavelet_band_name(level: usize, band: &str) -> String {
     }
 }
 
+/// Borrowed view of one derived image, handed to the
+/// [`for_each_derived_image`] callback. The volume lives only for the
+/// duration of the call (the `original` image is the caller's own volume,
+/// borrowed — never cloned); clone it only if you genuinely need it to
+/// outlive the callback, because that is exactly the residency the
+/// streaming visitor exists to avoid.
+#[derive(Debug)]
+pub struct DerivedImageRef<'a> {
+    /// PyRadiomics-convention image-type prefix (see [`DerivedImage`]).
+    pub name: String,
+    /// The derived volume, resident only for this callback.
+    pub image: &'a VoxelGrid<f32>,
+}
+
+/// What one [`for_each_derived_image`] call did: how many images it
+/// emitted and the high-water mark of derived-image bytes it held at
+/// once (the in-flight volume plus, for multi-level wavelets, one LLL
+/// seed — two at intermediate levels when `wavelet_levels ≥ 3` — the
+/// `original` image is borrowed and counts zero).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeriveStats {
+    /// Derived images emitted (== `image_count` on success).
+    pub images: usize,
+    /// Peak bytes of derived volumes this call held concurrently.
+    pub peak_resident_bytes: u64,
+}
+
+/// Stream every enabled derived image of `image` through `f`, one at a
+/// time, in the fixed order `original`, then one LoG image per sigma
+/// (config order), then the 8 wavelet sub-bands of each level
+/// ([`SUB_BANDS`] order) — the exact list [`derive_images`] collects.
+///
+/// Unlike the collect-based wrapper, peak residency does **not** scale
+/// with the number of derived images: the `original` is borrowed (not
+/// cloned), each LoG image is dropped before the next sigma starts, and
+/// wavelet bands are recomputed per band ([`haar_band`]) so only the
+/// current band plus the LLL seed(s) are alive — ≤ 2 crop-sized volumes
+/// at `wavelet_levels ≤ 2`, ≤ 3 at deeper levels (an intermediate level
+/// holds both the previous and the next level's seed), vs. the
+/// full bank (≈ 19 volumes at `all` × 2 levels) when materialised. The
+/// per-band recomputation applies the same x → y → z pass composition as
+/// [`haar_decompose`], so every emitted volume is **bit-identical** to
+/// the materialised path for every strategy and thread count.
+///
+/// Errors on invalid options (empty sigma list, `wavelet_levels == 0` —
+/// both already rejected at the config/CLI boundary) before emitting
+/// anything; callback errors abort the stream and propagate.
+pub fn for_each_derived_image<F>(
+    image: &VoxelGrid<f32>,
+    opts: &ImgprocOptions,
+    mut f: F,
+) -> Result<DeriveStats>
+where
+    F: FnMut(DerivedImageRef<'_>) -> Result<()>,
+{
+    if opts.image_types.log && opts.log_sigmas.is_empty() {
+        bail!("image type 'log' is enabled but log_sigmas is empty");
+    }
+    if opts.image_types.wavelet && opts.wavelet_levels == 0 {
+        bail!(
+            "wavelet_levels must be >= 1 (0 is rejected at the config/CLI \
+             boundary; reaching the image-derivation visitor with it is a bug)"
+        );
+    }
+
+    let mut tally = mem::ResidentTally::default();
+    let mut images = 0usize;
+
+    if opts.image_types.original {
+        f(DerivedImageRef { name: "original".to_string(), image })?;
+        images += 1;
+    }
+
+    if opts.image_types.log {
+        for &sigma in &opts.log_sigmas {
+            let filtered = log_filter(image, sigma, opts.strategy, opts.threads)?;
+            let held = tally.hold(&filtered);
+            f(DerivedImageRef { name: log_sigma_name(sigma), image: &filtered })?;
+            tally.release(held);
+            images += 1;
+        }
+    }
+
+    if opts.image_types.wavelet {
+        let levels = opts.wavelet_levels;
+        // previous level's LLL band (and its held byte count) — the à
+        // trous seed; level 1 decomposes the borrowed input directly
+        let mut seed: Option<(VoxelGrid<f32>, u64)> = None;
+        for level in 1..=levels {
+            let mut next_seed: Option<(VoxelGrid<f32>, u64)> = None;
+            {
+                let input: &VoxelGrid<f32> = match &seed {
+                    Some((grid, _)) => grid,
+                    None => image,
+                };
+                for (band, name) in SUB_BANDS.into_iter().enumerate() {
+                    let vol = haar_band(input, level, band, opts.strategy, opts.threads)?;
+                    let held = tally.hold(&vol);
+                    f(DerivedImageRef {
+                        name: wavelet_band_name(level, name),
+                        image: &vol,
+                    })?;
+                    images += 1;
+                    if band == 0 && level < levels {
+                        // LLL stays resident: it seeds the next level
+                        next_seed = Some((vol, held));
+                    } else {
+                        tally.release(held);
+                    }
+                }
+            }
+            if let Some((_, held)) = seed.take() {
+                tally.release(held);
+            }
+            seed = next_seed;
+        }
+    }
+
+    Ok(DeriveStats { images, peak_resident_bytes: tally.peak() })
+}
+
 /// Produce every enabled derived image of `image`, in a fixed order:
 /// `original`, then one LoG image per sigma (config order), then the 8
 /// wavelet sub-bands of each level ([`SUB_BANDS`] order).
 ///
-/// All filtering runs through the deterministic parallel engine (see the
-/// module docs); the output is bit-identical for any strategy / thread
-/// count. Errors on invalid sigmas and degenerate volumes.
+/// A thin collect-based wrapper over [`for_each_derived_image`]: same
+/// order, same bits — but it clones every emitted volume into the
+/// returned `Vec`, so peak residency is the whole bank (tracked by
+/// [`peak_derived_bytes`]). Prefer the streaming visitor on memory-bound
+/// devices. Errors on invalid sigmas and degenerate volumes.
 pub fn derive_images(
     image: &VoxelGrid<f32>,
     opts: &ImgprocOptions,
 ) -> Result<Vec<DerivedImage>> {
-    let mut out = Vec::with_capacity(
+    let mut out: Vec<DerivedImage> = Vec::with_capacity(
         opts.image_types.image_count(opts.log_sigmas.len(), opts.wavelet_levels),
     );
-    if opts.image_types.original {
-        out.push(DerivedImage { name: "original".to_string(), image: image.clone() });
-    }
-    if opts.image_types.log {
-        if opts.log_sigmas.is_empty() {
-            bail!("image type 'log' is enabled but log_sigmas is empty");
-        }
-        for &sigma in &opts.log_sigmas {
-            let filtered = log_filter(image, sigma, opts.strategy, opts.threads)?;
-            out.push(DerivedImage { name: log_sigma_name(sigma), image: filtered });
-        }
-    }
-    if opts.image_types.wavelet {
-        let levels = opts.wavelet_levels.max(1);
-        let mut input = image.clone();
-        for level in 1..=levels {
-            let bands = haar_decompose(&input, level, opts.strategy, opts.threads)?;
-            // the LLL band seeds the next level before the move below
-            if level < levels {
-                input = bands[0].clone();
-            }
-            for (band, name) in bands.into_iter().zip(SUB_BANDS) {
-                out.push(DerivedImage {
-                    name: wavelet_band_name(level, name),
-                    image: band,
-                });
-            }
-        }
-    }
+    // account the collected clones so `mem.peak_derived_bytes` reflects
+    // the materialised bank (released when the tally drops at return —
+    // ownership passes to the caller)
+    let mut tally = mem::ResidentTally::default();
+    for_each_derived_image(image, opts, |d| {
+        tally.hold(d.image);
+        out.push(DerivedImage { name: d.name, image: d.image.clone() });
+        Ok(())
+    })?;
     Ok(out)
 }
 
@@ -321,6 +442,115 @@ mod tests {
         };
         let err = derive_images(&img, &opts).unwrap_err();
         assert!(format!("{err:#}").contains("log_sigmas"));
+    }
+
+    #[test]
+    fn wavelet_levels_zero_is_an_error_not_a_clamp() {
+        // 0 is rejected at the config/CLI boundary; the derivation layer
+        // must refuse it too instead of silently computing one level
+        let img = patterned(4);
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("wavelet").unwrap(),
+            wavelet_levels: 0,
+            threads: 1,
+            ..Default::default()
+        };
+        let err = derive_images(&img, &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("wavelet_levels"), "{err:#}");
+        let err = for_each_derived_image(&img, &opts, |_| Ok(())).unwrap_err();
+        assert!(format!("{err:#}").contains("wavelet_levels"), "{err:#}");
+        // image_count no longer clamps either
+        assert_eq!(opts.image_types.image_count(0, 0), 0);
+        assert_eq!(opts.image_types.image_count(0, 2), 16);
+    }
+
+    #[test]
+    fn visitor_streams_the_materialised_list_bit_for_bit() {
+        let img = patterned(10);
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0, 2.0],
+            wavelet_levels: 2,
+            threads: 1,
+            ..Default::default()
+        };
+        let want = derive_images(&img, &opts).unwrap();
+        assert_eq!(want.len(), 19, "original + 2 LoG + 16 wavelet");
+        let mut got: Vec<DerivedImage> = Vec::new();
+        let stats = for_each_derived_image(&img, &opts, |d| {
+            got.push(DerivedImage { name: d.name, image: d.image.clone() });
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.images, 19);
+        // residency cap: in-flight volume + LLL seed, never the full bank
+        let vol_bytes = (img.dims.len() * std::mem::size_of::<f32>()) as u64;
+        assert!(
+            stats.peak_resident_bytes <= 2 * vol_bytes,
+            "streaming held {} bytes, cap is {}",
+            stats.peak_resident_bytes,
+            2 * vol_bytes
+        );
+    }
+
+    #[test]
+    fn deep_wavelet_levels_cap_at_three_resident_volumes() {
+        // at wavelet_levels >= 3 an intermediate level holds the previous
+        // AND the next level's LLL seed next to the in-flight band — the
+        // documented ≤ 3-volume ceiling, still independent of depth
+        let img = patterned(12);
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("wavelet").unwrap(),
+            wavelet_levels: 3,
+            threads: 1,
+            ..Default::default()
+        };
+        let stats = for_each_derived_image(&img, &opts, |_| Ok(())).unwrap();
+        assert_eq!(stats.images, 24);
+        let vol_bytes = (img.dims.len() * std::mem::size_of::<f32>()) as u64;
+        assert!(stats.peak_resident_bytes > 2 * vol_bytes, "two seeds + band");
+        assert!(stats.peak_resident_bytes <= 3 * vol_bytes);
+    }
+
+    #[test]
+    fn visitor_borrows_the_original_image() {
+        // original-only: no derived volume is ever allocated or held
+        let img = patterned(6);
+        let opts = ImgprocOptions { threads: 1, ..Default::default() };
+        let mut seen = 0usize;
+        let stats = for_each_derived_image(&img, &opts, |d| {
+            assert_eq!(d.name, "original");
+            assert!(std::ptr::eq(d.image, &img), "must borrow, not clone");
+            seen += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, 1);
+        assert_eq!(stats.peak_resident_bytes, 0);
+    }
+
+    #[test]
+    fn visitor_callback_errors_abort_the_stream() {
+        let img = patterned(6);
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0],
+            wavelet_levels: 1,
+            threads: 1,
+            ..Default::default()
+        };
+        let mut calls = 0usize;
+        let err = for_each_derived_image(&img, &opts, |d| {
+            calls += 1;
+            if d.name.starts_with("log-") {
+                bail!("stop at {}", d.name);
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("log-sigma-1-0-mm"));
+        assert_eq!(calls, 2, "original + the failing LoG image, nothing after");
     }
 
     #[test]

@@ -44,26 +44,38 @@ fn haar_pass(
     })
 }
 
+/// Shared input guard: empty volumes and out-of-range levels (0 is
+/// rejected at the config/CLI boundary and must not be silently clamped
+/// here) are located errors.
+fn check_decompose_input(img: &VoxelGrid<f32>, level: usize) -> Result<()> {
+    if img.dims.is_empty() {
+        bail!("cannot decompose an empty volume {}", img.dims);
+    }
+    if level == 0 {
+        bail!("wavelet level must be >= 1 (0 is rejected at the config/CLI boundary)");
+    }
+    if level > 20 {
+        bail!("wavelet level {level} is out of range (max 20)");
+    }
+    Ok(())
+}
+
 /// Decompose `img` into its 8 undecimated Haar sub-bands at `level`
 /// (dilation step `2^(level-1)`), in [`SUB_BANDS`] order.
 ///
 /// Levels above 1 are meant to be fed the previous level's LLL band —
-/// the à trous construction — which [`crate::imgproc::derive_images`]
-/// does. Errors on an empty volume or a level so deep that the dilation
-/// step overflows.
+/// the à trous construction — which
+/// [`crate::imgproc::for_each_derived_image`] does. Errors on an empty
+/// volume, a zero level, or a level so deep that the dilation step
+/// overflows. When only one band is needed at a time, [`haar_band`]
+/// produces the identical bits while holding a single volume.
 pub fn haar_decompose(
     img: &VoxelGrid<f32>,
     level: usize,
     strategy: Strategy,
     threads: usize,
 ) -> Result<[VoxelGrid<f32>; 8]> {
-    if img.dims.is_empty() {
-        bail!("cannot decompose an empty volume {}", img.dims);
-    }
-    let level = level.max(1);
-    if level > 20 {
-        bail!("wavelet level {level} is out of range (max 20)");
-    }
+    check_decompose_input(img, level)?;
     let step = 1usize << (level - 1);
     // one band per bit pattern: bit 0 = x high-pass, bit 1 = y, bit 2 = z
     let mut bands: Vec<VoxelGrid<f32>> = vec![img.clone()];
@@ -78,6 +90,34 @@ pub fn haar_decompose(
     }
     let mut it = bands.into_iter();
     Ok(std::array::from_fn(|_| it.next().expect("8 sub-bands")))
+}
+
+/// Compute one undecimated Haar sub-band of `img` at `level`; `band`
+/// indexes [`SUB_BANDS`] (bit 0 = x high-pass, bit 1 = y, bit 2 = z).
+///
+/// Applies the identical x → y → z pass composition as [`haar_decompose`]
+/// — the returned volume is **bit-for-bit equal** to `haar_decompose(img,
+/// level, …)[band]` — but materialises only the requested band (peak: one
+/// in-flight intermediate instead of up to eight band volumes). A full
+/// decomposition shares intermediate passes (14 total) where eight
+/// `haar_band` calls pay 24; the streaming visitor takes that ~1.7× pass
+/// trade to cap peak memory.
+pub fn haar_band(
+    img: &VoxelGrid<f32>,
+    level: usize,
+    band: usize,
+    strategy: Strategy,
+    threads: usize,
+) -> Result<VoxelGrid<f32>> {
+    check_decompose_input(img, level)?;
+    if band >= 8 {
+        bail!("sub-band index {band} is out of range (0..8, see SUB_BANDS)");
+    }
+    let step = 1usize << (level - 1);
+    let mut out = haar_pass(img, Axis::X, step, band & 1 != 0, strategy, threads);
+    out = haar_pass(&out, Axis::Y, step, band & 2 != 0, strategy, threads);
+    out = haar_pass(&out, Axis::Z, step, band & 4 != 0, strategy, threads);
+    Ok(out)
 }
 
 /// Reconstruct the input of one [`haar_decompose`] call: with the `/2`
@@ -179,7 +219,22 @@ mod tests {
     fn decompose_rejects_bad_inputs() {
         let g = patterned(Dims::new(4, 4, 4));
         assert!(haar_decompose(&g, 21, Strategy::EqualSplit, 1).is_err());
+        assert!(haar_decompose(&g, 0, Strategy::EqualSplit, 1).is_err(), "no silent clamp");
         let empty = VoxelGrid::<f32>::zeros(Dims::new(0, 4, 4), Vec3::splat(1.0));
         assert!(haar_decompose(&empty, 1, Strategy::EqualSplit, 1).is_err());
+        assert!(haar_band(&g, 0, 0, Strategy::EqualSplit, 1).is_err());
+        assert!(haar_band(&g, 1, 8, Strategy::EqualSplit, 1).is_err());
+    }
+
+    #[test]
+    fn haar_band_matches_the_full_decomposition_bit_for_bit() {
+        let g = patterned(Dims::new(7, 6, 5));
+        for level in 1..=2 {
+            let bands = haar_decompose(&g, level, Strategy::EqualSplit, 1).unwrap();
+            for (b, name) in SUB_BANDS.iter().enumerate() {
+                let one = haar_band(&g, level, b, Strategy::LocalAccumulators, 2).unwrap();
+                assert_eq!(one, bands[b], "level {level} band {name}");
+            }
+        }
     }
 }

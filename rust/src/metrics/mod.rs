@@ -84,6 +84,17 @@ pub struct Metrics {
     counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
 }
 
+/// Lock a registry map, recovering from poisoning. A panicking worker
+/// thread poisons any registry lock it held; the maps only hold `Arc`
+/// handles and `BTreeMap` insertions are not left half-applied by the
+/// panic sites here (panics originate in *timed user closures*, never
+/// between map mutations), so the data is structurally sound — recover
+/// the guard instead of escalating one bad case into a pipeline-wide
+/// panic on every later metric call.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
@@ -91,13 +102,13 @@ impl Metrics {
 
     /// Fetch-or-create a histogram by name.
     pub fn timer(&self, name: &str) -> std::sync::Arc<Histogram> {
-        let mut g = self.timers.lock().unwrap();
+        let mut g = lock_recover(&self.timers);
         g.entry(name.to_string()).or_default().clone()
     }
 
     /// Fetch-or-create a counter by name.
     pub fn counter(&self, name: &str) -> std::sync::Arc<AtomicU64> {
-        let mut g = self.counters.lock().unwrap();
+        let mut g = lock_recover(&self.counters);
         g.entry(name.to_string()).or_default().clone()
     }
 
@@ -119,7 +130,7 @@ impl Metrics {
     /// Render a sorted plain-text report.
     pub fn report(&self) -> String {
         let mut s = String::new();
-        for (name, h) in self.timers.lock().unwrap().iter() {
+        for (name, h) in lock_recover(&self.timers).iter() {
             s.push_str(&format!(
                 "{name}: n={} total={:.3}s mean={:.3}ms p99~{:.3}ms max={:.3}ms\n",
                 h.count(),
@@ -129,7 +140,7 @@ impl Metrics {
                 h.max().as_secs_f64() * 1e3,
             ));
         }
-        for (name, c) in self.counters.lock().unwrap().iter() {
+        for (name, c) in lock_recover(&self.counters).iter() {
             s.push_str(&format!("{name}: {}\n", c.load(Ordering::Relaxed)));
         }
         s
@@ -198,5 +209,39 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn poisoned_registry_still_records_and_reports() {
+        // a worker that panics while holding a registry lock must not
+        // escalate into a panic on every later metric call — deliberately
+        // poison both maps and keep using the registry
+        let m = Metrics::new();
+        m.time("survivor", || ());
+        m.counter("cases").fetch_add(2, Ordering::Relaxed);
+
+        // silence the two expected panics' default stderr reports
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r1 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.timers.lock().unwrap();
+            panic!("poison the timer registry");
+        }));
+        let r2 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.counters.lock().unwrap();
+            panic!("poison the counter registry");
+        }));
+        std::panic::set_hook(prev);
+        assert!(r1.is_err() && r2.is_err(), "the poisoning closures must panic");
+        assert!(m.timers.is_poisoned() && m.counters.is_poisoned());
+
+        // recording through the poisoned registry works, old data intact
+        m.time("survivor", || ());
+        m.counter("cases").fetch_add(1, Ordering::Relaxed);
+        m.set_counter("gauge", 7);
+        let r = m.report();
+        assert!(r.contains("survivor: n=2"), "{r}");
+        assert!(r.contains("cases: 3"), "{r}");
+        assert!(r.contains("gauge: 7"), "{r}");
     }
 }

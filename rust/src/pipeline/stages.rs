@@ -60,6 +60,9 @@ pub fn run_pipeline(
 ) -> Result<PipelineReport> {
     let start = Instant::now();
     let metrics = Arc::new(Metrics::new());
+    // scope the derived-image memory gauge to this run (process-wide
+    // high-water mark; concurrent runs in one process share the meter)
+    crate::imgproc::reset_peak_derived_bytes();
 
     let (case_tx, case_rx) = bounded::<(String, PathBuf)>(cfg.queue_capacity);
     let (read_tx, read_rx) = bounded::<ReadItem>(cfg.queue_capacity);
@@ -197,6 +200,17 @@ pub fn run_pipeline(
             }
         }
 
+        // Peak derived-image residency: with the streaming extractor this
+        // stays at ~2 crop-sized volumes × feature_workers regardless of
+        // image_types / wavelet_levels (the point of the visitor); only
+        // meaningful when intensity classes actually derive images.
+        if cfg.feature_classes.needs_image() {
+            metrics.set_counter(
+                "mem.peak_derived_bytes",
+                crate::imgproc::peak_derived_bytes(),
+            );
+        }
+
         Ok(PipelineReport {
             results,
             failures,
@@ -329,6 +343,29 @@ mod tests {
         let report = run_pipeline(&m, &cfg, &ex).unwrap();
         assert!(report.results.iter().all(|r| r.texture.is_none()));
         assert!(!report.metrics_text.contains("stage.texture"));
+        // shape-only runs derive no images: no memory gauge either
+        assert!(!report.metrics_text.contains("mem.peak_derived_bytes"));
+    }
+
+    #[test]
+    fn derived_runs_report_the_peak_memory_gauge() {
+        let m = tiny_dataset("membytes");
+        let cfg = PipelineConfig {
+            feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            image_types: crate::imgproc::ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0],
+            ..cpu_cfg()
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        // presence only: the value is a process-wide high-water mark and
+        // concurrently-running tests share the meter
+        assert!(
+            report.metrics_text.contains("mem.peak_derived_bytes"),
+            "{}",
+            report.metrics_text
+        );
     }
 
     #[test]

@@ -657,6 +657,138 @@ fn derived_feature_determinism_sweep() {
     }
 }
 
+#[test]
+fn streaming_visitor_determinism_matches_materialised() {
+    use radpipe::imgproc::{
+        derive_images, for_each_derived_image, DerivedImage, ImageTypes, ImgprocOptions,
+    };
+    use radpipe::parallel::Strategy;
+
+    // 14³ banded volume, every image type, 2 wavelet levels: the streaming
+    // visitor must emit the exact collect-based list (names and bits) for
+    // every strategy × thread count, while holding ≤ 3 crop-sized volumes
+    let dims = Dims::new(14, 14, 14);
+    let mut img = VoxelGrid::zeros(dims, Vec3::new(0.9, 1.1, 1.4));
+    for z in 0..14 {
+        for y in 0..14 {
+            for x in 0..14 {
+                img.set(x, y, z, ((5 * x + 3 * y + 11 * z) % 23) as f32);
+            }
+        }
+    }
+    let base = ImgprocOptions {
+        image_types: ImageTypes::parse("all").unwrap(),
+        log_sigmas: vec![1.0, 2.5],
+        wavelet_levels: 2,
+        strategy: Strategy::EqualSplit,
+        threads: 1,
+    };
+    let want = derive_images(&img, &base).unwrap();
+    assert_eq!(want.len(), 19, "original + 2 LoG + 16 wavelet");
+    let vol_bytes = (dims.len() * std::mem::size_of::<f32>()) as u64;
+    for strategy in Strategy::ALL {
+        for &threads in &sweep_threads() {
+            let opts = ImgprocOptions { strategy, threads, ..base.clone() };
+            let mut got: Vec<DerivedImage> = Vec::new();
+            let stats = for_each_derived_image(&img, &opts, |d| {
+                got.push(DerivedImage { name: d.name, image: d.image.clone() });
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got, want, "{strategy:?} threads={threads}");
+            assert_eq!(stats.images, want.len());
+            assert!(
+                stats.peak_resident_bytes <= 3 * vol_bytes,
+                "{strategy:?} threads={threads}: streaming held {} bytes (> 3 volumes)",
+                stats.peak_resident_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_feature_determinism_matches_materialised_flow() {
+    use radpipe::features::texture::Discretization;
+    use radpipe::features::{compute_first_order_with, compute_texture};
+    use radpipe::imgproc::derive_images;
+    use radpipe::parallel::Strategy;
+    use radpipe::volume::crop_box;
+
+    // end-to-end: the streamed extractor's per-image feature set must be
+    // bit-identical to recomputing it from the materialised bank, for
+    // every strategy × thread count
+    let mask = sphere_mask(14, 5.0, Vec3::splat(1.0));
+    let img = deterministic_image(mask.dims);
+    for strategy in Strategy::ALL {
+        for &threads in &sweep_threads() {
+            let cfg = PipelineConfig {
+                backend: Backend::Cpu,
+                cpu_threads: threads,
+                strategy,
+                feature_classes: radpipe::config::FeatureClasses::parse("all").unwrap(),
+                image_types: radpipe::imgproc::ImageTypes::parse("all").unwrap(),
+                log_sigmas: vec![1.0, 2.0],
+                wavelet_levels: 2,
+                ..Default::default()
+            };
+            let ex = FeatureExtractor::new(&cfg).unwrap();
+            let out = ex.execute_case(&mask, Some(&img)).unwrap();
+            assert_eq!(out.derived.len(), 19, "original + 2 LoG + 16 wavelet");
+
+            let (cropped_mask, offset) = crop_to_roi(&mask);
+            let cropped_img = crop_box(&img, offset, cropped_mask.dims);
+            let bank = derive_images(&cropped_img, &ex.imgproc_options()).unwrap();
+            assert_eq!(bank.len(), out.derived.len());
+            for (got, d) in out.derived.iter().zip(&bank) {
+                assert_eq!(got.image, d.name, "{strategy:?} threads={threads}");
+                let fo = compute_first_order_with(
+                    &d.image,
+                    &cropped_mask,
+                    Discretization::BinWidth(25.0),
+                );
+                assert_eq!(got.first_order, fo, "{strategy:?} x{threads} {}", d.name);
+                let tex =
+                    compute_texture(&d.image, &cropped_mask, &ex.texture_options()).unwrap();
+                assert_eq!(got.texture, tex, "{strategy:?} x{threads} {}", d.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn log_only_derived_feature_determinism_sweep() {
+    use radpipe::parallel::Strategy;
+
+    // no `original` derived image: the legacy first_order/texture mirrors
+    // must stay empty (not alias a LoG image) and the LoG-only feature
+    // set must be bit-identical across every strategy × thread count
+    let mask = sphere_mask(14, 5.0, Vec3::new(0.8, 0.8, 2.0));
+    let extract = |threads: usize, strategy: Strategy| {
+        let cfg = PipelineConfig {
+            backend: Backend::Cpu,
+            cpu_threads: threads,
+            strategy,
+            feature_classes: radpipe::config::FeatureClasses::parse("all").unwrap(),
+            image_types: radpipe::imgproc::ImageTypes::parse("log").unwrap(),
+            log_sigmas: vec![1.0, 2.0],
+            ..Default::default()
+        };
+        FeatureExtractor::new(&cfg).unwrap().execute_mask(&mask).unwrap()
+    };
+    let want = extract(1, Strategy::EqualSplit);
+    assert!(want.first_order.is_none(), "no original entry to mirror");
+    assert!(want.texture.is_none());
+    assert_eq!(want.derived.len(), 2);
+    assert!(want.derived.iter().all(|d| d.image.starts_with("log-sigma")));
+    for strategy in Strategy::ALL {
+        for &threads in &sweep_threads() {
+            let got = extract(threads, strategy);
+            assert!(got.first_order.is_none() && got.texture.is_none());
+            assert_eq!(got.derived, want.derived, "{strategy:?} threads={threads}");
+        }
+    }
+}
+
 // ------------------------------------- engine-backed batching (artifacts)
 
 #[test]

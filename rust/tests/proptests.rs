@@ -354,6 +354,51 @@ fn integer_volume_gen() -> Gen<VoxelGrid<f32>> {
 }
 
 #[test]
+fn prop_streaming_visitor_matches_materialised_on_random_dims() {
+    use radpipe::imgproc::{
+        derive_images, for_each_derived_image, DerivedImage, ImageTypes, ImgprocOptions,
+    };
+
+    // random dims/spacings/intensities: the streaming visitor must emit
+    // exactly the collect-based bank (names and bits) while holding at
+    // most ~2 crop-sized volumes (in-flight image + wavelet LLL seed)
+    let vol_gen = Gen::new(|rng: &mut Pcg32, size: usize| {
+        let dim = |rng: &mut Pcg32| 2 + (rng.next_u32() as usize) % (size / 3 + 5).min(9);
+        let dims = Dims::new(dim(rng), dim(rng), dim(rng));
+        let spacing = Vec3::new(
+            rng.range_f64(0.5, 2.0),
+            rng.range_f64(0.5, 2.0),
+            rng.range_f64(0.5, 3.0),
+        );
+        let mut g = VoxelGrid::zeros(dims, spacing);
+        for v in g.data_mut() {
+            *v = rng.below(128) as f32;
+        }
+        g
+    });
+    forall("streaming-matches-materialised", &vol_gen, 25, |g| {
+        let opts = ImgprocOptions {
+            image_types: ImageTypes::parse("all").unwrap(),
+            log_sigmas: vec![1.0],
+            wavelet_levels: 2,
+            strategy: Strategy::LocalAccumulators,
+            threads: 2,
+        };
+        let want = derive_images(g, &opts).unwrap();
+        let mut got: Vec<DerivedImage> = Vec::new();
+        let stats = for_each_derived_image(g, &opts, |d| {
+            got.push(DerivedImage { name: d.name, image: d.image.clone() });
+            Ok(())
+        })
+        .unwrap();
+        let vol_bytes = (g.dims.len() * std::mem::size_of::<f32>()) as u64;
+        got == want
+            && stats.images == want.len()
+            && stats.peak_resident_bytes <= 2 * vol_bytes
+    });
+}
+
+#[test]
 fn prop_haar_roundtrip_is_exact_on_integer_volumes() {
     forall("haar-roundtrip", &integer_volume_gen(), 60, |g| {
         for level in 1..=2 {
