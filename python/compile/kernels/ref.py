@@ -384,6 +384,215 @@ def wavelet_ref(vol: np.ndarray, level: int = 1) -> dict:
     return dict(zip(WAVELET_SUB_BANDS, bands))
 
 
+NEIGHBOURS_26 = [
+    (dx, dy, dz)
+    for dx in (-1, 0, 1)
+    for dy in (-1, 0, 1)
+    for dz in (-1, 0, 1)
+    if (dx, dy, dz) != (0, 0, 0)
+]
+
+
+def glszm_ref(levels: np.ndarray) -> dict:
+    """Gray Level Size Zone entries ``{(level, size): count}``.
+
+    Zones are 26-connected components of equal gray level inside the ROI
+    (level 0 = outside), found by a fixed-order flood fill — the zone
+    partition is traversal-order independent, so any deterministic fill
+    yields the same entries.
+    """
+    nx, ny, nz = levels.shape
+    visited = np.zeros(levels.shape, dtype=bool)
+    zones: dict = {}
+    for z in range(nz):
+        for y in range(ny):
+            for x in range(nx):
+                if levels[x, y, z] == 0 or visited[x, y, z]:
+                    continue
+                lvl = int(levels[x, y, z])
+                stack = [(x, y, z)]
+                visited[x, y, z] = True
+                size = 0
+                while stack:
+                    cx, cy, cz = stack.pop()
+                    size += 1
+                    for dx, dy, dz in NEIGHBOURS_26:
+                        qx, qy, qz = cx + dx, cy + dy, cz + dz
+                        if (
+                            0 <= qx < nx
+                            and 0 <= qy < ny
+                            and 0 <= qz < nz
+                            and not visited[qx, qy, qz]
+                            and levels[qx, qy, qz] == lvl
+                        ):
+                            visited[qx, qy, qz] = True
+                            stack.append((qx, qy, qz))
+                zones[(lvl, size)] = zones.get((lvl, size), 0) + 1
+    return zones
+
+
+def glszm_features_ref(zones: dict, ng: int, n_voxels: int) -> dict:
+    """The 12 derived GLSZM features of a ``glszm_ref`` zone dict."""
+    entries = sorted((i, s, c) for (i, s), c in zones.items())
+    nz = float(sum(c for _, _, c in entries))
+    row = np.zeros(ng + 1)
+    col: dict = {}
+    for i, s, c in entries:
+        row[i] += c
+        col[s] = col.get(s, 0.0) + c
+    mu_i = sum(c * i for i, _, c in entries) / nz
+    mu_s = sum(c * s for _, s, c in entries) / nz
+    return {
+        "SmallAreaEmphasis": sum(c / (s * s) for _, s, c in entries) / nz,
+        "LargeAreaEmphasis": sum(c * s * s for _, s, c in entries) / nz,
+        "GrayLevelNonUniformity": (row**2).sum() / nz,
+        "GrayLevelNonUniformityNormalized": (row**2).sum() / nz**2,
+        "SizeZoneNonUniformity": sum(v * v for _, v in sorted(col.items())) / nz,
+        "SizeZoneNonUniformityNormalized": sum(v * v for _, v in sorted(col.items()))
+        / nz**2,
+        "ZonePercentage": nz / n_voxels,
+        "GrayLevelVariance": sum(c * (i - mu_i) ** 2 for i, _, c in entries) / nz,
+        "ZoneVariance": sum(c * (s - mu_s) ** 2 for _, s, c in entries) / nz,
+        "ZoneEntropy": -sum(
+            (c / nz) * np.log2(c / nz) for _, _, c in entries
+        ),
+        "LowGrayLevelZoneEmphasis": sum(c / (i * i) for i, _, c in entries) / nz,
+        "HighGrayLevelZoneEmphasis": sum(c * i * i for i, _, c in entries) / nz,
+    }
+
+
+def gldm_ref(levels: np.ndarray, alpha: float = 0.0) -> np.ndarray:
+    """Gray Level Dependence count matrix ``[ng, 27]``.
+
+    ``P[i-1, d-1]`` counts ROI voxels of level ``i`` whose dependence is
+    ``d`` = 1 + the number of 26-neighbours inside the ROI with
+    ``|level - neighbour_level| <= alpha`` (the centre voxel always counts
+    itself). Every ROI voxel contributes exactly one entry, so the matrix
+    sums to the ROI voxel count.
+    """
+    nx, ny, nz = levels.shape
+    ng = int(levels.max())
+    mat = np.zeros((ng, 27), dtype=np.int64)
+    for z in range(nz):
+        for y in range(ny):
+            for x in range(nx):
+                lvl = int(levels[x, y, z])
+                if lvl == 0:
+                    continue
+                dep = 1
+                for dx, dy, dz in NEIGHBOURS_26:
+                    qx, qy, qz = x + dx, y + dy, z + dz
+                    if not (0 <= qx < nx and 0 <= qy < ny and 0 <= qz < nz):
+                        continue
+                    nl = int(levels[qx, qy, qz])
+                    if nl != 0 and abs(lvl - nl) <= alpha:
+                        dep += 1
+                mat[lvl - 1, dep - 1] += 1
+    return mat
+
+
+def gldm_features_ref(mat: np.ndarray) -> dict:
+    """The 10 derived GLDM features of a ``gldm_ref`` matrix."""
+    ng, nd = mat.shape
+    nz = float(mat.sum())
+    i = np.arange(1, ng + 1)[:, None] * np.ones((1, nd))
+    d = np.arange(1, nd + 1)[None, :] * np.ones((ng, 1))
+    m = mat.astype(float)
+    p = m / nz
+    mu_i = (p * i).sum()
+    mu_d = (p * d).sum()
+    nzp = p[p > 0]
+    return {
+        "SmallDependenceEmphasis": (m / d**2).sum() / nz,
+        "LargeDependenceEmphasis": (m * d**2).sum() / nz,
+        "GrayLevelNonUniformity": (m.sum(1) ** 2).sum() / nz,
+        "DependenceNonUniformity": (m.sum(0) ** 2).sum() / nz,
+        "DependenceNonUniformityNormalized": (m.sum(0) ** 2).sum() / nz**2,
+        "GrayLevelVariance": (p * (i - mu_i) ** 2).sum(),
+        "DependenceVariance": (p * (d - mu_d) ** 2).sum(),
+        "DependenceEntropy": -(nzp * np.log2(nzp)).sum(),
+        "LowGrayLevelEmphasis": (m / i**2).sum() / nz,
+        "HighGrayLevelEmphasis": (m * i**2).sum() / nz,
+    }
+
+
+def ngtdm_ref(levels: np.ndarray) -> tuple:
+    """NGTDM ingredient vectors ``(s, n)``, each indexed by level - 1.
+
+    For every ROI voxel with at least one 26-neighbour inside the ROI,
+    ``n[i-1]`` counts the voxel and ``s[i-1]`` accumulates
+    ``|i - mean(neighbour levels)|``; voxels with no valid neighbour are
+    excluded entirely (PyRadiomics semantics).
+    """
+    nx, ny, nz = levels.shape
+    ng = int(levels.max())
+    s = np.zeros(ng)
+    n = np.zeros(ng, dtype=np.int64)
+    for z in range(nz):
+        for y in range(ny):
+            for x in range(nx):
+                lvl = int(levels[x, y, z])
+                if lvl == 0:
+                    continue
+                total, count = 0, 0
+                for dx, dy, dz in NEIGHBOURS_26:
+                    qx, qy, qz = x + dx, y + dy, z + dz
+                    if not (0 <= qx < nx and 0 <= qy < ny and 0 <= qz < nz):
+                        continue
+                    nl = int(levels[qx, qy, qz])
+                    if nl != 0:
+                        total += nl
+                        count += 1
+                if count == 0:
+                    continue
+                n[lvl - 1] += 1
+                s[lvl - 1] += abs(lvl * count - total) / count
+    return s, n
+
+
+def ngtdm_features_ref(s: np.ndarray, n: np.ndarray) -> dict:
+    """The 5 derived NGTDM features of ``ngtdm_ref`` ingredients."""
+    nvp = float(n.sum())
+    p = n / nvp
+    ng = len(n)
+    present = [i for i in range(ng) if n[i] > 0]
+    ngp = len(present)
+    ps = float((p * s).sum())
+    coarseness = 1.0 / ps if ps > 0 else 1e6
+    if ngp > 1:
+        pair = sum(
+            p[i] * p[j] * (i - j) ** 2 for i in present for j in present
+        )
+        contrast = pair / (ngp * (ngp - 1)) * s.sum() / nvp
+    else:
+        contrast = 0.0
+    denom = sum(
+        abs((i + 1) * p[i] - (j + 1) * p[j]) for i in present for j in present
+    )
+    busyness = ps / denom if denom > 0 else 0.0
+    complexity = (
+        sum(
+            abs(i - j) * (p[i] * s[i] + p[j] * s[j]) / (p[i] + p[j])
+            for i in present
+            for j in present
+        )
+        / nvp
+    )
+    strength = (
+        sum((p[i] + p[j]) * (i - j) ** 2 for i in present for j in present)
+        / s.sum()
+        if s.sum() > 0
+        else 0.0
+    )
+    return {
+        "Coarseness": coarseness,
+        "Contrast": contrast,
+        "Busyness": busyness,
+        "Complexity": complexity,
+        "Strength": strength,
+    }
+
+
 def glrlm_features_ref(mats: np.ndarray, n_voxels: int) -> np.ndarray:
     """The 11 derived GLRLM features, averaged over non-empty directions:
     [SRE, LRE, GLN, RLN, RP, LGLRE, HGLRE, SRLGLE, SRHGLE, LRLGLE,

@@ -294,7 +294,8 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t.to_text());
     println!(
-        "each added image type re-runs first-order + GLCM/GLRLM on its derived images"
+        "each added image type re-runs first-order + all five texture classes on its \
+         derived images"
     );
     Ok(())
 }

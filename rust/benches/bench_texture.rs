@@ -1,8 +1,10 @@
 //! Texture-matrix accumulation: serial vs parallel on a ≥ 64³ synthetic
-//! ROI. The GLCM/GLRLM hot loop is per-voxel (13 angles × distances per
-//! voxel), the workload PR 2 opens for acceleration; this bench measures
-//! how the chunked per-thread partial matrices scale and verifies the
-//! deterministic-accumulation contract (parallel == serial bit-for-bit).
+//! ROI, across all five matrix classes (GLCM, GLRLM, GLSZM, GLDM, NGTDM).
+//! The per-voxel matrix loops are the workload PRs 2 and 5 open for
+//! acceleration; this bench measures how the chunked per-thread partial
+//! matrices scale and verifies the deterministic-accumulation contract
+//! (parallel == serial bit-for-bit; GLSZM's serial flood fill is repeated
+//! to confirm run-to-run identity).
 //!
 //! Run: `cargo bench --offline --bench bench_texture`
 //! Quick mode: `RADPIPE_BENCH_QUICK=1` (CI smoke budget).
@@ -10,8 +12,9 @@
 mod common;
 
 use radpipe::features::texture::{
-    accumulate_glcm, accumulate_glrlm, discretize, glcm_features, glrlm_features,
-    Discretization,
+    accumulate_glcm, accumulate_gldm, accumulate_glrlm, accumulate_glszm,
+    accumulate_ngtdm, discretize, glcm_features, gldm_features, glrlm_features,
+    glszm_features, ngtdm_features, Discretization,
 };
 use radpipe::geometry::Vec3;
 use radpipe::parallel::Strategy;
@@ -51,13 +54,14 @@ fn main() -> anyhow::Result<()> {
     // the quick volume keeps three iterations well under a second
     let iters = 3;
     let distances = [1usize, 2];
+    let gldm_alpha = 0.0;
 
     let (img, mask) = synthetic_case(n);
     let roi = discretize(&img, &mask, Discretization::BinCount(16))?
         .expect("non-empty synthetic ROI");
     common::banner(&format!(
         "TEXTURE ACCUMULATION — {n}³ volume, {} ROI voxels, Ng={}, {} angles × {} \
-         distances, {threads} threads",
+         distances, {threads} threads, 5 matrix classes",
         roi.n_voxels,
         roi.ng,
         radpipe::features::texture::ANGLES_13.len(),
@@ -67,22 +71,45 @@ fn main() -> anyhow::Result<()> {
     // serial reference (1 thread, static split)
     let glcm_ref = accumulate_glcm(&roi, &distances, Strategy::EqualSplit, 1);
     let glrlm_ref = accumulate_glrlm(&roi, Strategy::EqualSplit, 1);
+    let glszm_ref = accumulate_glszm(&roi);
+    let gldm_ref = accumulate_gldm(&roi, gldm_alpha, Strategy::EqualSplit, 1);
+    let ngtdm_ref = accumulate_ngtdm(&roi, Strategy::EqualSplit, 1);
     let (serial_glcm, _) = common::measure(iters, || {
         std::hint::black_box(accumulate_glcm(&roi, &distances, Strategy::EqualSplit, 1));
     });
     let (serial_glrlm, _) = common::measure(iters, || {
         std::hint::black_box(accumulate_glrlm(&roi, Strategy::EqualSplit, 1));
     });
-    let serial = serial_glcm + serial_glrlm;
+    let (serial_gldm, _) = common::measure(iters, || {
+        std::hint::black_box(accumulate_gldm(&roi, gldm_alpha, Strategy::EqualSplit, 1));
+    });
+    let (serial_ngtdm, _) = common::measure(iters, || {
+        std::hint::black_box(accumulate_ngtdm(&roi, Strategy::EqualSplit, 1));
+    });
+    // GLSZM is serial-by-design (deterministic flood fill): measured once
+    // here, outside the strategy table
+    let (glszm_wall, _) = common::measure(iters, || {
+        std::hint::black_box(accumulate_glszm(&roi));
+    });
+    let serial = serial_glcm + serial_glrlm + serial_gldm + serial_ngtdm;
 
     let mut t = Table::new(vec![
-        "strategy", "threads", "glcm[ms]", "glrlm[ms]", "total[ms]", "speedup-vs-serial",
+        "strategy",
+        "threads",
+        "glcm[ms]",
+        "glrlm[ms]",
+        "gldm[ms]",
+        "ngtdm[ms]",
+        "total[ms]",
+        "speedup-vs-serial",
     ]);
     t.row(vec![
         "serial-reference".to_string(),
         "1".to_string(),
         format!("{:.1}", serial_glcm * 1e3),
         format!("{:.1}", serial_glrlm * 1e3),
+        format!("{:.1}", serial_gldm * 1e3),
+        format!("{:.1}", serial_ngtdm * 1e3),
         format!("{:.1}", serial * 1e3),
         "1.00".to_string(),
     ]);
@@ -95,13 +122,21 @@ fn main() -> anyhow::Result<()> {
         let (p_glrlm, _) = common::measure(iters, || {
             std::hint::black_box(accumulate_glrlm(&roi, strategy, threads));
         });
-        let total = p_glcm + p_glrlm;
+        let (p_gldm, _) = common::measure(iters, || {
+            std::hint::black_box(accumulate_gldm(&roi, gldm_alpha, strategy, threads));
+        });
+        let (p_ngtdm, _) = common::measure(iters, || {
+            std::hint::black_box(accumulate_ngtdm(&roi, strategy, threads));
+        });
+        let total = p_glcm + p_glrlm + p_gldm + p_ngtdm;
         best_parallel = best_parallel.min(total);
         t.row(vec![
             strategy.label().to_string(),
             threads.to_string(),
             format!("{:.1}", p_glcm * 1e3),
             format!("{:.1}", p_glrlm * 1e3),
+            format!("{:.1}", p_gldm * 1e3),
+            format!("{:.1}", p_ngtdm * 1e3),
             format!("{:.1}", total * 1e3),
             format!("{:.2}", serial / total),
         ]);
@@ -111,16 +146,35 @@ fn main() -> anyhow::Result<()> {
         anyhow::ensure!(g == glcm_ref, "GLCM diverged under {strategy:?}");
         let r = accumulate_glrlm(&roi, strategy, threads);
         anyhow::ensure!(r == glrlm_ref, "GLRLM diverged under {strategy:?}");
+        let d = accumulate_gldm(&roi, gldm_alpha, strategy, threads);
+        anyhow::ensure!(d == gldm_ref, "GLDM diverged under {strategy:?}");
+        let m = accumulate_ngtdm(&roi, strategy, threads);
+        anyhow::ensure!(m == ngtdm_ref, "NGTDM diverged under {strategy:?}");
     }
+    anyhow::ensure!(accumulate_glszm(&roi) == glszm_ref, "GLSZM diverged across runs");
     print!("{}", t.to_text());
+    println!("glszm (serial flood fill): {:.1} ms", glszm_wall * 1e3);
 
     let fg = glcm_features(&glcm_ref).expect("dense GLCM");
     let fr = glrlm_features(&glrlm_ref).expect("dense GLRLM");
+    let fz = glszm_features(&glszm_ref).expect("dense GLSZM");
+    let fd = gldm_features(&gldm_ref).expect("dense GLDM");
+    let fm = ngtdm_features(&ngtdm_ref).expect("dense NGTDM");
     println!(
         "\nGLCM contrast {:.4}, joint entropy {:.4}; GLRLM RP {:.4}, SRE {:.4}",
         fg.contrast, fg.joint_entropy, fr.run_percentage, fr.short_run_emphasis
     );
-    println!("parallel == serial verified bit-for-bit for all 5 strategies");
+    println!(
+        "GLSZM ZP {:.4}, ZE {:.4}; GLDM SDE {:.4}, DE {:.4}; NGTDM coarseness {:.6}, \
+         busyness {:.4}",
+        fz.zone_percentage,
+        fz.zone_entropy,
+        fd.small_dependence_emphasis,
+        fd.dependence_entropy,
+        fm.coarseness,
+        fm.busyness
+    );
+    println!("parallel == serial verified bit-for-bit for all 5 strategies × 5 classes");
 
     if threads >= 2 {
         // quick mode runs on contended shared CI runners where a wall-clock

@@ -22,8 +22,9 @@ USAGE:
   radpipe extract   --data DIR [--config FILE] [--backend auto|cpu|accelerated]
                     [--artifacts DIR] [--json FILE] [--csv FILE] [--workers N]
                     [--engine-count N] [--batch-size N] [--batch-linger-ms MS]
-                    [--features shape,firstorder,glcm,glrlm|texture|all]
+                    [--features shape,firstorder,glcm,glrlm,glszm,gldm,ngtdm|texture|all]
                     [--bin-width F] [--bin-count N] [--glcm-distances 1,2]
+                    [--gldm-alpha F]
                     [--image-types original,log,wavelet|all] [--log-sigmas 1.0,3.0]
                     [--resampled-spacing MM] [--wavelet-levels N]
   radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
@@ -116,6 +117,13 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(list) = args.opt("glcm-distances") {
         cfg.glcm_distances =
             crate::config::parse_distances(list).context("--glcm-distances")?;
+    }
+    if let Some(a) = args.opt_parse::<f64>("gldm-alpha")? {
+        anyhow::ensure!(
+            a >= 0.0 && a.is_finite(),
+            "--gldm-alpha must be a non-negative finite number"
+        );
+        cfg.gldm_alpha = a;
     }
     if let Some(list) = args.opt("image-types") {
         cfg.image_types =
@@ -412,10 +420,16 @@ mod tests {
         let json_text = std::fs::read_to_string(&json).unwrap();
         assert!(json_text.contains("Glcm_Contrast"), "texture features in JSON");
         assert!(json_text.contains("Glrlm_RunPercentage"));
+        assert!(json_text.contains("Glszm_ZoneEntropy"), "GLSZM features in JSON");
+        assert!(json_text.contains("Gldm_DependenceEntropy"), "GLDM features in JSON");
+        assert!(json_text.contains("Ngtdm_Coarseness"), "NGTDM features in JSON");
         assert!(json_text.contains("Entropy"), "first-order features in JSON");
         let csv_text = std::fs::read_to_string(&csv).unwrap();
         assert!(csv_text.starts_with("case,path,MeshVolume"));
         assert!(csv_text.contains("Glcm_Autocorrelation"));
+        assert!(csv_text.contains("Glszm_SmallAreaEmphasis"));
+        assert!(csv_text.contains("Gldm_LargeDependenceEmphasis"));
+        assert!(csv_text.contains("Ngtdm_Strength"));
         // bad knobs are clear errors
         assert!(dispatch(argv(&[
             "extract", "--data", dir.to_str().unwrap(), "--features", "bogus",
@@ -425,6 +439,45 @@ mod tests {
             "extract", "--data", dir.to_str().unwrap(), "--glcm-distances", "0",
         ]))
         .is_err());
+        assert!(dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--gldm-alpha", "-1",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn extract_runs_region_classes_only() {
+        // glszm/gldm/ngtdm-only extraction end-to-end (the CI
+        // texture-matrix job mirrors this against the example dataset)
+        let dir = std::env::temp_dir().join("radpipe_cli_region_texture_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        let json = dir.join("out.json");
+        dispatch(argv(&[
+            "extract",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "cpu",
+            "--features",
+            "glszm,gldm,ngtdm",
+            "--bin-count",
+            "8",
+            "--gldm-alpha",
+            "1",
+            "--json",
+            json.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let json_text = std::fs::read_to_string(&json).unwrap();
+        assert!(json_text.contains("Glszm_ZonePercentage"));
+        assert!(json_text.contains("Gldm_SmallDependenceEmphasis"));
+        assert!(json_text.contains("Ngtdm_Busyness"));
+        assert!(!json_text.contains("Glcm_"), "GLCM must stay disabled");
+        assert!(!json_text.contains("Glrlm_"), "GLRLM must stay disabled");
     }
 
     #[test]

@@ -41,26 +41,39 @@ impl Backend {
 ///
 /// Shape is always on — it is the paper's pipeline and every report keys
 /// off it; the flag exists so `"shape"` parses in class lists. The
-/// intensity classes (first-order, GLCM, GLRLM) are opt-in.
+/// intensity classes (first-order plus the five texture matrix classes
+/// GLCM, GLRLM, GLSZM, GLDM, NGTDM) are opt-in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FeatureClasses {
     pub shape: bool,
     pub first_order: bool,
     pub glcm: bool,
     pub glrlm: bool,
+    pub glszm: bool,
+    pub gldm: bool,
+    pub ngtdm: bool,
 }
 
 impl Default for FeatureClasses {
     fn default() -> Self {
-        FeatureClasses { shape: true, first_order: false, glcm: false, glrlm: false }
+        FeatureClasses {
+            shape: true,
+            first_order: false,
+            glcm: false,
+            glrlm: false,
+            glszm: false,
+            gldm: false,
+            ngtdm: false,
+        }
     }
 }
 
 impl FeatureClasses {
-    /// Parse a comma-separated class list, e.g. `"shape,glcm,glrlm"`.
-    /// Accepted names: `shape`, `firstorder`, `glcm`, `glrlm`,
-    /// `texture` (= glcm + glrlm), `all`. At least one class must be
-    /// named — an empty list is an error, not a silent shape-only run.
+    /// Parse a comma-separated class list, e.g. `"shape,glcm,glszm"`.
+    /// Accepted names: `shape`, `firstorder`, `glcm`, `glrlm`, `glszm`,
+    /// `gldm`, `ngtdm`, `texture` (= all five matrix classes), `all`. At
+    /// least one class must be named — an empty list is an error, not a
+    /// silent shape-only run.
     pub fn parse(s: &str) -> Result<FeatureClasses> {
         let mut c = FeatureClasses::default();
         let mut recognized = 0usize;
@@ -75,18 +88,27 @@ impl FeatureClasses {
                 "firstorder" | "first-order" | "first_order" => c.first_order = true,
                 "glcm" => c.glcm = true,
                 "glrlm" => c.glrlm = true,
+                "glszm" => c.glszm = true,
+                "gldm" => c.gldm = true,
+                "ngtdm" => c.ngtdm = true,
                 "texture" => {
                     c.glcm = true;
                     c.glrlm = true;
+                    c.glszm = true;
+                    c.gldm = true;
+                    c.ngtdm = true;
                 }
                 "all" => {
                     c.first_order = true;
                     c.glcm = true;
                     c.glrlm = true;
+                    c.glszm = true;
+                    c.gldm = true;
+                    c.ngtdm = true;
                 }
                 other => bail!(
                     "unknown feature class '{other}' \
-                     (shape|firstorder|glcm|glrlm|texture|all)"
+                     (shape|firstorder|glcm|glrlm|glszm|gldm|ngtdm|texture|all)"
                 ),
             }
         }
@@ -98,12 +120,12 @@ impl FeatureClasses {
 
     /// True when any enabled class needs image intensities.
     pub fn needs_image(&self) -> bool {
-        self.first_order || self.glcm || self.glrlm
+        self.first_order || self.texture()
     }
 
     /// True when a texture matrix class is enabled.
     pub fn texture(&self) -> bool {
-        self.glcm || self.glrlm
+        self.glcm || self.glrlm || self.glszm || self.gldm || self.ngtdm
     }
 }
 
@@ -199,6 +221,10 @@ pub struct PipelineConfig {
     pub bin_count: usize,
     /// GLCM neighbour distances in voxels.
     pub glcm_distances: Vec<usize>,
+    /// GLDM dependence threshold: a 26-neighbour counts as *dependent*
+    /// when its gray level differs by at most this much (PyRadiomics
+    /// `gldm_a`, default 0 = exactly equal levels).
+    pub gldm_alpha: f64,
     /// Derived-image families the intensity classes run on (original /
     /// LoG / wavelet; shape always uses the mask geometry).
     pub image_types: crate::imgproc::ImageTypes,
@@ -230,6 +256,7 @@ impl Default for PipelineConfig {
             bin_width: 25.0,
             bin_count: 0,
             glcm_distances: vec![1],
+            gldm_alpha: 0.0,
             image_types: crate::imgproc::ImageTypes::default(),
             log_sigmas: vec![2.0],
             resampled_spacing: 0.0,
@@ -285,6 +312,12 @@ impl PipelineConfig {
                     }
                 }
                 "glcm_distances" => cfg.glcm_distances = parse_distances(value.as_str()?)?,
+                "gldm_alpha" => {
+                    cfg.gldm_alpha = value.as_f64()?;
+                    if !(cfg.gldm_alpha >= 0.0 && cfg.gldm_alpha.is_finite()) {
+                        bail!("gldm_alpha must be a non-negative finite number");
+                    }
+                }
                 "image_types" => {
                     cfg.image_types = crate::imgproc::ImageTypes::parse(value.as_str()?)?
                 }
@@ -403,6 +436,7 @@ batch_linger_ms = 5
         assert_eq!(c.bin_width, 25.0);
         assert_eq!(c.bin_count, 0);
         assert_eq!(c.glcm_distances, vec![1]);
+        assert_eq!(c.gldm_alpha, 0.0);
     }
 
     #[test]
@@ -410,13 +444,30 @@ batch_linger_ms = 5
         let c = FeatureClasses::parse("shape, glcm").unwrap();
         assert!(c.shape && c.glcm && !c.glrlm && !c.first_order);
         let c = FeatureClasses::parse("texture").unwrap();
-        assert!(c.glcm && c.glrlm && !c.first_order);
+        assert!(c.glcm && c.glrlm && c.glszm && c.gldm && c.ngtdm && !c.first_order);
         let c = FeatureClasses::parse("all").unwrap();
         assert!(c.first_order && c.glcm && c.glrlm && c.needs_image() && c.texture());
+        assert!(c.glszm && c.gldm && c.ngtdm);
         assert!(FeatureClasses::parse("bogus").is_err());
         // an empty list is a user error, not a silent shape-only run
         assert!(FeatureClasses::parse("").is_err());
         assert!(FeatureClasses::parse(" , ").is_err());
+    }
+
+    #[test]
+    fn region_classes_parse_individually() {
+        for (name, pick) in [
+            ("glszm", 0usize),
+            ("gldm", 1),
+            ("ngtdm", 2),
+        ] {
+            let c = FeatureClasses::parse(name).unwrap();
+            assert_eq!(c.glszm, pick == 0, "{name}");
+            assert_eq!(c.gldm, pick == 1, "{name}");
+            assert_eq!(c.ngtdm, pick == 2, "{name}");
+            assert!(!c.glcm && !c.glrlm && !c.first_order, "{name}");
+            assert!(c.texture() && c.needs_image(), "{name}");
+        }
     }
 
     #[test]
@@ -427,12 +478,15 @@ feature_classes = "firstorder,texture"
 bin_width = 10.5
 bin_count = 16
 glcm_distances = "1, 2,3"
+gldm_alpha = 1.5
 "#;
         let c = PipelineConfig::from_toml(text).unwrap();
         assert!(c.feature_classes.first_order && c.feature_classes.glcm);
+        assert!(c.feature_classes.glszm && c.feature_classes.gldm && c.feature_classes.ngtdm);
         assert_eq!(c.bin_width, 10.5);
         assert_eq!(c.bin_count, 16);
         assert_eq!(c.glcm_distances, vec![1, 2, 3]);
+        assert_eq!(c.gldm_alpha, 1.5);
     }
 
     #[test]
@@ -500,5 +554,8 @@ wavelet_levels = 2
         assert!(
             PipelineConfig::from_toml("[pipeline]\nfeature_classes = \"wat\"\n").is_err()
         );
+        assert!(PipelineConfig::from_toml("[pipeline]\ngldm_alpha = -1.0\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\ngldm_alpha = 0\n").is_ok());
+        assert!(PipelineConfig::from_toml("[pipeline]\ngldm_alpha = 2.0\n").is_ok());
     }
 }

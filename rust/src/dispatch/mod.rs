@@ -52,8 +52,9 @@ pub enum PathTaken {
 /// Per-phase timing breakdown of one case — the Table 2 row ingredients
 /// plus the intensity-class phase. `preprocess` covers grid alignment
 /// (resampling), ROI cropping and derived-image filtering (LoG /
-/// wavelet); `texture` covers discretization, first-order and the texture
-/// matrices over every derived image.
+/// wavelet); `texture` covers discretization, first-order and all five
+/// texture matrix classes (GLCM, GLRLM, GLSZM, GLDM, NGTDM) over every
+/// derived image.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CaseTiming {
     pub read: Duration,
@@ -163,6 +164,7 @@ pub struct FeatureExtractor {
     bin_width: f64,
     bin_count: usize,
     glcm_distances: Vec<usize>,
+    gldm_alpha: f64,
     image_types: crate::imgproc::ImageTypes,
     log_sigmas: Vec<f64>,
     wavelet_levels: usize,
@@ -214,6 +216,7 @@ impl FeatureExtractor {
             bin_width: cfg.bin_width,
             bin_count: cfg.bin_count,
             glcm_distances: cfg.glcm_distances.clone(),
+            gldm_alpha: cfg.gldm_alpha,
             image_types: cfg.image_types,
             log_sigmas: cfg.log_sigmas.clone(),
             wavelet_levels: cfg.wavelet_levels,
@@ -329,8 +332,9 @@ impl FeatureExtractor {
     }
 
     /// Extraction over a mask plus an optional intensity image. The image
-    /// is only read when an intensity feature class (first-order / GLCM /
-    /// GLRLM) is enabled; an image on a different grid is automatically
+    /// is only read when an intensity feature class (first-order or any
+    /// texture matrix class) is enabled; an image on a different grid is
+    /// automatically
     /// trilinear-resampled onto the mask grid (`prepare_grids`), and with
     /// `resampled_spacing > 0` the whole case moves to that isotropic
     /// grid first.
@@ -462,10 +466,14 @@ impl FeatureExtractor {
         TextureOptions {
             discretization: self.discretization(),
             distances: self.glcm_distances.clone(),
+            gldm_alpha: self.gldm_alpha,
             strategy: self.strategy,
             threads: self.cpu_threads,
             glcm: self.classes.glcm,
             glrlm: self.classes.glrlm,
+            glszm: self.classes.glszm,
+            gldm: self.classes.gldm,
+            ngtdm: self.classes.ngtdm,
         }
     }
 
@@ -641,7 +649,11 @@ mod tests {
         let fo = out.first_order.expect("first-order enabled");
         assert!(fo.variance >= 0.0);
         let tex = out.texture.expect("texture enabled");
-        assert_eq!(tex.named().len(), 20, "9 GLCM + 11 GLRLM");
+        assert_eq!(
+            tex.named().len(),
+            47,
+            "9 GLCM + 11 GLRLM + 12 GLSZM + 10 GLDM + 5 NGTDM"
+        );
         assert!(tex.named().iter().all(|(_, v)| v.is_finite()));
         assert!(out.timing.texture > Duration::ZERO);
         // shape path is untouched by the extra classes
@@ -799,6 +811,9 @@ mod tests {
         assert!(names.iter().any(|n| n == "log-sigma-1-0-mm_firstorder_Mean"));
         assert!(names.iter().any(|n| n == "log-sigma-2-0-mm_glcm_Contrast"));
         assert!(names.iter().any(|n| n == "wavelet-HHH_glrlm_RunPercentage"));
+        assert!(names.iter().any(|n| n == "wavelet-LLH_glszm_ZoneEntropy"));
+        assert!(names.iter().any(|n| n == "log-sigma-1-0-mm_gldm_DependenceEntropy"));
+        assert!(names.iter().any(|n| n == "wavelet-HLL_ngtdm_Coarseness"));
         assert!(out.timing.preprocess > Duration::ZERO);
     }
 

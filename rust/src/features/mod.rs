@@ -1,5 +1,5 @@
 //! The PyRadiomics feature classes: *Shape (3D)*, *first-order* statistics
-//! and the *texture* matrices (GLCM + GLRLM).
+//! and the *texture* matrices (GLCM, GLRLM, GLSZM, GLDM, NGTDM).
 //!
 //! Feature definitions follow the PyRadiomics documentation; shape is
 //! computed in physical (mm) space. The expensive shape inputs (mesh

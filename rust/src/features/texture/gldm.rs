@@ -1,0 +1,331 @@
+//! Gray Level Dependence Matrix (3D, 26-neighbourhood) and its derived
+//! features — PyRadiomics `radiomics.gldm` semantics: the *dependence* of
+//! a ROI voxel of level `i` is `1 +` the number of its 26-neighbours
+//! inside the ROI whose level differs from `i` by at most `gldm_alpha`
+//! (the voxel always counts itself, so dependences run `1..=27`).
+//! `P(i, d)` counts voxels, and every ROI voxel contributes exactly one
+//! entry — the matrix sums to `Np`.
+
+use std::ops::Range;
+
+use super::discretize::DiscretizedRoi;
+use super::glszm::NEIGHBOURS_26;
+use crate::parallel::{fold_chunks, Strategy};
+
+/// Largest possible dependence: the centre voxel plus its 26 neighbours.
+pub const MAX_DEPENDENCE: usize = 27;
+
+/// Voxels per work unit for the parallel accumulation (each unit probes
+/// 26 neighbours per voxel, comparable to the GLCM's 13 × distances).
+const CHUNK: usize = 512;
+
+/// The dependence count matrix: a dense `ng × 27` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GldmMatrix {
+    /// `counts[(i-1) * MAX_DEPENDENCE + (d-1)]` = voxels of gray level
+    /// `i` with dependence `d`.
+    pub counts: Vec<u64>,
+    /// Number of gray levels (`Ng`).
+    pub ng: usize,
+    /// ROI voxel count (`Np` — also the matrix total, every voxel has
+    /// exactly one dependence).
+    pub n_voxels: usize,
+}
+
+/// The derived GLDM feature vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GldmFeatures {
+    pub small_dependence_emphasis: f64,
+    pub large_dependence_emphasis: f64,
+    pub gray_level_non_uniformity: f64,
+    pub dependence_non_uniformity: f64,
+    pub dependence_non_uniformity_normalized: f64,
+    pub gray_level_variance: f64,
+    pub dependence_variance: f64,
+    pub dependence_entropy: f64,
+    pub low_gray_level_emphasis: f64,
+    pub high_gray_level_emphasis: f64,
+}
+
+impl GldmFeatures {
+    /// Ordered (name, value) view, mirroring the other feature classes.
+    pub fn named(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("Gldm_SmallDependenceEmphasis", self.small_dependence_emphasis),
+            ("Gldm_LargeDependenceEmphasis", self.large_dependence_emphasis),
+            ("Gldm_GrayLevelNonUniformity", self.gray_level_non_uniformity),
+            ("Gldm_DependenceNonUniformity", self.dependence_non_uniformity),
+            (
+                "Gldm_DependenceNonUniformityNormalized",
+                self.dependence_non_uniformity_normalized,
+            ),
+            ("Gldm_GrayLevelVariance", self.gray_level_variance),
+            ("Gldm_DependenceVariance", self.dependence_variance),
+            ("Gldm_DependenceEntropy", self.dependence_entropy),
+            ("Gldm_LowGrayLevelEmphasis", self.low_gray_level_emphasis),
+            ("Gldm_HighGrayLevelEmphasis", self.high_gray_level_emphasis),
+        ]
+    }
+}
+
+/// Accumulate the dependence matrix of `roi` with threshold `alpha`.
+///
+/// Work is decomposed over flat voxel indices by [`fold_chunks`]; each
+/// worker tallies its voxels' dependences into a per-thread partial
+/// integer matrix, merged at the end — bit-for-bit identical for every
+/// strategy / thread count.
+pub fn accumulate_gldm(
+    roi: &DiscretizedRoi,
+    alpha: f64,
+    strategy: Strategy,
+    threads: usize,
+) -> GldmMatrix {
+    let ng = roi.ng;
+    let dims = roi.levels.dims;
+    let data = roi.levels.data();
+    let plane = dims.x * dims.y;
+
+    let fold = |counts: &mut Vec<u64>, range: Range<usize>| {
+        for idx in range {
+            let li = data[idx];
+            if li == 0 {
+                continue;
+            }
+            let x = (idx % dims.x) as isize;
+            let y = ((idx / dims.x) % dims.y) as isize;
+            let z = (idx / plane) as isize;
+            let mut dep = 1usize;
+            for &(dx, dy, dz) in &NEIGHBOURS_26 {
+                let (qx, qy, qz) = (x + dx, y + dy, z + dz);
+                if qx < 0
+                    || qy < 0
+                    || qz < 0
+                    || qx as usize >= dims.x
+                    || qy as usize >= dims.y
+                    || qz as usize >= dims.z
+                {
+                    continue;
+                }
+                let lj = data[qz as usize * plane + qy as usize * dims.x + qx as usize];
+                if lj != 0 && (li as i64 - lj as i64).unsigned_abs() as f64 <= alpha {
+                    dep += 1;
+                }
+            }
+            counts[(li as usize - 1) * MAX_DEPENDENCE + (dep - 1)] += 1;
+        }
+    };
+
+    let counts = fold_chunks(
+        strategy,
+        dims.len(),
+        CHUNK,
+        threads,
+        || vec![0u64; ng * MAX_DEPENDENCE],
+        fold,
+        |acc: &mut Vec<u64>, part| {
+            for (a, b) in acc.iter_mut().zip(part) {
+                *a += b;
+            }
+        },
+    );
+    GldmMatrix { counts, ng, n_voxels: roi.n_voxels }
+}
+
+/// The 10 derived GLDM features, or `None` for an empty matrix (no ROI).
+pub fn gldm_features(m: &GldmMatrix) -> Option<GldmFeatures> {
+    let total: u64 = m.counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let nz = total as f64;
+
+    let mut sde = 0.0;
+    let mut lde = 0.0;
+    let mut lgle = 0.0;
+    let mut hgle = 0.0;
+    let mut mu_i = 0.0;
+    let mut mu_d = 0.0;
+    let mut entropy = 0.0;
+    let mut gln = 0.0;
+    for i in 0..m.ng {
+        let gi = (i + 1) as f64;
+        let gi_sq = gi * gi;
+        let mut row = 0.0f64;
+        for d in 0..MAX_DEPENDENCE {
+            let c = m.counts[i * MAX_DEPENDENCE + d];
+            if c == 0 {
+                continue;
+            }
+            let cf = c as f64;
+            let dj = (d + 1) as f64;
+            row += cf;
+            sde += cf / (dj * dj);
+            lde += cf * dj * dj;
+            lgle += cf / gi_sq;
+            hgle += cf * gi_sq;
+            mu_i += cf * gi;
+            mu_d += cf * dj;
+            let p = cf / nz;
+            entropy -= p * p.log2();
+        }
+        gln += row * row;
+    }
+    mu_i /= nz;
+    mu_d /= nz;
+    let mut glv = 0.0;
+    let mut dv = 0.0;
+    let mut dn = 0.0;
+    for d in 0..MAX_DEPENDENCE {
+        let dj = (d + 1) as f64;
+        let mut col = 0.0f64;
+        for i in 0..m.ng {
+            let c = m.counts[i * MAX_DEPENDENCE + d];
+            if c == 0 {
+                continue;
+            }
+            let cf = c as f64;
+            col += cf;
+            let gi = (i + 1) as f64;
+            glv += cf * (gi - mu_i) * (gi - mu_i);
+            dv += cf * (dj - mu_d) * (dj - mu_d);
+        }
+        dn += col * col;
+    }
+
+    Some(GldmFeatures {
+        small_dependence_emphasis: sde / nz,
+        large_dependence_emphasis: lde / nz,
+        gray_level_non_uniformity: gln / nz,
+        dependence_non_uniformity: dn / nz,
+        dependence_non_uniformity_normalized: dn / (nz * nz),
+        gray_level_variance: glv / nz,
+        dependence_variance: dv / nz,
+        dependence_entropy: entropy,
+        low_gray_level_emphasis: lgle / nz,
+        high_gray_level_emphasis: hgle / nz,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::discretize::{discretize, Discretization};
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::{Dims, VoxelGrid};
+
+    /// 2×2×2 checkerboard: every voxel has 3 equal-level neighbours out of
+    /// 7, so every dependence is 4 at `alpha = 0` (and 8 at `alpha >= 1`).
+    fn checkerboard() -> DiscretizedRoi {
+        let dims = Dims::new(2, 2, 2);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..2 {
+            for y in 0..2 {
+                for x in 0..2 {
+                    img.set(x, y, z, ((x + y + z) % 2) as f32);
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+        discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap()
+    }
+
+    #[test]
+    fn checkerboard_matrix_matches_closed_form() {
+        let m = accumulate_gldm(&checkerboard(), 0.0, Strategy::EqualSplit, 1);
+        assert_eq!(m.counts[3], 4, "level 1, dependence 4");
+        assert_eq!(m.counts[MAX_DEPENDENCE + 3], 4, "level 2, dependence 4");
+        assert_eq!(m.counts.iter().sum::<u64>(), 8);
+        let f = gldm_features(&m).unwrap();
+        let close = |a: f64, b: f64| (a - b).abs() < 1e-12;
+        assert!(close(f.small_dependence_emphasis, 1.0 / 16.0));
+        assert!(close(f.large_dependence_emphasis, 16.0));
+        assert!(close(f.gray_level_non_uniformity, 4.0));
+        assert!(close(f.dependence_non_uniformity, 8.0));
+        assert!(close(f.dependence_non_uniformity_normalized, 1.0));
+        assert!(close(f.gray_level_variance, 0.25));
+        assert!(close(f.dependence_variance, 0.0));
+        assert!(close(f.dependence_entropy, 1.0));
+        assert!(close(f.low_gray_level_emphasis, 0.625));
+        assert!(close(f.high_gray_level_emphasis, 2.5));
+    }
+
+    #[test]
+    fn alpha_widens_the_dependence() {
+        // alpha = 1: the level-1/level-2 split no longer matters — every
+        // voxel depends on all 7 neighbours (dependence 8)
+        let m = accumulate_gldm(&checkerboard(), 1.0, Strategy::EqualSplit, 1);
+        assert_eq!(m.counts[7], 4);
+        assert_eq!(m.counts[MAX_DEPENDENCE + 7], 4);
+        assert_eq!(m.counts.iter().sum::<u64>(), 8);
+        let f = gldm_features(&m).unwrap();
+        assert!((f.large_dependence_emphasis - 64.0).abs() < 1e-12);
+        assert!((f.dependence_variance - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependences_sum_to_roi_voxel_count() {
+        let dims = Dims::new(7, 6, 5);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut rng = crate::testkit::Pcg32::new(29);
+        for z in 0..5 {
+            for y in 0..6 {
+                for x in 0..7 {
+                    img.set(x, y, z, rng.below(4) as f32);
+                    if rng.below(4) > 0 {
+                        mask.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        for alpha in [0.0, 1.0, 2.5] {
+            let m = accumulate_gldm(&roi, alpha, Strategy::EqualSplit, 1);
+            assert_eq!(m.counts.iter().sum::<u64>(), roi.n_voxels as u64, "alpha {alpha}");
+        }
+    }
+
+    #[test]
+    fn accumulation_is_deterministic_across_strategies_and_threads() {
+        let dims = Dims::new(9, 8, 7);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut rng = crate::testkit::Pcg32::new(31);
+        for z in 0..7 {
+            for y in 0..8 {
+                for x in 0..9 {
+                    img.set(x, y, z, rng.below(5) as f32);
+                    if rng.below(8) > 0 {
+                        mask.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        let want = accumulate_gldm(&roi, 1.0, Strategy::EqualSplit, 1);
+        for strategy in Strategy::ALL {
+            for threads in [1usize, 2, 4] {
+                let got = accumulate_gldm(&roi, 1.0, strategy, threads);
+                assert_eq!(got, want, "{strategy:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_voxel_roi_has_dependence_one() {
+        let dims = Dims::new(3, 3, 3);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        img.set(1, 1, 1, 5.0);
+        mask.set(1, 1, 1, 1);
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        let m = accumulate_gldm(&roi, 0.0, Strategy::EqualSplit, 1);
+        assert_eq!(m.counts[0], 1, "dependence 1 (the voxel itself)");
+        let f = gldm_features(&m).unwrap();
+        assert_eq!(f.small_dependence_emphasis, 1.0);
+        assert_eq!(f.large_dependence_emphasis, 1.0);
+        assert_eq!(f.dependence_entropy, 0.0);
+        assert!(f.named().iter().all(|(_, v)| v.is_finite()));
+    }
+}

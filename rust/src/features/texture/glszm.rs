@@ -1,0 +1,345 @@
+//! Gray Level Size Zone Matrix (3D, 26-connected) and its derived
+//! features — PyRadiomics `radiomics.glszm` semantics: a *zone* is a
+//! maximal 26-connected component of equal gray level inside the ROI;
+//! `P(i, s)` counts zones of level `i` and size `s` voxels.
+//!
+//! Zone labelling is a fixed-order flood fill, serial per ROI. The zone
+//! partition of a volume is a traversal-order-independent fact (connected
+//! components are unique), so the matrix — all integer counts — is
+//! trivially deterministic for every `parallel::Strategy` × thread count
+//! without any parallel merge step.
+
+use std::collections::BTreeMap;
+
+use super::discretize::DiscretizedRoi;
+
+/// The 26 neighbour offsets of the Chebyshev-distance-1 shell, in fixed
+/// (z, y, x)-major order — shared by the zone growth here and the GLDM /
+/// NGTDM neighbourhood walks.
+pub const NEIGHBOURS_26: [(isize, isize, isize); 26] = [
+    (-1, -1, -1),
+    (0, -1, -1),
+    (1, -1, -1),
+    (-1, 0, -1),
+    (0, 0, -1),
+    (1, 0, -1),
+    (-1, 1, -1),
+    (0, 1, -1),
+    (1, 1, -1),
+    (-1, -1, 0),
+    (0, -1, 0),
+    (1, -1, 0),
+    (-1, 0, 0),
+    (1, 0, 0),
+    (-1, 1, 0),
+    (0, 1, 0),
+    (1, 1, 0),
+    (-1, -1, 1),
+    (0, -1, 1),
+    (1, -1, 1),
+    (-1, 0, 1),
+    (0, 0, 1),
+    (1, 0, 1),
+    (-1, 1, 1),
+    (0, 1, 1),
+    (1, 1, 1),
+];
+
+/// The size-zone count matrix in sparse form (zone sizes are unbounded —
+/// up to the ROI voxel count — so a dense `ng × max_size` block could be
+/// gigabytes on large ROIs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlszmMatrix {
+    /// `(level, size, count)` entries sorted by `(level, size)` — the
+    /// fixed iteration order every derived feature sums in.
+    pub entries: Vec<(u32, u32, u64)>,
+    /// Number of gray levels (`Ng`).
+    pub ng: usize,
+    /// Total zone count (`Nz`, the normalising denominator).
+    pub n_zones: u64,
+    /// ROI voxel count (`Np`, the ZonePercentage denominator).
+    pub n_voxels: usize,
+    /// Largest zone size observed.
+    pub max_zone_size: u32,
+}
+
+/// The derived GLSZM feature vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GlszmFeatures {
+    pub small_area_emphasis: f64,
+    pub large_area_emphasis: f64,
+    pub gray_level_non_uniformity: f64,
+    pub gray_level_non_uniformity_normalized: f64,
+    pub size_zone_non_uniformity: f64,
+    pub size_zone_non_uniformity_normalized: f64,
+    pub zone_percentage: f64,
+    pub gray_level_variance: f64,
+    pub zone_variance: f64,
+    pub zone_entropy: f64,
+    pub low_gray_level_zone_emphasis: f64,
+    pub high_gray_level_zone_emphasis: f64,
+}
+
+impl GlszmFeatures {
+    /// Ordered (name, value) view, mirroring the other feature classes.
+    pub fn named(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("Glszm_SmallAreaEmphasis", self.small_area_emphasis),
+            ("Glszm_LargeAreaEmphasis", self.large_area_emphasis),
+            ("Glszm_GrayLevelNonUniformity", self.gray_level_non_uniformity),
+            (
+                "Glszm_GrayLevelNonUniformityNormalized",
+                self.gray_level_non_uniformity_normalized,
+            ),
+            ("Glszm_SizeZoneNonUniformity", self.size_zone_non_uniformity),
+            (
+                "Glszm_SizeZoneNonUniformityNormalized",
+                self.size_zone_non_uniformity_normalized,
+            ),
+            ("Glszm_ZonePercentage", self.zone_percentage),
+            ("Glszm_GrayLevelVariance", self.gray_level_variance),
+            ("Glszm_ZoneVariance", self.zone_variance),
+            ("Glszm_ZoneEntropy", self.zone_entropy),
+            ("Glszm_LowGrayLevelZoneEmphasis", self.low_gray_level_zone_emphasis),
+            ("Glszm_HighGrayLevelZoneEmphasis", self.high_gray_level_zone_emphasis),
+        ]
+    }
+}
+
+/// Label the 26-connected equal-level zones of `roi` and tally them into
+/// the sparse size-zone matrix.
+///
+/// The flood fill visits seed voxels in flat scan order and grows each
+/// zone with an explicit stack; since connected components are unique
+/// whatever the traversal, the result is deterministic (and independent
+/// of any strategy/thread configuration by construction).
+pub fn accumulate_glszm(roi: &DiscretizedRoi) -> GlszmMatrix {
+    let dims = roi.levels.dims;
+    let data = roi.levels.data();
+    let (nx, ny) = (dims.x, dims.y);
+    let plane = nx * ny;
+    let mut visited = vec![false; data.len()];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut zones: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+    let mut max_zone_size = 0u32;
+
+    for seed in 0..data.len() {
+        let level = data[seed];
+        if level == 0 || visited[seed] {
+            continue;
+        }
+        visited[seed] = true;
+        stack.push(seed);
+        let mut size = 0u32;
+        while let Some(idx) = stack.pop() {
+            size += 1;
+            let x = (idx % nx) as isize;
+            let y = ((idx / nx) % ny) as isize;
+            let z = (idx / plane) as isize;
+            for &(dx, dy, dz) in &NEIGHBOURS_26 {
+                let (qx, qy, qz) = (x + dx, y + dy, z + dz);
+                if qx < 0
+                    || qy < 0
+                    || qz < 0
+                    || qx as usize >= dims.x
+                    || qy as usize >= dims.y
+                    || qz as usize >= dims.z
+                {
+                    continue;
+                }
+                let q = qz as usize * plane + qy as usize * nx + qx as usize;
+                if !visited[q] && data[q] == level {
+                    visited[q] = true;
+                    stack.push(q);
+                }
+            }
+        }
+        max_zone_size = max_zone_size.max(size);
+        *zones.entry((level, size)).or_insert(0) += 1;
+    }
+
+    let entries: Vec<(u32, u32, u64)> =
+        zones.into_iter().map(|((i, s), c)| (i, s, c)).collect();
+    let n_zones = entries.iter().map(|&(_, _, c)| c).sum();
+    GlszmMatrix { entries, ng: roi.ng, n_zones, n_voxels: roi.n_voxels, max_zone_size }
+}
+
+/// The 12 derived GLSZM features, or `None` for an empty matrix (no ROI).
+pub fn glszm_features(m: &GlszmMatrix) -> Option<GlszmFeatures> {
+    if m.n_zones == 0 {
+        return None;
+    }
+    let nz = m.n_zones as f64;
+
+    let mut row = vec![0.0f64; m.ng];
+    let mut col: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut sae = 0.0;
+    let mut lae = 0.0;
+    let mut lglze = 0.0;
+    let mut hglze = 0.0;
+    let mut mu_i = 0.0;
+    let mut mu_s = 0.0;
+    let mut entropy = 0.0;
+    for &(i, s, c) in &m.entries {
+        let cf = c as f64;
+        let (gi, sz) = (i as f64, s as f64);
+        row[i as usize - 1] += cf;
+        *col.entry(s).or_insert(0.0) += cf;
+        sae += cf / (sz * sz);
+        lae += cf * sz * sz;
+        lglze += cf / (gi * gi);
+        hglze += cf * gi * gi;
+        mu_i += cf * gi;
+        mu_s += cf * sz;
+        let p = cf / nz;
+        entropy -= p * p.log2();
+    }
+    mu_i /= nz;
+    mu_s /= nz;
+    let mut glv = 0.0;
+    let mut zv = 0.0;
+    for &(i, s, c) in &m.entries {
+        let cf = c as f64;
+        glv += cf * (i as f64 - mu_i) * (i as f64 - mu_i);
+        zv += cf * (s as f64 - mu_s) * (s as f64 - mu_s);
+    }
+    let gln: f64 = row.iter().map(|&r| r * r).sum();
+    let szn: f64 = col.values().map(|&v| v * v).sum();
+
+    Some(GlszmFeatures {
+        small_area_emphasis: sae / nz,
+        large_area_emphasis: lae / nz,
+        gray_level_non_uniformity: gln / nz,
+        gray_level_non_uniformity_normalized: gln / (nz * nz),
+        size_zone_non_uniformity: szn / nz,
+        size_zone_non_uniformity_normalized: szn / (nz * nz),
+        zone_percentage: nz / m.n_voxels as f64,
+        gray_level_variance: glv / nz,
+        zone_variance: zv / nz,
+        zone_entropy: entropy,
+        low_gray_level_zone_emphasis: lglze / nz,
+        high_gray_level_zone_emphasis: hglze / nz,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::discretize::{discretize, Discretization};
+    use super::*;
+    use crate::geometry::Vec3;
+    use crate::volume::{Dims, VoxelGrid};
+
+    /// 2×2×2 checkerboard `level = 1 + (x+y+z) mod 2`: under
+    /// 26-connectivity the face diagonals connect equal levels, so each
+    /// level forms ONE zone of size 4 (not four singletons).
+    fn checkerboard() -> DiscretizedRoi {
+        let dims = Dims::new(2, 2, 2);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..2 {
+            for y in 0..2 {
+                for x in 0..2 {
+                    img.set(x, y, z, ((x + y + z) % 2) as f32);
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+        discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap()
+    }
+
+    #[test]
+    fn checkerboard_zones_match_closed_form() {
+        let m = accumulate_glszm(&checkerboard());
+        assert_eq!(m.entries, vec![(1, 4, 1), (2, 4, 1)]);
+        assert_eq!(m.n_zones, 2);
+        assert_eq!(m.max_zone_size, 4);
+        let f = glszm_features(&m).unwrap();
+        let close = |a: f64, b: f64| (a - b).abs() < 1e-12;
+        assert!(close(f.small_area_emphasis, 1.0 / 16.0));
+        assert!(close(f.large_area_emphasis, 16.0));
+        assert!(close(f.gray_level_non_uniformity, 1.0));
+        assert!(close(f.gray_level_non_uniformity_normalized, 0.5));
+        assert!(close(f.size_zone_non_uniformity, 2.0));
+        assert!(close(f.size_zone_non_uniformity_normalized, 1.0));
+        assert!(close(f.zone_percentage, 0.25));
+        assert!(close(f.gray_level_variance, 0.25));
+        assert!(close(f.zone_variance, 0.0));
+        assert!(close(f.zone_entropy, 1.0));
+        assert!(close(f.low_gray_level_zone_emphasis, 0.625));
+        assert!(close(f.high_gray_level_zone_emphasis, 2.5));
+    }
+
+    #[test]
+    fn alternating_line_is_all_singleton_zones() {
+        // levels [1, 2, 1, 2]: no equal-level contact → 4 zones of size 1
+        let dims = Dims::new(4, 1, 1);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for x in 0..4 {
+            img.set(x, 0, 0, (x % 2) as f32);
+            mask.set(x, 0, 0, 1);
+        }
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        let m = accumulate_glszm(&roi);
+        assert_eq!(m.entries, vec![(1, 1, 2), (2, 1, 2)]);
+        let f = glszm_features(&m).unwrap();
+        assert_eq!(f.zone_percentage, 1.0);
+        assert_eq!(f.small_area_emphasis, 1.0);
+        assert_eq!(f.large_area_emphasis, 1.0);
+    }
+
+    #[test]
+    fn constant_roi_is_one_zone() {
+        let dims = Dims::new(6, 6, 6);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..6 {
+            for y in 0..6 {
+                for x in 0..6 {
+                    img.set(x, y, z, 42.0);
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+        let roi = discretize(&img, &mask, Discretization::BinWidth(25.0)).unwrap().unwrap();
+        let m = accumulate_glszm(&roi);
+        assert_eq!(m.entries, vec![(1, 216, 1)]);
+        let f = glszm_features(&m).unwrap();
+        assert_eq!(f.zone_percentage, 1.0 / 216.0);
+        assert_eq!(f.zone_entropy, 0.0);
+        assert_eq!(f.gray_level_variance, 0.0);
+        assert_eq!(f.zone_variance, 0.0);
+    }
+
+    #[test]
+    fn zone_sizes_cover_every_roi_voxel() {
+        let dims = Dims::new(7, 6, 5);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut rng = crate::testkit::Pcg32::new(17);
+        for z in 0..5 {
+            for y in 0..6 {
+                for x in 0..7 {
+                    img.set(x, y, z, rng.below(3) as f32);
+                    if rng.below(4) > 0 {
+                        mask.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+        let m = accumulate_glszm(&roi);
+        let covered: u64 = m.entries.iter().map(|&(_, s, c)| s as u64 * c).sum();
+        assert_eq!(covered, roi.n_voxels as u64);
+        assert!(m.max_zone_size as usize <= roi.n_voxels);
+    }
+
+    #[test]
+    fn repeated_runs_are_identical() {
+        let roi = checkerboard();
+        let a = accumulate_glszm(&roi);
+        for _ in 0..3 {
+            assert_eq!(accumulate_glszm(&roi), a);
+        }
+    }
+}

@@ -1,21 +1,31 @@
 //! The texture feature subsystem: gray-level discretization feeding 3D
-//! GLCM (13 angles, symmetric, distance-configurable) and GLRLM matrices
-//! with their standard derived features.
+//! GLCM (13 angles, symmetric, distance-configurable), GLRLM and the
+//! region-based matrix classes GLSZM, GLDM and NGTDM with their standard
+//! derived features.
 //!
 //! Texture is the per-voxel hot loop the related GPU radiomics ports
 //! (cuRadiomics, Nyxus) accelerate next after shape; here the matrices are
-//! accumulated **in parallel** — per-thread partial count matrices over
-//! voxel/line chunks via [`crate::parallel::fold_chunks`], merged at the
-//! end. Counts are integers, so results are bit-for-bit deterministic
-//! regardless of strategy or thread count (tested).
+//! accumulated **in parallel** — per-thread partial integer count matrices
+//! over voxel/line chunks via [`crate::parallel::fold_chunks`], merged at
+//! the end. Counts (and the NGTDM's rational numerators) are integers, so
+//! results are bit-for-bit deterministic regardless of strategy or thread
+//! count (tested). GLSZM zone labelling is a serial fixed-order flood fill
+//! per ROI — connected components are traversal-independent, so it honours
+//! the same determinism contract without a parallel merge.
 
 mod discretize;
 mod glcm;
+mod gldm;
 mod glrlm;
+mod glszm;
+mod ngtdm;
 
 pub use discretize::{discretize, DiscretizedRoi, Discretization, MAX_GRAY_LEVELS};
 pub use glcm::{accumulate_glcm, glcm_features, GlcmFeatures, GlcmMatrices, ANGLES_13};
+pub use gldm::{accumulate_gldm, gldm_features, GldmFeatures, GldmMatrix, MAX_DEPENDENCE};
 pub use glrlm::{accumulate_glrlm, glrlm_features, GlrlmFeatures, GlrlmMatrices};
+pub use glszm::{accumulate_glszm, glszm_features, GlszmFeatures, GlszmMatrix, NEIGHBOURS_26};
+pub use ngtdm::{accumulate_ngtdm, ngtdm_features, NgtdmFeatures, NgtdmMatrix};
 
 use anyhow::Result;
 
@@ -29,6 +39,9 @@ pub struct TextureOptions {
     pub discretization: Discretization,
     /// GLCM neighbour distances in voxels (PyRadiomics default `[1]`).
     pub distances: Vec<usize>,
+    /// GLDM dependence threshold: a 26-neighbour is *dependent* when its
+    /// gray level differs by at most this much (PyRadiomics default `0`).
+    pub gldm_alpha: f64,
     /// Work decomposition for the parallel accumulation.
     pub strategy: Strategy,
     /// Worker threads (`0` = all cores, `1` = serial).
@@ -37,6 +50,12 @@ pub struct TextureOptions {
     pub glcm: bool,
     /// Compute the GLRLM class.
     pub glrlm: bool,
+    /// Compute the GLSZM class.
+    pub glszm: bool,
+    /// Compute the GLDM class.
+    pub gldm: bool,
+    /// Compute the NGTDM class.
+    pub ngtdm: bool,
 }
 
 impl Default for TextureOptions {
@@ -44,10 +63,14 @@ impl Default for TextureOptions {
         TextureOptions {
             discretization: Discretization::BinWidth(25.0),
             distances: vec![1],
+            gldm_alpha: 0.0,
             strategy: Strategy::LocalAccumulators,
             threads: 0,
             glcm: true,
             glrlm: true,
+            glszm: true,
+            gldm: true,
+            ngtdm: true,
         }
     }
 }
@@ -61,6 +84,13 @@ pub struct TextureFeatures {
     pub glcm: Option<GlcmFeatures>,
     /// GLRLM features (`None` when disabled).
     pub glrlm: Option<GlrlmFeatures>,
+    /// GLSZM features (`None` when disabled).
+    pub glszm: Option<GlszmFeatures>,
+    /// GLDM features (`None` when disabled).
+    pub gldm: Option<GldmFeatures>,
+    /// NGTDM features (`None` when disabled or no voxel has a valid
+    /// 26-neighbourhood, e.g. a single-voxel ROI).
+    pub ngtdm: Option<NgtdmFeatures>,
 }
 
 impl TextureFeatures {
@@ -72,6 +102,15 @@ impl TextureFeatures {
             out.extend(g.named());
         }
         if let Some(g) = &self.glrlm {
+            out.extend(g.named());
+        }
+        if let Some(g) = &self.glszm {
+            out.extend(g.named());
+        }
+        if let Some(g) = &self.gldm {
+            out.extend(g.named());
+        }
+        if let Some(g) = &self.ngtdm {
             out.extend(g.named());
         }
         out
@@ -102,7 +141,18 @@ pub fn compute_texture(
     } else {
         None
     };
-    Ok(Some(TextureFeatures { ng: roi.ng, glcm, glrlm }))
+    let glszm = if opts.glszm { glszm_features(&accumulate_glszm(&roi)) } else { None };
+    let gldm = if opts.gldm {
+        gldm_features(&accumulate_gldm(&roi, opts.gldm_alpha, opts.strategy, opts.threads))
+    } else {
+        None
+    };
+    let ngtdm = if opts.ngtdm {
+        ngtdm_features(&accumulate_ngtdm(&roi, opts.strategy, opts.threads))
+    } else {
+        None
+    };
+    Ok(Some(TextureFeatures { ng: roi.ng, glcm, glrlm, glszm, gldm, ngtdm }))
 }
 
 #[cfg(test)]
@@ -131,10 +181,10 @@ mod tests {
     }
 
     #[test]
-    fn full_texture_vector_has_20_features() {
+    fn full_texture_vector_has_47_features() {
         let (img, mask) = patterned(12);
         let t = compute_texture(&img, &mask, &TextureOptions::default()).unwrap().unwrap();
-        assert_eq!(t.named().len(), 9 + 11);
+        assert_eq!(t.named().len(), 9 + 11 + 12 + 10 + 5);
         assert!(t.ng >= 2);
         assert!(t.named().iter().all(|(_, v)| v.is_finite()));
     }
@@ -142,14 +192,30 @@ mod tests {
     #[test]
     fn classes_can_be_disabled_independently() {
         let (img, mask) = patterned(8);
-        let opts = TextureOptions { glcm: false, ..Default::default() };
-        let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
-        assert!(t.glcm.is_none());
-        assert!(t.glrlm.is_some());
-        let opts = TextureOptions { glrlm: false, ..Default::default() };
-        let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
-        assert!(t.glcm.is_some());
-        assert!(t.glrlm.is_none());
+        let all = compute_texture(&img, &mask, &TextureOptions::default()).unwrap().unwrap();
+        assert!(
+            all.glcm.is_some()
+                && all.glrlm.is_some()
+                && all.glszm.is_some()
+                && all.gldm.is_some()
+                && all.ngtdm.is_some()
+        );
+        for off in 0..5 {
+            let opts = TextureOptions {
+                glcm: off != 0,
+                glrlm: off != 1,
+                glszm: off != 2,
+                gldm: off != 3,
+                ngtdm: off != 4,
+                ..Default::default()
+            };
+            let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+            assert_eq!(t.glcm.is_none(), off == 0);
+            assert_eq!(t.glrlm.is_none(), off == 1);
+            assert_eq!(t.glszm.is_none(), off == 2);
+            assert_eq!(t.gldm.is_none(), off == 3);
+            assert_eq!(t.ngtdm.is_none(), off == 4);
+        }
     }
 
     #[test]
@@ -176,7 +242,9 @@ mod tests {
 
     #[test]
     fn constant_roi_is_well_defined() {
-        // one gray level: correlation defined as 1, contrast 0, SRE → long runs
+        // one gray level: correlation defined as 1, contrast 0, SRE → long
+        // runs; one zone; dependence 27 in the interior; NGTDM coarseness
+        // hits the 1e6 cap — no NaN leaks anywhere
         let dims = Dims::new(6, 6, 6);
         let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
         let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
@@ -197,5 +265,54 @@ mod tests {
         let r = t.glrlm.unwrap();
         assert!(r.long_run_emphasis > 1.0);
         assert!(r.run_percentage < 1.0);
+        let z = t.glszm.unwrap();
+        assert_eq!(z.zone_percentage, 1.0 / 216.0);
+        assert_eq!(z.gray_level_variance, 0.0);
+        let d = t.gldm.unwrap();
+        assert!(d.large_dependence_emphasis > 1.0);
+        assert_eq!(d.gray_level_variance, 0.0);
+        let n = t.ngtdm.unwrap();
+        assert_eq!(n.coarseness, 1e6);
+        assert_eq!(n.contrast, 0.0);
+        assert!(t.named().iter().all(|(_, v)| v.is_finite()));
+    }
+
+    #[test]
+    fn single_voxel_roi_is_defined_for_every_class() {
+        // GLCM has no pairs (None) and NGTDM no valid neighbourhood
+        // (None); GLRLM/GLSZM/GLDM yield defined singleton statistics
+        let dims = Dims::new(3, 3, 3);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        img.set(1, 1, 1, 5.0);
+        mask.set(1, 1, 1, 1);
+        let t = compute_texture(&img, &mask, &TextureOptions::default()).unwrap().unwrap();
+        assert!(t.glcm.is_none(), "no co-occurring pairs");
+        assert!(t.ngtdm.is_none(), "no valid neighbourhood");
+        assert!(t.glrlm.is_some());
+        let z = t.glszm.unwrap();
+        assert_eq!(z.zone_percentage, 1.0);
+        let d = t.gldm.unwrap();
+        assert_eq!(d.small_dependence_emphasis, 1.0);
+        assert!(t.named().iter().all(|(_, v)| v.is_finite()));
+    }
+
+    #[test]
+    fn nan_intensity_inside_roi_is_a_located_error() {
+        let dims = Dims::new(3, 3, 3);
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        for z in 0..3 {
+            for y in 0..3 {
+                for x in 0..3 {
+                    img.set(x, y, z, 1.0);
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+        img.set(1, 2, 0, f32::NAN);
+        let err = compute_texture(&img, &mask, &TextureOptions::default()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("non-finite") && msg.contains("(1, 2, 0)"), "{msg}");
     }
 }

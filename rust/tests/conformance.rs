@@ -396,8 +396,7 @@ fn texture_conformance_oracle_lock() {
             distances: vec![1],
             strategy,
             threads,
-            glcm: true,
-            glrlm: true,
+            ..Default::default() // all five matrix classes enabled
         };
         compute_texture(&img, &mask, &opts).unwrap().unwrap()
     };
@@ -456,8 +455,7 @@ fn texture_conformance_oracle_lock() {
             distances: vec![1, 2],
             strategy,
             threads,
-            glcm: true,
-            glrlm: true,
+            ..Default::default() // all five matrix classes enabled
         };
         compute_texture(&big_img, &big_mask, &opts).unwrap().unwrap()
     };
@@ -467,6 +465,278 @@ fn texture_conformance_oracle_lock() {
             assert_eq!(compute_big(threads, strategy), want, "{strategy:?} x{threads}");
         }
     }
+}
+
+#[test]
+fn region_texture_conformance_oracle_lock() {
+    // Same 4³ fixture as the GLCM/GLRLM lock: `level = ((x + 2y + 3z) mod
+    // 5) + 1`. Matrix counts are locked *exactly*; derived features at
+    // 1e-9 against `ref.py::glszm_features_ref` / `gldm_features_ref` /
+    // `ngtdm_features_ref` on the identical integer volume.
+    use radpipe::features::texture::{
+        accumulate_gldm, accumulate_glszm, accumulate_ngtdm, discretize, gldm_features,
+        glszm_features, ngtdm_features, Discretization,
+    };
+    use radpipe::parallel::Strategy;
+
+    let dims = Dims::new(4, 4, 4);
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..4 {
+        for y in 0..4 {
+            for x in 0..4 {
+                img.set(x, y, z, ((x + 2 * y + 3 * z) % 5) as f32);
+                mask.set(x, y, z, 1);
+            }
+        }
+    }
+    let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+    assert_eq!(roi.ng, 5);
+
+    // --- GLSZM: exact zone inventory (level, size, count), then features
+    let m = accumulate_glszm(&roi);
+    assert_eq!(
+        m.entries,
+        vec![
+            (1, 6, 1),
+            (1, 7, 1),
+            (2, 1, 1),
+            (2, 4, 1),
+            (2, 8, 1),
+            (3, 1, 1),
+            (3, 4, 1),
+            (3, 8, 1),
+            (4, 6, 1),
+            (4, 7, 1),
+            (5, 2, 2),
+            (5, 8, 1),
+        ],
+        "oracle zone inventory (ref.py::glszm_ref)"
+    );
+    assert_eq!(m.n_zones, 13);
+    assert_eq!(m.n_voxels, 64);
+    let f = glszm_features(&m).unwrap();
+    assert!(rel_close(f.small_area_emphasis, 0.21294206785278208, 1e-9));
+    assert!(rel_close(f.large_area_emphasis, 31.076923076923077, 1e-9));
+    assert!(rel_close(f.gray_level_non_uniformity, 2.6923076923076925, 1e-9));
+    assert!(rel_close(f.gray_level_non_uniformity_normalized, 0.20710059171597633, 1e-9));
+    assert!(rel_close(f.size_zone_non_uniformity, 2.230769230769231, 1e-9));
+    assert!(rel_close(f.size_zone_non_uniformity_normalized, 0.17159763313609466, 1e-9));
+    assert!(rel_close(f.zone_percentage, 0.203125, 1e-9));
+    assert!(rel_close(f.gray_level_variance, 1.9171597633136093, 1e-9));
+    assert!(rel_close(f.zone_variance, 6.840236686390534, 1e-9));
+    assert!(rel_close(f.zone_entropy, 3.546593564294939, 1e-9));
+    assert!(rel_close(f.low_gray_level_zone_emphasis, 0.25602564102564107, 1e-9));
+    assert!(rel_close(f.high_gray_level_zone_emphasis, 11.384615384615385, 1e-9));
+
+    // --- GLDM, alpha = 0: exact dependence-column sums, then features
+    let m0 = accumulate_gldm(&roi, 0.0, Strategy::EqualSplit, 1);
+    let col = |m: &radpipe::features::texture::GldmMatrix, d: usize| -> u64 {
+        (0..m.ng)
+            .map(|i| m.counts[i * radpipe::features::texture::MAX_DEPENDENCE + d])
+            .sum()
+    };
+    assert_eq!(
+        (0..5).map(|d| col(&m0, d)).collect::<Vec<u64>>(),
+        vec![2, 22, 24, 8, 8],
+        "oracle dependence columns (ref.py::gldm_ref, alpha 0)"
+    );
+    assert_eq!(m0.counts.iter().sum::<u64>(), 64, "every ROI voxel contributes");
+    let f0 = gldm_features(&m0).unwrap();
+    assert!(rel_close(f0.small_dependence_emphasis, 0.17166666666666666, 1e-9));
+    assert!(rel_close(f0.large_dependence_emphasis, 9.90625, 1e-9));
+    assert!(rel_close(f0.gray_level_non_uniformity, 12.8125, 1e-9));
+    assert!(rel_close(f0.dependence_non_uniformity, 18.625, 1e-9));
+    assert!(rel_close(f0.dependence_non_uniformity_normalized, 0.291015625, 1e-9));
+    assert!(rel_close(f0.gray_level_variance, 1.9677734375, 1e-9));
+    assert!(rel_close(f0.dependence_variance, 1.0927734375, 1e-9));
+    assert!(rel_close(f0.dependence_entropy, 4.144247562960807, 1e-9));
+    assert!(rel_close(f0.low_gray_level_emphasis, 0.2966710069444444, 1e-9));
+    assert!(rel_close(f0.high_gray_level_emphasis, 10.78125, 1e-9));
+
+    // --- GLDM, alpha = 1: the dependence widens, gray-level marginals
+    // stay put (alpha only affects the neighbour comparison)
+    let m1 = accumulate_gldm(&roi, 1.0, Strategy::EqualSplit, 1);
+    let f1 = gldm_features(&m1).unwrap();
+    assert!(rel_close(f1.small_dependence_emphasis, 0.023820066516873725, 1e-9));
+    assert!(rel_close(f1.large_dependence_emphasis, 80.46875, 1e-9));
+    assert!(rel_close(f1.dependence_non_uniformity, 14.09375, 1e-9));
+    assert!(rel_close(f1.dependence_non_uniformity_normalized, 0.22021484375, 1e-9));
+    assert!(rel_close(f1.dependence_variance, 11.8896484375, 1e-9));
+    assert!(rel_close(f1.dependence_entropy, 4.382813189275507, 1e-9));
+    // alpha only regroups voxels across dependence columns, so the
+    // gray-level marginals agree (to summation-order ulps)
+    assert!(rel_close(f1.gray_level_non_uniformity, f0.gray_level_non_uniformity, 1e-12));
+    assert!(rel_close(f1.gray_level_variance, f0.gray_level_variance, 1e-12));
+    assert!(rel_close(f1.low_gray_level_emphasis, f0.low_gray_level_emphasis, 1e-12));
+    assert!(rel_close(f1.high_gray_level_emphasis, f0.high_gray_level_emphasis, 1e-12));
+
+    // --- NGTDM: exact level populations, then features
+    let mn = accumulate_ngtdm(&roi, Strategy::EqualSplit, 1);
+    assert_eq!(mn.counts, vec![13, 13, 13, 13, 12], "oracle n_i (ref.py::ngtdm_ref)");
+    assert_eq!(mn.n_valid(), 64);
+    let fn_ = ngtdm_features(&mn).unwrap();
+    assert!(rel_close(fn_.coarseness, 0.061083666812548926, 1e-9));
+    assert!(rel_close(fn_.contrast, 0.25405425675685755, 1e-9));
+    assert!(rel_close(fn_.busyness, 2.1827984515484515, 1e-9));
+    assert!(rel_close(fn_.complexity, 11.472858134512546, 1e-9));
+    assert!(rel_close(fn_.strength, 0.48031083803785524, 1e-9));
+
+    // determinism: every strategy / thread count reproduces the locked
+    // matrices and features bit-for-bit
+    for strategy in Strategy::ALL {
+        for threads in [1usize, 2, 4, 8] {
+            assert_eq!(accumulate_glszm(&roi), m, "glszm {strategy:?} x{threads}");
+            assert_eq!(
+                accumulate_gldm(&roi, 1.0, strategy, threads),
+                m1,
+                "gldm {strategy:?} x{threads}"
+            );
+            assert_eq!(
+                accumulate_ngtdm(&roi, strategy, threads),
+                mn,
+                "ngtdm {strategy:?} x{threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn region_texture_closed_form_fixtures() {
+    // Hand-computed closed forms on tiny fixtures (no oracle involved).
+    // NB under 26-connectivity the 2×2×2 checkerboard is NOT all
+    // singleton zones — face diagonals connect equal levels, giving one
+    // size-4 zone per level; the alternating 4×1×1 line is the true
+    // all-singletons fixture.
+    use radpipe::features::texture::{compute_texture, Discretization, TextureOptions};
+    use radpipe::parallel::Strategy;
+
+    let close = |a: f64, b: f64| (a - b).abs() < 1e-12;
+    let opts = TextureOptions {
+        discretization: Discretization::BinWidth(1.0),
+        strategy: Strategy::EqualSplit,
+        threads: 1,
+        ..Default::default()
+    };
+
+    // 2×2×2 checkerboard
+    let dims = Dims::new(2, 2, 2);
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..2 {
+        for y in 0..2 {
+            for x in 0..2 {
+                img.set(x, y, z, ((x + y + z) % 2) as f32);
+                mask.set(x, y, z, 1);
+            }
+        }
+    }
+    let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+    let z = t.glszm.unwrap();
+    assert!(close(z.small_area_emphasis, 1.0 / 16.0), "one size-4 zone per level");
+    assert!(close(z.large_area_emphasis, 16.0));
+    assert!(close(z.zone_percentage, 0.25));
+    assert!(close(z.zone_entropy, 1.0));
+    let d = t.gldm.unwrap();
+    assert!(close(d.small_dependence_emphasis, 1.0 / 16.0), "every dependence is 4");
+    assert!(close(d.dependence_variance, 0.0));
+    let n = t.ngtdm.unwrap();
+    assert!(close(n.coarseness, 7.0 / 16.0), "s_i = 16/7 per level");
+    assert!(close(n.contrast, 1.0 / 7.0));
+    assert!(close(n.busyness, 16.0 / 7.0));
+    assert!(close(n.complexity, 4.0 / 7.0));
+    assert!(close(n.strength, 7.0 / 16.0));
+
+    // alternating 4×1×1 line: all zones size 1
+    let dims = Dims::new(4, 1, 1);
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for x in 0..4 {
+        img.set(x, 0, 0, (x % 2) as f32);
+        mask.set(x, 0, 0, 1);
+    }
+    let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+    let z = t.glszm.unwrap();
+    assert!(close(z.small_area_emphasis, 1.0));
+    assert!(close(z.large_area_emphasis, 1.0));
+    assert!(close(z.zone_percentage, 1.0));
+
+    // constant 6³ ROI: single zone; NGTDM coarseness edge case (flat
+    // neighbourhood sum → the PyRadiomics 1e6 cap)
+    let dims = Dims::new(6, 6, 6);
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for zz in 0..6 {
+        for y in 0..6 {
+            for x in 0..6 {
+                img.set(x, y, zz, 7.0);
+                mask.set(x, y, zz, 1);
+            }
+        }
+    }
+    let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+    let z = t.glszm.unwrap();
+    assert!(close(z.zone_percentage, 1.0 / 216.0), "single zone of 216 voxels");
+    assert!(close(z.zone_entropy, 0.0));
+    let n = t.ngtdm.unwrap();
+    assert_eq!(n.coarseness, 1e6);
+    assert_eq!(n.contrast, 0.0);
+    assert_eq!(n.busyness, 0.0);
+    assert_eq!(n.complexity, 0.0);
+    assert_eq!(n.strength, 0.0);
+    assert!(t.named().iter().all(|(_, v)| v.is_finite()));
+}
+
+#[test]
+fn degenerate_rois_are_defined_for_all_five_texture_classes() {
+    // single-voxel, all-one-gray-level and NaN-intensity ROIs must yield
+    // defined values (or a located error for NaN) — no panics, no NaN
+    // leaks — with every texture class enabled
+    use radpipe::features::texture::{compute_texture, TextureOptions};
+
+    let opts = TextureOptions::default(); // all five classes on
+
+    // single voxel
+    let dims = Dims::new(3, 3, 3);
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    img.set(1, 1, 1, 5.0);
+    mask.set(1, 1, 1, 1);
+    let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+    assert!(t.glcm.is_none(), "no co-occurring pairs");
+    assert!(t.ngtdm.is_none(), "no valid 26-neighbourhood");
+    assert!(t.glrlm.is_some() && t.glszm.is_some() && t.gldm.is_some());
+    assert!(t.named().iter().all(|(_, v)| v.is_finite()), "{:?}", t.named());
+
+    // all one gray level
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..3 {
+        for y in 0..3 {
+            for x in 0..3 {
+                img.set(x, y, z, 42.0);
+                mask.set(x, y, z, 1);
+            }
+        }
+    }
+    let t = compute_texture(&img, &mask, &opts).unwrap().unwrap();
+    assert_eq!(t.ng, 1);
+    assert_eq!(t.named().len(), 47, "all five classes defined on a flat ROI");
+    assert!(t.named().iter().all(|(_, v)| v.is_finite()), "{:?}", t.named());
+
+    // NaN inside the ROI: located error, not a panic or NaN leak
+    let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..3 {
+        for y in 0..3 {
+            for x in 0..3 {
+                img.set(x, y, z, 1.0);
+            }
+        }
+    }
+    img.set(2, 0, 1, f32::NAN);
+    let err = compute_texture(&img, &mask, &opts).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("non-finite") && msg.contains("(2, 0, 1)"), "{msg}");
 }
 
 // ------------------------------------- derived-image (imgproc) oracle locks
@@ -644,6 +914,20 @@ fn derived_feature_determinism_sweep() {
     let want = extract(1, Strategy::EqualSplit);
     assert_eq!(want.derived.len(), 11);
     assert!(want.derived.iter().all(|d| d.first_order.is_some() && d.texture.is_some()));
+    // the sweep covers all five texture classes — including the
+    // region-based GLSZM/GLDM/NGTDM — on original + LoG + wavelet images
+    for d in &want.derived {
+        let t = d.texture.as_ref().unwrap();
+        assert!(
+            t.glcm.is_some()
+                && t.glrlm.is_some()
+                && t.glszm.is_some()
+                && t.gldm.is_some()
+                && t.ngtdm.is_some(),
+            "{}: every texture class must be computed",
+            d.image
+        );
+    }
     for strategy in Strategy::ALL {
         for &threads in &sweep_threads() {
             let got = extract(threads, strategy);

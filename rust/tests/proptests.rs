@@ -411,6 +411,247 @@ fn prop_haar_roundtrip_is_exact_on_integer_volumes() {
     });
 }
 
+// ---------------------------------------- region-based texture classes
+
+use radpipe::features::texture::{
+    accumulate_gldm, accumulate_glszm, accumulate_ngtdm, compute_texture, discretize,
+    DiscretizedRoi, Discretization, TextureOptions, MAX_DEPENDENCE, NEIGHBOURS_26,
+};
+
+/// Random small labelled case: an intensity volume (few integer values, so
+/// `BinWidth(1)` discretizes losslessly) plus a holey mask, dims ≤ 8³.
+fn texture_case_gen() -> Gen<(VoxelGrid<f32>, VoxelGrid<u8>)> {
+    Gen::new(|rng: &mut Pcg32, size: usize| {
+        let dim = |rng: &mut Pcg32| 2 + (rng.next_u32() as usize) % (size / 4 + 4).min(7);
+        let dims = Dims::new(dim(rng), dim(rng), dim(rng));
+        let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+        let levels = 2 + rng.below(4);
+        for z in 0..dims.z {
+            for y in 0..dims.y {
+                for x in 0..dims.x {
+                    img.set(x, y, z, rng.below(levels) as f32);
+                    if rng.below(5) > 0 {
+                        mask.set(x, y, z, 1);
+                    }
+                }
+            }
+        }
+        (img, mask)
+    })
+}
+
+fn discretized(img: &VoxelGrid<f32>, mask: &VoxelGrid<u8>) -> Option<DiscretizedRoi> {
+    discretize(img, mask, Discretization::BinWidth(1.0)).unwrap()
+}
+
+/// Brute-force zone inventory via min-label fixpoint propagation — a
+/// different algorithm from the implementation's flood fill (labels
+/// converge to the per-component minimum flat index).
+fn brute_zone_entries(roi: &DiscretizedRoi) -> Vec<(u32, u32, u64)> {
+    let dims = roi.levels.dims;
+    let data = roi.levels.data();
+    let plane = dims.x * dims.y;
+    let mut label: Vec<usize> = (0..data.len()).collect();
+    loop {
+        let mut changed = false;
+        for idx in 0..data.len() {
+            if data[idx] == 0 {
+                continue;
+            }
+            let x = (idx % dims.x) as isize;
+            let y = ((idx / dims.x) % dims.y) as isize;
+            let z = (idx / plane) as isize;
+            let mut m = label[idx];
+            for &(dx, dy, dz) in &NEIGHBOURS_26 {
+                let (qx, qy, qz) = (x + dx, y + dy, z + dz);
+                if qx < 0
+                    || qy < 0
+                    || qz < 0
+                    || qx as usize >= dims.x
+                    || qy as usize >= dims.y
+                    || qz as usize >= dims.z
+                {
+                    continue;
+                }
+                let q = qz as usize * plane + qy as usize * dims.x + qx as usize;
+                if data[q] == data[idx] {
+                    m = m.min(label[q]);
+                }
+            }
+            if m < label[idx] {
+                label[idx] = m;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut sizes: std::collections::BTreeMap<(u32, usize), u32> = Default::default();
+    for idx in 0..data.len() {
+        if data[idx] != 0 {
+            *sizes.entry((data[idx], label[idx])).or_insert(0) += 1;
+        }
+    }
+    let mut zones: std::collections::BTreeMap<(u32, u32), u64> = Default::default();
+    for ((lvl, _), size) in sizes {
+        *zones.entry((lvl, size)).or_insert(0) += 1;
+    }
+    zones.into_iter().map(|((i, s), c)| (i, s, c)).collect()
+}
+
+#[test]
+fn prop_glszm_zone_sizes_sum_to_roi_voxel_count() {
+    forall("glszm-covers-roi", &texture_case_gen(), 40, |(img, mask)| {
+        let Some(roi) = discretized(img, mask) else { return true };
+        let m = accumulate_glszm(&roi);
+        m.entries.iter().map(|&(_, s, c)| s as u64 * c).sum::<u64>() == roi.n_voxels as u64
+    });
+}
+
+#[test]
+fn prop_glszm_matches_brute_force_labelling() {
+    forall("glszm-brute-equiv", &texture_case_gen(), 40, |(img, mask)| {
+        let Some(roi) = discretized(img, mask) else { return true };
+        accumulate_glszm(&roi).entries == brute_zone_entries(&roi)
+    });
+}
+
+#[test]
+fn prop_gldm_dependences_sum_to_roi_voxel_count() {
+    forall("gldm-covers-roi", &texture_case_gen(), 40, |(img, mask)| {
+        let Some(roi) = discretized(img, mask) else { return true };
+        [0.0, 1.0, 3.0].into_iter().all(|alpha| {
+            let m = accumulate_gldm(&roi, alpha, Strategy::LocalAccumulators, 2);
+            m.counts.iter().sum::<u64>() == roi.n_voxels as u64
+        })
+    });
+}
+
+#[test]
+fn prop_gldm_matches_brute_force() {
+    forall("gldm-brute-equiv", &texture_case_gen(), 40, |(img, mask)| {
+        let Some(roi) = discretized(img, mask) else { return true };
+        let dims = roi.levels.dims;
+        let data = roi.levels.data();
+        let plane = dims.x * dims.y;
+        for alpha in [0.0, 1.0] {
+            let mut brute = vec![0u64; roi.ng * MAX_DEPENDENCE];
+            for idx in 0..data.len() {
+                if data[idx] == 0 {
+                    continue;
+                }
+                let x = (idx % dims.x) as isize;
+                let y = ((idx / dims.x) % dims.y) as isize;
+                let z = (idx / plane) as isize;
+                let mut dep = 1usize;
+                for &(dx, dy, dz) in &NEIGHBOURS_26 {
+                    let (qx, qy, qz) = (x + dx, y + dy, z + dz);
+                    if qx < 0
+                        || qy < 0
+                        || qz < 0
+                        || qx as usize >= dims.x
+                        || qy as usize >= dims.y
+                        || qz as usize >= dims.z
+                    {
+                        continue;
+                    }
+                    let lj = data[qz as usize * plane + qy as usize * dims.x + qx as usize];
+                    if lj != 0 && (data[idx] as f64 - lj as f64).abs() <= alpha {
+                        dep += 1;
+                    }
+                }
+                brute[(data[idx] as usize - 1) * MAX_DEPENDENCE + (dep - 1)] += 1;
+            }
+            let m = accumulate_gldm(&roi, alpha, Strategy::EqualSplit, 3);
+            if m.counts != brute {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_ngtdm_matches_brute_force() {
+    // the implementation accumulates exact integer numerators grouped by
+    // (level, neighbour count); the brute force sums naive per-voxel f64
+    // terms — they must agree to float tolerance, and the populations
+    // exactly
+    forall("ngtdm-brute-equiv", &texture_case_gen(), 40, |(img, mask)| {
+        let Some(roi) = discretized(img, mask) else { return true };
+        let dims = roi.levels.dims;
+        let data = roi.levels.data();
+        let plane = dims.x * dims.y;
+        let mut s = vec![0.0f64; roi.ng];
+        let mut n = vec![0u64; roi.ng];
+        for idx in 0..data.len() {
+            if data[idx] == 0 {
+                continue;
+            }
+            let x = (idx % dims.x) as isize;
+            let y = ((idx / dims.x) % dims.y) as isize;
+            let z = (idx / plane) as isize;
+            let mut sum = 0.0f64;
+            let mut count = 0u64;
+            for &(dx, dy, dz) in &NEIGHBOURS_26 {
+                let (qx, qy, qz) = (x + dx, y + dy, z + dz);
+                if qx < 0
+                    || qy < 0
+                    || qz < 0
+                    || qx as usize >= dims.x
+                    || qy as usize >= dims.y
+                    || qz as usize >= dims.z
+                {
+                    continue;
+                }
+                let lj = data[qz as usize * plane + qy as usize * dims.x + qx as usize];
+                if lj != 0 {
+                    sum += lj as f64;
+                    count += 1;
+                }
+            }
+            if count == 0 {
+                continue;
+            }
+            s[data[idx] as usize - 1] += (data[idx] as f64 - sum / count as f64).abs();
+            n[data[idx] as usize - 1] += 1;
+        }
+        let m = accumulate_ngtdm(&roi, Strategy::BlockReduction, 2);
+        if m.counts != n {
+            return false;
+        }
+        m.s()
+            .iter()
+            .zip(&s)
+            .all(|(a, b)| (a - b).abs() <= 1e-9 * b.abs().max(1.0))
+    });
+}
+
+#[test]
+fn prop_texture_invariant_under_bin_aligned_intensity_shift() {
+    // BinWidth discretization is edge-aligned, so shifting every intensity
+    // by a multiple of the bin width re-centres the same levels — NGTDM
+    // (and every other matrix class) must be bit-identical
+    forall("ngtdm-shift-invariant", &texture_case_gen(), 30, |(img, mask)| {
+        let w = 2.0f32;
+        let opts = TextureOptions {
+            discretization: Discretization::BinWidth(w as f64),
+            ..Default::default()
+        };
+        let base = compute_texture(img, mask, &opts).unwrap();
+        for k in [1.0f32, -3.0, 40.0] {
+            let shifted = img.map(|v| v + k * w);
+            let got = compute_texture(&shifted, mask, &opts).unwrap();
+            if got != base {
+                return false;
+            }
+        }
+        true
+    });
+}
+
 #[test]
 fn prop_channel_delivers_exactly_once_under_permuted_sizes() {
     forall("channel-exactly-once", &int_range(1, 300), 15, |&n| {
