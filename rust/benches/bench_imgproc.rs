@@ -268,6 +268,8 @@ fn main() -> anyhow::Result<()> {
             image_types: radpipe::imgproc::ImageTypes::parse(types).unwrap(),
             log_sigmas: vec![1.0, 2.0],
             cpu_threads: threads,
+            // this bench drives a bare mask; the stand-in needs the opt-in
+            synthetic_image: true,
             ..Default::default()
         };
         let ex = FeatureExtractor::new(&cfg)?;

@@ -27,6 +27,8 @@ USAGE:
                     [--gldm-alpha F]
                     [--image-types original,log,wavelet|all] [--log-sigmas 1.0,3.0]
                     [--resampled-spacing MM] [--wavelet-levels N]
+                    [--synthetic-image]  (stand-in intensities for cases
+                                          without an image= manifest entry)
   radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
   radpipe fig1      --data DIR [--threads N]
   radpipe fig2      --data DIR
@@ -146,6 +148,9 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
             "--wavelet-levels must be in 1..={max}, got {n}"
         );
         cfg.wavelet_levels = n;
+    }
+    if args.flag("synthetic-image") {
+        cfg.synthetic_image = true;
     }
     Ok(cfg)
 }
@@ -564,6 +569,46 @@ mod tests {
             "wavelet",
             "--wavelet-levels",
             "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn intensity_extraction_requires_an_image_or_the_optin() {
+        let dir = std::env::temp_dir().join("radpipe_cli_optin_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        // strip the image= keys: a mask-only dataset with intensity
+        // classes and no opt-in must fail (per-case errors → non-zero exit)
+        let cases = dir.join("cases.txt");
+        let text = std::fs::read_to_string(&cases).unwrap();
+        let stripped: String = text
+            .lines()
+            .map(|l| {
+                let kept: Vec<&str> =
+                    l.split_whitespace().filter(|t| !t.starts_with("image=")).collect();
+                kept.join(" ") + "\n"
+            })
+            .collect();
+        std::fs::write(&cases, stripped).unwrap();
+        let err = dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--backend", "cpu",
+            "--features", "firstorder",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("failed"), "{err:#}");
+        // the documented opt-in restores the old stand-in behaviour
+        dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--backend", "cpu",
+            "--features", "firstorder", "--synthetic-image",
+        ]))
+        .unwrap();
+        // shape-only extraction never needed an image in the first place
+        dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--backend", "cpu",
         ]))
         .unwrap();
     }

@@ -236,6 +236,11 @@ pub struct PipelineConfig {
     pub resampled_spacing: f64,
     /// Haar wavelet decomposition levels (each level emits 8 sub-bands).
     pub wavelet_levels: usize,
+    /// Opt-in: substitute a deterministic synthetic intensity image when a
+    /// case enables intensity classes but carries no image volume. Off by
+    /// default — such cases fail with an error naming the remedies instead
+    /// of silently computing features from fabricated intensities.
+    pub synthetic_image: bool,
 }
 
 impl Default for PipelineConfig {
@@ -261,6 +266,7 @@ impl Default for PipelineConfig {
             log_sigmas: vec![2.0],
             resampled_spacing: 0.0,
             wavelet_levels: 1,
+            synthetic_image: false,
         }
     }
 }
@@ -338,6 +344,7 @@ impl PipelineConfig {
                         );
                     }
                 }
+                "synthetic_image" => cfg.synthetic_image = value.as_bool()?,
                 other => bail!("unknown [pipeline] key '{other}'"),
             }
         }
@@ -487,6 +494,17 @@ gldm_alpha = 1.5
         assert_eq!(c.bin_count, 16);
         assert_eq!(c.glcm_distances, vec![1, 2, 3]);
         assert_eq!(c.gldm_alpha, 1.5);
+    }
+
+    #[test]
+    fn synthetic_image_is_an_explicit_opt_in() {
+        assert!(!PipelineConfig::default().synthetic_image, "off by default");
+        let c = PipelineConfig::from_toml("[pipeline]\nsynthetic_image = true\n").unwrap();
+        assert!(c.synthetic_image);
+        let c = PipelineConfig::from_toml("[pipeline]\nsynthetic_image = false\n").unwrap();
+        assert!(!c.synthetic_image);
+        // non-boolean values are a clear error
+        assert!(PipelineConfig::from_toml("[pipeline]\nsynthetic_image = 1\n").is_err());
     }
 
     #[test]

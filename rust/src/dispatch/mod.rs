@@ -14,7 +14,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::{Backend, FeatureClasses, PipelineConfig};
 use crate::features::texture::Discretization;
@@ -32,8 +32,10 @@ use crate::runtime::{
 use crate::volume::{crop_box, crop_to_roi, MaskStats, VoxelGrid};
 
 /// Seed for the synthetic stand-in intensities used when a case has no
-/// image volume (the dataset format currently ships masks only); fixed so
-/// intensity features are reproducible run-to-run.
+/// image volume *and* the `synthetic_image` opt-in is set; fixed so the
+/// stand-in features are reproducible run-to-run. Without the opt-in, a
+/// case that enables intensity classes but supplies no image is an error —
+/// never a silent substitution.
 const SYNTH_IMAGE_SEED: u64 = 42;
 
 /// Case grids after alignment (mask, optional image) — borrowed when no
@@ -58,6 +60,8 @@ pub enum PathTaken {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CaseTiming {
     pub read: Duration,
+    /// Image-volume read time (zero for mask-only / shape-only cases).
+    pub read_image: Duration,
     pub preprocess: Duration,
     pub marching: Duration,
     pub transfer: Duration,
@@ -78,7 +82,7 @@ impl CaseTiming {
     }
 
     pub fn total(&self) -> Duration {
-        self.read + self.compute_total()
+        self.read + self.read_image + self.compute_total()
     }
 }
 
@@ -169,6 +173,7 @@ pub struct FeatureExtractor {
     log_sigmas: Vec<f64>,
     wavelet_levels: usize,
     resampled_spacing: f64,
+    synthetic_image: bool,
 }
 
 impl FeatureExtractor {
@@ -221,6 +226,7 @@ impl FeatureExtractor {
             log_sigmas: cfg.log_sigmas.clone(),
             wavelet_levels: cfg.wavelet_levels,
             resampled_spacing: cfg.resampled_spacing,
+            synthetic_image: cfg.synthetic_image,
         })
     }
 
@@ -251,10 +257,12 @@ impl FeatureExtractor {
         self.batcher.as_ref().map(|b| b.stats())
     }
 
-    /// PyRadiomics-style entry point: read image+mask paths, return the
-    /// feature map (see `examples/quickstart.rs` for the 4-line usage).
-    /// The mask format is detected from the extension (`.nii[.gz]`,
-    /// `.rvol[.gz]`); unknown extensions are a clear error.
+    /// Mask-only entry point: read the mask path, return the feature map
+    /// (see `examples/quickstart.rs` for the 4-line usage). The volume
+    /// format is detected from the extension (`.nii[.gz]`, `.rvol[.gz]`);
+    /// unknown extensions are a clear error. Intensity classes need an
+    /// image — use [`FeatureExtractor::execute_with_image`] — or the
+    /// explicit `synthetic_image` opt-in.
     pub fn execute(&self, mask_path: &Path) -> Result<Extraction> {
         let t0 = Instant::now();
         let mask: VoxelGrid<u8> = crate::io::read_mask(mask_path)?;
@@ -264,10 +272,30 @@ impl FeatureExtractor {
         Ok(ex)
     }
 
-    /// Extraction over an in-memory mask (pipeline stages use this). When
-    /// intensity classes are enabled and no image is supplied, a
-    /// deterministic synthetic image stands in (see
-    /// [`crate::synth::synthesize_image`]).
+    /// PyRadiomics-style entry point over an (image, mask) pair of paths —
+    /// `RadiomicsFeatureExtractor().execute(image, mask)`. The image is
+    /// read with intensities preserved ([`crate::io::read_image`]) and
+    /// auto-resampled onto the mask grid when the grids differ.
+    pub fn execute_with_image(
+        &self,
+        image_path: &Path,
+        mask_path: &Path,
+    ) -> Result<Extraction> {
+        let t0 = Instant::now();
+        let mask: VoxelGrid<u8> = crate::io::read_mask(mask_path)?;
+        let read = t0.elapsed();
+        let t0 = Instant::now();
+        let image: VoxelGrid<f32> = crate::io::read_image(image_path)?;
+        let read_image = t0.elapsed();
+        let mut ex = self.execute_case(&mask, Some(&image))?;
+        ex.timing.read = read;
+        ex.timing.read_image = read_image;
+        Ok(ex)
+    }
+
+    /// Extraction over an in-memory mask (no image). Intensity classes
+    /// require the `synthetic_image` opt-in on this path; without it the
+    /// case fails with an error naming the remedies.
     pub fn execute_mask(&self, mask: &VoxelGrid<u8>) -> Result<Extraction> {
         self.execute_case(mask, None)
     }
@@ -396,7 +424,16 @@ impl FeatureExtractor {
             let t = Instant::now();
             let cropped_image = match &image_c {
                 Some(img) => crop_box(&**img, offset, cropped.dims),
-                None => crate::synth::synthesize_image(&cropped, SYNTH_IMAGE_SEED),
+                None if self.synthetic_image => {
+                    crate::synth::synthesize_image(&cropped, SYNTH_IMAGE_SEED)
+                }
+                None => bail!(
+                    "intensity feature classes are enabled but this case has no \
+                     image volume; add `image=<path>` to its manifest entry (or \
+                     pass one to execute_case), or explicitly opt in to the \
+                     synthetic stand-in with --synthetic-image / \
+                     `synthetic_image = true`"
+                ),
             };
             let opts = self.imgproc_options();
             let mut derived = Vec::with_capacity(
@@ -612,7 +649,7 @@ mod tests {
         let ex = cpu_extractor();
         let err = ex.execute(&path).unwrap_err();
         assert!(
-            format!("{err:#}").contains("unrecognised mask format"),
+            format!("{err:#}").contains("unrecognised volume format"),
             "{err:#}"
         );
     }
@@ -638,8 +675,33 @@ mod tests {
             backend: Backend::Cpu,
             cpu_threads,
             feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            // these tests drive execute_mask without image volumes
+            synthetic_image: true,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn missing_image_without_the_optin_is_a_located_error() {
+        let cfg = PipelineConfig {
+            backend: Backend::Cpu,
+            cpu_threads: 1,
+            feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            ..Default::default()
+        };
+        assert!(!cfg.synthetic_image, "opt-in must default off");
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let err = ex.execute_mask(&sphere_mask(12, 4.0)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("image="), "must name the manifest remedy: {msg}");
+        assert!(msg.contains("--synthetic-image"), "must name the opt-in: {msg}");
+        // an explicit image satisfies the requirement without the opt-in
+        let mask = sphere_mask(12, 4.0);
+        let img: VoxelGrid<f32> = VoxelGrid::zeros(mask.dims, mask.spacing);
+        assert!(ex.execute_case(&mask, Some(&img)).is_ok());
+        // shape-only configs never need an image at all
+        let out = cpu_extractor().execute_mask(&mask).unwrap();
+        assert!(out.first_order.is_none());
     }
 
     #[test]

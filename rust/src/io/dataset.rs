@@ -3,8 +3,11 @@
 //! `cases.txt` format, one case per line (whitespace-separated key=value):
 //!
 //! ```text
-//! case=00000-1 mask=00000-1.rvol.gz dims=231x104x264 target_vertices=124406
+//! case=00000-1 mask=00000-1.rvol.gz image=00000-1.img.rvol.gz dims=231x104x264 target_vertices=124406
 //! ```
+//!
+//! `image=` is optional: shape-only datasets ship masks alone. Unknown
+//! keys are still ignored (forward compatibility).
 
 use std::path::{Path, PathBuf};
 
@@ -18,7 +21,12 @@ pub struct CaseEntry {
     pub case_id: String,
     /// Mask volume path, relative to the manifest directory.
     pub mask: PathBuf,
-    /// Declared dims (validated against the file on read).
+    /// Intensity image volume path, relative to the manifest directory;
+    /// `None` for mask-only cases (intensity classes then require the
+    /// explicit synthetic-image opt-in).
+    pub image: Option<PathBuf>,
+    /// Declared dims — the pipeline read stage validates these against the
+    /// loaded mask and fails the case on a mismatch.
     pub dims: Dims,
     /// The vertex count this case was generated to approximate (paper
     /// Table 2 column); 0 when unknown.
@@ -38,17 +46,20 @@ impl DatasetManifest {
         self.root.join(&e.mask)
     }
 
+    /// Absolute path of a case's intensity image, when it has one.
+    pub fn image_path(&self, e: &CaseEntry) -> Option<PathBuf> {
+        e.image.as_ref().map(|p| self.root.join(p))
+    }
+
     /// Serialise back to the manifest format.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         for e in &self.cases {
-            s.push_str(&format!(
-                "case={} mask={} dims={} target_vertices={}\n",
-                e.case_id,
-                e.mask.display(),
-                e.dims,
-                e.target_vertices
-            ));
+            s.push_str(&format!("case={} mask={}", e.case_id, e.mask.display()));
+            if let Some(image) = &e.image {
+                s.push_str(&format!(" image={}", image.display()));
+            }
+            s.push_str(&format!(" dims={} target_vertices={}\n", e.dims, e.target_vertices));
         }
         s
     }
@@ -71,6 +82,7 @@ fn parse_dims(s: &str) -> Result<Dims> {
 fn parse_line(line: &str) -> Result<CaseEntry> {
     let mut case_id = None;
     let mut mask = None;
+    let mut image = None;
     let mut dims = None;
     let mut target = 0usize;
     for tok in line.split_whitespace() {
@@ -80,6 +92,7 @@ fn parse_line(line: &str) -> Result<CaseEntry> {
         match k {
             "case" => case_id = Some(v.to_string()),
             "mask" => mask = Some(PathBuf::from(v)),
+            "image" => image = Some(PathBuf::from(v)),
             "dims" => dims = Some(parse_dims(v)?),
             "target_vertices" => target = v.parse().context("target_vertices")?,
             _ => {} // forward-compatible: ignore unknown keys
@@ -88,6 +101,7 @@ fn parse_line(line: &str) -> Result<CaseEntry> {
     Ok(CaseEntry {
         case_id: case_id.context("missing case=")?,
         mask: mask.context("missing mask=")?,
+        image,
         dims: dims.context("missing dims=")?,
         target_vertices: target,
     })
@@ -131,12 +145,14 @@ mod tests {
                 CaseEntry {
                     case_id: "00000-1".into(),
                     mask: "00000-1.rvol.gz".into(),
+                    image: Some("00000-1.img.rvol.gz".into()),
                     dims: Dims::new(231, 104, 264),
                     target_vertices: 124406,
                 },
                 CaseEntry {
                     case_id: "00000-2".into(),
                     mask: "00000-2.rvol.gz".into(),
+                    image: None,
                     dims: Dims::new(28, 30, 59),
                     target_vertices: 6132,
                 },
@@ -146,6 +162,11 @@ mod tests {
         let back = scan_dataset(&root).unwrap();
         assert_eq!(back.cases, m.cases);
         assert!(back.mask_path(&back.cases[0]).ends_with("00000-1.rvol.gz"));
+        assert!(back
+            .image_path(&back.cases[0])
+            .unwrap()
+            .ends_with("00000-1.img.rvol.gz"));
+        assert_eq!(back.image_path(&back.cases[1]), None);
     }
 
     #[test]
@@ -162,14 +183,23 @@ mod tests {
     }
 
     #[test]
-    fn unknown_keys_ignored() {
+    fn image_key_parsed_and_unknown_keys_still_ignored() {
         let root = tdir("unknown");
         std::fs::write(
             root.join("cases.txt"),
             "case=a mask=a.rvol dims=4x4x4 target_vertices=1 image=img.rvol extra=9\n",
         )
         .unwrap();
-        assert_eq!(scan_dataset(&root).unwrap().cases.len(), 1);
+        let m = scan_dataset(&root).unwrap();
+        assert_eq!(m.cases.len(), 1);
+        assert_eq!(m.cases[0].image, Some(PathBuf::from("img.rvol")));
+        // a mask-only line parses with no image
+        std::fs::write(
+            root.join("cases.txt"),
+            "case=a mask=a.rvol dims=4x4x4 target_vertices=1\n",
+        )
+        .unwrap();
+        assert_eq!(scan_dataset(&root).unwrap().cases[0].image, None);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Mask-file format detection by extension.
+//! Volume-file format detection by extension (masks and images).
 //!
 //! The seed dispatched on `to_string_lossy().contains(".nii")`, which
 //! misroutes names like `not.nii.backup.rvol` and silently treats every
@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 
 use crate::volume::VoxelGrid;
 
-/// Supported mask container formats.
+/// Supported volume container formats.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MaskFormat {
     /// NIfTI-1 (`.nii` / `.nii.gz`).
@@ -21,7 +21,7 @@ pub enum MaskFormat {
     Rvol,
 }
 
-/// Detect the mask format from the file name's extension(s).
+/// Detect the volume container format from the file name's extension(s).
 ///
 /// Accepts `.nii`, `.nii.gz`, `.rvol`, `.rvol.gz` (any case); anything else
 /// is an error naming the offending path and the accepted extensions.
@@ -38,17 +38,28 @@ pub fn detect_mask_format(path: &Path) -> Result<MaskFormat> {
         Ok(MaskFormat::Rvol)
     } else {
         bail!(
-            "unrecognised mask format for '{}' (expected .nii, .nii.gz, .rvol or .rvol.gz)",
+            "unrecognised volume format for '{}' (expected .nii, .nii.gz, .rvol or .rvol.gz)",
             path.display()
         )
     }
 }
 
-/// Read a mask volume, dispatching on the detected format.
+/// Read a mask volume (binarised u8), dispatching on the detected format.
 pub fn read_mask(path: &Path) -> Result<VoxelGrid<u8>> {
     match detect_mask_format(path)? {
         MaskFormat::Nifti => super::read_nifti(path),
         MaskFormat::Rvol => super::read_rvol(path),
+    }
+}
+
+/// Read an intensity image volume (f32, values preserved — no
+/// binarisation), dispatching on the detected format. NIfTI uint8/int16/
+/// float32 payloads are widened via [`super::read_nifti_image`]; rvol u8
+/// and f32 payloads via [`super::read_rvol_image`].
+pub fn read_image(path: &Path) -> Result<VoxelGrid<f32>> {
+    match detect_mask_format(path)? {
+        MaskFormat::Nifti => super::read_nifti_image(path),
+        MaskFormat::Rvol => super::read_rvol_image(path),
     }
 }
 
@@ -106,7 +117,7 @@ mod tests {
         for name in ["mask.txt", "mask", "mask.gz", "mask.niix", "mask.rvolx.gz"] {
             let err = detect(name).unwrap_err();
             let msg = err.to_string();
-            assert!(msg.contains("unrecognised mask format"), "{name}: {msg}");
+            assert!(msg.contains("unrecognised volume format"), "{name}: {msg}");
             assert!(msg.contains(".rvol.gz"), "{name}: {msg}");
         }
     }
@@ -114,7 +125,9 @@ mod tests {
     #[test]
     fn read_mask_reports_unknown_extension() {
         let err = read_mask(&PathBuf::from("/tmp/whatever.dat")).unwrap_err();
-        assert!(err.to_string().contains("unrecognised mask format"));
+        assert!(err.to_string().contains("unrecognised volume format"));
+        let err = read_image(&PathBuf::from("/tmp/whatever.dat")).unwrap_err();
+        assert!(err.to_string().contains("unrecognised volume format"));
     }
 
     #[test]

@@ -11,6 +11,6 @@ mod dataset;
 mod format;
 
 pub use dataset::{scan_dataset, CaseEntry, DatasetManifest};
-pub use format::{detect_mask_format, read_mask, MaskFormat};
-pub use nifti::{read_nifti, write_nifti};
-pub use rvol::{read_rvol, write_rvol};
+pub use format::{detect_mask_format, read_image, read_mask, MaskFormat};
+pub use nifti::{read_nifti, read_nifti_image, write_nifti, write_nifti_image};
+pub use rvol::{read_rvol, read_rvol_image, write_rvol};

@@ -1,11 +1,19 @@
 //! NIfTI-1 subset reader/writer.
 //!
 //! KiTS19 ships `.nii.gz` volumes; this implements the slice of NIfTI-1
-//! the pipeline needs: the 348-byte header (+4 extension bytes), dims ≤ 3,
-//! dtypes uint8 / int16 / float32, pixdim spacings, gzip wrapping. It is a
-//! real parser (magic, dtype, vox_offset are honoured) — not a stub — but
+//! the pipeline needs: the 348-byte header (+4 extension bytes), 3-D
+//! volumes, dtypes uint8 / int16 / float32, pixdim spacings, scl_slope /
+//! scl_inter intensity scaling, gzip wrapping. It is a real parser
+//! (magic, dtype, vox_offset are honoured) — not a stub — but
 //! deliberately not a full implementation (no qform/sform rotations; the
-//! shape pipeline only needs dims + spacing).
+//! pipeline only needs dims + spacing).
+//!
+//! Two read paths share one header parser:
+//!
+//! * [`read_nifti`] — segmentation masks, binarised to u8 (`!= 0`);
+//! * [`read_nifti_image`] — intensity images, widened to f32 with the
+//!   stored values preserved (and `scl_slope`/`scl_inter` applied when the
+//!   header carries a real scaling).
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -22,6 +30,8 @@ const HDR_SIZE: usize = 348;
 const DT_UINT8: i16 = 2;
 const DT_INT16: i16 = 4;
 const DT_FLOAT32: i16 = 16;
+/// `dim[]` entries are i16 in NIfTI-1 — no axis can exceed this on disk.
+const MAX_DIM: usize = i16::MAX as usize;
 
 fn rd_i16(b: &[u8], off: usize) -> i16 {
     i16::from_le_bytes([b[off], b[off + 1]])
@@ -30,18 +40,27 @@ fn rd_f32(b: &[u8], off: usize) -> f32 {
     f32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
 }
 
-/// Read a NIfTI-1 file (`.nii` or `.nii.gz`) as a u8 mask volume.
-///
-/// int16/float32 payloads are binarised (`!= 0`), matching how the pipeline
-/// treats segmentation masks of any storage type.
-pub fn read_nifti(path: &Path) -> Result<VoxelGrid<u8>> {
+/// The header fields both read paths need.
+struct NiftiHeader {
+    dims: Dims,
+    spacing: Vec3,
+    datatype: i16,
+    scl_slope: f32,
+    scl_inter: f32,
+}
+
+fn open_reader(path: &Path) -> Result<Box<dyn Read>> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut reader: Box<dyn Read> = if super::format::has_gz_suffix(path) {
+    Ok(if super::format::has_gz_suffix(path) {
         Box::new(GzDecoder::new(BufReader::new(file)))
     } else {
         Box::new(BufReader::new(file))
-    };
+    })
+}
 
+/// Parse the 348-byte header and consume everything up to `vox_offset`,
+/// leaving the reader at the first payload byte.
+fn parse_header(reader: &mut dyn Read) -> Result<NiftiHeader> {
     let mut hdr = [0u8; HDR_SIZE];
     reader.read_exact(&mut hdr).context("nifti header")?;
     let sizeof_hdr = i32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
@@ -55,9 +74,35 @@ pub fn read_nifti(path: &Path) -> Result<VoxelGrid<u8>> {
     if !(1..=7).contains(&ndim) {
         bail!("bad ndim {ndim}");
     }
-    let nx = rd_i16(&hdr, 42).max(1) as usize;
-    let ny = rd_i16(&hdr, 44).max(1) as usize;
-    let nz = rd_i16(&hdr, 46).max(1) as usize;
+    // Spatial axes: an axis covered by ndim must be >= 1 — the seed
+    // clamped corrupt (zero/negative) values to a 1-voxel axis, silently
+    // mangling the volume instead of reporting the corruption.
+    let mut sdim = [1usize; 3];
+    for (i, s) in sdim.iter_mut().enumerate() {
+        let k = i + 1;
+        if (k as i16) <= ndim {
+            let raw = rd_i16(&hdr, 40 + 2 * k);
+            if raw < 1 {
+                bail!("corrupt NIfTI header: dim[{k}]={raw} (must be >= 1)");
+            }
+            *s = raw as usize;
+        }
+    }
+    // Higher axes: this reader is 3-D only. A real 4th (or higher) axis
+    // used to be silently truncated to its first volume; reject instead.
+    // Trailing singleton axes (dim[k] in {0, 1}) are fine.
+    for k in 4..=(ndim as usize) {
+        let raw = rd_i16(&hdr, 40 + 2 * k);
+        if raw > 1 {
+            bail!(
+                "{ndim}-D NIfTI unsupported: dim[{k}]={raw} \
+                 (this reader handles 3-D volumes only)"
+            );
+        }
+        if raw < 0 {
+            bail!("corrupt NIfTI header: dim[{k}]={raw}");
+        }
+    }
     let datatype = rd_i16(&hdr, 70);
     let sx = rd_f32(&hdr, 80) as f64; // pixdim[1]
     let sy = rd_f32(&hdr, 84) as f64;
@@ -71,14 +116,29 @@ pub fn read_nifti(path: &Path) -> Result<VoxelGrid<u8>> {
     let mut skip = vec![0u8; vox_offset - HDR_SIZE];
     reader.read_exact(&mut skip).context("nifti extension skip")?;
 
-    let n = nx * ny * nz;
-    let spacing = Vec3::new(
-        if sx > 0.0 { sx } else { 1.0 },
-        if sy > 0.0 { sy } else { 1.0 },
-        if sz > 0.0 { sz } else { 1.0 },
-    );
-    let dims = Dims::new(nx, ny, nz);
-    let data: Vec<u8> = match datatype {
+    Ok(NiftiHeader {
+        dims: Dims::new(sdim[0], sdim[1], sdim[2]),
+        spacing: Vec3::new(
+            if sx > 0.0 { sx } else { 1.0 },
+            if sy > 0.0 { sy } else { 1.0 },
+            if sz > 0.0 { sz } else { 1.0 },
+        ),
+        datatype,
+        scl_slope: rd_f32(&hdr, 112),
+        scl_inter: rd_f32(&hdr, 116),
+    })
+}
+
+/// Read a NIfTI-1 file (`.nii` or `.nii.gz`) as a u8 mask volume.
+///
+/// int16/float32 payloads are binarised (`!= 0`), matching how the pipeline
+/// treats segmentation masks of any storage type. For intensity volumes use
+/// [`read_nifti_image`].
+pub fn read_nifti(path: &Path) -> Result<VoxelGrid<u8>> {
+    let mut reader = open_reader(path)?;
+    let h = parse_header(&mut *reader)?;
+    let n = h.dims.len();
+    let data: Vec<u8> = match h.datatype {
         DT_UINT8 => {
             let mut v = vec![0u8; n];
             reader.read_exact(&mut v).context("nifti payload")?;
@@ -100,45 +160,123 @@ pub fn read_nifti(path: &Path) -> Result<VoxelGrid<u8>> {
         }
         other => bail!("unsupported NIfTI datatype {other}"),
     };
-    Ok(VoxelGrid::from_vec(dims, spacing, data))
+    Ok(VoxelGrid::from_vec(h.dims, h.spacing, data))
 }
 
-/// Write a u8 mask as NIfTI-1 (`.nii` or `.nii.gz` by extension).
-pub fn write_nifti(path: &Path, grid: &VoxelGrid<u8>) -> Result<()> {
+/// Read a NIfTI-1 file (`.nii` or `.nii.gz`) as an f32 intensity volume —
+/// no binarisation. uint8 and int16 payloads are widened to f32; when the
+/// header carries a real intensity scaling (`scl_slope != 0` and not the
+/// identity), `v * scl_slope + scl_inter` is applied.
+pub fn read_nifti_image(path: &Path) -> Result<VoxelGrid<f32>> {
+    let mut reader = open_reader(path)?;
+    let h = parse_header(&mut *reader)?;
+    let n = h.dims.len();
+    let mut data: Vec<f32> = match h.datatype {
+        DT_UINT8 => {
+            let mut v = vec![0u8; n];
+            reader.read_exact(&mut v).context("nifti payload")?;
+            v.into_iter().map(|b| b as f32).collect()
+        }
+        DT_INT16 => {
+            let mut raw = vec![0u8; n * 2];
+            reader.read_exact(&mut raw).context("nifti payload")?;
+            raw.chunks_exact(2)
+                .map(|c| i16::from_le_bytes([c[0], c[1]]) as f32)
+                .collect()
+        }
+        DT_FLOAT32 => {
+            let mut raw = vec![0u8; n * 4];
+            reader.read_exact(&mut raw).context("nifti payload")?;
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        other => bail!("unsupported NIfTI datatype {other}"),
+    };
+    let (slope, inter) = (h.scl_slope, h.scl_inter);
+    if slope.is_finite() && slope != 0.0 && (slope != 1.0 || inter != 0.0) {
+        for v in &mut data {
+            *v = (*v as f64 * slope as f64 + inter as f64) as f32;
+        }
+    }
+    Ok(VoxelGrid::from_vec(h.dims, h.spacing, data))
+}
+
+/// Build the 348+4-byte header, rejecting dims the i16 `dim[]` field
+/// cannot represent (the seed wrote `dims.x as i16`, silently wrapping
+/// volumes wider than 32767 into corrupt files).
+fn build_header(
+    dims: Dims,
+    spacing: Vec3,
+    datatype: i16,
+    bitpix: i16,
+    path: &Path,
+) -> Result<[u8; HDR_SIZE + 4]> {
+    for (axis, d) in [("x", dims.x), ("y", dims.y), ("z", dims.z)] {
+        if d > MAX_DIM {
+            bail!(
+                "cannot write {}: dim {axis}={d} exceeds the NIfTI-1 limit \
+                 of {MAX_DIM} (i16 dim[] field)",
+                path.display()
+            );
+        }
+        if d == 0 {
+            bail!("cannot write {}: dim {axis}=0 (empty volume)", path.display());
+        }
+    }
     let mut hdr = [0u8; HDR_SIZE + 4]; // +4: extension flag
     hdr[0..4].copy_from_slice(&348i32.to_le_bytes());
     // dim[0..3]
     hdr[40..42].copy_from_slice(&3i16.to_le_bytes());
-    hdr[42..44].copy_from_slice(&(grid.dims.x as i16).to_le_bytes());
-    hdr[44..46].copy_from_slice(&(grid.dims.y as i16).to_le_bytes());
-    hdr[46..48].copy_from_slice(&(grid.dims.z as i16).to_le_bytes());
+    hdr[42..44].copy_from_slice(&(dims.x as i16).to_le_bytes());
+    hdr[44..46].copy_from_slice(&(dims.y as i16).to_le_bytes());
+    hdr[46..48].copy_from_slice(&(dims.z as i16).to_le_bytes());
     for k in 4..8 {
         hdr[40 + 2 * k..42 + 2 * k].copy_from_slice(&1i16.to_le_bytes());
     }
-    hdr[70..72].copy_from_slice(&DT_UINT8.to_le_bytes());
-    hdr[72..74].copy_from_slice(&8i16.to_le_bytes()); // bitpix
+    hdr[70..72].copy_from_slice(&datatype.to_le_bytes());
+    hdr[72..74].copy_from_slice(&bitpix.to_le_bytes());
     // pixdim[0..3]
     hdr[76..80].copy_from_slice(&1f32.to_le_bytes());
-    hdr[80..84].copy_from_slice(&(grid.spacing.x as f32).to_le_bytes());
-    hdr[84..88].copy_from_slice(&(grid.spacing.y as f32).to_le_bytes());
-    hdr[88..92].copy_from_slice(&(grid.spacing.z as f32).to_le_bytes());
+    hdr[80..84].copy_from_slice(&(spacing.x as f32).to_le_bytes());
+    hdr[84..88].copy_from_slice(&(spacing.y as f32).to_le_bytes());
+    hdr[88..92].copy_from_slice(&(spacing.z as f32).to_le_bytes());
     hdr[108..112].copy_from_slice(&352f32.to_le_bytes()); // vox_offset
     hdr[344..348].copy_from_slice(b"n+1\0");
+    Ok(hdr)
+}
 
+fn write_with_header(path: &Path, hdr: &[u8], payload: &[u8]) -> Result<()> {
     let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
     let buf = BufWriter::new(file);
     if super::format::has_gz_suffix(path) {
         let mut w = GzEncoder::new(buf, flate2::Compression::fast());
-        w.write_all(&hdr)?;
-        w.write_all(grid.data())?;
+        w.write_all(hdr)?;
+        w.write_all(payload)?;
         w.finish()?;
     } else {
         let mut w = buf;
-        w.write_all(&hdr)?;
-        w.write_all(grid.data())?;
+        w.write_all(hdr)?;
+        w.write_all(payload)?;
         w.flush()?;
     }
     Ok(())
+}
+
+/// Write a u8 mask as NIfTI-1 (`.nii` or `.nii.gz` by extension).
+pub fn write_nifti(path: &Path, grid: &VoxelGrid<u8>) -> Result<()> {
+    let hdr = build_header(grid.dims, grid.spacing, DT_UINT8, 8, path)?;
+    write_with_header(path, &hdr, grid.data())
+}
+
+/// Write an f32 intensity volume as NIfTI-1 float32 (`.nii` / `.nii.gz`).
+pub fn write_nifti_image(path: &Path, grid: &VoxelGrid<f32>) -> Result<()> {
+    let hdr = build_header(grid.dims, grid.spacing, DT_FLOAT32, 32, path)?;
+    let mut payload = Vec::with_capacity(grid.data().len() * 4);
+    for v in grid.data() {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    write_with_header(path, &hdr, &payload)
 }
 
 #[cfg(test)]
@@ -155,6 +293,19 @@ mod tests {
         let mut g = VoxelGrid::zeros(Dims::new(7, 5, 4), Vec3::new(0.8, 0.8, 3.0));
         g.set(3, 2, 1, 1);
         g.set(6, 4, 3, 1);
+        g
+    }
+
+    fn sample_image() -> VoxelGrid<f32> {
+        let mut g = VoxelGrid::zeros(Dims::new(4, 3, 2), Vec3::new(0.8, 0.8, 3.0));
+        let dims = g.dims;
+        for z in 0..dims.z {
+            for y in 0..dims.y {
+                for x in 0..dims.x {
+                    g.set(x, y, z, (x as f32 - 1.5) * 10.0 + y as f32 * 0.25 - z as f32);
+                }
+            }
+        }
         g
     }
 
@@ -203,5 +354,108 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let back = read_nifti(&p).unwrap();
         assert_eq!(back.data(), g.data(), "binarised int16 == original mask");
+    }
+
+    #[test]
+    fn image_roundtrip_preserves_intensities_bitwise() {
+        for name in ["img.nii", "img.nii.gz"] {
+            let p = tdir().join(name);
+            let img = sample_image();
+            write_nifti_image(&p, &img).unwrap();
+            let back = read_nifti_image(&p).unwrap();
+            assert_eq!(back.dims, img.dims, "{name}");
+            assert_eq!(back.data(), img.data(), "{name}: float32 is bit-exact");
+            assert!((back.spacing.z - 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn image_reader_widens_int16_without_binarising() {
+        // same craft as int16_binarised, but the *image* reader must keep
+        // the stored values (×5), not clamp them to {0, 1}
+        let g = sample();
+        let p = tdir().join("e.nii");
+        write_nifti(&p, &g).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[70..72].copy_from_slice(&DT_INT16.to_le_bytes());
+        let payload: Vec<u8> = g
+            .data()
+            .iter()
+            .flat_map(|&v| ((v as i16) * 5 - 2).to_le_bytes())
+            .collect();
+        bytes.truncate(352);
+        bytes.extend_from_slice(&payload);
+        std::fs::write(&p, &bytes).unwrap();
+        let back = read_nifti_image(&p).unwrap();
+        let want: Vec<f32> = g.data().iter().map(|&v| (v as f32) * 5.0 - 2.0).collect();
+        assert_eq!(back.data(), &want[..]);
+    }
+
+    #[test]
+    fn image_reader_applies_scl_slope_and_inter() {
+        let p = tdir().join("scl.nii");
+        let img = sample_image();
+        write_nifti_image(&p, &img).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[112..116].copy_from_slice(&2.0f32.to_le_bytes()); // scl_slope
+        bytes[116..120].copy_from_slice(&10.0f32.to_le_bytes()); // scl_inter
+        std::fs::write(&p, &bytes).unwrap();
+        let back = read_nifti_image(&p).unwrap();
+        for (got, want) in back.data().iter().zip(img.data()) {
+            assert_eq!(*got, want * 2.0 + 10.0);
+        }
+        // the mask reader is unaffected by intensity scaling concerns
+        assert!(read_nifti(&p).is_ok());
+    }
+
+    #[test]
+    fn write_rejects_dims_beyond_the_i16_field() {
+        // the seed wrote `dims.x as i16`, wrapping 40000 → -25536 silently
+        let g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(40000, 1, 1), Vec3::splat(1.0));
+        let err = write_nifti(&tdir().join("wide.nii"), &g).unwrap_err();
+        assert!(err.to_string().contains("32767"), "{err}");
+        let gi: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(1, 40000, 1), Vec3::splat(1.0));
+        let err = write_nifti_image(&tdir().join("wide_img.nii"), &gi).unwrap_err();
+        assert!(err.to_string().contains("32767"), "{err}");
+    }
+
+    #[test]
+    fn write_rejects_empty_volumes() {
+        let g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(0, 3, 3), Vec3::splat(1.0));
+        let err = write_nifti(&tdir().join("empty.nii"), &g).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_nonpositive_dims_are_an_error_not_a_one_voxel_axis() {
+        // the seed's `.max(1)` clamp turned dim[1] = -5 into a 1-voxel axis
+        for bad in [0i16, -5] {
+            let p = tdir().join("baddim.nii");
+            write_nifti(&p, &sample()).unwrap();
+            let mut bytes = std::fs::read(&p).unwrap();
+            bytes[42..44].copy_from_slice(&bad.to_le_bytes());
+            std::fs::write(&p, &bytes).unwrap();
+            let err = read_nifti(&p).unwrap_err();
+            assert!(err.to_string().contains("dim[1]"), "{bad}: {err}");
+            assert!(read_nifti_image(&p).is_err(), "{bad}: image path too");
+        }
+    }
+
+    #[test]
+    fn four_dimensional_volumes_are_rejected_not_truncated() {
+        let p = tdir().join("fourd.nii");
+        write_nifti(&p, &sample()).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[40..42].copy_from_slice(&4i16.to_le_bytes()); // ndim = 4
+        bytes[48..50].copy_from_slice(&2i16.to_le_bytes()); // dim[4] = 2
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_nifti(&p).unwrap_err();
+        assert!(err.to_string().contains("4-D"), "{err}");
+        assert!(read_nifti_image(&p).is_err());
+
+        // a trailing singleton 4th axis is harmless and still reads
+        bytes[48..50].copy_from_slice(&1i16.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(read_nifti(&p).unwrap().data(), sample().data());
     }
 }

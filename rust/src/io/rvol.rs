@@ -133,22 +133,56 @@ pub fn read_rvol<T: RvolSample>(path: &Path) -> Result<VoxelGrid<T>> {
     }
 }
 
-fn read_body<T: RvolSample>(r: &mut impl Read) -> Result<VoxelGrid<T>> {
+fn read_header(r: &mut impl Read) -> Result<(u32, Dims, Vec3)> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("rvol header")?;
     if &magic != MAGIC {
         bail!("not an rvol file (bad magic)");
     }
     let dtype = get_u32(r)?;
-    if dtype != T::DTYPE {
-        bail!("rvol dtype mismatch: file has {dtype}, requested {}", T::DTYPE);
-    }
     let dims = Dims::new(get_u64(r)? as usize, get_u64(r)? as usize, get_u64(r)? as usize);
     if dims.len() > (1 << 33) {
         bail!("rvol dims implausibly large: {dims}");
     }
     let spacing = Vec3::new(get_f64(r)?, get_f64(r)?, get_f64(r)?);
+    Ok((dtype, dims, spacing))
+}
+
+fn read_body<T: RvolSample>(r: &mut impl Read) -> Result<VoxelGrid<T>> {
+    let (dtype, dims, spacing) = read_header(r)?;
+    if dtype != T::DTYPE {
+        bail!("rvol dtype mismatch: file has {dtype}, requested {}", T::DTYPE);
+    }
     let data = T::read_all(dims.len(), r).context("rvol payload")?;
+    Ok(VoxelGrid::from_vec(dims, spacing, data))
+}
+
+/// Read an rvol file as an f32 intensity volume regardless of its stored
+/// dtype: f32 payloads are read directly, u8 payloads are widened. The
+/// rvol counterpart of [`super::read_nifti_image`].
+pub fn read_rvol_image(path: &Path) -> Result<VoxelGrid<f32>> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let buf = BufReader::new(file);
+    if super::format::has_gz_suffix(path) {
+        read_image_body(&mut GzDecoder::new(buf))
+    } else {
+        read_image_body(&mut { buf })
+    }
+}
+
+fn read_image_body(r: &mut impl Read) -> Result<VoxelGrid<f32>> {
+    let (dtype, dims, spacing) = read_header(r)?;
+    let data: Vec<f32> = if dtype == <u8 as RvolSample>::DTYPE {
+        u8::read_all(dims.len(), r)
+            .context("rvol payload")?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect()
+    } else if dtype == <f32 as RvolSample>::DTYPE {
+        f32::read_all(dims.len(), r).context("rvol payload")?
+    } else {
+        bail!("rvol dtype {dtype} unsupported")
+    };
     Ok(VoxelGrid::from_vec(dims, spacing, data))
 }
 
@@ -203,6 +237,26 @@ mod tests {
         write_rvol(&p, &g).unwrap();
         let back: VoxelGrid<f32> = read_rvol(&p).unwrap();
         assert_eq!(back, g);
+    }
+
+    #[test]
+    fn image_reader_handles_both_dtypes() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // f32 payload: read back bit-exact
+        let pf = dir.join("img_f32.rvol.gz");
+        let mut gf: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(3, 2, 2), Vec3::splat(1.0));
+        gf.set(1, 1, 0, -37.5);
+        gf.set(2, 0, 1, 0.125);
+        write_rvol(&pf, &gf).unwrap();
+        assert_eq!(read_rvol_image(&pf).unwrap(), gf);
+        // u8 payload: widened, not binarised (the 7 stays a 7)
+        let pu = dir.join("img_u8.rvol");
+        write_rvol(&pu, &sample_mask()).unwrap();
+        let img = read_rvol_image(&pu).unwrap();
+        assert_eq!(img.get(4, 3, 2), 7.0);
+        assert_eq!(img.get(1, 2, 1), 1.0);
+        assert_eq!(img.get(0, 0, 0), 0.0);
     }
 
     #[test]

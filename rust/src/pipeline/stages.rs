@@ -38,10 +38,20 @@ pub struct PipelineReport {
     pub wall: std::time::Duration,
 }
 
+/// A case as the scanner hands it to the read pool.
+struct CaseJob {
+    case_id: String,
+    mask_path: PathBuf,
+    image_path: Option<PathBuf>,
+    declared_dims: crate::volume::Dims,
+}
+
 struct ReadItem {
     case_id: String,
     mask: VoxelGrid<u8>,
+    image: Option<VoxelGrid<f32>>,
     read: std::time::Duration,
+    read_image: std::time::Duration,
 }
 
 /// Run the full streaming pipeline over a dataset.
@@ -64,11 +74,14 @@ pub fn run_pipeline(
     // high-water mark; concurrent runs in one process share the meter)
     crate::imgproc::reset_peak_derived_bytes();
 
-    let (case_tx, case_rx) = bounded::<(String, PathBuf)>(cfg.queue_capacity);
+    let (case_tx, case_rx) = bounded::<CaseJob>(cfg.queue_capacity);
     let (read_tx, read_rx) = bounded::<ReadItem>(cfg.queue_capacity);
     let (out_tx, out_rx) = bounded::<Result<CaseResult, (String, String)>>(cfg.queue_capacity);
 
     let n_cases = manifest.cases.len();
+    // the image is loaded only when an enabled class will read it —
+    // shape-only runs must not pay image IO
+    let needs_image = cfg.feature_classes.needs_image();
 
     std::thread::scope(|scope| {
         // scanner: feed case paths
@@ -77,8 +90,13 @@ pub fn run_pipeline(
             let manifest = manifest.clone();
             scope.spawn(move || {
                 for e in &manifest.cases {
-                    let path = manifest.mask_path(e);
-                    if case_tx.send((e.case_id.clone(), path)).is_err() {
+                    let job = CaseJob {
+                        case_id: e.case_id.clone(),
+                        mask_path: manifest.mask_path(e),
+                        image_path: manifest.image_path(e),
+                        declared_dims: e.dims,
+                    };
+                    if case_tx.send(job).is_err() {
                         break;
                     }
                 }
@@ -92,23 +110,72 @@ pub fn run_pipeline(
             let out_tx = out_tx.clone();
             let metrics = metrics.clone();
             scope.spawn(move || {
-                while let Ok((case_id, path)) = case_rx.recv() {
+                while let Ok(job) = case_rx.recv() {
                     let t0 = Instant::now();
-                    let loaded = crate::io::read_mask(&path);
+                    let loaded = crate::io::read_mask(&job.mask_path);
                     let read = t0.elapsed();
                     metrics.timer("stage.read").record(read);
-                    match loaded {
-                        Ok(mask) => {
-                            if read_tx.send(ReadItem { case_id, mask, read }).is_err() {
-                                break;
-                            }
-                        }
+                    let mask = match loaded {
+                        Ok(mask) => mask,
                         Err(e) => {
-                            metrics.counter("errors.read").fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if out_tx.send(Err((case_id, format!("read: {e:#}")))).is_err() {
+                            metrics
+                                .counter("errors.read")
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            let msg = format!("read: {e:#}");
+                            if out_tx.send(Err((job.case_id, msg))).is_err() {
                                 break;
                             }
+                            continue;
                         }
+                    };
+                    // the manifest's dims= claim is a contract, not a hint:
+                    // a mismatch means the file and the index disagree
+                    if mask.dims != job.declared_dims {
+                        metrics
+                            .counter("errors.read")
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let msg = format!(
+                            "read: mask dims {} do not match the manifest's dims={} \
+                             (stale or corrupt cases.txt?)",
+                            mask.dims, job.declared_dims
+                        );
+                        if out_tx.send(Err((job.case_id, msg))).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                    let mut image = None;
+                    let mut read_image = std::time::Duration::ZERO;
+                    if needs_image {
+                        if let Some(ipath) = &job.image_path {
+                            let t0 = Instant::now();
+                            let loaded = crate::io::read_image(ipath);
+                            read_image = t0.elapsed();
+                            metrics.timer("stage.read_image").record(read_image);
+                            match loaded {
+                                Ok(img) => image = Some(img),
+                                Err(e) => {
+                                    metrics
+                                        .counter("errors.read_image")
+                                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                    let msg = format!("read image {}: {e:#}", ipath.display());
+                                    if out_tx.send(Err((job.case_id, msg))).is_err() {
+                                        break;
+                                    }
+                                    continue;
+                                }
+                            }
+                        }
+                    }
+                    let item = ReadItem {
+                        case_id: job.case_id,
+                        mask,
+                        image,
+                        read,
+                        read_image,
+                    };
+                    if read_tx.send(item).is_err() {
+                        break;
                     }
                 }
             });
@@ -123,10 +190,11 @@ pub fn run_pipeline(
             let metrics = metrics.clone();
             scope.spawn(move || {
                 while let Ok(item) = read_rx.recv() {
-                    let res = extractor.execute_mask(&item.mask);
+                    let res = extractor.execute_case(&item.mask, item.image.as_ref());
                     let msg = match res {
                         Ok(mut ex) => {
                             ex.timing.read = item.read;
+                            ex.timing.read_image = item.read_image;
                             metrics.timer("stage.preprocess").record(ex.timing.preprocess);
                             metrics.timer("stage.mesh").record(ex.timing.marching);
                             metrics.timer("stage.diameters").record(ex.timing.diameters);
@@ -462,5 +530,103 @@ mod tests {
         }
         // CPU fallback → no batch counters in the report
         assert!(!r2.metrics_text.contains("batch.flushes"));
+    }
+
+    fn firstorder_cfg() -> PipelineConfig {
+        PipelineConfig {
+            feature_classes: crate::config::FeatureClasses::parse("firstorder").unwrap(),
+            ..cpu_cfg()
+        }
+    }
+
+    #[test]
+    fn real_images_feed_intensity_features_not_the_stand_in() {
+        let m = tiny_dataset("realimg");
+        let cfg = firstorder_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let real = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(real.failures.is_empty(), "{:?}", real.failures);
+        assert!(real.metrics_text.contains("stage.read_image"), "{}", real.metrics_text);
+
+        // same manifest with the images stripped, synthetic stand-in opted
+        // in: every case must produce *different* first-order values —
+        // proof the image files are actually read
+        let mut bare = m.clone();
+        for e in &mut bare.cases {
+            e.image = None;
+        }
+        let cfg_synth = PipelineConfig { synthetic_image: true, ..firstorder_cfg() };
+        let ex_synth = FeatureExtractor::new(&cfg_synth).unwrap();
+        let synth = run_pipeline(&bare, &cfg_synth, &ex_synth).unwrap();
+        assert!(synth.failures.is_empty(), "{:?}", synth.failures);
+        assert!(!synth.metrics_text.contains("stage.read_image"));
+        assert_eq!(real.results.len(), synth.results.len());
+        for (a, b) in real.results.iter().zip(&synth.results) {
+            assert_eq!(a.case_id, b.case_id);
+            assert_ne!(a.first_order, b.first_order, "{}", a.case_id);
+        }
+    }
+
+    #[test]
+    fn missing_image_without_optin_fails_only_that_case() {
+        let mut m = tiny_dataset("nooptin");
+        m.cases[4].image = None;
+        let cfg = firstorder_cfg();
+        assert!(!cfg.synthetic_image);
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 19);
+        assert_eq!(report.failures.len(), 1);
+        assert_eq!(report.failures[0].0, m.cases[4].case_id);
+        assert!(report.failures[0].1.contains("image="), "{}", report.failures[0].1);
+        assert!(
+            report.failures[0].1.contains("--synthetic-image"),
+            "{}",
+            report.failures[0].1
+        );
+    }
+
+    #[test]
+    fn unreadable_image_is_a_case_failure_not_fatal() {
+        let mut m = tiny_dataset("badimg");
+        m.cases[2].image = Some(PathBuf::from("no-such-image.rvol.gz"));
+        std::fs::write(m.image_path(&m.cases[7]).unwrap(), b"garbage").unwrap();
+        let cfg = firstorder_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 18);
+        assert_eq!(report.failures.len(), 2);
+        for (case, msg) in &report.failures {
+            assert!(msg.contains("read image"), "{case}: {msg}");
+        }
+        assert!(report.metrics_text.contains("errors.read_image"));
+    }
+
+    #[test]
+    fn dims_mismatch_is_a_case_failure() {
+        let mut m = tiny_dataset("dims");
+        m.cases[1].dims = crate::volume::Dims::new(1, 2, 3);
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 19);
+        assert_eq!(report.failures.len(), 1);
+        assert_eq!(report.failures[0].0, m.cases[1].case_id);
+        assert!(report.failures[0].1.contains("dims=1x2x3"), "{}", report.failures[0].1);
+    }
+
+    #[test]
+    fn shape_only_runs_never_read_the_image_files() {
+        let m = tiny_dataset("skipimg");
+        // corrupt every image: a shape-only run must not even open them
+        for e in &m.cases {
+            std::fs::write(m.image_path(e).unwrap(), b"garbage").unwrap();
+        }
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        assert_eq!(report.results.len(), 20);
+        assert!(!report.metrics_text.contains("stage.read_image"));
     }
 }

@@ -168,6 +168,10 @@ fn case_stream(case_id: &str) -> u64 {
 }
 
 /// Generate the full 20-case dataset into `root` (rvol.gz + cases.txt).
+/// Every case ships a (mask, image) pair: the mask as u8, plus a paired
+/// CT-like f32 intensity volume (per-case deterministic seed) recorded
+/// under the manifest's `image=` key — so pipeline runs with intensity
+/// classes exercise the real image path, not the synthetic stand-in.
 pub fn generate_dataset(root: &Path, opts: &GenOptions) -> Result<DatasetManifest> {
     std::fs::create_dir_all(root)?;
     let mut entries = Vec::new();
@@ -175,9 +179,13 @@ pub fn generate_dataset(root: &Path, opts: &GenOptions) -> Result<DatasetManifes
         let (mask, nverts) = generate_case(&case, opts);
         let fname = format!("{}.rvol.gz", case.case_id);
         write_rvol(&root.join(&fname), &mask)?;
+        let image = synthesize_image(&mask, opts.seed ^ case_stream(case.case_id));
+        let iname = format!("{}.img.rvol.gz", case.case_id);
+        write_rvol(&root.join(&iname), &image)?;
         entries.push(CaseEntry {
             case_id: case.case_id.to_string(),
             mask: fname.into(),
+            image: Some(iname.into()),
             dims: mask.dims,
             target_vertices: nverts, // record the *measured* vertex count
         });
@@ -245,10 +253,20 @@ mod tests {
         assert_eq!(m.cases.len(), 20);
         for e in &m.cases {
             assert!(m.mask_path(e).exists(), "{:?}", e.mask);
+            let image = m.image_path(e).expect("every generated case pairs an image");
+            assert!(image.exists(), "{image:?}");
             assert!(e.target_vertices > 0, "{}: no vertices", e.case_id);
         }
         // reload via scanner
         let back = crate::io::scan_dataset(&root).unwrap();
         assert_eq!(back.cases.len(), 20);
+        assert!(back.cases.iter().all(|e| e.image.is_some()));
+        // the paired image reads back as real intensities on the mask grid,
+        // and distinct cases get distinct images (per-case seeds)
+        let a = crate::io::read_image(&back.image_path(&back.cases[0]).unwrap()).unwrap();
+        let mask_a = crate::io::read_mask(&back.mask_path(&back.cases[0])).unwrap();
+        assert_eq!(a.dims, mask_a.dims);
+        let b = crate::io::read_image(&back.image_path(&back.cases[1]).unwrap()).unwrap();
+        assert_ne!(a.data(), b.data());
     }
 }

@@ -468,6 +468,120 @@ fn texture_conformance_oracle_lock() {
 }
 
 #[test]
+fn written_then_read_images_hit_the_oracle_locks() {
+    // The tentpole contract: an image volume written to disk in every
+    // supported container, read back through `io::read_image`, and fed to
+    // `execute_case` reproduces the ref.py oracle locks — proving the file
+    // path carries *actual* intensities, not the synthetic stand-in.
+    // `deterministic_image` is integer-valued below 97, exact in f32, so
+    // write-then-read is bit-preserving and the goldens apply unchanged.
+    use radpipe::io::{read_image, read_mask, write_nifti, write_nifti_image, write_rvol};
+
+    let dir = std::env::temp_dir().join("radpipe_conf_img_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mask = sphere_mask(24, 8.0, Vec3::splat(1.0));
+    let img = deterministic_image(mask.dims);
+    write_nifti(&dir.join("mask.nii.gz"), &mask).unwrap();
+    let mask_back = read_mask(&dir.join("mask.nii.gz")).unwrap();
+    assert_eq!(mask_back, mask);
+
+    let fo_cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 1,
+        feature_classes: radpipe::config::FeatureClasses::parse("firstorder").unwrap(),
+        ..Default::default() // bin_width 25 — the oracle-lock discretization
+    };
+    let ex = FeatureExtractor::new(&fo_cfg).unwrap();
+
+    for name in ["img.nii", "img.nii.gz", "img.rvol", "img.rvol.gz"] {
+        let path = dir.join(name);
+        if name.starts_with("img.nii") {
+            write_nifti_image(&path, &img).unwrap();
+        } else {
+            write_rvol(&path, &img).unwrap();
+        }
+        let back = read_image(&path).unwrap();
+        assert_eq!(back.dims, img.dims, "{name}");
+        assert_eq!(back.data(), img.data(), "{name}: roundtrip not bit-exact");
+
+        let f = ex
+            .execute_case(&mask_back, Some(&back))
+            .unwrap()
+            .first_order
+            .expect("firstorder enabled");
+        assert_eq!(f.minimum, 0.0, "{name}");
+        assert_eq!(f.maximum, 96.0, "{name}");
+        assert_eq!(f.energy, 6_461_520.0, "{name}");
+        assert!(rel_close(f.mean, 47.90706495969654, 1e-9), "{name}: {}", f.mean);
+        assert!(rel_close(f.variance, 768.6969107311999, 1e-9), "{name}: {}", f.variance);
+        assert!(rel_close(f.entropy, 1.9959525045510498, 1e-9), "{name}: {}", f.entropy);
+        assert!(
+            rel_close(f.uniformity, 0.2514138755061118, 1e-9),
+            "{name}: {}",
+            f.uniformity
+        );
+    }
+
+    // ... and the synthetic stand-in would NOT have hit those goldens (the
+    // silent substitution this PR removes was not a harmless default)
+    let standin_cfg = PipelineConfig { synthetic_image: true, ..fo_cfg };
+    let s = FeatureExtractor::new(&standin_cfg)
+        .unwrap()
+        .execute_mask(&mask)
+        .unwrap()
+        .first_order
+        .unwrap();
+    assert!(
+        !rel_close(s.mean, 47.90706495969654, 1e-6),
+        "stand-in mean {} indistinguishable from the real image",
+        s.mean
+    );
+
+    // GLCM through the same written-then-read path: the 4³ texture fixture
+    // at bin width 1 reproduces the `ref.py::glcm_features_ref` goldens.
+    let dims = Dims::new(4, 4, 4);
+    let mut timg = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    let mut tmask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+    for z in 0..4 {
+        for y in 0..4 {
+            for x in 0..4 {
+                timg.set(x, y, z, ((x + 2 * y + 3 * z) % 5) as f32);
+                tmask.set(x, y, z, 1);
+            }
+        }
+    }
+    write_nifti_image(&dir.join("timg.nii.gz"), &timg).unwrap();
+    let timg_back = read_image(&dir.join("timg.nii.gz")).unwrap();
+    assert_eq!(timg_back.data(), timg.data());
+
+    let glcm_cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 1,
+        feature_classes: radpipe::config::FeatureClasses::parse("glcm").unwrap(),
+        bin_width: 1.0,
+        ..Default::default()
+    };
+    let t = FeatureExtractor::new(&glcm_cfg)
+        .unwrap()
+        .execute_case(&tmask, Some(&timg_back))
+        .unwrap()
+        .texture
+        .expect("glcm enabled");
+    let g = t.glcm.as_ref().unwrap();
+    assert!(rel_close(g.autocorrelation, 8.798967236467236, 1e-9));
+    assert!(rel_close(g.contrast, 4.098468660968662, 1e-9));
+    assert!(rel_close(g.correlation, -0.031005532369152693, 1e-9));
+    assert!(rel_close(g.joint_energy, 0.11610552192149413, 1e-9));
+    assert!(rel_close(g.joint_entropy, 3.1639537500081025, 1e-9));
+    assert!(rel_close(g.idm, 0.4071759259259259, 1e-9));
+    assert!(rel_close(g.idn, 0.7748432765793876, 1e-9));
+    assert!(rel_close(g.cluster_shade, 0.07290863483997902, 1e-9));
+    assert!(rel_close(g.cluster_prominence, 34.33419886329936, 1e-9));
+}
+
+#[test]
 fn region_texture_conformance_oracle_lock() {
     // Same 4³ fixture as the GLCM/GLRLM lock: `level = ((x + 2y + 3z) mod
     // 5) + 1`. Matrix counts are locked *exactly*; derived features at
@@ -907,6 +1021,8 @@ fn derived_feature_determinism_sweep() {
             feature_classes: radpipe::config::FeatureClasses::parse("all").unwrap(),
             image_types: radpipe::imgproc::ImageTypes::parse("all").unwrap(),
             log_sigmas: vec![1.0, 2.0],
+            // this sweep drives a bare mask; the stand-in needs the opt-in
+            synthetic_image: true,
             ..Default::default()
         };
         FeatureExtractor::new(&cfg).unwrap().execute_mask(&mask).unwrap()
@@ -1055,6 +1171,8 @@ fn log_only_derived_feature_determinism_sweep() {
             feature_classes: radpipe::config::FeatureClasses::parse("all").unwrap(),
             image_types: radpipe::imgproc::ImageTypes::parse("log").unwrap(),
             log_sigmas: vec![1.0, 2.0],
+            // this sweep drives a bare mask; the stand-in needs the opt-in
+            synthetic_image: true,
             ..Default::default()
         };
         FeatureExtractor::new(&cfg).unwrap().execute_mask(&mask).unwrap()

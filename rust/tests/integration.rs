@@ -4,7 +4,9 @@
 use radpipe::config::{Backend, PipelineConfig};
 use radpipe::dispatch::FeatureExtractor;
 use radpipe::geometry::Vec3;
-use radpipe::io::{read_nifti, read_rvol, scan_dataset, write_nifti, write_rvol};
+use radpipe::io::{
+    read_nifti, read_rvol, scan_dataset, write_nifti, write_rvol, CaseEntry, DatasetManifest,
+};
 use radpipe::mc::mesh_roi;
 use radpipe::pipeline::run_pipeline;
 use radpipe::synth::{generate_case, generate_dataset, paper_cases, GenOptions};
@@ -164,4 +166,144 @@ fn first_order_features_over_synthetic_image() {
     let image2 = radpipe::synth::synthesize_image(&mask, 42);
     let f2 = radpipe::features::compute_first_order(&image2, &mask, 25.0).unwrap();
     assert_eq!(f, f2);
+}
+
+#[test]
+fn paired_images_drive_the_pipeline_not_the_stand_in() {
+    // `gen-data` now pairs every mask with a real image volume; a full
+    // pipeline run with an intensity class must read those images (zero
+    // failures, no opt-in needed) and produce different features than the
+    // synthetic stand-in would have.
+    let dir = tdir("paired_images");
+    let m = generate_dataset(&dir, &GenOptions { scale: 0.002, seed: 5 }).unwrap();
+    let cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 1,
+        read_workers: 2,
+        feature_workers: 2,
+        feature_classes: radpipe::config::FeatureClasses::parse("firstorder").unwrap(),
+        ..Default::default()
+    };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let real = run_pipeline(&m, &cfg, &ex).unwrap();
+    assert!(real.failures.is_empty(), "{:?}", real.failures);
+    assert_eq!(real.results.len(), 20);
+    assert!(real.results.iter().all(|r| r.first_order.is_some()));
+
+    // same dataset with the `image=` pairings dropped + the explicit
+    // stand-in opt-in: every case must come out with different intensities
+    let mut stripped = DatasetManifest { root: m.root.clone(), cases: m.cases.clone() };
+    for e in &mut stripped.cases {
+        e.image = None;
+    }
+    let standin_cfg = PipelineConfig { synthetic_image: true, ..cfg };
+    let standin_ex = FeatureExtractor::new(&standin_cfg).unwrap();
+    let standin = run_pipeline(&stripped, &standin_cfg, &standin_ex).unwrap();
+    assert!(standin.failures.is_empty(), "{:?}", standin.failures);
+    for (r, s) in real.results.iter().zip(&standin.results) {
+        assert_eq!(r.case_id, s.case_id);
+        let (rf, sf) = (r.first_order.as_ref().unwrap(), s.first_order.as_ref().unwrap());
+        assert_ne!(
+            rf.mean.to_bits(),
+            sf.mean.to_bits(),
+            "{}: real image indistinguishable from the stand-in",
+            r.case_id
+        );
+    }
+}
+
+#[test]
+fn image_on_a_different_grid_is_auto_resampled_through_the_pipeline() {
+    // A manifest may pair a mask with an image acquired on a different
+    // grid (here: 1 mm isotropic vs the mask's 0.8×0.8×2.0 mm). The read
+    // stage loads both as-is and the extractor trilinear-resamples the
+    // image onto the mask grid; for a linear intensity field that
+    // interpolation is exact, so the run must match the native-grid run.
+    let dir = tdir("resample_grid");
+    let (n, nz) = (20usize, 12usize);
+    let spacing = Vec3::new(0.8, 0.8, 2.0);
+    let mut mask = VoxelGrid::zeros(Dims::new(n, n, nz), spacing);
+    let (c, cz, r) = (n as f64 / 2.0, nz as f64 / 2.0, 6.0f64);
+    for z in 0..nz {
+        for y in 0..n {
+            for x in 0..n {
+                let (dx, dy, dz) =
+                    (x as f64 - c, y as f64 - c, (z as f64 - cz) * spacing.z / spacing.x);
+                if dx * dx + dy * dy + dz * dz <= r * r {
+                    mask.set(x, y, z, 1);
+                }
+            }
+        }
+    }
+    write_rvol(&dir.join("case.rvol.gz"), &mask).unwrap();
+
+    // one continuous linear field, sampled on both grids (physical
+    // coordinates are index × spacing, origin shared at voxel 0)
+    let field = |xm: f64, ym: f64, zm: f64| (100.0 + 3.0 * xm + 2.0 * ym + 1.5 * zm) as f32;
+    let mut native = VoxelGrid::zeros(mask.dims, spacing);
+    for z in 0..nz {
+        for y in 0..n {
+            for x in 0..n {
+                native.set(
+                    x,
+                    y,
+                    z,
+                    field(x as f64 * spacing.x, y as f64 * spacing.y, z as f64 * spacing.z),
+                );
+            }
+        }
+    }
+    write_rvol(&dir.join("native.img.rvol.gz"), &native).unwrap();
+    // 1 mm grid big enough to cover the mask's physical extent
+    let idims = Dims::new(
+        ((n - 1) as f64 * spacing.x).ceil() as usize + 2,
+        ((n - 1) as f64 * spacing.y).ceil() as usize + 2,
+        ((nz - 1) as f64 * spacing.z).ceil() as usize + 2,
+    );
+    let mut iso = VoxelGrid::zeros(idims, Vec3::splat(1.0));
+    for z in 0..idims.z {
+        for y in 0..idims.y {
+            for x in 0..idims.x {
+                iso.set(x, y, z, field(x as f64, y as f64, z as f64));
+            }
+        }
+    }
+    write_rvol(&dir.join("iso.img.rvol.gz"), &iso).unwrap();
+
+    let cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 1,
+        feature_classes: radpipe::config::FeatureClasses::parse("firstorder").unwrap(),
+        ..Default::default()
+    };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let run = |image: &str| {
+        let manifest = DatasetManifest {
+            root: dir.clone(),
+            cases: vec![CaseEntry {
+                case_id: "case".into(),
+                mask: "case.rvol.gz".into(),
+                image: Some(image.into()),
+                dims: mask.dims,
+                target_vertices: 0,
+            }],
+        };
+        let report = run_pipeline(&manifest, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{image}: {:?}", report.failures);
+        report.results[0].first_order.clone().unwrap()
+    };
+    let want = run("native.img.rvol.gz");
+    let got = run("iso.img.rvol.gz");
+    assert!(
+        (got.mean - want.mean).abs() <= 1e-3 * want.mean.abs(),
+        "resampled mean {} vs native {}",
+        got.mean,
+        want.mean
+    );
+    assert!(
+        (got.variance - want.variance).abs() <= 1e-2 * want.variance.abs().max(1.0),
+        "resampled variance {} vs native {}",
+        got.variance,
+        want.variance
+    );
 }
