@@ -5,6 +5,7 @@
 //! with a CPU loopback backend whose per-*group* overhead stands in for
 //! that fixed cost, and measures end-to-end wall time for a stream of small
 //! cases dispatched per-case (batch=1) vs batched (batch ≥ 4).
+//! Results land in `BENCH_bench_batch.json` for `radpipe bench-check`.
 //!
 //! Run: `cargo bench --offline --bench bench_batch`
 
@@ -72,11 +73,13 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let n_cases = if common::quick() { 32 } else { 64 };
-    let verts = if common::quick() { 150 } else { 300 }; // small-ROI regime
+    let quick = common::quick()?;
+    let n_cases = if quick { 32 } else { 64 };
+    let verts = if quick { 150 } else { 300 }; // small-ROI regime
     let overhead = Duration::from_micros(500);
     let workers = 8;
     let inputs = cases(n_cases, verts);
+    let mut report = common::report("bench_batch")?;
 
     // ground truth for the conformance check
     let oracle: Vec<[f64; 4]> = inputs
@@ -98,6 +101,7 @@ fn main() -> anyhow::Result<()> {
     ]);
     let (base_wall, base_out) = run(1, workers, overhead, &inputs);
     anyhow::ensure!(base_out == oracle, "per-case dispatch diverged from brute force");
+    report.section("batch/size-1", common::Measurement::single(base_wall)).bit_exact(true);
     t.row(vec![
         "1".to_string(),
         format!("{:.1}", base_wall * 1e3),
@@ -110,6 +114,10 @@ fn main() -> anyhow::Result<()> {
     for batch in [4usize, 8, 16] {
         let (wall, out) = run(batch, workers, overhead, &inputs);
         anyhow::ensure!(out == oracle, "batched dispatch diverged (batch={batch})");
+        report
+            .section(&format!("batch/size-{batch}"), common::Measurement::single(wall))
+            .bit_exact(true)
+            .speedup(base_wall / wall);
         if batch >= 4 && wall < base_wall {
             batched_beats_per_case = true;
         }
@@ -130,5 +138,6 @@ fn main() -> anyhow::Result<()> {
         batched_beats_per_case,
         "expected batch sizes >= 4 to beat per-case dispatch"
     );
+    common::finish(&report)?;
     Ok(())
 }

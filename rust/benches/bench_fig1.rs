@@ -12,21 +12,26 @@ fn main() -> anyhow::Result<()> {
     // advantage needs ≥ ~30k-vertex cases); use at least 1/8 paper scale.
     // Quick mode keeps the tiny smoke dataset instead (winners are then
     // not meaningful; the run only proves the harness works).
-    let scale = if common::quick() {
-        common::bench_scale()
+    let scale = if common::quick()? {
+        common::bench_scale()?
     } else {
-        common::bench_scale().max(0.125)
+        common::bench_scale()?.max(0.125)
     };
     std::env::set_var("RADPIPE_BENCH_SCALE", scale.to_string());
-    let manifest = common::bench_dataset();
+    // built after the scale override so the report records the real scale
+    let mut report = common::report("bench_fig1")?;
+    let manifest = common::bench_dataset()?;
     common::banner(&format!(
         "FIG 1 — strategy comparison (scale {scale}, sum over 20 cases)"
     ));
+    let t0 = std::time::Instant::now();
     let rows = run_fig1(&manifest, 0)?;
+    report.section("fig1/total", common::Measurement::single(t0.elapsed().as_secs_f64()));
     print!("{}", fig1::to_table(&rows).to_text());
     println!("\nwinners (paper: H100→memory-careful, 4070→local accumulators, T4→block reduction):");
     for (dev, s) in fig1::winners(&rows) {
         println!("  {dev}: {}", s.label());
     }
+    common::finish(&report)?;
     Ok(())
 }

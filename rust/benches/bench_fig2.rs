@@ -9,9 +9,12 @@ mod common;
 use radpipe::experiments::{fig2, run_fig2};
 
 fn main() -> anyhow::Result<()> {
-    let manifest = common::bench_dataset();
-    common::banner(&format!("FIG 2 LEFT+RIGHT (scale {})", common::bench_scale()));
+    let manifest = common::bench_dataset()?;
+    let mut report = common::report("bench_fig2")?;
+    common::banner(&format!("FIG 2 LEFT+RIGHT (scale {})", common::bench_scale()?));
+    let t0 = std::time::Instant::now();
     let rows = run_fig2(&manifest)?;
+    report.section("fig2/total", common::Measurement::single(t0.elapsed().as_secs_f64()));
     print!("{}", fig2::to_table(&rows).to_text());
 
     // summary: speedup bands per GPU (the paper's 8–24× T4, ≥50×/2000× H100)
@@ -26,5 +29,6 @@ fn main() -> anyhow::Result<()> {
         let max = s.iter().copied().fold(0.0f64, f64::max);
         println!("  {dev}: {min:.1}x .. {max:.1}x");
     }
+    common::finish(&report)?;
     Ok(())
 }

@@ -3,6 +3,7 @@
 //! on a case. The filter passes are line-parallel through
 //! `parallel::fold_chunks`; this bench measures how they scale and
 //! verifies the determinism contract (parallel == serial bit-for-bit).
+//! Results land in `BENCH_bench_imgproc.json` for `radpipe bench-check`.
 //!
 //! Run: `cargo bench --offline --bench bench_imgproc`
 //! Quick mode: `RADPIPE_BENCH_QUICK=1` (CI smoke budget).
@@ -56,10 +57,12 @@ fn sphere_mask(n: usize) -> VoxelGrid<u8> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let n = if common::quick() { 48 } else { 96 };
+    let quick = common::quick()?;
+    let n = if quick { 48 } else { 96 };
     let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
     let iters = 3; // best-of-3: one-sample timings are flaky on shared CI
     let sigma = 2.0;
+    let mut report = common::report("bench_imgproc")?;
 
     let img = synthetic_volume(n);
     common::banner(&format!(
@@ -70,16 +73,20 @@ fn main() -> anyhow::Result<()> {
     let smooth_ref = gaussian_smooth(&img, sigma, Strategy::EqualSplit, 1)?;
     let log_ref = log_filter(&img, sigma, Strategy::EqualSplit, 1)?;
     let haar_ref = haar_decompose(&img, 1, Strategy::EqualSplit, 1)?;
-    let (s_smooth, _) = common::measure(iters, || {
+    let m_smooth = common::measure(iters, || {
         std::hint::black_box(gaussian_smooth(&img, sigma, Strategy::EqualSplit, 1).unwrap());
     });
-    let (s_log, _) = common::measure(iters, || {
+    let m_log = common::measure(iters, || {
         std::hint::black_box(log_filter(&img, sigma, Strategy::EqualSplit, 1).unwrap());
     });
-    let (s_haar, _) = common::measure(iters, || {
+    let m_haar = common::measure(iters, || {
         std::hint::black_box(haar_decompose(&img, 1, Strategy::EqualSplit, 1).unwrap());
     });
+    let (s_smooth, s_log, s_haar) = (m_smooth.best, m_log.best, m_haar.best);
     let serial = s_smooth + s_log + s_haar;
+    report.section("gauss/serial", m_smooth);
+    report.section("log/serial", m_log);
+    report.section("haar/serial", m_haar);
 
     let mut t = Table::new(vec![
         "strategy", "threads", "gauss[ms]", "log[ms]", "haar[ms]", "total[ms]",
@@ -97,15 +104,18 @@ fn main() -> anyhow::Result<()> {
 
     let mut best_parallel = f64::INFINITY;
     for strategy in Strategy::ALL {
-        let (p_smooth, _) = common::measure(iters, || {
+        let p_smooth = common::measure(iters, || {
             std::hint::black_box(gaussian_smooth(&img, sigma, strategy, threads).unwrap());
-        });
-        let (p_log, _) = common::measure(iters, || {
+        })
+        .best;
+        let p_log = common::measure(iters, || {
             std::hint::black_box(log_filter(&img, sigma, strategy, threads).unwrap());
-        });
-        let (p_haar, _) = common::measure(iters, || {
+        })
+        .best;
+        let p_haar = common::measure(iters, || {
             std::hint::black_box(haar_decompose(&img, 1, strategy, threads).unwrap());
-        });
+        })
+        .best;
         let total = p_smooth + p_log + p_haar;
         best_parallel = best_parallel.min(total);
         t.row(vec![
@@ -131,6 +141,8 @@ fn main() -> anyhow::Result<()> {
             haar_decompose(&img, 1, strategy, threads)? == haar_ref,
             "Haar diverged under {strategy:?}"
         );
+        let sec = format!("filters/parallel/{}", strategy.label());
+        report.section(&sec, common::Measurement::single(total)).bit_exact(true);
     }
     print!("{}", t.to_text());
     println!("parallel == serial verified bit-for-bit for all 5 strategies");
@@ -145,7 +157,7 @@ fn main() -> anyhow::Result<()> {
                 serial * 1e3,
                 serial / best_parallel
             );
-        } else if common::quick() {
+        } else if quick {
             println!(
                 "WARNING: parallel ({:.1} ms) did not beat serial ({:.1} ms) on this \
                  contended quick-mode run",
@@ -193,14 +205,15 @@ fn main() -> anyhow::Result<()> {
     drop(want);
 
     reset_peak_derived_bytes();
-    let (t_mat, _) = common::measure(iters, || {
+    let m_mat = common::measure(iters, || {
         std::hint::black_box(derive_images(&img, &opts).unwrap());
     });
+    let t_mat = m_mat.best;
     let peak_mat = peak_derived_bytes();
 
     reset_peak_derived_bytes();
     let mut sink = 0.0f64;
-    let (t_stream, _) = common::measure(iters, || {
+    let m_stream = common::measure(iters, || {
         // touch each volume the way a feature pass would, then drop it
         for_each_derived_image(&img, &opts, |d| {
             sink += d.image.data()[d.image.dims.len() / 2] as f64;
@@ -208,8 +221,11 @@ fn main() -> anyhow::Result<()> {
         })
         .unwrap();
     });
+    let t_stream = m_stream.best;
     let peak_stream = peak_derived_bytes();
     std::hint::black_box(sink);
+    report.section("derived/materialised", m_mat).peak_bytes(peak_mat);
+    report.section("derived/streaming", m_stream).peak_bytes(peak_stream).bit_exact(true);
 
     let mut t = Table::new(vec!["mode", "wall[ms]", "peak derived[MiB]", "volumes"]);
     t.row(vec![
@@ -251,7 +267,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- end-to-end cost multiplier per added image type ----------------
-    let roi = if common::quick() { 24 } else { 40 };
+    let roi = if quick { 24 } else { 40 };
     let mask = sphere_mask(roi);
     common::banner(&format!(
         "END-TO-END COST PER IMAGE TYPE — {roi}³ case, features=all, 2 LoG sigmas"
@@ -276,12 +292,14 @@ fn main() -> anyhow::Result<()> {
         let mut derived = 0usize;
         let mut preprocess = 0.0f64;
         let mut texture = 0.0f64;
-        let (wall, _) = common::measure(iters, || {
+        let m_wall = common::measure(iters, || {
             let out = ex.execute_mask(&mask).unwrap();
             derived = out.derived.len();
             preprocess = out.timing.preprocess.as_secs_f64();
             texture = out.timing.texture.as_secs_f64();
         });
+        let wall = m_wall.best;
+        report.section(&format!("endtoend/{types}"), m_wall);
         if types == "original" {
             base = wall;
         }
@@ -299,5 +317,6 @@ fn main() -> anyhow::Result<()> {
         "each added image type re-runs first-order + all five texture classes on its \
          derived images"
     );
+    common::finish(&report)?;
     Ok(())
 }

@@ -3,6 +3,9 @@
 //!   * CPU diameter strategies vs vertex count,
 //!   * PJRT artifact execution per bucket (transfer vs execute split).
 //!
+//! Results land in `BENCH_bench_kernels.json` for `radpipe bench-check`
+//! (PJRT sections only when an `artifacts/` bundle is present).
+//!
 //! Run: `cargo bench --offline --bench bench_kernels`
 
 mod common;
@@ -46,18 +49,21 @@ fn cloud(n: usize) -> Vec<Vec3> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let mesher_sizes: &[usize] = if common::quick() { &[16, 24] } else { &[32, 64, 96] };
-    let diam_sizes: &[usize] =
-        if common::quick() { &[500, 1500] } else { &[2000, 8000, 16000] };
+    let quick = common::quick()?;
+    let mesher_sizes: &[usize] = if quick { &[16, 24] } else { &[32, 64, 96] };
+    let diam_sizes: &[usize] = if quick { &[500, 1500] } else { &[2000, 8000, 16000] };
+    let mut report = common::report("bench_kernels")?;
 
     common::banner("MESHER — fused marching-tetrahedra walk");
     let mut t = Table::new(vec!["volume", "voxels", "verts", "best[ms]", "Mcells/s"]);
     for &n in mesher_sizes {
         let mask = sphere(n, n as f64 * 0.4);
         let mesh = mesh_roi(&mask); // warm result for the verts column
-        let (best, _) = common::measure(common::iters(3), || {
+        let m = common::measure(common::iters(3)?, || {
             std::hint::black_box(mesh_roi(&mask));
         });
+        let best = m.best;
+        report.section(&format!("mesher/{n}^3"), m);
         let cells = (n - 1).pow(3) as f64;
         t.row(vec![
             format!("{n}^3"),
@@ -75,9 +81,11 @@ fn main() -> anyhow::Result<()> {
         let v = cloud(n);
         let pairs = (n as f64) * (n as f64 + 1.0) / 2.0;
         // brute-force single-thread reference first
-        let (best, _) = common::measure(common::iters(2), || {
+        let m = common::measure(common::iters(2)?, || {
             std::hint::black_box(brute_force_diameters(&v));
         });
+        let best = m.best;
+        report.section(&format!("diam/{n}/brute"), m);
         t.row(vec![
             n.to_string(),
             "0-brute-single-thread".into(),
@@ -85,9 +93,11 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", pairs / best / 1e6),
         ]);
         for s in Strategy::ALL {
-            let (best, _) = common::measure(common::iters(2), || {
+            let m = common::measure(common::iters(2)?, || {
                 std::hint::black_box(compute_diameters(s, &v, 0));
             });
+            let best = m.best;
+            report.section(&format!("diam/{n}/{}", s.label()), m);
             t.row(vec![
                 n.to_string(),
                 s.label().into(),
@@ -110,6 +120,9 @@ fn main() -> anyhow::Result<()> {
             let (_, first) = engine.handle().diameters(verts.clone())?;
             // measured run (cache warm)
             let (_, timing) = engine.handle().diameters(verts.clone())?;
+            let exec = timing.execute.as_secs_f64();
+            let sec = format!("pjrt-diam/{bucket}");
+            report.section(&sec, common::Measurement::single(exec));
             let pairs = (bucket as f64) * (bucket as f64 + 1.0) / 2.0;
             t.row(vec![
                 bucket.to_string(),
@@ -127,6 +140,9 @@ fn main() -> anyhow::Result<()> {
             let tris = vec![0.5f32; bucket * 9];
             let _ = engine.handle().mesh_stats(tris.clone())?;
             let (_, timing) = engine.handle().mesh_stats(tris.clone())?;
+            let exec = timing.execute.as_secs_f64();
+            let sec = format!("pjrt-mesh/{bucket}");
+            report.section(&sec, common::Measurement::single(exec));
             t.row(vec![
                 bucket.to_string(),
                 format!("{:.2}", timing.transfer.as_secs_f64() * 1e3),
@@ -136,5 +152,6 @@ fn main() -> anyhow::Result<()> {
         }
         print!("{}", t.to_text());
     }
+    common::finish(&report)?;
     Ok(())
 }

@@ -1,5 +1,6 @@
 //! Pipeline ablations (DESIGN.md design choices): channel capacity
 //! (backpressure) and worker counts vs end-to-end throughput, CPU path.
+//! Results land in `BENCH_bench_pipeline.json` for `radpipe bench-check`.
 //!
 //! Run: `cargo bench --offline --bench bench_pipeline`
 
@@ -11,9 +12,11 @@ use radpipe::pipeline::run_pipeline;
 use radpipe::report::Table;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = common::bench_dataset();
-    let queues: &[usize] = if common::quick() { &[1, 4] } else { &[1, 4, 16] };
-    let worker_counts: &[usize] = if common::quick() { &[1, 2] } else { &[1, 2, 4] };
+    let manifest = common::bench_dataset()?;
+    let quick = common::quick()?;
+    let queues: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let mut bench = common::report("bench_pipeline")?;
 
     common::banner("PIPELINE — queue capacity × workers (CPU path, 20 cases)");
     let mut t = Table::new(vec![
@@ -33,6 +36,8 @@ fn main() -> anyhow::Result<()> {
             let report = run_pipeline(&manifest, &cfg, &ex)?;
             anyhow::ensure!(report.failures.is_empty());
             let wall = report.wall.as_secs_f64();
+            let sec = format!("pipeline/queue{queue}/workers{workers}");
+            bench.section(&sec, common::Measurement::single(wall));
             t.row(vec![
                 queue.to_string(),
                 workers.to_string(),
@@ -46,5 +51,6 @@ fn main() -> anyhow::Result<()> {
     println!("\n(single-core testbed: worker scaling saturates immediately; the");
     println!("ablation exists to show the backpressure knobs work — queue=1 must");
     println!("not deadlock and must stay within ~2x of queue=16)");
+    common::finish(&bench)?;
     Ok(())
 }

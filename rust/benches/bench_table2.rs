@@ -11,18 +11,21 @@ use radpipe::experiments::{run_table2, table2, Table2Options};
 use radpipe::synth::paper_cases;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = common::bench_dataset();
+    let manifest = common::bench_dataset()?;
     let artifact_dir = common::artifact_dir();
+    let mut report = common::report("bench_table2")?;
 
     common::banner(&format!(
         "TABLE 2 — per-case breakdown (scale {}, 20 cases)",
-        common::bench_scale()
+        common::bench_scale()?
     ));
     let opts = Table2Options {
         artifact_dir: artifact_dir.clone().unwrap_or_else(|| "artifacts".into()),
         cpu_only: artifact_dir.is_none(),
     };
+    let t0 = std::time::Instant::now();
     let rows = run_table2(&manifest, &opts)?;
+    report.section("table2/total", common::Measurement::single(t0.elapsed().as_secs_f64()));
     print!("{}", table2::to_table(&rows).to_text());
 
     // headline claims
@@ -37,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     // paper-vs-projection comparison on the shared case ids
     common::banner("projection vs paper (RTX 4070 diameter column, ms)");
     let paper = paper_cases();
-    let scale = common::bench_scale();
+    let scale = common::bench_scale()?;
     let mut t = radpipe::report::Table::new(vec![
         "case", "paper Diam[ms]", "proj 4070[ms]", "note",
     ]);
@@ -54,5 +57,6 @@ fn main() -> anyhow::Result<()> {
         }
     }
     print!("{}", t.to_text());
+    common::finish(&report)?;
     Ok(())
 }

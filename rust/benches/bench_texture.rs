@@ -1,10 +1,12 @@
 //! Texture-matrix accumulation: serial vs parallel on a ≥ 64³ synthetic
 //! ROI, across all five matrix classes (GLCM, GLRLM, GLSZM, GLDM, NGTDM).
 //! The per-voxel matrix loops are the workload PRs 2 and 5 open for
-//! acceleration; this bench measures how the chunked per-thread partial
-//! matrices scale and verifies the deterministic-accumulation contract
-//! (parallel == serial bit-for-bit; GLSZM's serial flood fill is repeated
-//! to confirm run-to-run identity).
+//! acceleration; this bench measures the two hot-path rewrites of this
+//! tree — the single-pass probe-table GLCM vs its bounds-checked
+//! reference, and the level-parallel indexed GLSZM vs the serial flood
+//! fill — plus how the chunked per-thread partial matrices scale, and
+//! verifies every determinism contract (parallel == serial bit-for-bit).
+//! Results land in `BENCH_bench_texture.json` for `radpipe bench-check`.
 //!
 //! Run: `cargo bench --offline --bench bench_texture`
 //! Quick mode: `RADPIPE_BENCH_QUICK=1` (CI smoke budget).
@@ -12,9 +14,9 @@
 mod common;
 
 use radpipe::features::texture::{
-    accumulate_glcm, accumulate_gldm, accumulate_glrlm, accumulate_glszm,
-    accumulate_ngtdm, discretize, glcm_features, gldm_features, glrlm_features,
-    glszm_features, ngtdm_features, Discretization,
+    accumulate_glcm, accumulate_glcm_reference, accumulate_gldm, accumulate_glrlm,
+    accumulate_glszm, accumulate_glszm_indexed, accumulate_ngtdm, discretize, glcm_features,
+    gldm_features, glrlm_features, glszm_features, ngtdm_features, Discretization,
 };
 use radpipe::geometry::Vec3;
 use radpipe::parallel::Strategy;
@@ -47,7 +49,8 @@ fn synthetic_case(n: usize) -> (VoxelGrid<f32>, VoxelGrid<u8>) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let n = if common::quick() { 64 } else { 96 };
+    let quick = common::quick()?;
+    let n = if quick { 64 } else { 96 };
     let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
     // best-of-3 even in quick mode: the serial-vs-parallel assertion below
     // would be flaky on one-sample timings from a contended CI runner, and
@@ -55,6 +58,7 @@ fn main() -> anyhow::Result<()> {
     let iters = 3;
     let distances = [1usize, 2];
     let gldm_alpha = 0.0;
+    let mut report = common::report("bench_texture")?;
 
     let (img, mask) = synthetic_case(n);
     let roi = discretize(&img, &mask, Discretization::BinCount(16))?
@@ -68,30 +72,98 @@ fn main() -> anyhow::Result<()> {
         distances.len(),
     ));
 
-    // serial reference (1 thread, static split)
-    let glcm_ref = accumulate_glcm(&roi, &distances, Strategy::EqualSplit, 1);
+    // serial references (also the determinism baselines)
+    let glcm_ref = accumulate_glcm_reference(&roi, &distances, Strategy::EqualSplit, 1);
     let glrlm_ref = accumulate_glrlm(&roi, Strategy::EqualSplit, 1);
     let glszm_ref = accumulate_glszm(&roi);
     let gldm_ref = accumulate_gldm(&roi, gldm_alpha, Strategy::EqualSplit, 1);
     let ngtdm_ref = accumulate_ngtdm(&roi, Strategy::EqualSplit, 1);
-    let (serial_glcm, _) = common::measure(iters, || {
+
+    // ---- win 1: single-pass probe-table GLCM vs bounds-checked reference
+    let m_glcm_ref = common::measure(iters, || {
+        let m = accumulate_glcm_reference(&roi, &distances, Strategy::EqualSplit, 1);
+        std::hint::black_box(m);
+    });
+    let m_glcm_new = common::measure(iters, || {
         std::hint::black_box(accumulate_glcm(&roi, &distances, Strategy::EqualSplit, 1));
     });
-    let (serial_glrlm, _) = common::measure(iters, || {
+    anyhow::ensure!(
+        accumulate_glcm(&roi, &distances, Strategy::EqualSplit, 1) == glcm_ref,
+        "single-pass GLCM diverged from the reference"
+    );
+    let glcm_win = m_glcm_ref.best / m_glcm_new.best;
+    report.section("glcm/reference/serial", m_glcm_ref);
+    report.section("glcm/single-pass/serial", m_glcm_new).bit_exact(true).speedup(glcm_win);
+    println!(
+        "glcm single-pass: {:.1} ms vs reference {:.1} ms ({glcm_win:.2}x)",
+        m_glcm_new.best * 1e3,
+        m_glcm_ref.best * 1e3
+    );
+    if quick {
+        if glcm_win < 1.2 {
+            println!(
+                "WARNING: single-pass GLCM win {glcm_win:.2}x < 1.2x on this contended quick run"
+            );
+        }
+    } else {
+        anyhow::ensure!(
+            glcm_win >= 1.2,
+            "expected single-pass GLCM >= 1.2x the reference at {n}^3, got {glcm_win:.2}x"
+        );
+    }
+
+    let m_glrlm = common::measure(iters, || {
         std::hint::black_box(accumulate_glrlm(&roi, Strategy::EqualSplit, 1));
     });
-    let (serial_gldm, _) = common::measure(iters, || {
+    let m_gldm = common::measure(iters, || {
         std::hint::black_box(accumulate_gldm(&roi, gldm_alpha, Strategy::EqualSplit, 1));
     });
-    let (serial_ngtdm, _) = common::measure(iters, || {
+    let m_ngtdm = common::measure(iters, || {
         std::hint::black_box(accumulate_ngtdm(&roi, Strategy::EqualSplit, 1));
     });
-    // GLSZM is serial-by-design (deterministic flood fill): measured once
-    // here, outside the strategy table
-    let (glszm_wall, _) = common::measure(iters, || {
+    report.section("glrlm/serial", m_glrlm);
+    report.section("gldm/serial", m_gldm);
+    report.section("ngtdm/serial", m_ngtdm);
+    let serial = m_glcm_new.best + m_glrlm.best + m_gldm.best + m_ngtdm.best;
+
+    // ---- win 2: level-parallel indexed GLSZM vs the serial flood fill
+    let m_glszm_ref = common::measure(iters, || {
         std::hint::black_box(accumulate_glszm(&roi));
     });
-    let serial = serial_glcm + serial_glrlm + serial_gldm + serial_ngtdm;
+    let m_glszm_idx = common::measure(iters, || {
+        std::hint::black_box(accumulate_glszm_indexed(&roi, 1));
+    });
+    let m_glszm_par = common::measure(iters, || {
+        std::hint::black_box(accumulate_glszm_indexed(&roi, threads));
+    });
+    anyhow::ensure!(accumulate_glszm_indexed(&roi, 1) == glszm_ref, "indexed GLSZM diverged");
+    anyhow::ensure!(
+        accumulate_glszm_indexed(&roi, threads) == glszm_ref,
+        "parallel indexed GLSZM diverged"
+    );
+    let glszm_win = m_glszm_ref.best / m_glszm_par.best;
+    report.section("glszm/reference/serial", m_glszm_ref);
+    report.section("glszm/indexed/serial", m_glszm_idx).bit_exact(true);
+    report.section("glszm/indexed/parallel", m_glszm_par).bit_exact(true).speedup(glszm_win);
+    println!(
+        "glszm level-parallel: {:.1} ms vs serial flood fill {:.1} ms ({glszm_win:.2}x)",
+        m_glszm_par.best * 1e3,
+        m_glszm_ref.best * 1e3
+    );
+    if threads >= 2 {
+        if quick {
+            if glszm_win < 1.1 {
+                println!(
+                    "WARNING: level-parallel GLSZM win {glszm_win:.2}x < 1.1x on this quick run"
+                );
+            }
+        } else {
+            anyhow::ensure!(
+                glszm_win >= 1.1,
+                "expected level-parallel GLSZM >= 1.1x serial, got {glszm_win:.2}x"
+            );
+        }
+    }
 
     let mut t = Table::new(vec![
         "strategy",
@@ -106,37 +178,37 @@ fn main() -> anyhow::Result<()> {
     t.row(vec![
         "serial-reference".to_string(),
         "1".to_string(),
-        format!("{:.1}", serial_glcm * 1e3),
-        format!("{:.1}", serial_glrlm * 1e3),
-        format!("{:.1}", serial_gldm * 1e3),
-        format!("{:.1}", serial_ngtdm * 1e3),
+        format!("{:.1}", m_glcm_new.best * 1e3),
+        format!("{:.1}", m_glrlm.best * 1e3),
+        format!("{:.1}", m_gldm.best * 1e3),
+        format!("{:.1}", m_ngtdm.best * 1e3),
         format!("{:.1}", serial * 1e3),
         "1.00".to_string(),
     ]);
 
     let mut best_parallel = f64::INFINITY;
     for strategy in Strategy::ALL {
-        let (p_glcm, _) = common::measure(iters, || {
+        let p_glcm = common::measure(iters, || {
             std::hint::black_box(accumulate_glcm(&roi, &distances, strategy, threads));
         });
-        let (p_glrlm, _) = common::measure(iters, || {
+        let p_glrlm = common::measure(iters, || {
             std::hint::black_box(accumulate_glrlm(&roi, strategy, threads));
         });
-        let (p_gldm, _) = common::measure(iters, || {
+        let p_gldm = common::measure(iters, || {
             std::hint::black_box(accumulate_gldm(&roi, gldm_alpha, strategy, threads));
         });
-        let (p_ngtdm, _) = common::measure(iters, || {
+        let p_ngtdm = common::measure(iters, || {
             std::hint::black_box(accumulate_ngtdm(&roi, strategy, threads));
         });
-        let total = p_glcm + p_glrlm + p_gldm + p_ngtdm;
+        let total = p_glcm.best + p_glrlm.best + p_gldm.best + p_ngtdm.best;
         best_parallel = best_parallel.min(total);
         t.row(vec![
             strategy.label().to_string(),
             threads.to_string(),
-            format!("{:.1}", p_glcm * 1e3),
-            format!("{:.1}", p_glrlm * 1e3),
-            format!("{:.1}", p_gldm * 1e3),
-            format!("{:.1}", p_ngtdm * 1e3),
+            format!("{:.1}", p_glcm.best * 1e3),
+            format!("{:.1}", p_glrlm.best * 1e3),
+            format!("{:.1}", p_gldm.best * 1e3),
+            format!("{:.1}", p_ngtdm.best * 1e3),
             format!("{:.1}", total * 1e3),
             format!("{:.2}", serial / total),
         ]);
@@ -150,10 +222,10 @@ fn main() -> anyhow::Result<()> {
         anyhow::ensure!(d == gldm_ref, "GLDM diverged under {strategy:?}");
         let m = accumulate_ngtdm(&roi, strategy, threads);
         anyhow::ensure!(m == ngtdm_ref, "NGTDM diverged under {strategy:?}");
+        let sec = format!("texture/parallel/{}", strategy.label());
+        report.section(&sec, common::Measurement::single(total)).bit_exact(true);
     }
-    anyhow::ensure!(accumulate_glszm(&roi) == glszm_ref, "GLSZM diverged across runs");
     print!("{}", t.to_text());
-    println!("glszm (serial flood fill): {:.1} ms", glszm_wall * 1e3);
 
     let fg = glcm_features(&glcm_ref).expect("dense GLCM");
     let fr = glrlm_features(&glrlm_ref).expect("dense GLRLM");
@@ -186,7 +258,7 @@ fn main() -> anyhow::Result<()> {
                 serial * 1e3,
                 serial / best_parallel
             );
-        } else if common::quick() {
+        } else if quick {
             println!(
                 "WARNING: parallel ({:.1} ms) did not beat serial ({:.1} ms) on this \
                  contended quick-mode run",
@@ -204,5 +276,6 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("single-core machine: speedup assertion skipped");
     }
+    common::finish(&report)?;
     Ok(())
 }

@@ -1,49 +1,52 @@
 //! Shared bench harness utilities (the offline mirror has no criterion —
 //! this is the in-repo measurement kit used by all `cargo bench` targets).
+//!
+//! Measurement statistics, strict environment parsing and the
+//! schema-versioned `BENCH_<name>.json` emission live in
+//! [`radpipe::bench`]; this module adapts them for the bench targets:
+//! dataset generation, artifact discovery and the report plumbing every
+//! target shares. Environment knobs are *strict* — a malformed
+//! `RADPIPE_BENCH_QUICK` or `RADPIPE_BENCH_SCALE` aborts the bench with a
+//! located error instead of silently measuring the wrong dataset.
 
 use std::path::PathBuf;
-use std::time::Instant;
 
+use anyhow::{Context, Result};
+
+use radpipe::bench::BenchReport;
 use radpipe::io::DatasetManifest;
 use radpipe::synth::{generate_dataset, GenOptions};
 
-/// True when `RADPIPE_BENCH_QUICK` is set to a non-empty, non-`0` value:
-/// the CI bench-smoke mode. Benches shrink their iteration budgets and
-/// problem sizes so every target *runs* (not just compiles) in seconds.
-pub fn quick() -> bool {
-    std::env::var("RADPIPE_BENCH_QUICK")
-        .map(|v| !v.is_empty() && v != "0")
-        .unwrap_or(false)
+pub use radpipe::bench::{measure, Measurement};
+
+/// True under the CI quick budget (`RADPIPE_BENCH_QUICK`): benches shrink
+/// their iteration budgets and problem sizes so every target *runs* (not
+/// just compiles) in seconds.
+pub fn quick() -> Result<bool> {
+    radpipe::bench::quick_mode()
 }
 
 /// Iteration budget: `full` normally, 1 in quick mode.
-pub fn iters(full: usize) -> usize {
-    if quick() {
-        1
-    } else {
-        full
-    }
+pub fn iters(full: usize) -> Result<usize> {
+    Ok(if quick()? { 1 } else { full })
 }
 
 /// Vertex-count scale for bench datasets; override with
 /// `RADPIPE_BENCH_SCALE` (1.0 = paper scale — hours on this testbed).
 /// Quick mode defaults to a much smaller dataset.
-pub fn bench_scale() -> f64 {
-    std::env::var("RADPIPE_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(if quick() { 0.004 } else { 0.05 })
+pub fn bench_scale() -> Result<f64> {
+    radpipe::bench::bench_scale()
 }
 
 /// Generate (or reuse) the deterministic bench dataset.
-pub fn bench_dataset() -> DatasetManifest {
-    let scale = bench_scale();
+pub fn bench_dataset() -> Result<DatasetManifest> {
+    let scale = bench_scale()?;
     let root = PathBuf::from(format!("target/bench-data-{scale}"));
     if root.join("cases.txt").exists() {
-        radpipe::io::scan_dataset(&root).expect("rescan bench dataset")
+        radpipe::io::scan_dataset(&root).context("rescan bench dataset")
     } else {
         eprintln!("generating bench dataset at scale {scale} (once)…");
-        generate_dataset(&root, &GenOptions { scale, seed: 7 }).expect("generate dataset")
+        generate_dataset(&root, &GenOptions { scale, seed: 7 }).context("generate dataset")
     }
 }
 
@@ -58,21 +61,22 @@ pub fn artifact_dir() -> Option<PathBuf> {
     }
 }
 
-/// Measure a closure `iters` times; returns (best, mean) seconds.
-pub fn measure<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64) {
-    let mut best = f64::INFINITY;
-    let mut sum = 0.0;
-    for _ in 0..iters.max(1) {
-        let t = Instant::now();
-        f();
-        let dt = t.elapsed().as_secs_f64();
-        best = best.min(dt);
-        sum += dt;
-    }
-    (best, sum / iters.max(1) as f64)
-}
-
 /// Simple section banner so `cargo bench | tee` output reads well.
 pub fn banner(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Start this target's schema-versioned report (`name` becomes
+/// `BENCH_<name>.json`).
+pub fn report(name: &str) -> Result<BenchReport> {
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    Ok(BenchReport::new(name, quick()?, bench_scale()?, threads))
+}
+
+/// Write the finished report where CI collects it (`RADPIPE_BENCH_OUT`,
+/// default `target/bench-reports`).
+pub fn finish(report: &BenchReport) -> Result<()> {
+    let path = report.write(&radpipe::bench::out_dir())?;
+    println!("bench report: {}", path.display());
+    Ok(())
 }

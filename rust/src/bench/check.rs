@@ -1,0 +1,307 @@
+//! Baseline-vs-current comparison: the logic behind `radpipe bench-check`.
+//!
+//! The gate is deliberately simple: for every section in a checked-in
+//! baseline, the current run must (a) still have the section, (b) keep
+//! any `bit_exact: true` determinism flag, and (c) post a best wall time
+//! within `rel ×` the baseline best — unless the current best sits under
+//! the min-absolute floor, where scheduler noise dwarfs real signal and
+//! micro sections are never failed.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::report::BenchReport;
+use crate::report::Table;
+
+/// Resolve a `--tolerance` argument: a preset name or a bare factor.
+///
+/// `generous` (10×) is what CI uses against quick-mode baselines on
+/// shared runners; `strict` (1.5×) suits a quiet dedicated box.
+pub fn parse_tolerance(raw: &str) -> Result<f64> {
+    match raw {
+        "generous" => Ok(10.0),
+        "strict" => Ok(1.5),
+        other => match other.parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 1.0 => Ok(v),
+            _ => bail!("--tolerance {other:?}: expected 'generous', 'strict' or a factor >= 1"),
+        },
+    }
+}
+
+/// Gate configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerance {
+    /// Current best may be at most `rel ×` the baseline best.
+    pub rel: f64,
+    /// Sections whose current best is at or under this many seconds never
+    /// fail the time gate (micro-bench noise floor).
+    pub min_abs_s: f64,
+}
+
+/// Outcome of one baseline section's comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Within tolerance.
+    Pass,
+    /// Under the min-absolute floor; time not judged.
+    Floor,
+    /// Regression (time, missing section, or lost determinism flag).
+    Fail,
+}
+
+impl Status {
+    fn label(self) -> &'static str {
+        match self {
+            Status::Pass => "pass",
+            Status::Floor => "floor",
+            Status::Fail => "FAIL",
+        }
+    }
+}
+
+/// One comparison line (one baseline section).
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub section: String,
+    pub baseline_s: f64,
+    pub current_s: Option<f64>,
+    pub status: Status,
+    pub detail: String,
+}
+
+/// All verdicts for one bench target.
+#[derive(Debug, Clone)]
+pub struct CheckResult {
+    pub bench: String,
+    pub verdicts: Vec<Verdict>,
+}
+
+impl CheckResult {
+    /// Number of failing sections.
+    pub fn failures(&self) -> usize {
+        self.verdicts.iter().filter(|v| v.status == Status::Fail).count()
+    }
+
+    /// Render the verdicts as an aligned table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(vec!["section", "baseline", "current", "ratio", "status", "detail"]);
+        for v in &self.verdicts {
+            let current = v.current_s.map_or_else(|| "-".to_string(), fmt_secs);
+            let ratio = match v.current_s {
+                Some(c) if v.baseline_s > 0.0 => format!("{:.2}x", c / v.baseline_s),
+                _ => "-".to_string(),
+            };
+            t.row(vec![
+                v.section.clone(),
+                fmt_secs(v.baseline_s),
+                current,
+                ratio,
+                v.status.label().to_string(),
+                v.detail.clone(),
+            ]);
+        }
+        t
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else {
+        format!("{:.3}ms", s * 1e3)
+    }
+}
+
+/// Compare a current run against its baseline, section by section.
+///
+/// Only sections present in the *baseline* are judged: a bench is free to
+/// grow new sections without blessing a new baseline first.
+pub fn compare(base: &BenchReport, cur: &BenchReport, tol: Tolerance) -> CheckResult {
+    let mut verdicts = Vec::with_capacity(base.sections.len());
+    for bs in &base.sections {
+        let b = bs.measurement.best;
+        let Some(cs) = cur.sections.iter().find(|s| s.name == bs.name) else {
+            verdicts.push(Verdict {
+                section: bs.name.clone(),
+                baseline_s: b,
+                current_s: None,
+                status: Status::Fail,
+                detail: "section missing from current run".to_string(),
+            });
+            continue;
+        };
+        let c = cs.measurement.best;
+        let (status, detail) = if bs.bit_exact == Some(true) && cs.bit_exact != Some(true) {
+            (Status::Fail, "baseline asserts bit_exact, current run does not".to_string())
+        } else if c <= tol.min_abs_s {
+            (Status::Floor, format!("under the {} floor", fmt_secs(tol.min_abs_s)))
+        } else if b > 0.0 && c > b * tol.rel {
+            (Status::Fail, format!("exceeds {:.2}x tolerance", tol.rel))
+        } else if b <= 0.0 {
+            (Status::Fail, "baseline best is 0 yet current is over the floor".to_string())
+        } else {
+            (Status::Pass, String::new())
+        };
+        verdicts.push(Verdict {
+            section: bs.name.clone(),
+            baseline_s: b,
+            current_s: Some(c),
+            status,
+            detail,
+        });
+    }
+    CheckResult { bench: base.name.clone(), verdicts }
+}
+
+/// Load and validate every `BENCH_*.json` under `dir`, sorted by file
+/// name. Errors if the directory holds none — an empty gate would pass
+/// vacuously.
+pub fn load_dir(dir: &Path) -> Result<Vec<(PathBuf, BenchReport)>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading bench report dir {}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        bail!("no BENCH_*.json reports under {}", dir.display());
+    }
+    let mut out = Vec::with_capacity(paths.len());
+    for path in paths {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let report = BenchReport::from_json_text(&text)
+            .with_context(|| format!("validating {}", path.display()))?;
+        out.push((path, report));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bench::Measurement;
+
+    use super::*;
+
+    fn report(name: &str, sections: &[(&str, f64)]) -> BenchReport {
+        let mut rep = BenchReport::new(name, true, 0.004, 1);
+        for (sname, best) in sections {
+            rep.section(sname, Measurement::from_samples(&[*best, best * 2.0]));
+        }
+        rep
+    }
+
+    fn tol(rel: f64, min_abs_s: f64) -> Tolerance {
+        Tolerance { rel, min_abs_s }
+    }
+
+    #[test]
+    fn regression_is_caught() {
+        let base = report("bench_x", &[("glcm/serial", 0.010)]);
+        let cur = report("bench_x", &[("glcm/serial", 0.050)]);
+        let result = compare(&base, &cur, tol(2.0, 0.001));
+        assert_eq!(result.failures(), 1);
+        assert_eq!(result.verdicts[0].status, Status::Fail);
+        assert!(result.verdicts[0].detail.contains("tolerance"));
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = report("bench_x", &[("glcm/serial", 0.010)]);
+        let cur = report("bench_x", &[("glcm/serial", 0.015)]);
+        let result = compare(&base, &cur, tol(2.0, 0.001));
+        assert_eq!(result.failures(), 0);
+        assert_eq!(result.verdicts[0].status, Status::Pass);
+    }
+
+    #[test]
+    fn faster_than_baseline_passes() {
+        let base = report("bench_x", &[("glcm/serial", 0.10)]);
+        let cur = report("bench_x", &[("glcm/serial", 0.02)]);
+        assert_eq!(compare(&base, &cur, tol(1.5, 0.001)).failures(), 0);
+    }
+
+    #[test]
+    fn missing_section_fails() {
+        let base = report("bench_x", &[("glcm/serial", 0.010), ("glszm/serial", 0.010)]);
+        let cur = report("bench_x", &[("glcm/serial", 0.010)]);
+        let result = compare(&base, &cur, tol(2.0, 0.001));
+        assert_eq!(result.failures(), 1);
+        let miss = &result.verdicts[1];
+        assert_eq!(miss.section, "glszm/serial");
+        assert!(miss.current_s.is_none());
+        assert!(miss.detail.contains("missing"));
+    }
+
+    #[test]
+    fn min_absolute_floor_suppresses_micro_noise() {
+        // 100x over baseline, but the section finishes in 10ms — under the
+        // 50ms floor it must not fail the gate.
+        let base = report("bench_x", &[("mesher/16", 0.0001)]);
+        let cur = report("bench_x", &[("mesher/16", 0.010)]);
+        let result = compare(&base, &cur, tol(2.0, 0.050));
+        assert_eq!(result.failures(), 0);
+        assert_eq!(result.verdicts[0].status, Status::Floor);
+    }
+
+    #[test]
+    fn lost_bit_exact_flag_fails_even_when_fast() {
+        let mut base = report("bench_x", &[("texture/parallel", 0.010)]);
+        base.sections[0].bit_exact = Some(true);
+        let cur = report("bench_x", &[("texture/parallel", 0.010)]);
+        let result = compare(&base, &cur, tol(10.0, 1.0));
+        assert_eq!(result.failures(), 1);
+        assert!(result.verdicts[0].detail.contains("bit_exact"));
+    }
+
+    #[test]
+    fn extra_current_sections_are_ignored() {
+        let base = report("bench_x", &[("glcm/serial", 0.010)]);
+        let cur = report("bench_x", &[("glcm/serial", 0.010), ("glcm/blocked", 0.003)]);
+        let result = compare(&base, &cur, tol(2.0, 0.001));
+        assert_eq!(result.failures(), 0);
+        assert_eq!(result.verdicts.len(), 1);
+    }
+
+    #[test]
+    fn tolerance_presets_and_factors() {
+        assert_eq!(parse_tolerance("generous").unwrap(), 10.0);
+        assert_eq!(parse_tolerance("strict").unwrap(), 1.5);
+        assert_eq!(parse_tolerance("3.5").unwrap(), 3.5);
+        for bad in ["0.5", "-2", "nan", "loose"] {
+            assert!(parse_tolerance(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn verdict_table_renders_every_section() {
+        let base = report("bench_x", &[("a", 0.010), ("b", 0.010)]);
+        let cur = report("bench_x", &[("a", 0.012)]);
+        let result = compare(&base, &cur, tol(2.0, 0.001));
+        let text = result.table().to_text();
+        assert!(text.contains("section"), "{text}");
+        assert!(text.contains("FAIL"), "{text}");
+        assert!(text.contains("1.20x"), "{text}");
+    }
+
+    #[test]
+    fn load_dir_roundtrip_and_empty_dir_error() {
+        let dir = std::env::temp_dir().join(format!("radpipe-check-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load_dir(&dir).is_err(), "empty dir must not pass vacuously");
+        report("bench_b", &[("s", 0.01)]).write(&dir).unwrap();
+        report("bench_a", &[("s", 0.01)]).write(&dir).unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        let names: Vec<&str> = loaded.iter().map(|(_, r)| r.name.as_str()).collect();
+        assert_eq!(names, ["bench_a", "bench_b"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,120 @@
+//! Strict parsing of the bench environment knobs.
+//!
+//! The old `benches/common` helpers silently swallowed unparsable values
+//! (`RADPIPE_BENCH_SCALE=0.0.5` fell back to the default and the bench
+//! quietly measured the wrong dataset). Here every malformed value is a
+//! located error naming the variable and the offending text, so a typo in
+//! a CI matrix or a shell export fails loudly instead of skewing numbers.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Quick-budget switch: tiny datasets, single-digit iteration counts.
+const QUICK_VAR: &str = "RADPIPE_BENCH_QUICK";
+/// Dataset scale passed to `gen-data` by benches that synthesise input.
+const SCALE_VAR: &str = "RADPIPE_BENCH_SCALE";
+/// Output directory for `BENCH_*.json` reports.
+const OUT_VAR: &str = "RADPIPE_BENCH_OUT";
+
+/// Default dataset scale under the quick budget.
+const QUICK_SCALE: f64 = 0.004;
+/// Default dataset scale for full bench runs.
+const FULL_SCALE: f64 = 0.05;
+
+/// Interpret a raw `RADPIPE_BENCH_QUICK` value.
+///
+/// Unset, empty, `0`, `false`, `off` and `no` mean full mode; `1`,
+/// `true`, `on` and `yes` mean quick mode (case-insensitive). Anything
+/// else — e.g. `RADPIPE_BENCH_QUICK=quick` — is an error, because a
+/// half-typed toggle must not silently pick a budget.
+pub fn parse_quick(raw: Option<&str>) -> Result<bool> {
+    let Some(raw) = raw else {
+        return Ok(false);
+    };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "0" | "false" | "off" | "no" => Ok(false),
+        "1" | "true" | "on" | "yes" => Ok(true),
+        _ => bail!("{QUICK_VAR}={raw:?}: expected 1/true/on or 0/false/off"),
+    }
+}
+
+/// Interpret a raw `RADPIPE_BENCH_SCALE` value.
+///
+/// Unset or empty falls back to the budget default (0.004 quick, 0.05
+/// full); anything present must parse as a positive finite number or the
+/// bench refuses to run.
+pub fn parse_scale(raw: Option<&str>, quick: bool) -> Result<f64> {
+    let default = if quick { QUICK_SCALE } else { FULL_SCALE };
+    let Some(raw) = raw else {
+        return Ok(default);
+    };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Ok(default);
+    }
+    match trimmed.parse::<f64>() {
+        Ok(s) if s.is_finite() && s > 0.0 => Ok(s),
+        _ => bail!("{SCALE_VAR}={trimmed:?} is not a positive finite number (e.g. 0.05)"),
+    }
+}
+
+/// Read `RADPIPE_BENCH_QUICK` from the process environment.
+pub fn quick_mode() -> Result<bool> {
+    parse_quick(std::env::var(QUICK_VAR).ok().as_deref())
+}
+
+/// Read `RADPIPE_BENCH_SCALE` from the process environment, defaulting by
+/// budget.
+pub fn bench_scale() -> Result<f64> {
+    let quick = quick_mode()?;
+    parse_scale(std::env::var(SCALE_VAR).ok().as_deref(), quick)
+}
+
+/// Where bench reports land: `RADPIPE_BENCH_OUT` or `target/bench-reports`.
+pub fn out_dir() -> PathBuf {
+    std::env::var(OUT_VAR)
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/bench-reports"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_accepts_the_documented_spellings() {
+        for falsy in [None, Some(""), Some("0"), Some("false"), Some("OFF"), Some("no")] {
+            assert!(!parse_quick(falsy).unwrap(), "{falsy:?}");
+        }
+        for truthy in [Some("1"), Some("true"), Some("ON"), Some("yes"), Some(" 1 ")] {
+            assert!(parse_quick(truthy).unwrap(), "{truthy:?}");
+        }
+    }
+
+    #[test]
+    fn quick_oddities_are_located_errors() {
+        for bad in ["quick", "2", "tru", "-1"] {
+            let err = parse_quick(Some(bad)).unwrap_err().to_string();
+            assert!(err.contains(QUICK_VAR), "{err}");
+            assert!(err.contains(bad), "{err}");
+        }
+    }
+
+    #[test]
+    fn scale_defaults_follow_the_budget() {
+        assert_eq!(parse_scale(None, true).unwrap(), QUICK_SCALE);
+        assert_eq!(parse_scale(None, false).unwrap(), FULL_SCALE);
+        assert_eq!(parse_scale(Some("  "), false).unwrap(), FULL_SCALE);
+        assert_eq!(parse_scale(Some("0.02"), true).unwrap(), 0.02);
+    }
+
+    #[test]
+    fn scale_garbage_names_the_bad_value() {
+        for bad in ["0.0.5", "abc", "nan", "inf", "-0.01", "0"] {
+            let err = parse_scale(Some(bad), false).unwrap_err().to_string();
+            assert!(err.contains(SCALE_VAR), "{err}");
+            assert!(err.contains(bad), "{err}");
+        }
+    }
+}

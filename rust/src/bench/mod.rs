@@ -1,0 +1,30 @@
+//! Perf-trajectory measurement kit.
+//!
+//! The paper's core claim is *measured* speed, so the benches are not
+//! allowed to be write-only: every bench target builds a [`BenchReport`],
+//! records one [`Measurement`] per section (wall best/mean/stddev and the
+//! iteration count backing them), and writes a schema-versioned
+//! `BENCH_<name>.json` next to its stdout banner. Checked-in quick-mode
+//! baselines under `bench/baselines/` plus the [`compare`] gate behind
+//! `radpipe bench-check` turn those files into a regression tripwire: CI
+//! re-runs every bench, validates the emitted documents and fails the
+//! build when a section's best wall time exceeds the baseline by more
+//! than the configured tolerance (with a min-absolute floor so micro
+//! benches cannot flake the gate on scheduler noise).
+//!
+//! Layout:
+//! * `env` — strict `RADPIPE_BENCH_QUICK` / `RADPIPE_BENCH_SCALE`
+//!   parsing: a malformed value is a located error, never a silent
+//!   fallback to the default.
+//! * `report` — [`Measurement`], [`BenchReport`], the JSON emitter and
+//!   the validating parser ([`BenchReport::from_json_text`]).
+//! * `check` — tolerance presets and the baseline-vs-current comparer
+//!   that renders a readable verdict table.
+
+mod check;
+mod env;
+mod report;
+
+pub use check::{compare, load_dir, parse_tolerance, CheckResult, Status, Tolerance};
+pub use env::{bench_scale, out_dir, parse_quick, parse_scale, quick_mode};
+pub use report::{measure, BenchReport, Measurement, Section, SCHEMA};

@@ -1,0 +1,387 @@
+//! `BENCH_*.json` emission and the validating parser for reading the
+//! documents back (baselines, `bench-check`, CI schema validation).
+//!
+//! Schema `radpipe.bench/1`:
+//!
+//! ```json
+//! {
+//!   "schema": "radpipe.bench/1",
+//!   "name": "bench_texture",
+//!   "quick": true,
+//!   "scale": 0.004,
+//!   "threads": 8,
+//!   "git": "94966ee",
+//!   "sections": [
+//!     {"name": "glcm/single-pass/serial",
+//!      "best_s": 0.012, "mean_s": 0.013, "stddev_s": 0.001, "iters": 5,
+//!      "bit_exact": true, "speedup": 1.8}
+//!   ]
+//! }
+//! ```
+//!
+//! `bit_exact`, `peak_bytes` and `speedup` are optional per-section
+//! annotations; everything else is mandatory and checked by
+//! [`BenchReport::from_json_text`].
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::report::JsonValue;
+
+/// Version tag written into (and demanded from) every `BENCH_*.json`.
+pub const SCHEMA: &str = "radpipe.bench/1";
+
+/// Wall-clock statistics for one measured section.
+///
+/// `best` is the gating number (least noisy under machine load); `mean`,
+/// `stddev` and `iters` record how trustworthy it is. The same struct
+/// feeds the stdout banner and the JSON emitter, so they cannot disagree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// Fastest observed wall time, seconds.
+    pub best: f64,
+    /// Mean wall time over all iterations, seconds.
+    pub mean: f64,
+    /// Population standard deviation, seconds.
+    pub stddev: f64,
+    /// Number of timed iterations backing the statistics.
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Population statistics over raw per-iteration wall times (seconds).
+    pub fn from_samples(samples: &[f64]) -> Measurement {
+        if samples.is_empty() {
+            return Measurement { best: 0.0, mean: 0.0, stddev: 0.0, iters: 0 };
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let best = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        Measurement { best, mean, stddev: var.sqrt(), iters: samples.len() }
+    }
+
+    /// A single observed wall time (one-shot sections: whole pipelines,
+    /// experiment harnesses).
+    pub fn single(wall: f64) -> Measurement {
+        Measurement { best: wall, mean: wall, stddev: 0.0, iters: 1 }
+    }
+}
+
+/// Run `f` `iters` times and collect wall statistics.
+pub fn measure<F: FnMut()>(iters: usize, mut f: F) -> Measurement {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let start = Instant::now();
+        f();
+        samples.push(start.elapsed().as_secs_f64());
+    }
+    Measurement::from_samples(&samples)
+}
+
+/// One measured section of a bench report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub measurement: Measurement,
+    /// `Some(true)` asserts a determinism contract held (parallel ==
+    /// serial, batched == oracle) during *this* run.
+    pub bit_exact: Option<bool>,
+    /// Peak resident bytes of the measured leg, where the code tracks it.
+    pub peak_bytes: Option<u64>,
+    /// Measured win vs the in-run reference leg (reference / optimised).
+    pub speedup: Option<f64>,
+}
+
+impl Section {
+    /// Flag the section's determinism contract (chainable).
+    pub fn bit_exact(&mut self, ok: bool) -> &mut Section {
+        self.bit_exact = Some(ok);
+        self
+    }
+
+    /// Record tracked peak bytes (chainable).
+    pub fn peak_bytes(&mut self, bytes: u64) -> &mut Section {
+        self.peak_bytes = Some(bytes);
+        self
+    }
+
+    /// Record a measured speedup factor (chainable).
+    pub fn speedup(&mut self, factor: f64) -> &mut Section {
+        self.speedup = Some(factor);
+        self
+    }
+}
+
+/// A full bench run: run metadata plus the measured sections, writable as
+/// `BENCH_<name>.json` and parseable back for baseline comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub name: String,
+    pub quick: bool,
+    pub scale: f64,
+    pub threads: usize,
+    pub git: String,
+    pub sections: Vec<Section>,
+}
+
+impl BenchReport {
+    /// Start a report; captures `git describe` for provenance.
+    pub fn new(name: &str, quick: bool, scale: f64, threads: usize) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            quick,
+            scale,
+            threads,
+            git: git_describe(),
+            sections: Vec::new(),
+        }
+    }
+
+    /// Record a section; returns it for chained annotations.
+    pub fn section(&mut self, name: &str, m: Measurement) -> &mut Section {
+        self.sections.push(Section {
+            name: name.to_string(),
+            measurement: m,
+            bit_exact: None,
+            peak_bytes: None,
+            speedup: None,
+        });
+        self.sections.last_mut().expect("just pushed")
+    }
+
+    /// Serialise to the schema `radpipe.bench/1` document.
+    pub fn to_json(&self) -> JsonValue {
+        let mut doc = JsonValue::obj();
+        doc.set("schema", SCHEMA)
+            .set("name", self.name.as_str())
+            .set("quick", self.quick)
+            .set("scale", self.scale)
+            .set("threads", self.threads)
+            .set("git", self.git.as_str());
+        let sections: Vec<JsonValue> = self
+            .sections
+            .iter()
+            .map(|s| {
+                let mut sec = JsonValue::obj();
+                sec.set("name", s.name.as_str())
+                    .set("best_s", s.measurement.best)
+                    .set("mean_s", s.measurement.mean)
+                    .set("stddev_s", s.measurement.stddev)
+                    .set("iters", s.measurement.iters);
+                if let Some(b) = s.bit_exact {
+                    sec.set("bit_exact", b);
+                }
+                if let Some(p) = s.peak_bytes {
+                    sec.set("peak_bytes", p as f64);
+                }
+                if let Some(x) = s.speedup {
+                    sec.set("speedup", x);
+                }
+                sec
+            })
+            .collect();
+        doc.set("sections", JsonValue::Arr(sections));
+        doc
+    }
+
+    /// Write `BENCH_<name>.json` under `dir`; returns the path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating bench report dir {}", dir.display()))?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Parse and validate a report document.
+    ///
+    /// Rejects: wrong/missing schema tag, empty name, missing/empty/
+    /// duplicate sections, non-finite or negative statistics, `best_s`
+    /// above `mean_s`, and zero iteration counts.
+    pub fn from_json_text(text: &str) -> Result<BenchReport> {
+        let doc = JsonValue::parse(text)?;
+        let schema = doc.get("schema").and_then(JsonValue::as_str).unwrap_or("<missing>");
+        if schema != SCHEMA {
+            bail!("schema mismatch: document says {schema:?}, reader expects {SCHEMA:?}");
+        }
+        let name = doc.get("name").and_then(JsonValue::as_str).unwrap_or("");
+        if name.is_empty() {
+            bail!("bench report is missing its \"name\"");
+        }
+        let quick = doc.get("quick").and_then(JsonValue::as_bool).unwrap_or(false);
+        let scale = doc.get("scale").and_then(JsonValue::as_f64).unwrap_or(0.0);
+        let threads = doc.get("threads").and_then(JsonValue::as_f64).unwrap_or(0.0) as usize;
+        let git = doc.get("git").and_then(JsonValue::as_str).unwrap_or("unknown").to_string();
+        let Some(raw_sections) = doc.get("sections").and_then(JsonValue::as_arr) else {
+            bail!("bench report {name:?} has no \"sections\" array");
+        };
+        if raw_sections.is_empty() {
+            bail!("bench report {name:?} has zero sections");
+        }
+        let mut seen = BTreeSet::new();
+        let mut sections = Vec::with_capacity(raw_sections.len());
+        for raw in raw_sections {
+            let sname = raw.get("name").and_then(JsonValue::as_str).unwrap_or("");
+            if sname.is_empty() {
+                bail!("bench report {name:?}: section without a name");
+            }
+            if !seen.insert(sname.to_string()) {
+                bail!("bench report {name:?}: duplicate section {sname:?}");
+            }
+            let best = stat(raw, "best_s", name, sname)?;
+            let mean = stat(raw, "mean_s", name, sname)?;
+            let stddev = stat(raw, "stddev_s", name, sname)?;
+            let iters = stat(raw, "iters", name, sname)? as usize;
+            if iters < 1 {
+                bail!("bench report {name:?}: section {sname:?} has iters < 1");
+            }
+            if best > mean {
+                bail!("bench report {name:?}: section {sname:?} has best_s > mean_s");
+            }
+            sections.push(Section {
+                name: sname.to_string(),
+                measurement: Measurement { best, mean, stddev, iters },
+                bit_exact: raw.get("bit_exact").and_then(JsonValue::as_bool),
+                peak_bytes: raw
+                    .get("peak_bytes")
+                    .and_then(JsonValue::as_f64)
+                    .map(|b| b as u64),
+                speedup: raw.get("speedup").and_then(JsonValue::as_f64),
+            });
+        }
+        Ok(BenchReport { name: name.to_string(), quick, scale, threads, git, sections })
+    }
+}
+
+/// Pull a mandatory finite non-negative numeric section field.
+fn stat(section: &JsonValue, key: &str, bench: &str, sname: &str) -> Result<f64> {
+    match section.get(key).and_then(JsonValue::as_f64) {
+        Some(v) if v.is_finite() && v >= 0.0 => Ok(v),
+        Some(v) => {
+            bail!("bench report {bench:?}: section {sname:?} field {key} = {v} is invalid")
+        }
+        None => bail!("bench report {bench:?}: section {sname:?} is missing {key}"),
+    }
+}
+
+/// `git describe --always --dirty`, or `"unknown"` outside a checkout.
+fn git_describe() -> String {
+    Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_statistics() {
+        let m = Measurement::from_samples(&[2.0, 4.0, 3.0]);
+        assert_eq!(m.best, 2.0);
+        assert_eq!(m.mean, 3.0);
+        assert!((m.stddev - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(m.iters, 3);
+        assert_eq!(Measurement::from_samples(&[]).iters, 0);
+        let one = Measurement::single(1.5);
+        assert_eq!((one.best, one.mean, one.stddev, one.iters), (1.5, 1.5, 0.0, 1));
+    }
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut calls = 0usize;
+        let m = measure(4, || calls += 1);
+        assert_eq!(calls, 4);
+        assert_eq!(m.iters, 4);
+        assert!(m.best <= m.mean);
+        assert!(m.best >= 0.0 && m.stddev >= 0.0);
+    }
+
+    fn sample_report() -> BenchReport {
+        let mut rep = BenchReport::new("bench_demo", true, 0.004, 8);
+        // 0.25/0.5 are exactly representable, so the serialized statistics
+        // are stable strings the broken-document tests below can target.
+        rep.section("glcm/single-pass/serial", Measurement::from_samples(&[0.25, 0.5]))
+            .bit_exact(true)
+            .speedup(1.75);
+        rep.section("pipeline/total", Measurement::single(2.5)).peak_bytes(1 << 20);
+        rep
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let rep = sample_report();
+        let text = rep.to_json().to_string();
+        let back = BenchReport::from_json_text(&text).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn emitted_document_carries_the_schema_tag() {
+        let text = sample_report().to_json().to_string();
+        assert!(text.contains("\"schema\":\"radpipe.bench/1\""), "{text}");
+        assert!(text.contains("\"bit_exact\":true"), "{text}");
+    }
+
+    #[test]
+    fn write_lands_at_bench_name_json() {
+        let dir = std::env::temp_dir().join(format!("radpipe-bench-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = sample_report().write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_bench_demo.json"), "{}", path.display());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = BenchReport::from_json_text(&text).unwrap();
+        assert_eq!(back.name, "bench_demo");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parser_rejects_broken_documents() {
+        let good = sample_report().to_json().to_string();
+        let wrong_schema = good.replace("radpipe.bench/1", "radpipe.bench/0");
+        let err = BenchReport::from_json_text(&wrong_schema).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+
+        let bad_iters = good.replace("\"iters\":2", "\"iters\":0");
+        let err = BenchReport::from_json_text(&bad_iters).unwrap_err().to_string();
+        assert!(err.contains("iters"), "{err}");
+
+        // section 1 statistics: best 0.25, mean 0.375, stddev 0.125
+        let missing_field = good.replace(",\"stddev_s\":0.125", "");
+        assert_ne!(missing_field, good, "replacement must hit");
+        let err = BenchReport::from_json_text(&missing_field).unwrap_err().to_string();
+        assert!(err.contains("stddev_s"), "{err}");
+
+        let inverted = good.replace("\"best_s\":0.25", "\"best_s\":0.5");
+        let err = BenchReport::from_json_text(&inverted).unwrap_err().to_string();
+        assert!(err.contains("best_s > mean_s"), "{err}");
+    }
+
+    #[test]
+    fn parser_rejects_empty_and_duplicate_sections() {
+        let mut rep = sample_report();
+        rep.section("pipeline/total", Measurement::single(1.0));
+        let text = rep.to_json().to_string();
+        let err = BenchReport::from_json_text(&text).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+
+        let mut empty = sample_report();
+        empty.sections.clear();
+        let text = empty.to_json().to_string();
+        let err = BenchReport::from_json_text(&text).unwrap_err().to_string();
+        assert!(err.contains("zero sections"), "{err}");
+    }
+}

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::args::Args;
+use crate::bench::{compare, load_dir, parse_tolerance, Tolerance};
 use crate::config::{Backend, PipelineConfig};
 use crate::dispatch::FeatureExtractor;
 use crate::experiments;
@@ -32,6 +33,10 @@ USAGE:
   radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
   radpipe fig1      --data DIR [--threads N]
   radpipe fig2      --data DIR
+  radpipe bench-check [--current DIR] [--baselines DIR] [--min-abs-ms F]
+                    [--tolerance generous|strict|FACTOR]
+                    [--bless] [--validate-only]
+                    (gate current BENCH_*.json against checked-in baselines)
   radpipe inspect   --mask FILE
   radpipe devices   (list Table 1 device profiles)
   radpipe version
@@ -49,6 +54,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         "table2" => table2(&args),
         "fig1" => fig1(&args),
         "fig2" => fig2(&args),
+        "bench-check" => bench_check(&args),
         "inspect" => inspect(&args),
         "devices" => devices(&args),
         "version" => {
@@ -314,6 +320,60 @@ fn fig2(args: &Args) -> Result<()> {
     let manifest = crate::io::scan_dataset(&data)?;
     let rows = experiments::run_fig2(&manifest)?;
     print!("{}", experiments::fig2::to_table(&rows).to_text());
+    Ok(())
+}
+
+/// The perf gate: validate the current `BENCH_*.json` reports and compare
+/// them section-by-section against the checked-in baselines. `--bless`
+/// copies the current reports over the baselines instead (the refresh
+/// flow); `--validate-only` stops after schema validation (CI uses it to
+/// reject malformed reports regardless of timings).
+fn bench_check(args: &Args) -> Result<()> {
+    let current_dir = PathBuf::from(args.opt("current").unwrap_or("target/bench-reports"));
+    let baseline_dir = PathBuf::from(args.opt("baselines").unwrap_or("bench/baselines"));
+    let rel = parse_tolerance(args.opt("tolerance").unwrap_or("generous"))?;
+    let min_abs_ms = args.opt_parse::<f64>("min-abs-ms")?.unwrap_or(5.0);
+    anyhow::ensure!(
+        min_abs_ms.is_finite() && min_abs_ms >= 0.0,
+        "--min-abs-ms must be a non-negative finite number"
+    );
+    let bless = args.flag("bless");
+    let validate_only = args.flag("validate-only");
+    args.finish()?;
+
+    let current = load_dir(&current_dir)?;
+    println!("validated {} report(s) under {}", current.len(), current_dir.display());
+    if validate_only {
+        return Ok(());
+    }
+    if bless {
+        std::fs::create_dir_all(&baseline_dir)
+            .with_context(|| format!("creating {}", baseline_dir.display()))?;
+        for (path, report) in &current {
+            let dest = baseline_dir.join(path.file_name().expect("BENCH file name"));
+            std::fs::copy(path, &dest).with_context(|| format!("bless {}", dest.display()))?;
+            println!("blessed {} -> {}", report.name, dest.display());
+        }
+        return Ok(());
+    }
+    let tol = Tolerance { rel, min_abs_s: min_abs_ms / 1e3 };
+    let baselines = load_dir(&baseline_dir)?;
+    let mut failures = 0usize;
+    for (_, base) in &baselines {
+        let Some((_, cur)) = current.iter().find(|(_, c)| c.name == base.name) else {
+            eprintln!("FAIL {}: current run produced no BENCH_{}.json", base.name, base.name);
+            failures += 1;
+            continue;
+        };
+        let result = compare(base, cur, tol);
+        println!("== {} ==", base.name);
+        print!("{}", result.table().to_text());
+        failures += result.failures();
+    }
+    if failures > 0 {
+        bail!("bench-check: {failures} regression(s) against {}", baseline_dir.display());
+    }
+    println!("bench-check: all baseline sections within {rel:.2}x");
     Ok(())
 }
 
@@ -611,6 +671,75 @@ mod tests {
             "extract", "--data", dir.to_str().unwrap(), "--backend", "cpu",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn bench_check_blesses_then_gates_an_injected_regression() {
+        use crate::bench::{BenchReport, Measurement};
+        let dir = std::env::temp_dir().join("radpipe_cli_benchcheck_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let current = dir.join("current");
+        let baselines = dir.join("baselines");
+        let c = current.to_str().unwrap();
+        let b = baselines.to_str().unwrap();
+
+        let mut rep = BenchReport::new("bench_demo", true, 0.004, 1);
+        rep.section("glcm/serial", Measurement::from_samples(&[0.25, 0.5])).bit_exact(true);
+        rep.write(&current).unwrap();
+
+        // no baselines yet: a plain check must fail, blessing must not
+        assert!(dispatch(argv(&["bench-check", "--current", c, "--baselines", b])).is_err());
+        dispatch(argv(&["bench-check", "--current", c, "--baselines", b, "--bless"])).unwrap();
+        assert!(baselines.join("BENCH_bench_demo.json").exists());
+
+        // the identical run passes even at the strict tolerance
+        dispatch(argv(&[
+            "bench-check", "--current", c, "--baselines", b, "--tolerance", "strict",
+            "--min-abs-ms", "1",
+        ]))
+        .unwrap();
+
+        // inject a regression (100x, far over the 50ms floor): gate trips
+        let mut slow = BenchReport::new("bench_demo", true, 0.004, 1);
+        slow.section("glcm/serial", Measurement::from_samples(&[25.0, 50.0])).bit_exact(true);
+        slow.write(&current).unwrap();
+        let err = dispatch(argv(&[
+            "bench-check", "--current", c, "--baselines", b, "--tolerance", "generous",
+            "--min-abs-ms", "50",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("regression"), "{err:#}");
+
+        // losing the bit_exact flag also trips the gate, even when fast
+        let mut flagless = BenchReport::new("bench_demo", true, 0.004, 1);
+        flagless.section("glcm/serial", Measurement::from_samples(&[0.25, 0.5]));
+        flagless.write(&current).unwrap();
+        assert!(dispatch(argv(&["bench-check", "--current", c, "--baselines", b])).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_check_validate_only_rejects_schema_drift() {
+        use crate::bench::{BenchReport, Measurement};
+        let dir = std::env::temp_dir().join("radpipe_cli_benchcheck_schema_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let current = dir.join("current");
+        let c = current.to_str().unwrap();
+
+        let mut rep = BenchReport::new("bench_ok", true, 0.004, 1);
+        rep.section("s", Measurement::single(0.01));
+        rep.write(&current).unwrap();
+        dispatch(argv(&["bench-check", "--current", c, "--validate-only"])).unwrap();
+
+        let drifted = rep.to_json().to_string().replace("radpipe.bench/1", "radpipe.bench/9");
+        std::fs::write(current.join("BENCH_bench_ok.json"), drifted).unwrap();
+        let e = dispatch(argv(&["bench-check", "--current", c, "--validate-only"])).unwrap_err();
+        assert!(format!("{e:#}").contains("schema"), "{e:#}");
+
+        // bad knobs are clear errors
+        assert!(dispatch(argv(&["bench-check", "--tolerance", "loose"])).is_err());
+        assert!(dispatch(argv(&["bench-check", "--min-abs-ms", "-3"])).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

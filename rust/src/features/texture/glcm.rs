@@ -80,14 +80,119 @@ impl GlcmFeatures {
     }
 }
 
+/// One precomputed `(distance, angle)` probe: the neighbour as a flat
+/// index offset, its per-axis step (used only for boundary voxels) and
+/// the base of the matrix block it feeds.
+struct Probe {
+    off: isize,
+    dx: isize,
+    dy: isize,
+    dz: isize,
+    base: usize,
+}
+
 /// Accumulate the symmetric GLCMs of `roi` for every `(distance, angle)`.
 ///
 /// Each ordered voxel pair `(v, v + d·angle)` with both endpoints inside
 /// the ROI increments `(level(v), level(v+δ))` **and** its transpose —
-/// the symmetric matrix, built in one forward pass. Work is decomposed
-/// over flat voxel indices by [`fold_chunks`]; counts are integers, so the
-/// result is bit-for-bit identical for every strategy / thread count.
+/// the symmetric matrix, built in one forward pass. All `13 × distances`
+/// probes are precomputed as flat-index offsets and resolved in a single
+/// walk over the volume; voxels at least the maximum distance away from
+/// every face take an interior fast path with no per-probe bounds checks.
+/// The increment set is identical to [`accumulate_glcm_reference`] and
+/// counts are integers, so the result is bit-for-bit identical to the
+/// reference for every strategy / thread count.
 pub fn accumulate_glcm(
+    roi: &DiscretizedRoi,
+    distances: &[usize],
+    strategy: Strategy,
+    threads: usize,
+) -> GlcmMatrices {
+    let ng = roi.ng;
+    let dims = roi.levels.dims;
+    let n_matrices = distances.len() * ANGLES_13.len();
+    let msize = ng * ng;
+    let data = roi.levels.data();
+    let (sx, sy, sz) = (dims.x as isize, dims.y as isize, dims.z as isize);
+
+    let mut probes = Vec::with_capacity(n_matrices);
+    let mut reach = 0isize;
+    for (di, &d) in distances.iter().enumerate() {
+        let d = d as isize;
+        reach = reach.max(d);
+        for (ai, &(ax, ay, az)) in ANGLES_13.iter().enumerate() {
+            probes.push(Probe {
+                off: ax * d + ay * d * sx + az * d * sx * sy,
+                dx: ax * d,
+                dy: ay * d,
+                dz: az * d,
+                base: (di * ANGLES_13.len() + ai) * msize,
+            });
+        }
+    }
+
+    let fold = |counts: &mut Vec<u64>, range: Range<usize>| {
+        for idx in range {
+            let li = data[idx] as usize;
+            if li == 0 {
+                continue;
+            }
+            let x = (idx % dims.x) as isize;
+            let y = ((idx / dims.x) % dims.y) as isize;
+            let z = (idx / (dims.x * dims.y)) as isize;
+            let row = (li - 1) * ng;
+            let interior = x >= reach
+                && x < sx - reach
+                && y >= reach
+                && y < sy - reach
+                && z >= reach
+                && z < sz - reach;
+            if interior {
+                for p in &probes {
+                    let lj = data[(idx as isize + p.off) as usize] as usize;
+                    if lj == 0 {
+                        continue;
+                    }
+                    counts[p.base + row + (lj - 1)] += 1;
+                    counts[p.base + (lj - 1) * ng + (li - 1)] += 1;
+                }
+            } else {
+                for p in &probes {
+                    let (qx, qy, qz) = (x + p.dx, y + p.dy, z + p.dz);
+                    if qx < 0 || qy < 0 || qz < 0 || qx >= sx || qy >= sy || qz >= sz {
+                        continue;
+                    }
+                    let lj = data[(idx as isize + p.off) as usize] as usize;
+                    if lj == 0 {
+                        continue;
+                    }
+                    counts[p.base + row + (lj - 1)] += 1;
+                    counts[p.base + (lj - 1) * ng + (li - 1)] += 1;
+                }
+            }
+        }
+    };
+
+    let counts = fold_chunks(
+        strategy,
+        dims.len(),
+        CHUNK,
+        threads,
+        || vec![0u64; n_matrices * msize],
+        fold,
+        |acc: &mut Vec<u64>, part| {
+            for (a, b) in acc.iter_mut().zip(part) {
+                *a += b;
+            }
+        },
+    );
+    GlcmMatrices { counts, ng, n_matrices }
+}
+
+/// The straightforward bounds-checked accumulation — kept as the
+/// conformance reference for [`accumulate_glcm`] and as the slow leg of
+/// the `bench_texture` speedup section.
+pub fn accumulate_glcm_reference(
     roi: &DiscretizedRoi,
     distances: &[usize],
     strategy: Strategy,
@@ -379,5 +484,41 @@ mod tests {
         assert_eq!(m0[2], 1); // (1,3)
         assert_eq!(m0[6], 1); // (3,1)
         assert_eq!(m0.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn single_pass_matches_the_reference_everywhere() {
+        // random holes over deliberately lopsided dims so boundary voxels
+        // dominate, plus a distance exceeding the shortest axis — every
+        // bounds-check edge the interior fast path must not change
+        let mut rng = crate::testkit::Pcg32::new(23);
+        for (nx, ny, nz) in [(1, 1, 1), (5, 3, 2), (9, 4, 7), (16, 16, 3)] {
+            let dims = Dims::new(nx, ny, nz);
+            let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+            let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+            for z in 0..nz {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        img.set(x, y, z, rng.below(5) as f32);
+                        if rng.below(5) > 0 {
+                            mask.set(x, y, z, 1);
+                        }
+                    }
+                }
+            }
+            let roi = match discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap() {
+                Some(roi) => roi,
+                None => continue,
+            };
+            for distances in [&[1usize][..], &[1, 2][..], &[3][..]] {
+                let want = accumulate_glcm_reference(&roi, distances, Strategy::EqualSplit, 1);
+                for strategy in Strategy::ALL {
+                    for threads in [1usize, 2, 4, 8] {
+                        let got = accumulate_glcm(&roi, distances, strategy, threads);
+                        assert_eq!(got, want, "{dims:?} {distances:?} {strategy:?} t={threads}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -3,13 +3,17 @@
 //! maximal 26-connected component of equal gray level inside the ROI;
 //! `P(i, s)` counts zones of level `i` and size `s` voxels.
 //!
-//! Zone labelling is a fixed-order flood fill, serial per ROI. The zone
-//! partition of a volume is a traversal-order-independent fact (connected
-//! components are unique), so the matrix — all integer counts — is
-//! trivially deterministic for every `parallel::Strategy` × thread count
-//! without any parallel merge step.
+//! Zone labelling is a flood fill. [`accumulate_glszm`] is the serial
+//! fixed-order reference; [`accumulate_glszm_indexed`] buckets seed
+//! indices per gray level in one scan and flood-fills whole levels on
+//! worker threads (zones of different levels never touch, so the split
+//! needs no cross-worker synchronisation). The zone partition of a
+//! volume is a traversal-order-independent fact (connected components
+//! are unique), so both produce the same matrix — all integer counts —
+//! bit-for-bit for every `parallel::Strategy` × thread count.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::discretize::DiscretizedRoi;
 
@@ -112,7 +116,9 @@ impl GlszmFeatures {
 /// The flood fill visits seed voxels in flat scan order and grows each
 /// zone with an explicit stack; since connected components are unique
 /// whatever the traversal, the result is deterministic (and independent
-/// of any strategy/thread configuration by construction).
+/// of any strategy/thread configuration by construction). Serial — kept
+/// as the conformance reference for [`accumulate_glszm_indexed`], which
+/// the extraction pipeline uses.
 pub fn accumulate_glszm(roi: &DiscretizedRoi) -> GlszmMatrix {
     let dims = roi.levels.dims;
     let data = roi.levels.data();
@@ -162,6 +168,146 @@ pub fn accumulate_glszm(roi: &DiscretizedRoi) -> GlszmMatrix {
         zones.into_iter().map(|((i, s), c)| (i, s, c)).collect();
     let n_zones = entries.iter().map(|&(_, _, c)| c).sum();
     GlszmMatrix { entries, ng: roi.ng, n_zones, n_voxels: roi.n_voxels, max_zone_size }
+}
+
+/// Per-worker scratch for the level-parallel labelling: a stamped
+/// visited map (reset in O(1) by switching stamp values between levels),
+/// the flood-fill stack and this worker's partial tallies.
+struct LevelScratch {
+    stamp: Vec<u32>,
+    stack: Vec<usize>,
+    zones: BTreeMap<(u32, u32), u64>,
+    max_zone_size: u32,
+}
+
+impl LevelScratch {
+    fn new(n: usize) -> LevelScratch {
+        LevelScratch {
+            stamp: vec![0; n],
+            stack: Vec::new(),
+            zones: BTreeMap::new(),
+            max_zone_size: 0,
+        }
+    }
+
+    /// Flood-fill every zone of one gray `level` from its seed list.
+    ///
+    /// The level value doubles as the visited stamp: a scratch never sees
+    /// the same level twice, so the previous level's marks become
+    /// invisible without clearing the map.
+    fn flood_level(&mut self, roi: &DiscretizedRoi, level: u32, seeds: &[usize]) {
+        let dims = roi.levels.dims;
+        let data = roi.levels.data();
+        let (nx, ny) = (dims.x, dims.y);
+        let plane = nx * ny;
+        for &seed in seeds {
+            if self.stamp[seed] == level {
+                continue;
+            }
+            self.stamp[seed] = level;
+            self.stack.push(seed);
+            let mut size = 0u32;
+            while let Some(idx) = self.stack.pop() {
+                size += 1;
+                let x = (idx % nx) as isize;
+                let y = ((idx / nx) % ny) as isize;
+                let z = (idx / plane) as isize;
+                for &(dx, dy, dz) in &NEIGHBOURS_26 {
+                    let (qx, qy, qz) = (x + dx, y + dy, z + dz);
+                    if qx < 0
+                        || qy < 0
+                        || qz < 0
+                        || qx as usize >= dims.x
+                        || qy as usize >= dims.y
+                        || qz as usize >= dims.z
+                    {
+                        continue;
+                    }
+                    let q = qz as usize * plane + qy as usize * nx + qx as usize;
+                    if self.stamp[q] != level && data[q] == level {
+                        self.stamp[q] = level;
+                        self.stack.push(q);
+                    }
+                }
+            }
+            self.max_zone_size = self.max_zone_size.max(size);
+            *self.zones.entry((level, size)).or_insert(0) += 1;
+        }
+    }
+}
+
+/// Label the same zones as [`accumulate_glszm`], parallelised across
+/// gray levels.
+///
+/// One serial O(N) scan buckets the flat index of every ROI voxel by its
+/// gray level, preserving scan order; worker threads then pull whole
+/// levels from an atomic queue and flood-fill them independently — zones
+/// of different levels never touch, so workers share nothing but the
+/// read-only volume. Per-worker tallies merge by key-sum into the same
+/// sorted entries the serial fill emits; connected components are
+/// unique, so the result is bit-for-bit identical to the reference for
+/// every thread count (`0` = all cores) — locked by the conformance
+/// suite.
+pub fn accumulate_glszm_indexed(roi: &DiscretizedRoi, threads: usize) -> GlszmMatrix {
+    let data = roi.levels.data();
+    let ng = roi.ng;
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); ng];
+    for (idx, &level) in data.iter().enumerate() {
+        if level > 0 {
+            buckets[level as usize - 1].push(idx);
+        }
+    }
+
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let workers = threads.min(ng.max(1));
+    let (zones, max_zone_size) = if workers <= 1 {
+        let mut scratch = LevelScratch::new(data.len());
+        for (li, seeds) in buckets.iter().enumerate() {
+            scratch.flood_level(roi, li as u32 + 1, seeds);
+        }
+        (scratch.zones, scratch.max_zone_size)
+    } else {
+        let next = AtomicUsize::new(0);
+        let parts = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                handles.push(scope.spawn(|| {
+                    let mut scratch = LevelScratch::new(data.len());
+                    loop {
+                        let li = next.fetch_add(1, Ordering::Relaxed);
+                        if li >= ng {
+                            break;
+                        }
+                        scratch.flood_level(roi, li as u32 + 1, &buckets[li]);
+                    }
+                    scratch
+                }));
+            }
+            let mut parts = Vec::with_capacity(workers);
+            for h in handles {
+                parts.push(h.join().expect("glszm level worker"));
+            }
+            parts
+        });
+        let mut zones: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+        let mut max_zone_size = 0u32;
+        for part in parts {
+            max_zone_size = max_zone_size.max(part.max_zone_size);
+            for (key, count) in part.zones {
+                *zones.entry(key).or_insert(0) += count;
+            }
+        }
+        (zones, max_zone_size)
+    };
+
+    let entries: Vec<(u32, u32, u64)> =
+        zones.into_iter().map(|((i, s), c)| (i, s, c)).collect();
+    let n_zones = entries.iter().map(|&(_, _, c)| c).sum();
+    GlszmMatrix { entries, ng, n_zones, n_voxels: roi.n_voxels, max_zone_size }
 }
 
 /// The 12 derived GLSZM features, or `None` for an empty matrix (no ROI).
@@ -341,5 +487,45 @@ mod tests {
         for _ in 0..3 {
             assert_eq!(accumulate_glszm(&roi), a);
         }
+    }
+
+    #[test]
+    fn indexed_labelling_matches_the_serial_reference() {
+        // random levels and holes across shapes with singleton, spanning
+        // and boundary-hugging zones; every thread count must reproduce
+        // the serial matrix bit-for-bit
+        let mut rng = crate::testkit::Pcg32::new(29);
+        for (nx, ny, nz) in [(1, 1, 1), (4, 1, 1), (7, 6, 5), (12, 10, 3)] {
+            let dims = Dims::new(nx, ny, nz);
+            let mut img = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+            let mut mask = VoxelGrid::zeros(dims, Vec3::splat(1.0));
+            for z in 0..nz {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        img.set(x, y, z, rng.below(4) as f32);
+                        if rng.below(5) > 0 {
+                            mask.set(x, y, z, 1);
+                        }
+                    }
+                }
+            }
+            let roi = match discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap() {
+                Some(roi) => roi,
+                None => continue,
+            };
+            let want = accumulate_glszm(&roi);
+            for threads in [0usize, 1, 2, 4, 8] {
+                let got = accumulate_glszm_indexed(&roi, threads);
+                assert_eq!(got, want, "{dims:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_labelling_clamps_workers_to_the_level_count() {
+        // checkerboard has 2 levels: 8 requested threads spawn only 2
+        // workers, and the merge still reproduces the serial matrix
+        let roi = checkerboard();
+        assert_eq!(accumulate_glszm_indexed(&roi, 8), accumulate_glszm(&roi));
     }
 }

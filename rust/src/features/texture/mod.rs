@@ -9,9 +9,11 @@
 //! over voxel/line chunks via [`crate::parallel::fold_chunks`], merged at
 //! the end. Counts (and the NGTDM's rational numerators) are integers, so
 //! results are bit-for-bit deterministic regardless of strategy or thread
-//! count (tested). GLSZM zone labelling is a serial fixed-order flood fill
-//! per ROI — connected components are traversal-independent, so it honours
-//! the same determinism contract without a parallel merge.
+//! count (tested). GLSZM zone labelling buckets seed voxels per gray
+//! level and flood-fills whole levels on worker threads — connected
+//! components are traversal-independent, so it honours the same
+//! determinism contract with only a key-sum merge (the serial fixed-order
+//! fill stays on as the conformance reference).
 
 mod discretize;
 mod glcm;
@@ -21,10 +23,16 @@ mod glszm;
 mod ngtdm;
 
 pub use discretize::{discretize, DiscretizedRoi, Discretization, MAX_GRAY_LEVELS};
-pub use glcm::{accumulate_glcm, glcm_features, GlcmFeatures, GlcmMatrices, ANGLES_13};
+pub use glcm::{
+    accumulate_glcm, accumulate_glcm_reference, glcm_features, GlcmFeatures, GlcmMatrices,
+    ANGLES_13,
+};
 pub use gldm::{accumulate_gldm, gldm_features, GldmFeatures, GldmMatrix, MAX_DEPENDENCE};
 pub use glrlm::{accumulate_glrlm, glrlm_features, GlrlmFeatures, GlrlmMatrices};
-pub use glszm::{accumulate_glszm, glszm_features, GlszmFeatures, GlszmMatrix, NEIGHBOURS_26};
+pub use glszm::{
+    accumulate_glszm, accumulate_glszm_indexed, glszm_features, GlszmFeatures, GlszmMatrix,
+    NEIGHBOURS_26,
+};
 pub use ngtdm::{accumulate_ngtdm, ngtdm_features, NgtdmFeatures, NgtdmMatrix};
 
 use anyhow::Result;
@@ -141,7 +149,11 @@ pub fn compute_texture(
     } else {
         None
     };
-    let glszm = if opts.glszm { glszm_features(&accumulate_glszm(&roi)) } else { None };
+    let glszm = if opts.glszm {
+        glszm_features(&accumulate_glszm_indexed(&roi, opts.threads))
+    } else {
+        None
+    };
     let gldm = if opts.gldm {
         gldm_features(&accumulate_gldm(&roi, opts.gldm_alpha, opts.strategy, opts.threads))
     } else {

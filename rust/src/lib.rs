@@ -17,6 +17,7 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod dispatch;

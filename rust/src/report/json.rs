@@ -1,9 +1,13 @@
-//! Minimal JSON document builder (output only; the pipeline never parses
-//! JSON). Handles escaping, NaN→null (JSON has no NaN) and stable key
-//! order for diffable outputs.
+//! Minimal JSON document builder and parser. The pipeline only *writes*
+//! JSON reports, but the bench trajectory gate ([`crate::bench`]) reads
+//! `BENCH_*.json` baselines back, so [`JsonValue::parse`] implements the
+//! inverse. Writing handles escaping, NaN→null (JSON has no NaN) and
+//! stable key order for diffable outputs.
 
 use std::collections::BTreeMap;
 use std::fmt::Write;
+
+use anyhow::{bail, Result};
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -92,6 +96,264 @@ impl JsonValue {
         self.write(&mut s);
         s
     }
+
+    /// Parse a JSON document. Strict enough for round-tripping our own
+    /// reports: one top-level value, no trailing garbage, located errors.
+    pub fn parse(text: &str) -> Result<JsonValue> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {} of JSON document", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` on non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Recursive-descent parser over the document bytes.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+/// Nesting bound: a hostile/corrupt document must not overflow the stack.
+const MAX_DEPTH: usize = 128;
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {} of JSON document", b as char, self.pos);
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue> {
+        let end = self.pos + word.len();
+        if self.bytes.get(self.pos..end) == Some(word.as_bytes()) {
+            self.pos = end;
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {} of JSON document", self.pos);
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nesting exceeds {MAX_DEPTH} levels");
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            _ => bail!("unexpected input at byte {} of JSON document", self.pos),
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value(depth + 1)?;
+            map.insert(key, v);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(map));
+                }
+                _ => bail!("expected ',' or '}}' at byte {} of JSON document", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {} of JSON document", self.pos),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.pos + 4;
+        let Some(chunk) = self.bytes.get(self.pos..end) else {
+            bail!("truncated \\u escape at byte {} of JSON document", self.pos);
+        };
+        let s = std::str::from_utf8(chunk)
+            .ok()
+            .and_then(|s| u32::from_str_radix(s, 16).ok());
+        match s {
+            Some(v) => {
+                self.pos = end;
+                Ok(v)
+            }
+            None => bail!("invalid \\u escape at byte {} of JSON document", self.pos),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string in JSON document"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: a \uDC00..DFFF must follow
+                                if self.bytes.get(self.pos..self.pos + 2) != Some(&b"\\u"[..]) {
+                                    bail!("lone surrogate in JSON string");
+                                }
+                                self.pos += 2;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid surrogate pair in JSON string");
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                bail!("lone surrogate in JSON string");
+                            } else {
+                                hi
+                            };
+                            match char::from_u32(cp) {
+                                Some(c) => out.push(c),
+                                None => bail!("invalid code point in JSON string"),
+                            }
+                            continue; // pos already past the escape
+                        }
+                        _ => bail!("invalid escape at byte {} of JSON document", self.pos),
+                    }
+                    self.pos += 1;
+                }
+                Some(b) if b < 0x20 => {
+                    bail!("unescaped control byte in JSON string");
+                }
+                Some(_) => {
+                    // consume one UTF-8 code point (input is &str, so the
+                    // boundaries are valid by construction)
+                    let rest = &self.bytes[self.pos..];
+                    let s = std::str::from_utf8(rest).expect("input was a &str");
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii");
+        match text.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(JsonValue::Num(n)),
+            _ => bail!("invalid number '{text}' at byte {start} of JSON document"),
+        }
+    }
 }
 
 impl From<f64> for JsonValue {
@@ -161,5 +423,74 @@ mod tests {
         let mut a = JsonValue::obj();
         a.set("z", 1.0).set("a", 2.0);
         assert_eq!(a.to_string(), r#"{"a":2,"z":1}"#);
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let mut doc = JsonValue::obj();
+        doc.set("name", "bench_texture").set("scale", 0.004).set("ok", true);
+        doc.set("tags", vec!["a\"b".to_string(), "c\\d".to_string()]);
+        let mut inner = JsonValue::obj();
+        inner.set("iters", 3usize).set("none", JsonValue::Null);
+        doc.set("meta", inner);
+        let text = doc.to_string();
+        let parsed = JsonValue::parse(&text).unwrap();
+        assert_eq!(parsed, doc);
+        // and the re-serialization is byte-identical (stable key order)
+        assert_eq!(parsed.to_string(), text);
+    }
+
+    #[test]
+    fn parse_handles_whitespace_escapes_and_numbers() {
+        let text = " { \"a\" : [ 1.5e2 , -0.25 , \"x\\u0041\\n\" , null , false ] } ";
+        let v = JsonValue::parse(text).unwrap();
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(150.0));
+        assert_eq!(arr[1].as_f64(), Some(-0.25));
+        assert_eq!(arr[2].as_str(), Some("xA\n"));
+        assert_eq!(arr[3], JsonValue::Null);
+        assert_eq!(arr[4].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn parse_surrogate_pairs() {
+        let v = JsonValue::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        assert!(JsonValue::parse("\"\\ud83d\"").is_err(), "lone surrogate");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "{\"a\":1} extra",
+            "{'a':1}",
+            "\"unterminated",
+            "01a",
+            "1e+",
+            "nul",
+            "{\"a\" 1}",
+        ] {
+            assert!(JsonValue::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn parse_depth_is_bounded() {
+        let deep = "[".repeat(500) + &"]".repeat(500);
+        let err = JsonValue::parse(&deep).unwrap_err();
+        assert!(err.to_string().contains("nesting"), "{err}");
+    }
+
+    #[test]
+    fn accessors_return_none_on_type_mismatch() {
+        let v = JsonValue::parse("{\"n\":1}").unwrap();
+        assert!(v.as_f64().is_none() && v.as_str().is_none());
+        assert!(v.get("n").unwrap().as_f64() == Some(1.0));
+        assert!(v.get("missing").is_none());
+        assert!(JsonValue::Num(1.0).get("x").is_none());
     }
 }

@@ -375,7 +375,10 @@ fn texture_conformance_oracle_lock() {
     // 4³ pattern `level = ((x + 2y + 3z) mod 5) + 1` (image values 0..4,
     // bin width 1 → levels are the values + 1); goldens from
     // `ref.py::glcm_features_ref` / `glrlm_features_ref`.
-    use radpipe::features::texture::{compute_texture, Discretization, TextureOptions};
+    use radpipe::features::texture::{
+        accumulate_glcm, accumulate_glcm_reference, compute_texture, discretize, Discretization,
+        TextureOptions,
+    };
     use radpipe::parallel::Strategy;
 
     let dims = Dims::new(4, 4, 4);
@@ -463,6 +466,28 @@ fn texture_conformance_oracle_lock() {
     for strategy in Strategy::ALL {
         for threads in [2usize, 4, 8] {
             assert_eq!(compute_big(threads, strategy), want, "{strategy:?} x{threads}");
+        }
+    }
+
+    // the single-pass GLCM keeps the exact increment set of the
+    // bounds-checked reference: lock the raw count matrices on both
+    // fixtures for every strategy × thread count
+    let roi = discretize(&img, &mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+    let big = discretize(&big_img, &big_mask, Discretization::BinWidth(1.0)).unwrap().unwrap();
+    let want_small = accumulate_glcm_reference(&roi, &[1], Strategy::EqualSplit, 1);
+    let want_big = accumulate_glcm_reference(&big, &[1, 2], Strategy::EqualSplit, 1);
+    for strategy in Strategy::ALL {
+        for threads in [1usize, 2, 4, 8] {
+            assert_eq!(
+                accumulate_glcm(&roi, &[1], strategy, threads),
+                want_small,
+                "glcm single-pass {strategy:?} x{threads}"
+            );
+            assert_eq!(
+                accumulate_glcm(&big, &[1, 2], strategy, threads),
+                want_big,
+                "glcm single-pass big {strategy:?} x{threads}"
+            );
         }
     }
 }
@@ -588,8 +613,8 @@ fn region_texture_conformance_oracle_lock() {
     // 1e-9 against `ref.py::glszm_features_ref` / `gldm_features_ref` /
     // `ngtdm_features_ref` on the identical integer volume.
     use radpipe::features::texture::{
-        accumulate_gldm, accumulate_glszm, accumulate_ngtdm, discretize, gldm_features,
-        glszm_features, ngtdm_features, Discretization,
+        accumulate_gldm, accumulate_glszm, accumulate_glszm_indexed, accumulate_ngtdm, discretize,
+        gldm_features, glszm_features, ngtdm_features, Discretization,
     };
     use radpipe::parallel::Strategy;
 
@@ -701,6 +726,7 @@ fn region_texture_conformance_oracle_lock() {
     for strategy in Strategy::ALL {
         for threads in [1usize, 2, 4, 8] {
             assert_eq!(accumulate_glszm(&roi), m, "glszm {strategy:?} x{threads}");
+            assert_eq!(accumulate_glszm_indexed(&roi, threads), m, "glszm-indexed x{threads}");
             assert_eq!(
                 accumulate_gldm(&roi, 1.0, strategy, threads),
                 m1,
