@@ -24,9 +24,13 @@ fn main() -> anyhow::Result<()> {
         cpu_only: artifact_dir.is_none(),
     };
     let t0 = std::time::Instant::now();
-    let rows = run_table2(&manifest, &opts)?;
+    let out = run_table2(&manifest, &opts)?;
+    let rows = &out.rows;
     report.section("table2/total", common::Measurement::single(t0.elapsed().as_secs_f64()));
-    print!("{}", table2::to_table(&rows).to_text());
+    print!("{}", table2::to_table(rows).to_text());
+    for (stage, total) in table2::stage_totals(&out.metrics) {
+        println!("  {stage}: {:.1} ms total", total.as_secs_f64() * 1e3);
+    }
 
     // headline claims
     let share_min = rows.iter().map(|r| r.diam_share).fold(f64::INFINITY, f64::min);
@@ -44,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     let mut t = radpipe::report::Table::new(vec![
         "case", "paper Diam[ms]", "proj 4070[ms]", "note",
     ]);
-    for r in &rows {
+    for r in rows {
         if let Some(p) = paper.iter().find(|p| p.case_id == r.case_id) {
             // projections are at the *scaled* vertex count; paper column is
             // full scale — note the expected ~scale² factor.

@@ -30,6 +30,11 @@ USAGE:
                     [--resampled-spacing MM] [--wavelet-levels N]
                     [--synthetic-image]  (stand-in intensities for cases
                                           without an image= manifest entry)
+                    [--trace-out FILE]   (Chrome Trace Event JSON of the run)
+                    [--metrics-out FILE] (radpipe.metrics/1 snapshot)
+  radpipe obs-check [--trace FILE] [--metrics FILE]
+                    [--require-stages read,preprocess,mesh,diameters]
+                    (validate observability outputs of an extract run)
   radpipe table2    --data DIR [--artifacts DIR] [--cpu-only]
   radpipe fig1      --data DIR [--threads N]
   radpipe fig2      --data DIR
@@ -51,6 +56,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
     match cmd {
         "gen-data" => gen_data(&args),
         "extract" => extract(&args),
+        "obs-check" => obs_check(&args),
         "table2" => table2(&args),
         "fig1" => fig1(&args),
         "fig2" => fig2(&args),
@@ -158,6 +164,12 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if args.flag("synthetic-image") {
         cfg.synthetic_image = true;
     }
+    if let Some(p) = args.opt("trace-out") {
+        cfg.trace_out = Some(PathBuf::from(p));
+    }
+    if let Some(p) = args.opt("metrics-out") {
+        cfg.metrics_out = Some(PathBuf::from(p));
+    }
     Ok(cfg)
 }
 
@@ -181,9 +193,24 @@ fn extract(args: &Args) -> Result<()> {
     let csv_out = args.opt("csv").map(PathBuf::from);
     args.finish()?;
 
+    // tracing on request only: install the session before the pipeline so
+    // every worker/engine span lands in this run's sink (sessions are
+    // serialized process-wide; with no --trace-out the tracer stays off)
+    let trace_sink = cfg.trace_out.as_ref().map(|_| crate::trace::TraceSink::new());
+    let session = trace_sink.clone().map(crate::trace::install);
+
     let manifest = crate::io::scan_dataset(&data)?;
     let extractor = FeatureExtractor::new(&cfg)?;
     let report = run_pipeline(&manifest, &cfg, &extractor)?;
+    drop(session);
+    if let (Some(path), Some(sink)) = (cfg.trace_out.as_ref(), trace_sink.as_ref()) {
+        sink.write(path)?;
+        eprintln!("wrote {}", path.display());
+    }
+    if let Some(path) = cfg.metrics_out.as_ref() {
+        report.metrics.write(path)?;
+        eprintln!("wrote {}", path.display());
+    }
 
     let texture_on = cfg.feature_classes.texture();
     let mut headers = vec![
@@ -240,6 +267,7 @@ fn extract(args: &Args) -> Result<()> {
         }
         doc.set("cases", JsonValue::Arr(cases));
         doc.set("failures", report.failures.len());
+        doc.set("metrics", report.metrics.to_json());
         std::fs::write(&path, doc.to_string())
             .with_context(|| format!("write {}", path.display()))?;
         eprintln!("wrote {}", path.display());
@@ -280,6 +308,73 @@ fn extract(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The observability gate: validate a run's trace and/or metrics outputs
+/// with the same parsers library consumers use, and require that the
+/// named pipeline stages actually show up in both. CI runs this against
+/// a fresh `extract --trace-out --metrics-out` so a refactor that stops
+/// emitting spans (or drifts the schema) fails the build, not a later
+/// debugging session.
+fn obs_check(args: &Args) -> Result<()> {
+    let trace_path = args.opt("trace").map(PathBuf::from);
+    let metrics_path = args.opt("metrics").map(PathBuf::from);
+    let stages: Vec<String> = args
+        .opt("require-stages")
+        .unwrap_or("read,preprocess,mesh,diameters")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    args.finish()?;
+    anyhow::ensure!(
+        trace_path.is_some() || metrics_path.is_some(),
+        "obs-check needs --trace FILE and/or --metrics FILE"
+    );
+
+    if let Some(path) = &trace_path {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let trace = crate::trace::chrome::parse(&text)
+            .with_context(|| format!("validating trace {}", path.display()))?;
+        let names = trace.span_names();
+        anyhow::ensure!(!names.is_empty(), "trace {} contains no spans", path.display());
+        for s in &stages {
+            let want = format!("stage.{s}");
+            anyhow::ensure!(
+                names.contains(want.as_str()),
+                "trace {} has no '{want}' span (have: {names:?})",
+                path.display()
+            );
+        }
+        println!(
+            "trace OK: {} spans, {} counter samples, {} named threads, {} cases",
+            trace.spans().count(),
+            trace.counters().count(),
+            trace.thread_names().len(),
+            trace.span_cases().len(),
+        );
+    }
+
+    if let Some(path) = &metrics_path {
+        let snap = crate::metrics::snapshot::MetricsSnapshot::read(path)?;
+        for s in &stages {
+            let want = format!("stage.{s}");
+            let recorded = snap.timer(&want).map(|t| t.count).unwrap_or(0);
+            anyhow::ensure!(
+                recorded > 0,
+                "metrics {} recorded no '{want}' samples",
+                path.display()
+            );
+        }
+        println!(
+            "metrics OK: {} timers, {} counters ({})",
+            snap.timers.len(),
+            snap.counters.len(),
+            crate::metrics::snapshot::SCHEMA,
+        );
+    }
+    Ok(())
+}
+
 fn table2(args: &Args) -> Result<()> {
     let data = PathBuf::from(args.req("data")?);
     let opts = experiments::table2::Table2Options {
@@ -288,10 +383,15 @@ fn table2(args: &Args) -> Result<()> {
     };
     args.finish()?;
     let manifest = crate::io::scan_dataset(&data)?;
-    let rows = experiments::run_table2(&manifest, &opts)?;
-    print!("{}", experiments::table2::to_table(&rows).to_text());
-    let share_min = rows.iter().map(|r| r.diam_share).fold(f64::INFINITY, f64::min);
-    let share_max = rows.iter().map(|r| r.diam_share).fold(0.0, f64::max);
+    let out = experiments::run_table2(&manifest, &opts)?;
+    print!("{}", experiments::table2::to_table(&out.rows).to_text());
+    // aggregate stage view straight from the metrics snapshot
+    println!("stage totals across {} cases:", out.rows.len());
+    for (stage, total) in experiments::table2::stage_totals(&out.metrics) {
+        println!("  {stage}: {:.1} ms", total.as_secs_f64() * 1e3);
+    }
+    let share_min = out.rows.iter().map(|r| r.diam_share).fold(f64::INFINITY, f64::min);
+    let share_max = out.rows.iter().map(|r| r.diam_share).fold(0.0, f64::max);
     println!(
         "diameter share of post-read CPU time: {:.1}%..{:.1}% (paper: 95.7%..99.9%)",
         share_min * 100.0,
@@ -740,6 +840,72 @@ mod tests {
         assert!(dispatch(argv(&["bench-check", "--tolerance", "loose"])).is_err());
         assert!(dispatch(argv(&["bench-check", "--min-abs-ms", "-3"])).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn extract_writes_trace_and_metrics_and_obs_check_validates_them() {
+        let dir = std::env::temp_dir().join("radpipe_cli_obs_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        let trace = dir.join("trace.json");
+        let metrics = dir.join("metrics.json");
+        let json = dir.join("out.json");
+        dispatch(argv(&[
+            "extract",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "cpu",
+            "--trace-out",
+            trace.to_str().unwrap(),
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+            "--json",
+            json.to_str().unwrap(),
+        ]))
+        .unwrap();
+        // the gate accepts both outputs of a healthy run
+        dispatch(argv(&[
+            "obs-check",
+            "--trace",
+            trace.to_str().unwrap(),
+            "--metrics",
+            metrics.to_str().unwrap(),
+        ]))
+        .unwrap();
+        // the trace names every pipeline stage (superset-tolerant: sibling
+        // tests in this process may run pipelines while our session holds
+        // the global tracer, adding their spans to the same sink)
+        let parsed =
+            crate::trace::chrome::parse(&std::fs::read_to_string(&trace).unwrap()).unwrap();
+        let names = parsed.span_names();
+        for want in ["stage.read", "stage.preprocess", "stage.mesh", "stage.diameters", "case"] {
+            assert!(names.contains(want), "{want} missing from {names:?}");
+        }
+        // the JSON report embeds the schema-versioned snapshot
+        let json_text = std::fs::read_to_string(&json).unwrap();
+        assert!(json_text.contains("\"schema\":\"radpipe.metrics/1\""), "snapshot in report");
+        // a required stage that never ran trips the gate
+        let err = dispatch(argv(&[
+            "obs-check",
+            "--metrics",
+            metrics.to_str().unwrap(),
+            "--require-stages",
+            "read,texture",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("stage.texture"), "{err:#}");
+        // so does a corrupt document
+        std::fs::write(&metrics, "{}").unwrap();
+        assert!(dispatch(argv(&[
+            "obs-check", "--metrics", metrics.to_str().unwrap(),
+        ]))
+        .is_err());
+        // with nothing to validate the gate refuses to vacuously pass
+        assert!(dispatch(argv(&["obs-check"])).is_err());
     }
 
     #[test]

@@ -241,6 +241,11 @@ pub struct PipelineConfig {
     /// default — such cases fail with an error naming the remedies instead
     /// of silently computing features from fabricated intensities.
     pub synthetic_image: bool,
+    /// Write a Chrome Trace Event JSON of the run to this path (enables
+    /// the in-process tracer; `None` keeps tracing fully off).
+    pub trace_out: Option<PathBuf>,
+    /// Write the `radpipe.metrics/1` snapshot of the run to this path.
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -267,6 +272,8 @@ impl Default for PipelineConfig {
             resampled_spacing: 0.0,
             wavelet_levels: 1,
             synthetic_image: false,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -345,6 +352,8 @@ impl PipelineConfig {
                     }
                 }
                 "synthetic_image" => cfg.synthetic_image = value.as_bool()?,
+                "trace_out" => cfg.trace_out = Some(PathBuf::from(value.as_str()?)),
+                "metrics_out" => cfg.metrics_out = Some(PathBuf::from(value.as_str()?)),
                 other => bail!("unknown [pipeline] key '{other}'"),
             }
         }
@@ -505,6 +514,22 @@ gldm_alpha = 1.5
         assert!(!c.synthetic_image);
         // non-boolean values are a clear error
         assert!(PipelineConfig::from_toml("[pipeline]\nsynthetic_image = 1\n").is_err());
+    }
+
+    #[test]
+    fn observability_outputs_are_off_by_default_and_parse_from_toml() {
+        let c = PipelineConfig::default();
+        assert!(c.trace_out.is_none() && c.metrics_out.is_none());
+        let text = r#"
+[pipeline]
+trace_out = "run-trace.json"
+metrics_out = "run-metrics.json"
+"#;
+        let c = PipelineConfig::from_toml(text).unwrap();
+        assert_eq!(c.trace_out, Some(PathBuf::from("run-trace.json")));
+        assert_eq!(c.metrics_out, Some(PathBuf::from("run-metrics.json")));
+        // non-string values are a clear error
+        assert!(PipelineConfig::from_toml("[pipeline]\ntrace_out = 1\n").is_err());
     }
 
     #[test]

@@ -374,22 +374,37 @@ impl FeatureExtractor {
         let mut timing = CaseTiming::default();
 
         let t = Instant::now();
+        let sp = crate::trace::span("stage.preprocess");
         let (mask_c, image_c) = self.prepare_grids(mask, image)?;
         let mask: &VoxelGrid<u8> = &mask_c;
         let (cropped, offset) = crop_to_roi(mask);
         let mask_stats = MaskStats::compute(&cropped);
+        drop(sp);
         timing.preprocess = t.elapsed();
 
         let t = Instant::now();
+        let sp = crate::trace::span("stage.mesh");
         let mesh = mesh_roi(&cropped);
+        drop(sp);
         timing.marching = t.elapsed();
 
         let vertex_count = mesh.vertices.len();
+        let sp = crate::trace::span_args(
+            "stage.diameters",
+            &[("verts", crate::trace::ArgV::Int(vertex_count as u64))],
+        );
+        let t_diam = Instant::now();
         let (diam, path) = if let Some(batcher) = &self.batcher {
             match self.accelerated_diameters(batcher, &mesh) {
                 Ok((d, exec)) => {
                     timing.transfer = exec.transfer;
                     timing.diameters = exec.execute;
+                    if exec.transfer > Duration::ZERO {
+                        // engine-side upload time, surfaced on this case's
+                        // timeline (the precise engine-thread placement is
+                        // the engine.transfer span)
+                        crate::trace::complete_span("stage.transfer", t_diam, exec.transfer, &[]);
+                    }
                     (d, PathTaken::Accelerated)
                 }
                 Err(err) if self.backend == Backend::Auto => {
@@ -407,6 +422,7 @@ impl FeatureExtractor {
             timing.diameters = t.elapsed();
             (d, PathTaken::CpuFallback)
         };
+        drop(sp);
 
         let t = Instant::now();
         let features =
@@ -422,6 +438,7 @@ impl FeatureExtractor {
             // callbacks) is preprocessing; the callbacks themselves are
             // the texture phase.
             let t = Instant::now();
+            let _sp = crate::trace::span("stage.derived");
             let cropped_image = match &image_c {
                 Some(img) => crop_box(&**img, offset, cropped.dims),
                 None if self.synthetic_image => {
@@ -442,6 +459,10 @@ impl FeatureExtractor {
             let mut feature_time = Duration::ZERO;
             for_each_derived_image(&cropped_image, &opts, |d| {
                 let ft = Instant::now();
+                let _sp = crate::trace::span_args(
+                    "stage.texture",
+                    &[("image", crate::trace::ArgV::Str(&d.name))],
+                );
                 let first_order = if self.classes.first_order {
                     compute_first_order_with(d.image, &cropped, self.discretization())
                 } else {

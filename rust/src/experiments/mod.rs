@@ -8,4 +8,4 @@ pub mod table2;
 
 pub use fig1::{run_fig1, Fig1Row};
 pub use fig2::{run_fig2, Fig2Row};
-pub use table2::{run_table2, Table2Options, Table2Row};
+pub use table2::{run_table2, Table2Options, Table2Output, Table2Row};

@@ -56,9 +56,31 @@ pub struct Table2Row {
     pub diam_share: f64,
 }
 
+/// The harness result: per-case rows plus the run's stage timings as a
+/// machine-readable `radpipe.metrics/1` snapshot. Downstream consumers
+/// (the CLI summary, benches) read the snapshot — never the formatted
+/// table text.
+#[derive(Debug, Clone)]
+pub struct Table2Output {
+    pub rows: Vec<Table2Row>,
+    pub metrics: crate::metrics::snapshot::MetricsSnapshot,
+}
+
+/// Total duration per `stage.*` timer in a snapshot, in name order — the
+/// cross-case aggregate the Table 2 summary prints.
+pub fn stage_totals(
+    snap: &crate::metrics::snapshot::MetricsSnapshot,
+) -> Vec<(String, std::time::Duration)> {
+    snap.timers
+        .iter()
+        .filter(|(name, _)| name.starts_with("stage."))
+        .map(|(name, t)| (name.clone(), t.total()))
+        .collect()
+}
+
 /// Run the harness over a dataset. Each case is measured once per path
 /// (the workloads are O(m²); single-shot timing is what the paper reports).
-pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Vec<Table2Row>> {
+pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Table2Output> {
     let cpu_cfg = PipelineConfig {
         backend: Backend::Cpu,
         cpu_threads: 1, // faithful single-thread PyRadiomics baseline
@@ -78,6 +100,9 @@ pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Ve
     };
 
     let gpus = gpu_profiles();
+    // baseline stage timings accumulate into a local registry, snapshotted
+    // at the end — Table 2's aggregate view travels as data, not text
+    let metrics = crate::metrics::Metrics::new();
     let mut rows = Vec::new();
     for entry in &manifest.cases {
         let path = manifest.mask_path(entry);
@@ -85,10 +110,15 @@ pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Ve
         // ---- read (charged once; same file both paths)
         let t0 = Instant::now();
         let mask: crate::volume::VoxelGrid<u8> = crate::io::read_rvol(&path)?;
-        let read_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let read_d = t0.elapsed();
+        let read_ms = read_d.as_secs_f64() * 1e3;
+        metrics.timer("stage.read").record(read_d);
 
         // ---- CPU baseline path
         let b = cpu.execute_mask(&mask)?;
+        metrics.timer("stage.preprocess").record(b.timing.preprocess);
+        metrics.timer("stage.mesh").record(b.timing.marching);
+        metrics.timer("stage.diameters").record(b.timing.diameters);
         let mc_cpu_ms = (b.timing.preprocess + b.timing.marching).as_secs_f64() * 1e3;
         let diam_cpu_ms = b.timing.diameters.as_secs_f64() * 1e3;
 
@@ -96,6 +126,7 @@ pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Ve
         let (tran_ms, mc_accel_ms, diam_accel_ms) = match &accel {
             Some(ex) => {
                 let a = ex.execute_mask(&mask)?;
+                metrics.timer("stage.transfer").record(a.timing.transfer);
                 // numerics must agree between paths (§4 "identical quality")
                 let dv = (a.features.maximum_3d_diameter - b.features.maximum_3d_diameter)
                     .abs();
@@ -166,7 +197,7 @@ pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Ve
             diam_share: diam_cpu_ms / (mc_cpu_ms + diam_cpu_ms).max(1e-12),
         });
     }
-    Ok(rows)
+    Ok(Table2Output { rows, metrics: metrics.snapshot() })
 }
 
 /// Render rows in the paper's Table 2 layout (+ projection columns).
@@ -208,13 +239,14 @@ mod tests {
         let root = std::env::temp_dir().join("radpipe_table2_test");
         let _ = std::fs::remove_dir_all(&root);
         let m = generate_dataset(&root, &GenOptions { scale: 0.002, seed: 1 }).unwrap();
-        let rows = run_table2(
+        let out = run_table2(
             &m,
             &Table2Options { cpu_only: true, ..Default::default() },
         )
         .unwrap();
+        let rows = &out.rows;
         assert_eq!(rows.len(), 20);
-        for r in &rows {
+        for r in rows {
             assert!(r.vertices > 0);
             assert!(r.read_ms >= 0.0);
             assert!(r.diam_h100_ms > 0.0);
@@ -228,8 +260,22 @@ mod tests {
         // 1.0 rows)
         let biggest = rows.iter().max_by_key(|r| r.vertices).unwrap();
         assert!(biggest.diam_h100_ms < biggest.diam_4070_ms);
-        let t = to_table(&rows);
+        let t = to_table(rows);
         assert_eq!(t.len(), 20);
         assert!(t.to_text().contains("case"));
+
+        // the aggregate view is the snapshot, not scraped table text
+        let snap = &out.metrics;
+        for stage in ["stage.read", "stage.preprocess", "stage.mesh", "stage.diameters"] {
+            assert_eq!(snap.timer(stage).map(|t| t.count), Some(20), "{stage}");
+        }
+        assert!(snap.timer("stage.transfer").is_none(), "cpu-only: no transfer timer");
+        let totals = stage_totals(snap);
+        assert_eq!(totals.len(), 4);
+        assert!(totals.iter().all(|(n, _)| n.starts_with("stage.")));
+        // and it round-trips through the validating parser
+        let text = snap.to_json_text();
+        let back = crate::metrics::snapshot::MetricsSnapshot::from_json_text(&text).unwrap();
+        assert_eq!(&back, snap);
     }
 }

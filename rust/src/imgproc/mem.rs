@@ -12,6 +12,11 @@
 //!   [`crate::imgproc::DeriveStats`] so tests can assert the streaming
 //!   residency cap without interference from concurrently-running cases.
 //!
+//! When tracing is enabled ([`crate::trace`]), every resident-bytes
+//! transition is additionally sampled onto the `mem.resident_bytes`
+//! counter track, so the footprint is visible over time in the trace
+//! viewer rather than only as an end-of-run high-water mark.
+//!
 //! Only whole derived-image volumes are tracked (the in-flight image, the
 //! multi-level wavelet LLL seed, and the collected clones of the
 //! materialised wrapper). Per-pass filter scratch — the line chunks of
@@ -35,10 +40,12 @@ pub(crate) fn grid_bytes(g: &VoxelGrid<f32>) -> u64 {
 fn note_alloc(bytes: u64) {
     let now = CURRENT.fetch_add(bytes, Ordering::Relaxed) + bytes;
     PEAK.fetch_max(now, Ordering::Relaxed);
+    crate::trace::counter_u64("mem.resident_bytes", now);
 }
 
 fn note_free(bytes: u64) {
-    CURRENT.fetch_sub(bytes, Ordering::Relaxed);
+    let now = CURRENT.fetch_sub(bytes, Ordering::Relaxed).saturating_sub(bytes);
+    crate::trace::counter_u64("mem.resident_bytes", now);
 }
 
 /// Process-wide high-water mark of derived-image bytes resident at once,

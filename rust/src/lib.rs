@@ -35,6 +35,7 @@ pub mod report;
 pub mod runtime;
 pub mod synth;
 pub mod testkit;
+pub mod trace;
 pub mod volume;
 
 /// Crate version (surfaced by the CLI).

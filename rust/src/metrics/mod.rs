@@ -2,6 +2,8 @@
 //! aggregated into per-stage reports. The experiment harnesses read these to
 //! produce the Table 2 breakdown columns.
 
+pub mod snapshot;
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -59,7 +61,10 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Approximate quantile from the log buckets: the upper edge of the
+    /// bucket holding the target rank, clamped to the recorded maximum so
+    /// a reported p99 can never exceed `max()` (the edge `2^(i+1)` µs
+    /// overshoots whenever every sample in the top bucket is below it).
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
@@ -70,10 +75,35 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return Duration::from_micros(1 << (i + 1));
+                return Duration::from_micros(1 << (i + 1)).min(self.max());
             }
         }
         self.max()
+    }
+
+    /// Immutable point-in-time copy of the histogram state (bucket counts,
+    /// count/sum/max), as used by the `radpipe.metrics/1` export. Take it
+    /// when the histogram is quiescent: the atomics are loaded one by one,
+    /// so a concurrent `record` can skew the derived fields against each
+    /// other. `count` is derived from the bucket sum to keep the snapshot
+    /// self-consistent under the parser's invariants.
+    pub fn snapshot(&self) -> snapshot::TimerSnapshot {
+        let buckets: Vec<(usize, u64)> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect();
+        let count = buckets.iter().map(|&(_, n)| n).sum();
+        snapshot::TimerSnapshot {
+            count,
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+            buckets,
+        }
     }
 }
 
@@ -145,6 +175,21 @@ impl Metrics {
         }
         s
     }
+
+    /// Machine-readable point-in-time copy of every timer and counter
+    /// (the `radpipe.metrics/1` document body). Take it after the
+    /// pipeline has quiesced — see [`Histogram::snapshot`].
+    pub fn snapshot(&self) -> snapshot::MetricsSnapshot {
+        let timers = lock_recover(&self.timers)
+            .iter()
+            .map(|(name, h)| (name.clone(), h.snapshot()))
+            .collect();
+        let counters = lock_recover(&self.counters)
+            .iter()
+            .map(|(name, c)| (name.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        snapshot::MetricsSnapshot { timers, counters }
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +254,37 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantile_never_exceeds_max() {
+        // every sample lands in the [1024, 2048) µs bucket; the naive
+        // upper-edge estimate would report 2048 µs for every quantile,
+        // overshooting the true maximum of 1100 µs
+        let h = Histogram::default();
+        for us in [1024u64, 1050, 1100] {
+            h.record(Duration::from_micros(us));
+        }
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert!(
+                h.quantile(q) <= h.max(),
+                "q={q}: {:?} exceeds max {:?}",
+                h.quantile(q),
+                h.max()
+            );
+        }
+        assert_eq!(h.quantile(0.5), Duration::from_micros(1100));
+        assert_eq!(h.quantile(1.0), h.max());
+    }
+
+    #[test]
+    fn quantile_of_one_is_the_top_bucket_clamped_to_max() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(3)); // bucket [2, 4)
+        h.record(Duration::from_micros(700)); // bucket [512, 1024)
+        assert_eq!(h.quantile(1.0), Duration::from_micros(700));
+        // lower quantiles still report the covering bucket's upper edge
+        assert_eq!(h.quantile(0.5), Duration::from_micros(4));
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! Machine-readable metrics export: the `radpipe.metrics/1` document.
+//!
+//! A [`MetricsSnapshot`] is a point-in-time copy of a [`super::Metrics`]
+//! registry — every timer with its full log-histogram state and every
+//! counter — serialized as schema-versioned JSON and read back by a
+//! validating parser, mirroring the `radpipe.bench/1` report pattern
+//! (`bench::report`). Consumers (the JSON run report, `--metrics-out`,
+//! `experiments::table2`, the CI observability gate) work from this
+//! document instead of scraping the plain-text `Metrics::report` blob.
+//!
+//! Document layout (stable key order, diffable):
+//!
+//! ```json
+//! {
+//!   "schema": "radpipe.metrics/1",
+//!   "timers": {
+//!     "stage.read": {
+//!       "count": 20, "sum_us": 1834, "max_us": 402,
+//!       "buckets": [[6, 12], [7, 7], [8, 1]]
+//!     }
+//!   },
+//!   "counters": { "cases.total": 20, "errors.read": 0 }
+//! }
+//! ```
+//!
+//! `buckets` is sparse: `[i, n]` says `n` samples fell in the log bucket
+//! `[2^i, 2^(i+1))` µs, indices strictly increasing, zero buckets omitted.
+//! The parser enforces that shape plus the cross-field invariants
+//! (Σ bucket counts == `count`, `max_us ≤ sum_us`, empty timers are
+//! all-zero), so a document that round-trips is internally consistent.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::report::JsonValue;
+
+/// Schema tag stamped on (and required from) every document.
+pub const SCHEMA: &str = "radpipe.metrics/1";
+
+/// Number of log buckets in [`super::Histogram`] — valid indices are
+/// `0..BUCKETS`.
+pub const BUCKETS: usize = 40;
+
+/// Point-in-time copy of one timer's log-histogram state.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TimerSnapshot {
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    /// Sparse buckets `(index, samples)`: index `i` covers
+    /// `[2^i, 2^(i+1))` µs; strictly increasing, counts ≥ 1.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl TimerSnapshot {
+    pub fn total(&self) -> Duration {
+        Duration::from_micros(self.sum_us)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.sum_us / self.count)
+        }
+    }
+
+    /// Approximate quantile, identical to [`super::Histogram::quantile`]
+    /// (upper bucket edge, clamped to the recorded maximum).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (self.count as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for &(i, n) in &self.buckets {
+            seen += n;
+            if seen >= target {
+                return Duration::from_micros(1 << (i + 1)).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::obj();
+        o.set("count", self.count as f64);
+        o.set("sum_us", self.sum_us as f64);
+        o.set("max_us", self.max_us as f64);
+        let buckets: Vec<JsonValue> = self
+            .buckets
+            .iter()
+            .map(|&(i, n)| JsonValue::Arr(vec![JsonValue::Num(i as f64), JsonValue::Num(n as f64)]))
+            .collect();
+        o.set("buckets", JsonValue::Arr(buckets));
+        o
+    }
+}
+
+/// Point-in-time copy of a whole [`super::Metrics`] registry.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub timers: BTreeMap<String, TimerSnapshot>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl MetricsSnapshot {
+    pub fn timer(&self, name: &str) -> Option<&TimerSnapshot> {
+        self.timers.get(name)
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    /// Build the `radpipe.metrics/1` JSON document.
+    pub fn to_json(&self) -> JsonValue {
+        let mut timers = JsonValue::obj();
+        for (name, t) in &self.timers {
+            timers.set(name, t.to_json());
+        }
+        let mut counters = JsonValue::obj();
+        for (name, v) in &self.counters {
+            counters.set(name, *v as f64);
+        }
+        let mut doc = JsonValue::obj();
+        doc.set("schema", SCHEMA).set("timers", timers).set("counters", counters);
+        doc
+    }
+
+    pub fn to_json_text(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Write the document to a file.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json_text())
+            .with_context(|| format!("writing metrics snapshot to {}", path.display()))
+    }
+
+    /// Parse and validate a `radpipe.metrics/1` document.
+    pub fn from_json_text(text: &str) -> Result<MetricsSnapshot> {
+        let doc = JsonValue::parse(text).context("parsing metrics snapshot")?;
+        let Some(schema) = doc.get("schema").and_then(JsonValue::as_str) else {
+            bail!("metrics snapshot has no \"schema\" tag");
+        };
+        if schema != SCHEMA {
+            bail!("schema mismatch: document says {schema:?}, reader expects {SCHEMA:?}");
+        }
+
+        let Some(JsonValue::Obj(timers_json)) = doc.get("timers") else {
+            bail!("metrics snapshot has no \"timers\" object");
+        };
+        let mut timers = BTreeMap::new();
+        for (name, t) in timers_json {
+            timers.insert(name.clone(), parse_timer(name, t)?);
+        }
+
+        let Some(JsonValue::Obj(counters_json)) = doc.get("counters") else {
+            bail!("metrics snapshot has no \"counters\" object");
+        };
+        let mut counters = BTreeMap::new();
+        for (name, v) in counters_json {
+            counters.insert(name.clone(), uint(Some(v), &format!("counter {name:?}"))?);
+        }
+
+        Ok(MetricsSnapshot { timers, counters })
+    }
+
+    /// Read and validate a snapshot file.
+    pub fn read(path: &Path) -> Result<MetricsSnapshot> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading metrics snapshot {}", path.display()))?;
+        Self::from_json_text(&text)
+            .with_context(|| format!("validating metrics snapshot {}", path.display()))
+    }
+}
+
+/// Require a non-negative integral JSON number (exact in an f64).
+fn uint(v: Option<&JsonValue>, what: &str) -> Result<u64> {
+    let Some(n) = v.and_then(JsonValue::as_f64) else {
+        bail!("{what}: missing numeric value");
+    };
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > 2f64.powi(53) {
+        bail!("{what}: not a non-negative integer (got {n})");
+    }
+    Ok(n as u64)
+}
+
+fn parse_timer(name: &str, t: &JsonValue) -> Result<TimerSnapshot> {
+    let JsonValue::Obj(fields) = t else {
+        bail!("timer {name:?} is not an object");
+    };
+    for key in fields.keys() {
+        if !matches!(key.as_str(), "count" | "sum_us" | "max_us" | "buckets") {
+            bail!("timer {name:?} has unknown field {key:?}");
+        }
+    }
+    let count = uint(t.get("count"), &format!("timer {name:?} count"))?;
+    let sum_us = uint(t.get("sum_us"), &format!("timer {name:?} sum_us"))?;
+    let max_us = uint(t.get("max_us"), &format!("timer {name:?} max_us"))?;
+
+    let Some(buckets_json) = t.get("buckets").and_then(JsonValue::as_arr) else {
+        bail!("timer {name:?} has no \"buckets\" array");
+    };
+    let mut buckets = Vec::with_capacity(buckets_json.len());
+    let mut prev: Option<usize> = None;
+    let mut total: u64 = 0;
+    for (k, pair) in buckets_json.iter().enumerate() {
+        let Some(pair) = pair.as_arr() else {
+            bail!("timer {name:?} bucket #{k} is not a [index, count] pair");
+        };
+        if pair.len() != 2 {
+            bail!("timer {name:?} bucket #{k} has {} elements, expected 2", pair.len());
+        }
+        let idx = uint(pair.first(), &format!("timer {name:?} bucket #{k} index"))? as usize;
+        let n = uint(pair.get(1), &format!("timer {name:?} bucket #{k} count"))?;
+        if idx >= BUCKETS {
+            bail!("timer {name:?} bucket #{k}: index {idx} out of range (< {BUCKETS})");
+        }
+        if let Some(p) = prev {
+            if idx <= p {
+                bail!("timer {name:?} bucket #{k}: index {idx} not strictly increasing after {p}");
+            }
+        }
+        if n == 0 {
+            bail!("timer {name:?} bucket #{k}: zero-count bucket must be omitted");
+        }
+        prev = Some(idx);
+        total += n;
+        buckets.push((idx, n));
+    }
+
+    if total != count {
+        bail!("timer {name:?}: bucket counts sum to {total} but count says {count}");
+    }
+    if count == 0 && (sum_us != 0 || max_us != 0) {
+        bail!("timer {name:?}: empty timer with non-zero sum/max");
+    }
+    if max_us > sum_us {
+        bail!("timer {name:?}: max_us {max_us} exceeds sum_us {sum_us}");
+    }
+    Ok(TimerSnapshot { count, sum_us, max_us, buckets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Metrics;
+    use super::*;
+
+    fn sample_metrics() -> Metrics {
+        let m = Metrics::new();
+        for us in [3u64, 9, 150, 700, 700, 4000] {
+            m.timer("stage.read").record(Duration::from_micros(us));
+        }
+        m.timer("stage.mesh").record(Duration::from_micros(42));
+        let _ = m.timer("stage.empty"); // registered but never recorded
+        m.counter("cases.total").fetch_add(6, std::sync::atomic::Ordering::Relaxed);
+        m.set_counter("errors.read", 0);
+        m
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_the_validating_parser() {
+        let snap = sample_metrics().snapshot();
+        let text = snap.to_json_text();
+        let parsed = MetricsSnapshot::from_json_text(&text).unwrap();
+        assert_eq!(parsed, snap);
+        // stable serialization
+        assert_eq!(parsed.to_json_text(), text);
+        // schema tag is on the wire
+        assert!(text.contains("\"schema\":\"radpipe.metrics/1\""));
+    }
+
+    #[test]
+    fn snapshot_matches_live_histogram_stats() {
+        let m = sample_metrics();
+        let h = m.timer("stage.read");
+        let snap = m.snapshot();
+        let t = snap.timer("stage.read").unwrap();
+        assert_eq!(t.count, h.count());
+        assert_eq!(t.total(), h.total());
+        assert_eq!(t.max(), h.max());
+        assert_eq!(t.mean(), h.mean());
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(t.quantile(q), h.quantile(q), "q={q}");
+        }
+        assert_eq!(snap.counter("cases.total"), Some(6));
+        assert_eq!(snap.counter("errors.read"), Some(0));
+        assert_eq!(snap.counter("missing"), None);
+    }
+
+    #[test]
+    fn empty_timer_snapshots_as_all_zero() {
+        let snap = sample_metrics().snapshot();
+        let t = snap.timer("stage.empty").unwrap();
+        assert_eq!(t, &TimerSnapshot::default());
+        assert_eq!(t.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_registry_round_trips() {
+        let snap = Metrics::new().snapshot();
+        let parsed = MetricsSnapshot::from_json_text(&snap.to_json_text()).unwrap();
+        assert!(parsed.timers.is_empty() && parsed.counters.is_empty());
+    }
+
+    #[test]
+    fn parser_rejects_broken_documents() {
+        let ok_timer = r#""t":{"buckets":[[3,1]],"count":1,"max_us":9,"sum_us":9}"#;
+        let doc = |schema: &str, timer: &str| {
+            format!(r#"{{"schema":"{schema}","timers":{{{timer}}},"counters":{{"c":1}}}}"#)
+        };
+        // the template itself parses
+        assert!(MetricsSnapshot::from_json_text(&doc("radpipe.metrics/1", ok_timer)).is_ok());
+
+        for (text, why) in [
+            (doc("radpipe.metrics/2", ok_timer), "schema mismatch"),
+            (r#"{"timers":{},"counters":{}}"#.to_string(), "missing schema"),
+            (r#"{"schema":"radpipe.metrics/1","counters":{}}"#.to_string(), "missing timers"),
+            (r#"{"schema":"radpipe.metrics/1","timers":{}}"#.to_string(), "missing counters"),
+            (
+                doc(
+                    "radpipe.metrics/1",
+                    r#""t":{"buckets":[[40,1]],"count":1,"max_us":1,"sum_us":1}"#,
+                ),
+                "bucket index out of range",
+            ),
+            (
+                doc(
+                    "radpipe.metrics/1",
+                    r#""t":{"buckets":[[3,1],[3,1]],"count":2,"max_us":1,"sum_us":2}"#,
+                ),
+                "non-increasing bucket index",
+            ),
+            (
+                doc(
+                    "radpipe.metrics/1",
+                    r#""t":{"buckets":[[3,0]],"count":0,"max_us":0,"sum_us":0}"#,
+                ),
+                "zero-count bucket",
+            ),
+            (
+                doc(
+                    "radpipe.metrics/1",
+                    r#""t":{"buckets":[[3,2]],"count":1,"max_us":9,"sum_us":9}"#,
+                ),
+                "bucket sum != count",
+            ),
+            (
+                doc("radpipe.metrics/1", r#""t":{"buckets":[],"count":0,"max_us":3,"sum_us":0}"#),
+                "empty timer with max",
+            ),
+            (
+                doc(
+                    "radpipe.metrics/1",
+                    r#""t":{"buckets":[[3,1]],"count":1,"max_us":9,"sum_us":5}"#,
+                ),
+                "max exceeds sum",
+            ),
+            (
+                doc(
+                    "radpipe.metrics/1",
+                    r#""t":{"buckets":[],"count":0,"max_us":0,"sum_us":0,"x":1}"#,
+                ),
+                "unknown timer field",
+            ),
+            (
+                doc(
+                    "radpipe.metrics/1",
+                    r#""t":{"buckets":[[3,1.5]],"count":1,"max_us":1,"sum_us":1}"#,
+                ),
+                "fractional bucket count",
+            ),
+            (
+                doc("radpipe.metrics/1", r#""t":{"count":1,"max_us":1,"sum_us":1}"#),
+                "missing buckets",
+            ),
+            (
+                r#"{"schema":"radpipe.metrics/1","timers":{},"counters":{"c":-1}}"#.to_string(),
+                "negative counter",
+            ),
+            (
+                r#"{"schema":"radpipe.metrics/1","timers":{},"counters":{"c":"x"}}"#.to_string(),
+                "non-numeric counter",
+            ),
+        ] {
+            let err = MetricsSnapshot::from_json_text(&text);
+            assert!(err.is_err(), "{why}: {text}");
+        }
+    }
+}

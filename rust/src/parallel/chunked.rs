@@ -74,6 +74,12 @@ where
                 let fold = &fold;
                 let next = &next;
                 scope.spawn(move || {
+                    // one coarse span per worker (not per block): visible
+                    // interleaving in the trace without swamping it
+                    let _sp = crate::trace::span_args(
+                        "parallel.worker",
+                        &[("worker", crate::trace::ArgV::Int(t as u64))],
+                    );
                     let mut acc = make();
                     if static_split {
                         let lo = (t * per_thread).min(n_items);

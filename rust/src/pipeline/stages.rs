@@ -29,12 +29,15 @@ pub struct CaseResult {
     pub path: PathTaken,
 }
 
-/// Pipeline outcome: ordered case results + failures + the metrics dump.
+/// Pipeline outcome: ordered case results + failures + the metrics dump
+/// (human-readable text and the machine-readable `radpipe.metrics/1`
+/// snapshot, taken from the same registry after the run quiesced).
 #[derive(Debug)]
 pub struct PipelineReport {
     pub results: Vec<CaseResult>,
     pub failures: Vec<(String, String)>,
     pub metrics_text: String,
+    pub metrics: crate::metrics::snapshot::MetricsSnapshot,
     pub wall: std::time::Duration,
 }
 
@@ -88,7 +91,7 @@ pub fn run_pipeline(
         {
             let case_tx = case_tx;
             let manifest = manifest.clone();
-            scope.spawn(move || {
+            spawn_named(scope, "scan".to_string(), move || {
                 for e in &manifest.cases {
                     let job = CaseJob {
                         case_id: e.case_id.clone(),
@@ -104,15 +107,18 @@ pub fn run_pipeline(
         }
 
         // read pool
-        for _ in 0..cfg.read_workers.max(1) {
+        for i in 0..cfg.read_workers.max(1) {
             let case_rx = case_rx.clone();
             let read_tx = read_tx.clone();
             let out_tx = out_tx.clone();
             let metrics = metrics.clone();
-            scope.spawn(move || {
+            spawn_named(scope, format!("read-{i}"), move || {
                 while let Ok(job) = case_rx.recv() {
+                    let _case = crate::trace::case_scope(&job.case_id);
                     let t0 = Instant::now();
+                    let sp = crate::trace::span("stage.read");
                     let loaded = crate::io::read_mask(&job.mask_path);
+                    drop(sp);
                     let read = t0.elapsed();
                     metrics.timer("stage.read").record(read);
                     let mask = match loaded {
@@ -149,7 +155,9 @@ pub fn run_pipeline(
                     if needs_image {
                         if let Some(ipath) = &job.image_path {
                             let t0 = Instant::now();
+                            let sp = crate::trace::span("stage.read_image");
                             let loaded = crate::io::read_image(ipath);
+                            drop(sp);
                             read_image = t0.elapsed();
                             metrics.timer("stage.read_image").record(read_image);
                             match loaded {
@@ -184,13 +192,16 @@ pub fn run_pipeline(
         drop(read_tx);
 
         // extract pool (preprocess + mesh + dispatch + derive)
-        for _ in 0..cfg.feature_workers.max(1) {
+        for i in 0..cfg.feature_workers.max(1) {
             let read_rx = read_rx.clone();
             let out_tx = out_tx.clone();
             let metrics = metrics.clone();
-            scope.spawn(move || {
+            spawn_named(scope, format!("extract-{i}"), move || {
                 while let Ok(item) = read_rx.recv() {
+                    let _case = crate::trace::case_scope(&item.case_id);
+                    let sp = crate::trace::span("case");
                     let res = extractor.execute_case(&item.mask, item.image.as_ref());
+                    drop(sp);
                     let msg = match res {
                         Ok(mut ex) => {
                             ex.timing.read = item.read;
@@ -223,7 +234,15 @@ pub fn run_pipeline(
                                 path: ex.path,
                             })
                         }
-                        Err(e) => Err((item.case_id, format!("extract: {e:#}"))),
+                        Err(e) => {
+                            // every per-case failure lands in exactly one
+                            // named counter; this is the per-stage bucket
+                            // for failures inside the extract stage itself
+                            metrics
+                                .counter("errors.extract")
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            Err((item.case_id, format!("extract: {e:#}")))
+                        }
                     };
                     if out_tx.send(msg).is_err() {
                         break;
@@ -283,9 +302,27 @@ pub fn run_pipeline(
             results,
             failures,
             metrics_text: metrics.report(),
+            metrics: metrics.snapshot(),
             wall: start.elapsed(),
         })
     })
+}
+
+/// Spawn a scoped worker with a stable thread name. The name shows up in
+/// trace thread metadata (and debugger thread lists); spawn failure is a
+/// resource-exhaustion condition the pipeline cannot limp past.
+fn spawn_named<'scope, 'env, F>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    name: String,
+    f: F,
+) -> std::thread::ScopedJoinHandle<'scope, ()>
+where
+    F: FnOnce() + Send + 'scope,
+{
+    std::thread::Builder::new()
+        .name(name)
+        .spawn_scoped(scope, f)
+        .expect("spawn pipeline worker thread")
 }
 
 #[cfg(test)]
@@ -584,6 +621,52 @@ mod tests {
             "{}",
             report.failures[0].1
         );
+    }
+
+    #[test]
+    fn extract_failures_land_in_the_errors_extract_counter() {
+        // an intensity run with one image stripped (and no synthetic
+        // stand-in opt-in) fails inside the extract stage — exactly one
+        // bump of the extract-stage error counter, zero read-stage ones
+        let mut m = tiny_dataset("exterr");
+        m.cases[6].image = None;
+        let cfg = firstorder_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 19);
+        assert_eq!(report.failures.len(), 1);
+        assert_eq!(report.failures[0].0, m.cases[6].case_id);
+        assert!(report.failures[0].1.starts_with("extract:"), "{}", report.failures[0].1);
+        assert_eq!(report.metrics.counter("errors.extract"), Some(1));
+        assert_eq!(report.metrics.counter("errors.read"), None);
+        assert_eq!(report.metrics.counter("errors.read_image"), None);
+        assert!(report.metrics_text.contains("errors.extract"), "{}", report.metrics_text);
+        // the taxonomy is total: failures and error counters agree
+        let errors: u64 = report
+            .metrics
+            .counters
+            .iter()
+            .filter(|(k, _)| k.starts_with("errors."))
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(errors, report.failures.len() as u64);
+    }
+
+    #[test]
+    fn metrics_snapshot_rides_along_with_the_report() {
+        let m = tiny_dataset("snapshot");
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        let snap = &report.metrics;
+        assert_eq!(snap.timer("stage.read").map(|t| t.count), Some(20));
+        assert_eq!(snap.timer("stage.mesh").map(|t| t.count), Some(20));
+        assert_eq!(snap.counter("path.cpu"), Some(20));
+        // the embedded snapshot round-trips through the validating parser
+        let text = snap.to_json_text();
+        let back = crate::metrics::snapshot::MetricsSnapshot::from_json_text(&text).unwrap();
+        assert_eq!(&back, snap);
     }
 
     #[test]

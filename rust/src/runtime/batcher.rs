@@ -118,6 +118,14 @@ struct Shared {
 impl Shared {
     fn flush(&self, bucket: usize, items: Vec<BatchItem>, by_size: bool) {
         let n = items.len() as u64;
+        let _sp = crate::trace::span_args(
+            "batch.flush",
+            &[
+                ("bucket", crate::trace::ArgV::Int(bucket as u64)),
+                ("items", crate::trace::ArgV::Int(n)),
+                ("trigger", crate::trace::ArgV::Str(if by_size { "size" } else { "linger" })),
+            ],
+        );
         self.stats.flushes.fetch_add(1, Ordering::Relaxed);
         self.stats.flushed_items.fetch_add(n, Ordering::Relaxed);
         self.stats.max_occupancy.fetch_max(n, Ordering::Relaxed);

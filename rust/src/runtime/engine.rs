@@ -11,6 +11,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::buckets::{bucket_for, pad_triangles, pad_vertices};
 use super::registry::ArtifactRegistry;
 use crate::features::Diameters;
+use crate::trace::ArgV;
 
 /// Phase timings of one artifact execution — the Table 2 GPU columns.
 #[derive(Debug, Clone, Copy, Default)]
@@ -193,6 +194,13 @@ fn engine_main(registry: ArtifactRegistry, rx: mpsc::Receiver<Request>) {
         Err(e) => {
             // Drain requests, failing each with the construction error.
             for req in rx {
+                let _sp = crate::trace::span_args(
+                    "engine.request",
+                    &[
+                        ("kind", ArgV::Str(request_kind(&req))),
+                        ("outcome", ArgV::Str("init_failed")),
+                    ],
+                );
                 let msg = format!("PJRT client init failed: {e}");
                 match req {
                     Request::Diameters { reply, .. } => {
@@ -217,23 +225,42 @@ fn engine_main(registry: ArtifactRegistry, rx: mpsc::Receiver<Request>) {
     };
     let mut state = EngineState { client, registry, cache: HashMap::new() };
     for req in rx {
+        let kind = request_kind(&req);
         match req {
             Request::Diameters { verts, reply } => {
+                let _sp = crate::trace::span_args("engine.request", &[("kind", ArgV::Str(kind))]);
                 let _ = reply.send(run_diameters(&mut state, &verts));
             }
             Request::DiametersBatch { items } => {
+                let _sp = crate::trace::span_args(
+                    "engine.request",
+                    &[("kind", ArgV::Str(kind)), ("items", ArgV::Int(items.len() as u64))],
+                );
                 for item in items {
                     let _ = item.reply.send(run_diameters(&mut state, &item.verts));
                 }
             }
             Request::MeshStats { tris, reply } => {
+                let _sp = crate::trace::span_args("engine.request", &[("kind", ArgV::Str(kind))]);
                 let _ = reply.send(run_mesh_stats(&mut state, &tris));
             }
             Request::WarmUp { reply } => {
+                let _sp = crate::trace::span_args("engine.request", &[("kind", ArgV::Str(kind))]);
                 let _ = reply.send(warm_up(&mut state));
             }
             Request::Shutdown => break,
         }
+    }
+}
+
+/// Trace label for a request variant.
+fn request_kind(req: &Request) -> &'static str {
+    match req {
+        Request::Diameters { .. } => "diameters",
+        Request::DiametersBatch { .. } => "diameters_batch",
+        Request::MeshStats { .. } => "mesh_stats",
+        Request::WarmUp { .. } => "warm_up",
+        Request::Shutdown => "shutdown",
     }
 }
 
@@ -245,6 +272,10 @@ fn compile<'a>(
     let key = (name.to_string(), bucket_key.to_string());
     let mut took = Duration::ZERO;
     if !state.cache.contains_key(&key) {
+        let _sp = crate::trace::span_args(
+            "engine.compile",
+            &[("kernel", ArgV::Str(name)), ("bucket", ArgV::Str(bucket_key))],
+        );
         let spec = state
             .registry
             .get(name, bucket_key)
@@ -285,6 +316,12 @@ fn run_diameters(state: &mut EngineState, verts: &[f32]) -> Result<(Diameters, E
         .buffer_from_host_buffer::<f32>(&padded, &[bucket, 3], None)
         .map_err(|e| anyhow!("upload: {e}"))?;
     let transfer = t0.elapsed();
+    crate::trace::complete_span(
+        "engine.transfer",
+        t0,
+        transfer,
+        &[("bucket", ArgV::Int(bucket as u64))],
+    );
 
     // execute phase (+ result download)
     let exe = state.cache.get(&("diameter".to_string(), bucket.to_string())).unwrap();
@@ -294,6 +331,12 @@ fn run_diameters(state: &mut EngineState, verts: &[f32]) -> Result<(Diameters, E
     let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
     let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
     let execute = t1.elapsed();
+    crate::trace::complete_span(
+        "engine.execute",
+        t1,
+        execute,
+        &[("bucket", ArgV::Int(bucket as u64))],
+    );
 
     if vals.len() != 4 {
         bail!("diameter artifact returned {} values, want 4", vals.len());
@@ -333,6 +376,12 @@ fn run_mesh_stats(state: &mut EngineState, tris: &[f32]) -> Result<([f64; 2], Ex
         .buffer_from_host_buffer::<f32>(&padded, &[bucket, 9], None)
         .map_err(|e| anyhow!("upload: {e}"))?;
     let transfer = t0.elapsed();
+    crate::trace::complete_span(
+        "engine.transfer",
+        t0,
+        transfer,
+        &[("bucket", ArgV::Int(bucket as u64))],
+    );
 
     let exe = state.cache.get(&("mesh_stats".to_string(), bucket.to_string())).unwrap();
     let t1 = Instant::now();
@@ -341,6 +390,12 @@ fn run_mesh_stats(state: &mut EngineState, tris: &[f32]) -> Result<([f64; 2], Ex
     let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
     let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
     let execute = t1.elapsed();
+    crate::trace::complete_span(
+        "engine.execute",
+        t1,
+        execute,
+        &[("bucket", ArgV::Int(bucket as u64))],
+    );
 
     if vals.len() != 2 {
         bail!("mesh_stats artifact returned {} values, want 2", vals.len());

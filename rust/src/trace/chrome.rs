@@ -1,0 +1,344 @@
+//! Chrome Trace Event Format emitter and validating parser.
+//!
+//! The emitted document is the object form of the format —
+//! `{"traceEvents": [...]}` — with three event phases:
+//!
+//! * `ph:"M"` metadata: one `thread_name` event per recording thread (plus
+//!   one `process_name` event naming the process `radpipe`), so the
+//!   chrome://tracing / Perfetto track labels show `read-0`, `extract-3`,
+//!   `radpipe-batcher`, `pjrt-engine`, … instead of bare tids;
+//! * `ph:"X"` complete events: one per recorded span, `ts`/`dur` in
+//!   microseconds since the sink epoch, `cat:"radpipe"`, args verbatim;
+//! * `ph:"C"` counter events: one per counter sample (`args.value`),
+//!   rendered by the viewers as a filled counter track (e.g.
+//!   `mem.resident_bytes`).
+//!
+//! [`parse`] is the inverse used by the `obs-check` CLI gate and the
+//! trace tests: it accepts both the object form and the bare-array form,
+//! validates phase-specific invariants (finite non-negative `ts`, `dur ≥ 0`
+//! on complete events, positive integral `pid`/`tid`) and keeps args
+//! available for assertions.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use super::{OwnedArg, TraceSink};
+use crate::report::JsonValue;
+
+/// Category tag stamped on every emitted span.
+pub const CATEGORY: &str = "radpipe";
+
+fn args_obj(args: &[(String, OwnedArg)]) -> JsonValue {
+    let mut o = JsonValue::obj();
+    for (k, v) in args {
+        match v {
+            OwnedArg::Str(s) => o.set(k, s.as_str()),
+            OwnedArg::Num(n) => o.set(k, *n),
+            OwnedArg::Int(i) => o.set(k, *i as f64),
+        };
+    }
+    o
+}
+
+/// Serialize everything `sink` recorded as Chrome Trace Event JSON.
+pub(super) fn emit(sink: &TraceSink) -> String {
+    let pid = sink.pid() as f64;
+    let mut events = Vec::new();
+
+    let threads = sink.snapshot_threads();
+    let process_tid = threads.keys().next().copied().unwrap_or(1);
+    let mut pmeta = JsonValue::obj();
+    let mut pargs = JsonValue::obj();
+    pargs.set("name", "radpipe");
+    pmeta.set("ph", "M").set("name", "process_name").set("pid", pid);
+    pmeta.set("tid", process_tid as f64).set("args", pargs);
+    events.push(pmeta);
+
+    for (tid, name) in &threads {
+        let mut meta = JsonValue::obj();
+        let mut margs = JsonValue::obj();
+        margs.set("name", name.as_str());
+        meta.set("ph", "M").set("name", "thread_name").set("pid", pid);
+        meta.set("tid", *tid as f64).set("args", margs);
+        events.push(meta);
+    }
+
+    for sp in sink.snapshot_spans() {
+        let mut ev = JsonValue::obj();
+        ev.set("ph", "X").set("name", sp.name.as_str()).set("cat", CATEGORY);
+        ev.set("ts", sp.ts_us as f64).set("dur", sp.dur_us as f64);
+        ev.set("pid", pid).set("tid", sp.tid as f64);
+        ev.set("args", args_obj(&sp.args));
+        events.push(ev);
+    }
+
+    for c in sink.snapshot_counters() {
+        let mut ev = JsonValue::obj();
+        let mut cargs = JsonValue::obj();
+        cargs.set("value", c.value);
+        ev.set("ph", "C").set("name", c.track.as_str()).set("cat", CATEGORY);
+        ev.set("ts", c.ts_us as f64).set("pid", pid).set("tid", c.tid as f64);
+        ev.set("args", cargs);
+        events.push(ev);
+    }
+
+    let mut doc = JsonValue::obj();
+    doc.set("traceEvents", JsonValue::Arr(events));
+    doc.to_string()
+}
+
+/// One parsed trace event (any phase).
+#[derive(Debug, Clone)]
+pub struct ChromeEvent {
+    pub ph: char,
+    pub name: String,
+    pub pid: u64,
+    pub tid: u64,
+    /// Microseconds; 0 for metadata events that omit `ts`.
+    pub ts: f64,
+    /// Microseconds; only meaningful on `ph:'X'` events.
+    pub dur: f64,
+    pub args: BTreeMap<String, JsonValue>,
+}
+
+impl ChromeEvent {
+    /// String-valued arg lookup.
+    pub fn arg_str(&self, key: &str) -> Option<&str> {
+        self.args.get(key).and_then(JsonValue::as_str)
+    }
+
+    /// Numeric arg lookup.
+    pub fn arg_num(&self, key: &str) -> Option<f64> {
+        self.args.get(key).and_then(JsonValue::as_f64)
+    }
+
+    /// Span end timestamp (`ts + dur`), in microseconds.
+    pub fn end_ts(&self) -> f64 {
+        self.ts + self.dur
+    }
+}
+
+/// A parsed, validated Chrome trace document.
+#[derive(Debug, Clone)]
+pub struct ChromeTrace {
+    pub events: Vec<ChromeEvent>,
+}
+
+impl ChromeTrace {
+    /// Complete (`ph:'X'`) span events, in recorded order.
+    pub fn spans(&self) -> impl Iterator<Item = &ChromeEvent> {
+        self.events.iter().filter(|e| e.ph == 'X')
+    }
+
+    /// Counter (`ph:'C'`) sample events, in recorded order.
+    pub fn counters(&self) -> impl Iterator<Item = &ChromeEvent> {
+        self.events.iter().filter(|e| e.ph == 'C')
+    }
+
+    /// Distinct span names.
+    pub fn span_names(&self) -> BTreeSet<&str> {
+        self.spans().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Distinct counter track names.
+    pub fn counter_tracks(&self) -> BTreeSet<&str> {
+        self.counters().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Distinct values of the `"case"` arg across spans.
+    pub fn span_cases(&self) -> BTreeSet<String> {
+        self.spans().filter_map(|e| e.arg_str("case").map(str::to_string)).collect()
+    }
+
+    /// Thread names declared via `thread_name` metadata, keyed by tid.
+    pub fn thread_names(&self) -> BTreeMap<u64, String> {
+        self.events
+            .iter()
+            .filter(|e| e.ph == 'M' && e.name == "thread_name")
+            .filter_map(|e| e.arg_str("name").map(|n| (e.tid, n.to_string())))
+            .collect()
+    }
+}
+
+fn field_u64(ev: &JsonValue, key: &str, i: usize) -> Result<u64> {
+    let Some(n) = ev.get(key).and_then(JsonValue::as_f64) else {
+        bail!("trace event #{i}: missing numeric field {key:?}");
+    };
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > 2f64.powi(53) {
+        bail!("trace event #{i}: field {key:?} is not a non-negative integer (got {n})");
+    }
+    Ok(n as u64)
+}
+
+/// Parse and validate a Chrome Trace Event JSON document. Accepts both
+/// the `{"traceEvents": [...]}` object form (what [`emit`] writes) and a
+/// bare event array.
+pub fn parse(text: &str) -> Result<ChromeTrace> {
+    let doc = JsonValue::parse(text)?;
+    let events_json = match &doc {
+        JsonValue::Arr(items) => items.as_slice(),
+        JsonValue::Obj(_) => match doc.get("traceEvents").and_then(JsonValue::as_arr) {
+            Some(items) => items,
+            None => bail!("trace document has no \"traceEvents\" array"),
+        },
+        _ => bail!("trace document is neither an object nor an event array"),
+    };
+
+    let mut events = Vec::with_capacity(events_json.len());
+    for (i, ev) in events_json.iter().enumerate() {
+        let JsonValue::Obj(_) = ev else {
+            bail!("trace event #{i} is not an object");
+        };
+        let Some(ph_str) = ev.get("ph").and_then(JsonValue::as_str) else {
+            bail!("trace event #{i}: missing \"ph\" phase");
+        };
+        let ph = match ph_str {
+            "M" => 'M',
+            "X" => 'X',
+            "C" => 'C',
+            other => bail!("trace event #{i}: unsupported phase {other:?}"),
+        };
+        let Some(name) = ev.get("name").and_then(JsonValue::as_str) else {
+            bail!("trace event #{i}: missing \"name\"");
+        };
+        if name.is_empty() {
+            bail!("trace event #{i}: empty \"name\"");
+        }
+        let pid = field_u64(ev, "pid", i)?;
+        let tid = field_u64(ev, "tid", i)?;
+        if matches!(ph, 'X' | 'C') && (pid == 0 || tid == 0) {
+            bail!("trace event #{i} ({name}): pid/tid must be >= 1, got pid={pid} tid={tid}");
+        }
+
+        let ts = match ev.get("ts").and_then(JsonValue::as_f64) {
+            Some(t) => {
+                if !t.is_finite() || t < 0.0 {
+                    bail!("trace event #{i} ({name}): invalid ts {t}");
+                }
+                t
+            }
+            None if ph == 'M' => 0.0,
+            None => bail!("trace event #{i} ({name}): missing \"ts\""),
+        };
+        let dur = match ev.get("dur").and_then(JsonValue::as_f64) {
+            Some(d) => {
+                if !d.is_finite() || d < 0.0 {
+                    bail!("trace event #{i} ({name}): invalid dur {d}");
+                }
+                d
+            }
+            None if ph == 'X' => bail!("trace event #{i} ({name}): complete event without \"dur\""),
+            None => 0.0,
+        };
+        if ph == 'C' {
+            let value = ev.get("args").and_then(|a| a.get("value")).and_then(JsonValue::as_f64);
+            if value.is_none() {
+                bail!("trace event #{i} ({name}): counter event without numeric args.value");
+            }
+        }
+
+        let args = match ev.get("args") {
+            Some(JsonValue::Obj(m)) => m.clone(),
+            Some(_) => bail!("trace event #{i} ({name}): \"args\" is not an object"),
+            None => BTreeMap::new(),
+        };
+        events.push(ChromeEvent { ph, name: name.to_string(), pid, tid, ts, dur, args });
+    }
+    Ok(ChromeTrace { events })
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::{Duration, Instant};
+
+    use super::*;
+    use crate::trace::ArgV;
+
+    fn sample_sink() -> std::sync::Arc<TraceSink> {
+        let sink = TraceSink::new();
+        let t0 = Instant::now();
+        sink.record_span(
+            "stage.read",
+            t0,
+            Duration::from_micros(120),
+            &[("case", ArgV::Str("case-1"))],
+        );
+        sink.record_span(
+            "stage.mesh",
+            t0,
+            Duration::from_micros(300),
+            &[("case", ArgV::Str("case-1")), ("verts", ArgV::Int(42))],
+        );
+        sink.record_counter("mem.resident_bytes", 8192.0);
+        sink
+    }
+
+    #[test]
+    fn emit_parse_round_trip() {
+        let sink = sample_sink();
+        let json = sink.to_chrome_json();
+        let trace = parse(&json).unwrap();
+
+        assert_eq!(trace.spans().count(), 2);
+        assert_eq!(trace.counters().count(), 1);
+        assert!(trace.span_names().contains("stage.read"));
+        assert!(trace.span_names().contains("stage.mesh"));
+        assert!(trace.counter_tracks().contains("mem.resident_bytes"));
+        assert_eq!(trace.span_cases().into_iter().collect::<Vec<_>>(), vec!["case-1"]);
+
+        let mesh = trace.spans().find(|e| e.name == "stage.mesh").unwrap();
+        assert_eq!(mesh.dur, 300.0);
+        assert_eq!(mesh.arg_num("verts"), Some(42.0));
+        assert_eq!(mesh.pid, std::process::id() as u64);
+        assert!(mesh.tid >= 1);
+
+        let counter = trace.counters().next().unwrap();
+        assert_eq!(counter.arg_num("value"), Some(8192.0));
+
+        // thread metadata names the recording thread
+        let names = trace.thread_names();
+        assert_eq!(names.len(), 1);
+        assert!(!names.values().next().unwrap().is_empty());
+    }
+
+    #[test]
+    fn accepts_bare_event_arrays() {
+        let text = r#"[{"ph":"X","name":"s","pid":1,"tid":2,"ts":0,"dur":5}]"#;
+        let trace = parse(text).unwrap();
+        assert_eq!(trace.spans().count(), 1);
+        assert_eq!(trace.spans().next().unwrap().end_ts(), 5.0);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for (bad, why) in [
+            (r#"{"other":1}"#, "no traceEvents"),
+            (r#"[{"name":"s","pid":1,"tid":1,"ts":0,"dur":1}]"#, "missing ph"),
+            (r#"[{"ph":"B","name":"s","pid":1,"tid":1,"ts":0}]"#, "unsupported phase"),
+            (r#"[{"ph":"X","pid":1,"tid":1,"ts":0,"dur":1}]"#, "missing name"),
+            (r#"[{"ph":"X","name":"","pid":1,"tid":1,"ts":0,"dur":1}]"#, "empty name"),
+            (r#"[{"ph":"X","name":"s","tid":1,"ts":0,"dur":1}]"#, "missing pid"),
+            (r#"[{"ph":"X","name":"s","pid":0,"tid":1,"ts":0,"dur":1}]"#, "pid 0"),
+            (r#"[{"ph":"X","name":"s","pid":1,"tid":1.5,"ts":0,"dur":1}]"#, "fractional tid"),
+            (r#"[{"ph":"X","name":"s","pid":1,"tid":1,"dur":1}]"#, "missing ts"),
+            (r#"[{"ph":"X","name":"s","pid":1,"tid":1,"ts":-1,"dur":1}]"#, "negative ts"),
+            (r#"[{"ph":"X","name":"s","pid":1,"tid":1,"ts":0}]"#, "X without dur"),
+            (r#"[{"ph":"X","name":"s","pid":1,"tid":1,"ts":0,"dur":-2}]"#, "negative dur"),
+            (r#"[{"ph":"C","name":"c","pid":1,"tid":1,"ts":0}]"#, "counter without value"),
+            (r#"[{"ph":"X","name":"s","pid":1,"tid":1,"ts":0,"dur":1,"args":3}]"#, "args not obj"),
+            (r#"[1]"#, "event not an object"),
+            (r#"not json"#, "not json"),
+        ] {
+            assert!(parse(bad).is_err(), "{why}: {bad}");
+        }
+    }
+
+    #[test]
+    fn empty_sink_still_emits_valid_document() {
+        let sink = TraceSink::new();
+        let trace = parse(&sink.to_chrome_json()).unwrap();
+        assert_eq!(trace.spans().count(), 0);
+        assert_eq!(trace.counters().count(), 0);
+    }
+}

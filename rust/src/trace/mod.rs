@@ -1,0 +1,473 @@
+//! Structured tracing: timestamped spans and counter samples from any
+//! thread, attributed by thread name and case id, emitted as Chrome Trace
+//! Event Format JSON (loadable in chrome://tracing or ui.perfetto.dev).
+//!
+//! The layer is std-only like the rest of the crate and built around one
+//! contract: **tracing off is free**. Every public entry point starts with
+//! a single relaxed atomic load of the global enable flag; when it is
+//! clear, no clock is read, nothing is allocated and no lock is taken.
+//! Instrumentation can therefore stay in the hot path permanently — the
+//! determinism sweeps run with the flag clear and see bit-identical
+//! results.
+//!
+//! ## Model
+//!
+//! * A [`TraceSink`] collects *complete spans* (`ph:"X"`: name, start
+//!   timestamp, duration, args) and *counter samples* (`ph:"C"`: track,
+//!   timestamp, value) relative to its creation instant ("epoch").
+//! * [`install`] publishes a sink process-globally and raises the enable
+//!   flag; the returned [`TraceSession`] guard lowers the flag and
+//!   unpublishes on drop. Sessions are serialized process-wide so
+//!   concurrent tests cannot interleave sinks (a second `install` blocks
+//!   until the first session drops — never nest two sessions on one
+//!   thread).
+//! * [`span`] / [`span_args`] return an RAII [`SpanGuard`] that records a
+//!   complete event on drop; [`complete_span`] records a back-dated span
+//!   measured elsewhere (e.g. engine-side transfer time surfaced on the
+//!   dispatching thread).
+//! * [`case_scope`] tags the current thread with a case id; spans recorded
+//!   under the scope automatically carry a `"case"` arg, which is how the
+//!   per-case breakdown stays visible across worker pools.
+//! * Threads are identified by a stable process-unique `tid` and their
+//!   `std::thread` name (first event wins), emitted as Chrome
+//!   `thread_name` metadata.
+//!
+//! The emitter and the validating parser for the JSON format live in
+//! [`chrome`].
+
+pub mod chrome;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Global enable flag — the only thing the disabled fast path touches.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The installed sink. Guarded by a mutex (not swapped atomically) so a
+/// session teardown cannot race a concurrent event into a half-cleared
+/// global; events clone the `Arc` out under the lock and record lock-free
+/// against the sink afterwards.
+static SINK: OnceLock<Mutex<Option<Arc<TraceSink>>>> = OnceLock::new();
+
+/// Serializes trace sessions process-wide (lib tests run concurrently in
+/// one process; two overlapping sinks would steal each other's events).
+static SESSION: Mutex<()> = Mutex::new(());
+
+fn sink_slot() -> &'static Mutex<Option<Arc<TraceSink>>> {
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Lock recovery mirroring `metrics::lock_recover`: a panicking traced
+/// thread must not poison tracing for the rest of the process.
+fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+thread_local! {
+    /// Process-unique thread id (Chrome `tid`), assigned on first use.
+    static TID: Cell<u64> = const { Cell::new(0) };
+    /// Case id attached to spans recorded on this thread (see [`case_scope`]).
+    static CASE: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+fn thread_tid() -> u64 {
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    TID.with(|c| {
+        let mut tid = c.get();
+        if tid == 0 {
+            tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            c.set(tid);
+        }
+        tid
+    })
+}
+
+/// Is tracing currently enabled? One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Clone the installed sink if tracing is enabled.
+fn active_sink() -> Option<Arc<TraceSink>> {
+    if !enabled() {
+        return None;
+    }
+    lock_recover(sink_slot()).clone()
+}
+
+/// A span argument value. Borrowed so that building the arg slice for a
+/// disabled span allocates nothing.
+#[derive(Debug, Clone, Copy)]
+pub enum ArgV<'a> {
+    Str(&'a str),
+    Num(f64),
+    Int(u64),
+}
+
+/// Owned mirror of [`ArgV`], stored in recorded events.
+#[derive(Debug, Clone)]
+enum OwnedArg {
+    Str(String),
+    Num(f64),
+    Int(u64),
+}
+
+impl ArgV<'_> {
+    fn to_owned_arg(self) -> OwnedArg {
+        match self {
+            ArgV::Str(s) => OwnedArg::Str(s.to_string()),
+            ArgV::Num(n) => OwnedArg::Num(n),
+            ArgV::Int(i) => OwnedArg::Int(i),
+        }
+    }
+}
+
+fn own_args(args: &[(&str, ArgV<'_>)]) -> Vec<(String, OwnedArg)> {
+    args.iter().map(|(k, v)| (k.to_string(), v.to_owned_arg())).collect()
+}
+
+/// A recorded complete span (`ph:"X"`).
+#[derive(Debug, Clone)]
+struct SpanEvent {
+    name: String,
+    /// Microseconds since the sink epoch.
+    ts_us: u64,
+    dur_us: u64,
+    tid: u64,
+    args: Vec<(String, OwnedArg)>,
+}
+
+/// A recorded counter sample (`ph:"C"`).
+#[derive(Debug, Clone)]
+struct CounterEvent {
+    track: String,
+    ts_us: u64,
+    tid: u64,
+    value: f64,
+}
+
+/// Collects spans and counter samples from any thread. Create with
+/// [`TraceSink::new`], publish with [`install`], serialize with
+/// [`TraceSink::to_chrome_json`] / [`TraceSink::write`].
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    pid: u32,
+    spans: Mutex<Vec<SpanEvent>>,
+    counters: Mutex<Vec<CounterEvent>>,
+    /// tid → thread name (first event from a thread wins).
+    threads: Mutex<BTreeMap<u64, String>>,
+}
+
+impl TraceSink {
+    pub fn new() -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            epoch: Instant::now(),
+            pid: std::process::id(),
+            spans: Mutex::new(Vec::new()),
+            counters: Mutex::new(Vec::new()),
+            threads: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    /// Register the calling thread in the name table and return its tid.
+    fn register_thread(&self) -> u64 {
+        let tid = thread_tid();
+        let mut g = lock_recover(&self.threads);
+        g.entry(tid).or_insert_with(|| {
+            std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"))
+        });
+        tid
+    }
+
+    fn ts_us(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a complete span directly (the RAII guards funnel here; also
+    /// public so emitter/parser tests can build sinks without installing
+    /// one globally). The current thread's [`case_scope`], if any, is
+    /// attached as a `"case"` arg unless the caller already supplied one.
+    pub fn record_span(&self, name: &str, start: Instant, dur: Duration, args: &[(&str, ArgV)]) {
+        self.push_span(name.to_string(), start, dur, own_args(args));
+    }
+
+    fn push_span(
+        &self,
+        name: String,
+        start: Instant,
+        dur: Duration,
+        mut args: Vec<(String, OwnedArg)>,
+    ) {
+        let tid = self.register_thread();
+        if !args.iter().any(|(k, _)| k == "case") {
+            CASE.with(|c| {
+                if let Some(case) = c.borrow().as_deref() {
+                    args.push(("case".to_string(), OwnedArg::Str(case.to_string())));
+                }
+            });
+        }
+        let ev = SpanEvent {
+            name,
+            ts_us: self.ts_us(start),
+            dur_us: dur.as_micros() as u64,
+            tid,
+            args,
+        };
+        lock_recover(&self.spans).push(ev);
+    }
+
+    /// Record a counter sample on the named track.
+    pub fn record_counter(&self, track: &str, value: f64) {
+        let tid = self.register_thread();
+        let ev = CounterEvent {
+            track: track.to_string(),
+            ts_us: self.ts_us(Instant::now()),
+            tid,
+            value,
+        };
+        lock_recover(&self.counters).push(ev);
+    }
+
+    pub fn span_count(&self) -> usize {
+        lock_recover(&self.spans).len()
+    }
+
+    pub fn counter_count(&self) -> usize {
+        lock_recover(&self.counters).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.span_count() == 0 && self.counter_count() == 0
+    }
+
+    /// Serialize everything recorded so far as Chrome Trace Event JSON.
+    pub fn to_chrome_json(&self) -> String {
+        chrome::emit(self)
+    }
+
+    /// Write the Chrome Trace Event JSON to a file.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+
+    fn snapshot_spans(&self) -> Vec<SpanEvent> {
+        lock_recover(&self.spans).clone()
+    }
+
+    fn snapshot_counters(&self) -> Vec<CounterEvent> {
+        lock_recover(&self.counters).clone()
+    }
+
+    fn snapshot_threads(&self) -> BTreeMap<u64, String> {
+        lock_recover(&self.threads).clone()
+    }
+}
+
+/// RAII guard for an installed trace session. Dropping it lowers the
+/// enable flag and unpublishes the sink; events recorded by spans that are
+/// still live keep going to the sink `Arc` they captured at creation.
+#[derive(Debug)]
+pub struct TraceSession {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::Relaxed);
+        lock_recover(sink_slot()).take();
+    }
+}
+
+/// Publish `sink` as the process-global trace sink and enable tracing
+/// until the returned [`TraceSession`] drops. Blocks while another session
+/// is live (sessions are process-serial); do not nest two sessions on one
+/// thread — the second `install` would deadlock.
+pub fn install(sink: Arc<TraceSink>) -> TraceSession {
+    let serial = lock_recover(&SESSION);
+    *lock_recover(sink_slot()) = Some(sink);
+    ENABLED.store(true, Ordering::Relaxed);
+    TraceSession { _serial: serial }
+}
+
+/// Live half of a [`SpanGuard`]: everything captured at span entry.
+#[derive(Debug)]
+struct SpanLive {
+    sink: Arc<TraceSink>,
+    name: String,
+    args: Vec<(String, OwnedArg)>,
+    t0: Instant,
+}
+
+/// RAII span: records a complete event (entry time + elapsed duration) on
+/// drop. When tracing is disabled the guard is inert — no clock read, no
+/// allocation.
+#[derive(Debug)]
+#[must_use = "a span measures the scope it is alive in"]
+pub struct SpanGuard {
+    live: Option<SpanLive>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(live) = self.live.take() {
+            let dur = live.t0.elapsed();
+            live.sink.push_span(live.name, live.t0, dur, live.args);
+        }
+    }
+}
+
+/// Open a span with no args. See [`span_args`].
+pub fn span(name: &str) -> SpanGuard {
+    span_args(name, &[])
+}
+
+/// Open a named span covering the guard's lifetime, with key/value args
+/// that surface in the trace viewer's detail pane.
+pub fn span_args(name: &str, args: &[(&str, ArgV<'_>)]) -> SpanGuard {
+    let Some(sink) = active_sink() else {
+        return SpanGuard { live: None };
+    };
+    SpanGuard {
+        live: Some(SpanLive {
+            sink,
+            name: name.to_string(),
+            args: own_args(args),
+            t0: Instant::now(),
+        }),
+    }
+}
+
+/// Record a back-dated complete span measured elsewhere (e.g. device
+/// transfer time reported by the engine after the fact). `start` must be
+/// at or after the sink epoch; earlier instants clamp to 0.
+pub fn complete_span(name: &str, start: Instant, dur: Duration, args: &[(&str, ArgV<'_>)]) {
+    if let Some(sink) = active_sink() {
+        sink.push_span(name.to_string(), start, dur, own_args(args));
+    }
+}
+
+/// Record a counter sample (Chrome `ph:"C"`) on the named track.
+pub fn counter(track: &str, value: f64) {
+    if let Some(sink) = active_sink() {
+        sink.record_counter(track, value);
+    }
+}
+
+/// [`counter`] for integer gauges (byte counts, queue depths).
+pub fn counter_u64(track: &str, value: u64) {
+    counter(track, value as f64);
+}
+
+/// RAII case tag: while alive, spans recorded on this thread carry a
+/// `"case"` arg. Scopes nest; the previous tag is restored on drop.
+/// Inert (and free) while tracing is disabled.
+#[derive(Debug)]
+#[must_use = "a case scope tags spans recorded while it is alive"]
+pub struct CaseScope {
+    prev: Option<String>,
+    active: bool,
+}
+
+impl Drop for CaseScope {
+    fn drop(&mut self) {
+        if self.active {
+            CASE.with(|c| *c.borrow_mut() = self.prev.take());
+        }
+    }
+}
+
+/// Tag spans recorded on the current thread with `case` until the
+/// returned scope drops.
+pub fn case_scope(case: &str) -> CaseScope {
+    if !enabled() {
+        return CaseScope { prev: None, active: false };
+    }
+    let prev = CASE.with(|c| c.borrow_mut().replace(case.to_string()));
+    CaseScope { prev, active: true }
+}
+
+#[cfg(test)]
+mod tests {
+    // Lib tests share one process and run concurrently; any test that
+    // *installs* a global session would race sibling tests whose
+    // instrumented production paths emit into the installed sink. The
+    // session/case-scope/zero-cost semantics are therefore covered in the
+    // serialized integration binary `tests/trace.rs`; here we only test
+    // what works against a local, uninstalled sink.
+    use super::*;
+
+    #[test]
+    fn sink_records_spans_counters_and_thread_names() {
+        let sink = TraceSink::new();
+        let t0 = Instant::now();
+        sink.record_span(
+            "stage.mesh",
+            t0,
+            Duration::from_micros(250),
+            &[("case", ArgV::Str("case-7")), ("verts", ArgV::Int(123))],
+        );
+        sink.record_counter("mem.resident_bytes", 4096.0);
+        assert_eq!(sink.span_count(), 1);
+        assert_eq!(sink.counter_count(), 1);
+        assert!(!sink.is_empty());
+
+        let spans = sink.snapshot_spans();
+        assert_eq!(spans[0].name, "stage.mesh");
+        assert_eq!(spans[0].dur_us, 250);
+        assert!(spans[0].args.iter().any(|(k, _)| k == "verts"));
+
+        let threads = sink.snapshot_threads();
+        assert_eq!(threads.len(), 1, "one recording thread registered");
+        let (tid, name) = threads.iter().next().unwrap();
+        assert!(*tid >= 1);
+        assert!(!name.is_empty());
+    }
+
+    #[test]
+    fn back_dated_span_timestamp_is_the_given_start() {
+        let sink = TraceSink::new();
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        sink.record_span("stage.transfer", start, Duration::from_micros(40), &[]);
+        let spans = sink.snapshot_spans();
+        assert_eq!(spans[0].name, "stage.transfer");
+        assert_eq!(spans[0].dur_us, 40);
+        // recorded ~2ms after `start`, but the span timestamp is `start`
+        let wall_us = sink.ts_us(Instant::now());
+        assert!(spans[0].ts_us < wall_us);
+    }
+
+    #[test]
+    fn pre_epoch_starts_clamp_to_zero() {
+        let before = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        let sink = TraceSink::new();
+        sink.record_span("early", before, Duration::from_micros(1), &[]);
+        assert_eq!(sink.snapshot_spans()[0].ts_us, 0);
+    }
+
+    #[test]
+    fn tids_are_stable_per_thread_and_unique_across_threads() {
+        let a = thread_tid();
+        assert_eq!(a, thread_tid(), "tid is stable within a thread");
+        let b = std::thread::spawn(thread_tid).join().unwrap();
+        assert_ne!(a, b, "tids are unique across threads");
+        assert!(a >= 1 && b >= 1);
+    }
+}

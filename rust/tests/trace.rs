@@ -1,0 +1,224 @@
+//! Trace session semantics under concurrency.
+//!
+//! These tests install the process-global tracer, so they cannot live in
+//! the lib test binary: concurrently-scheduled lib tests would emit spans
+//! into an installed sink and race the `enabled()` flag. This binary is
+//! its own process and every test serializes on a file-local mutex.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use radpipe::config::{Backend, FeatureClasses, PipelineConfig};
+use radpipe::dispatch::FeatureExtractor;
+use radpipe::imgproc::ImageTypes;
+use radpipe::io::DatasetManifest;
+use radpipe::pipeline::run_pipeline;
+use radpipe::runtime::{BatchConfig, Batcher, CpuLoopbackBackend, EnginePool};
+use radpipe::synth::{generate_dataset, GenOptions};
+use radpipe::trace::{self, chrome};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_dataset(tag: &str) -> DatasetManifest {
+    let root = std::env::temp_dir().join(format!("radpipe_trace_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    generate_dataset(&root, &GenOptions { scale: 0.003, seed: 5 }).unwrap()
+}
+
+#[test]
+fn multithreaded_extraction_emits_a_well_formed_trace() {
+    let _s = serial();
+    let m = tiny_dataset("well_formed");
+    let cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        read_workers: 3,
+        feature_workers: 4,
+        queue_capacity: 2,
+        cpu_threads: 2,
+        feature_classes: FeatureClasses::parse("all").unwrap(),
+        // the residency tracker only meters filtered volumes (the borrowed
+        // `original` is never held), so LoG must be on for the
+        // mem.resident_bytes counter track to carry samples
+        image_types: ImageTypes::parse("original,log").unwrap(),
+        ..Default::default()
+    };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+
+    let sink = trace::TraceSink::new();
+    let session = trace::install(sink.clone());
+    let report = run_pipeline(&m, &cfg, &ex).unwrap();
+    drop(session);
+    assert!(report.failures.is_empty(), "{:?}", report.failures);
+
+    let parsed = chrome::parse(&sink.to_chrome_json()).unwrap();
+
+    // pid/tid/timestamp sanity on every event of the concurrent run
+    let pid = std::process::id() as u64;
+    for ev in parsed.spans().chain(parsed.counters()) {
+        assert_eq!(ev.pid, pid, "{}", ev.name);
+        assert!(ev.tid >= 1, "{}", ev.name);
+        assert!(ev.ts >= 0.0 && ev.dur >= 0.0, "{}", ev.name);
+    }
+
+    // spans are appended when their guard drops, so per-thread end times
+    // are non-decreasing (up to ~2 µs of µs-truncation jitter)
+    let mut last_end: HashMap<u64, f64> = HashMap::new();
+    for ev in parsed.spans() {
+        let prev = last_end.entry(ev.tid).or_insert(0.0);
+        assert!(
+            ev.end_ts() + 10.0 >= *prev,
+            "tid {} span '{}' ends at {} µs, after one ending at {} µs",
+            ev.tid,
+            ev.name,
+            ev.end_ts(),
+            prev
+        );
+        *prev = prev.max(ev.end_ts());
+    }
+
+    // every manifest case is attributed on at least one span
+    let cases = parsed.span_cases();
+    for e in &m.cases {
+        assert!(cases.contains(&e.case_id), "case {} missing from trace", e.case_id);
+    }
+
+    // the full-stage span inventory of an all-classes CPU run
+    let names = parsed.span_names();
+    for want in [
+        "case",
+        "stage.read",
+        "stage.read_image",
+        "stage.preprocess",
+        "stage.mesh",
+        "stage.diameters",
+        "stage.derived",
+        "stage.texture",
+    ] {
+        assert!(names.contains(want), "{want} missing from {names:?}");
+    }
+
+    // pipeline worker threads carry their names in the trace metadata
+    let tnames: Vec<&str> = parsed.thread_names().values().map(String::as_str).collect();
+    assert!(tnames.iter().any(|n| n.starts_with("read-")), "{tnames:?}");
+    assert!(tnames.iter().any(|n| n.starts_with("extract-")), "{tnames:?}");
+
+    // derived-image residency shows up as a counter track with values
+    assert!(
+        parsed.counter_tracks().contains("mem.resident_bytes"),
+        "{:?}",
+        parsed.counter_tracks()
+    );
+    for ev in parsed.counters() {
+        assert!(ev.arg_num("value").is_some(), "counter {} has no value", ev.name);
+    }
+}
+
+#[test]
+fn tracing_off_emits_nothing_and_preserves_results() {
+    let _s = serial();
+    let m = tiny_dataset("off");
+    let cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 1,
+        feature_workers: 2,
+        feature_classes: FeatureClasses::parse("all").unwrap(),
+        ..Default::default()
+    };
+
+    // no session installed: span guards are inert, uninstalled sinks stay
+    // empty, and the whole pipeline runs with the tracer disabled
+    assert!(!trace::enabled());
+    let idle = trace::TraceSink::new();
+    {
+        let _sp = trace::span("never-recorded");
+    }
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let off = run_pipeline(&m, &cfg, &ex).unwrap();
+    assert!(idle.is_empty(), "disabled tracer must record nothing");
+
+    // the same extraction traced: bit-identical features, same metrics
+    let sink = trace::TraceSink::new();
+    let session = trace::install(sink.clone());
+    let ex2 = FeatureExtractor::new(&cfg).unwrap();
+    let on = run_pipeline(&m, &cfg, &ex2).unwrap();
+    drop(session);
+    assert!(!trace::enabled(), "session drop disables the tracer");
+    assert!(sink.span_count() > 0, "enabled tracer must record the run");
+
+    assert_eq!(off.results.len(), on.results.len());
+    for (a, b) in off.results.iter().zip(&on.results) {
+        assert_eq!(a.case_id, b.case_id);
+        assert_eq!(a.features.mesh_volume, b.features.mesh_volume);
+        assert_eq!(a.features.maximum_3d_diameter, b.features.maximum_3d_diameter);
+        assert_eq!(a.texture, b.texture, "{}", a.case_id);
+        assert_eq!(a.first_order, b.first_order, "{}", a.case_id);
+        assert_eq!(a.derived, b.derived, "{}", a.case_id);
+    }
+    for stage in ["stage.read", "stage.preprocess", "stage.mesh", "stage.diameters"] {
+        assert_eq!(
+            off.metrics.timer(stage).map(|t| t.count),
+            on.metrics.timer(stage).map(|t| t.count),
+            "{stage}"
+        );
+    }
+}
+
+#[test]
+fn batcher_flushes_are_traced_with_occupancy_args() {
+    let _s = serial();
+    let sink = trace::TraceSink::new();
+    let session = trace::install(sink.clone());
+
+    let b = Batcher::new(
+        Arc::new(CpuLoopbackBackend::new(Duration::ZERO)),
+        BatchConfig { batch_size: 1, linger: Duration::from_millis(1) },
+    );
+    let verts: Vec<f32> = (0..30).map(|i| (i % 7) as f32).collect();
+    b.diameters(verts).unwrap();
+    drop(b);
+    drop(session);
+
+    let parsed = chrome::parse(&sink.to_chrome_json()).unwrap();
+    let flush =
+        parsed.spans().find(|e| e.name == "batch.flush").expect("batch.flush span in trace");
+    assert_eq!(flush.arg_num("items"), Some(1.0));
+    assert_eq!(flush.arg_num("bucket"), Some(512.0));
+    assert_eq!(flush.arg_str("trigger"), Some("size"));
+}
+
+#[test]
+fn engine_threads_trace_requests_even_when_init_fails() {
+    let _s = serial();
+    let dir = std::env::temp_dir().join("radpipe_trace_engine");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("d512.hlo.txt"), "HloModule fake").unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "name=diameter bucket=512 file=d512.hlo.txt inputs=f32[512,3] outputs=1\n",
+    )
+    .unwrap();
+
+    let sink = trace::TraceSink::new();
+    let session = trace::install(sink.clone());
+    let pool = EnginePool::start(&dir, 1).unwrap();
+    // the vendored PJRT stub fails client construction: the request still
+    // round-trips through the engine thread and is traced with its outcome
+    let err = pool.diameters(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap_err();
+    assert!(format!("{err:#}").contains("PJRT"), "{err:#}");
+    drop(pool); // joins the engine thread, flushing its spans into the sink
+    drop(session);
+
+    let parsed = chrome::parse(&sink.to_chrome_json()).unwrap();
+    let req = parsed
+        .spans()
+        .find(|e| e.name == "engine.request" && e.arg_str("kind") == Some("diameters"))
+        .expect("engine.request span in trace");
+    assert_eq!(req.arg_str("outcome"), Some("init_failed"));
+    let tnames: Vec<&str> = parsed.thread_names().values().map(String::as_str).collect();
+    assert!(tnames.contains(&"pjrt-engine"), "{tnames:?}");
+}
