@@ -13,13 +13,15 @@ use crate::experiments;
 use crate::gpusim::{cpu_profiles, gpu_profiles};
 use crate::pipeline::run_pipeline;
 use crate::report::{JsonValue, Table};
-use crate::synth::{generate_dataset, GenOptions};
+use crate::synth::{generate_dataset, generate_multilabel_dataset, GenOptions};
 
 const USAGE: &str = "\
 radpipe — PyRadiomics-cuda reproduction pipeline
 
 USAGE:
   radpipe gen-data  --out DIR [--scale F] [--seed N]
+                    [--multilabel]       (3-case label-map fixture: labels
+                                          1..3 plus a declared-empty 4)
   radpipe extract   --data DIR [--config FILE] [--backend auto|cpu|accelerated]
                     [--artifacts DIR] [--json FILE] [--csv FILE] [--workers N]
                     [--engine-count N] [--batch-size N] [--batch-linger-ms MS]
@@ -28,6 +30,13 @@ USAGE:
                     [--gldm-alpha F]
                     [--image-types original,log,wavelet|all] [--log-sigmas 1.0,3.0]
                     [--resampled-spacing MM] [--wavelet-levels N]
+                    [--labels 1,3|all]   (label-map masks: which ROIs to
+                                          extract, one result row per label)
+                    [--slab-io]          (scan masks in z-slabs, materialise
+                                          only the ROI crop)
+                    [--memory-budget N[K|M|G|T]]
+                                         (throttle case admission to cap
+                                          in-flight pipeline bytes; 0 = off)
                     [--synthetic-image]  (stand-in intensities for cases
                                           without an image= manifest entry)
                     [--trace-out FILE]   (Chrome Trace Event JSON of the run)
@@ -81,13 +90,33 @@ fn gen_data(args: &Args) -> Result<()> {
         scale: args.opt_parse::<f64>("scale")?.unwrap_or(0.125),
         seed: args.opt_parse::<u64>("seed")?.unwrap_or(7),
     };
+    let multilabel = args.flag("multilabel");
     args.finish()?;
-    let m = generate_dataset(&out, &opts)?;
-    let mut t = Table::new(vec!["case", "dims", "vertices"]);
-    for e in &m.cases {
-        t.row(vec![e.case_id.clone(), e.dims.to_string(), e.target_vertices.to_string()]);
+    let m = if multilabel {
+        generate_multilabel_dataset(&out, &opts)?
+    } else {
+        generate_dataset(&out, &opts)?
+    };
+    if multilabel {
+        let mut t = Table::new(vec!["case", "dims", "vertices", "labels"]);
+        for e in &m.cases {
+            let labels =
+                e.labels.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",");
+            t.row(vec![
+                e.case_id.clone(),
+                e.dims.to_string(),
+                e.target_vertices.to_string(),
+                labels,
+            ]);
+        }
+        print!("{}", t.to_text());
+    } else {
+        let mut t = Table::new(vec!["case", "dims", "vertices"]);
+        for e in &m.cases {
+            t.row(vec![e.case_id.clone(), e.dims.to_string(), e.target_vertices.to_string()]);
+        }
+        print!("{}", t.to_text());
     }
-    print!("{}", t.to_text());
     println!("wrote {} cases to {}", m.cases.len(), out.display());
     Ok(())
 }
@@ -161,6 +190,15 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
         );
         cfg.wavelet_levels = n;
     }
+    if let Some(list) = args.opt("labels") {
+        cfg.labels = crate::config::LabelSelection::parse(list).context("--labels")?;
+    }
+    if args.flag("slab-io") {
+        cfg.slab_io = true;
+    }
+    if let Some(s) = args.opt("memory-budget") {
+        cfg.memory_budget = crate::config::parse_byte_size(s).context("--memory-budget")?;
+    }
     if args.flag("synthetic-image") {
         cfg.synthetic_image = true;
     }
@@ -170,6 +208,7 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(p) = args.opt("metrics-out") {
         cfg.metrics_out = Some(PathBuf::from(p));
     }
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -213,25 +252,35 @@ fn extract(args: &Args) -> Result<()> {
     }
 
     let texture_on = cfg.feature_classes.texture();
-    let mut headers = vec![
-        "case", "verts", "MeshVolume", "SurfaceArea", "Max3DDiam", "path",
+    // one row per (case, label) under a labels selector; the label column
+    // only appears then, so legacy single-ROI outputs are byte-stable
+    let label_on = !matches!(cfg.labels, crate::config::LabelSelection::Unset);
+    let mut headers = vec!["case"];
+    if label_on {
+        headers.push("label");
+    }
+    headers.extend([
+        "verts", "MeshVolume", "SurfaceArea", "Max3DDiam", "path",
         "preprocess[ms]",
-    ];
+    ]);
     if texture_on {
         headers.push("texture[ms]");
     }
     headers.push("total[ms]");
     let mut t = Table::new(headers);
     for r in &report.results {
-        let mut row = vec![
-            r.case_id.clone(),
+        let mut row = vec![r.case_id.clone()];
+        if label_on {
+            row.push(r.label.map(|l| l.to_string()).unwrap_or_default());
+        }
+        row.extend([
             r.features.vertex_count.to_string(),
             format!("{:.1}", r.features.mesh_volume),
             format!("{:.1}", r.features.surface_area),
             format!("{:.2}", r.features.maximum_3d_diameter),
             format!("{:?}", r.path),
             format!("{:.1}", r.timing.preprocess.as_secs_f64() * 1e3),
-        ];
+        ]);
         if texture_on {
             row.push(format!("{:.1}", r.timing.texture.as_secs_f64() * 1e3));
         }
@@ -259,6 +308,9 @@ fn extract(args: &Args) -> Result<()> {
         for (r, features) in report.results.iter().zip(&per_case) {
             let mut c = JsonValue::obj();
             c.set("case", r.case_id.as_str());
+            if let Some(l) = r.label {
+                c.set("label", l as usize);
+            }
             c.set("path", format!("{:?}", r.path));
             for (name, value) in features {
                 c.set(name, *value);
@@ -285,13 +337,21 @@ fn extract(args: &Args) -> Result<()> {
                 }
             }
         }
-        let mut headers = vec!["case".to_string(), "path".to_string()];
+        let mut headers = vec!["case".to_string()];
+        if label_on {
+            headers.push("label".to_string());
+        }
+        headers.push("path".to_string());
         headers.extend(names.iter().cloned());
         let mut csv = Table::new(headers);
         for (r, features) in report.results.iter().zip(&per_case) {
             let have: std::collections::HashMap<&str, f64> =
                 features.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-            let mut row = vec![r.case_id.clone(), format!("{:?}", r.path)];
+            let mut row = vec![r.case_id.clone()];
+            if label_on {
+                row.push(r.label.map(|l| l.to_string()).unwrap_or_default());
+            }
+            row.push(format!("{:?}", r.path));
             row.extend(names.iter().map(|n| match have.get(n.as_str()) {
                 Some(v) => format!("{v}"),
                 None => "NaN".to_string(),
@@ -935,5 +995,82 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.to_string().contains("--batch-size"));
+    }
+
+    #[test]
+    fn extract_labels_all_writes_per_label_rows_and_isolated_failures() {
+        // mirrors the CI texture-matrix multilabel step: `--labels all` on
+        // the multilabel fixture yields one row per (case, label), and the
+        // deliberately-empty declared label 4 is the run's only failure
+        let dir = std::env::temp_dir().join("radpipe_cli_multilabel_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.003", "--seed", "5",
+            "--multilabel",
+        ]))
+        .unwrap();
+        let json = dir.join("out.json");
+        let csv = dir.join("out.csv");
+        let err = dispatch(argv(&[
+            "extract",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "cpu",
+            "--features",
+            "shape,firstorder",
+            "--labels",
+            "all",
+            "--json",
+            json.to_str().unwrap(),
+            "--csv",
+            csv.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        // reports are written before the per-label failure turns the exit
+        // status — the CI step relies on exactly this
+        assert!(err.to_string().contains("failed"), "{err:#}");
+        let json_text = std::fs::read_to_string(&json).unwrap();
+        assert!(json_text.contains("\"failures\":1"), "only the empty label fails");
+        assert!(json_text.contains("\"label\":1"));
+        assert!(json_text.contains("\"label\":2"));
+        assert!(json_text.contains("\"label\":3"));
+        assert!(!json_text.contains("\"label\":4"), "the empty label has no row");
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("case,label,path,MeshVolume"), "{csv_text}");
+        // 3 cases × 3 populated labels + header
+        assert_eq!(csv_text.lines().count(), 10, "{csv_text}");
+    }
+
+    #[test]
+    fn extract_accepts_slab_and_budget_flags() {
+        let dir = std::env::temp_dir().join("radpipe_cli_slab_budget_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--backend", "cpu",
+            "--slab-io", "--memory-budget", "64M",
+        ]))
+        .unwrap();
+        // slab IO and resampling are mutually exclusive: caught at the
+        // CLI boundary by cfg.validate(), not deep in a worker
+        let err = dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--backend", "cpu",
+            "--slab-io", "--resampled-spacing", "1.5",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("slab_io"), "{err:#}");
+        // bad knobs are clear errors
+        assert!(dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--memory-budget", "wat",
+        ]))
+        .is_err());
+        assert!(dispatch(argv(&[
+            "extract", "--data", dir.to_str().unwrap(), "--labels", "0",
+        ]))
+        .is_err());
     }
 }

@@ -184,6 +184,84 @@ pub fn parse_sigmas(s: &str) -> Result<Vec<f64>> {
 /// anything deeper than this exceeds any realistic ROI extent.
 pub const MAX_WAVELET_LEVELS: usize = 8;
 
+/// Which labels of a label-map mask to extract.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum LabelSelection {
+    /// No selector: masks must be binary or single-label (collapsed to
+    /// 0/1); a multi-label mask is a per-case error naming the labels
+    /// found.
+    #[default]
+    Unset,
+    /// Extract every label — the union of the labels observed in the mask
+    /// and any inventory the manifest declares (`labels=`), so a
+    /// declared-but-empty label surfaces as a per-label error.
+    All,
+    /// Extract exactly these label ids (kept sorted and distinct).
+    List(Vec<u16>),
+}
+
+impl LabelSelection {
+    /// Parse `"all"` or a comma-separated id list like `"1,3"`. Label 0
+    /// is background and cannot be selected; an empty list is an error.
+    pub fn parse(s: &str) -> Result<LabelSelection> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("all") {
+            return Ok(LabelSelection::All);
+        }
+        let mut ids = Vec::new();
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let id: u16 = tok
+                .parse()
+                .with_context(|| format!("bad label id '{tok}' (u16, or \"all\")"))?;
+            if id == 0 {
+                bail!("label 0 is background and cannot be extracted");
+            }
+            ids.push(id);
+        }
+        if ids.is_empty() {
+            bail!("labels must name at least one id, e.g. \"1,3\", or \"all\"");
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        Ok(LabelSelection::List(ids))
+    }
+
+    /// True when a selector was given (per-label extraction mode).
+    pub fn is_set(&self) -> bool {
+        !matches!(self, LabelSelection::Unset)
+    }
+}
+
+/// Parse a byte size: a plain integer (bytes) or one with a binary
+/// K/M/G/T suffix, e.g. `"512M"`. Shared by the `memory_budget` TOML key
+/// and the `--memory-budget` CLI flag.
+pub fn parse_byte_size(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let mut chars = s.chars();
+    let Some(last) = chars.next_back() else {
+        bail!("empty byte size (use e.g. \"512M\" or a byte count)");
+    };
+    let (num, mult) = match last.to_ascii_uppercase() {
+        'K' => (chars.as_str(), 1u64 << 10),
+        'M' => (chars.as_str(), 1 << 20),
+        'G' => (chars.as_str(), 1 << 30),
+        'T' => (chars.as_str(), 1 << 40),
+        _ => (s, 1),
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .with_context(|| format!("bad byte size '{s}' (e.g. \"512M\", \"2G\", or bytes)"))?;
+    if !(v >= 0.0 && v.is_finite()) {
+        bail!("byte size must be non-negative and finite, got '{s}'");
+    }
+    Ok((v * mult as f64) as u64)
+}
+
 /// Typed pipeline configuration (defaults reflect the single-core testbed).
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -246,6 +324,21 @@ pub struct PipelineConfig {
     pub trace_out: Option<PathBuf>,
     /// Write the `radpipe.metrics/1` snapshot of the run to this path.
     pub metrics_out: Option<PathBuf>,
+    /// Label selector for multi-label masks: unset (binary masks only),
+    /// `all`, or an explicit id list. When set, each case yields one
+    /// extraction per selected label from a single read/resample/derive
+    /// pass.
+    pub labels: LabelSelection,
+    /// Slab-streamed reading: scan each mask in z-planes to find the ROI
+    /// bounding box, then materialise only the crop — never the full
+    /// grid. Requires native grids (incompatible with resampling) and an
+    /// image on the same grid as its mask.
+    pub slab_io: bool,
+    /// Pipeline-wide memory budget in bytes for in-flight case volumes;
+    /// the read stage throttles admission to stay under it (one case is
+    /// always admitted, so an undersized budget degrades to serial
+    /// execution). `0` = unlimited.
+    pub memory_budget: u64,
 }
 
 impl Default for PipelineConfig {
@@ -274,6 +367,9 @@ impl Default for PipelineConfig {
             synthetic_image: false,
             trace_out: None,
             metrics_out: None,
+            labels: LabelSelection::Unset,
+            slab_io: false,
+            memory_budget: 0,
         }
     }
 }
@@ -354,10 +450,32 @@ impl PipelineConfig {
                 "synthetic_image" => cfg.synthetic_image = value.as_bool()?,
                 "trace_out" => cfg.trace_out = Some(PathBuf::from(value.as_str()?)),
                 "metrics_out" => cfg.metrics_out = Some(PathBuf::from(value.as_str()?)),
+                "labels" => cfg.labels = LabelSelection::parse(value.as_str()?)?,
+                "slab_io" => cfg.slab_io = value.as_bool()?,
+                "memory_budget" => {
+                    cfg.memory_budget = if let Ok(s) = value.as_str() {
+                        parse_byte_size(s)?
+                    } else {
+                        value.as_usize()? as u64
+                    }
+                }
                 other => bail!("unknown [pipeline] key '{other}'"),
             }
         }
+        cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Cross-key validation — run after TOML parse and again after CLI
+    /// flags overlay the config.
+    pub fn validate(&self) -> Result<()> {
+        if self.slab_io && self.resampled_spacing > 0.0 {
+            bail!(
+                "slab_io is incompatible with resampled_spacing: resampling needs the \
+                 full source grid in memory (disable one of the two)"
+            );
+        }
+        Ok(())
     }
 }
 
@@ -569,6 +687,72 @@ wavelet_levels = 2
         assert!(PipelineConfig::from_toml("[pipeline]\nwavelet_levels = 0\n").is_err());
         assert!(PipelineConfig::from_toml("[pipeline]\nwavelet_levels = 9\n").is_err());
         assert!(PipelineConfig::from_toml("[pipeline]\nwavelet_levels = 8\n").is_ok());
+    }
+
+    #[test]
+    fn label_selection_parses() {
+        assert_eq!(LabelSelection::parse("all").unwrap(), LabelSelection::All);
+        assert_eq!(LabelSelection::parse("ALL").unwrap(), LabelSelection::All);
+        assert_eq!(
+            LabelSelection::parse("3, 1,3").unwrap(),
+            LabelSelection::List(vec![1, 3]),
+            "sorted, deduped"
+        );
+        assert!(LabelSelection::parse("0").is_err(), "background not selectable");
+        assert!(LabelSelection::parse("").is_err());
+        assert!(LabelSelection::parse("x").is_err());
+        assert!(!LabelSelection::Unset.is_set());
+        assert!(LabelSelection::All.is_set());
+    }
+
+    #[test]
+    fn out_of_core_knobs_parse_from_toml() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.labels, LabelSelection::Unset);
+        assert!(!c.slab_io);
+        assert_eq!(c.memory_budget, 0, "unlimited by default");
+        let text = r#"
+[pipeline]
+labels = "1,3"
+slab_io = true
+memory_budget = "512M"
+"#;
+        let c = PipelineConfig::from_toml(text).unwrap();
+        assert_eq!(c.labels, LabelSelection::List(vec![1, 3]));
+        assert!(c.slab_io);
+        assert_eq!(c.memory_budget, 512 << 20);
+        // integer byte counts work too
+        let c = PipelineConfig::from_toml("[pipeline]\nmemory_budget = 4096\n").unwrap();
+        assert_eq!(c.memory_budget, 4096);
+        assert!(PipelineConfig::from_toml("[pipeline]\nlabels = \"0\"\n").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nmemory_budget = \"wat\"\n").is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_binary_suffixes() {
+        assert_eq!(parse_byte_size("4096").unwrap(), 4096);
+        assert_eq!(parse_byte_size("2K").unwrap(), 2048);
+        assert_eq!(parse_byte_size("1.5m").unwrap(), 3 << 19);
+        assert_eq!(parse_byte_size("2G").unwrap(), 2 << 30);
+        assert_eq!(parse_byte_size("1T").unwrap(), 1 << 40);
+        assert!(parse_byte_size("").is_err());
+        assert!(parse_byte_size("-1K").is_err());
+        assert!(parse_byte_size("many").is_err());
+    }
+
+    #[test]
+    fn slab_io_conflicts_with_resampling() {
+        let text = "[pipeline]\nslab_io = true\nresampled_spacing = 1.5\n";
+        let err = PipelineConfig::from_toml(text).unwrap_err();
+        assert!(err.to_string().contains("incompatible"), "{err}");
+        assert!(PipelineConfig::from_toml("[pipeline]\nslab_io = true\n").is_ok());
+        // the standalone validator catches a CLI-built conflict too
+        let c = PipelineConfig {
+            slab_io: true,
+            resampled_spacing: 2.0,
+            ..PipelineConfig::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::parallel::{compute_diameters, Strategy};
 use crate::runtime::{
     BatchConfig, BatchStatsSnapshot, Batcher, EngineHandle, EnginePool, ExecTiming,
 };
-use crate::volume::{crop_box, crop_to_roi, MaskStats, VoxelGrid};
+use crate::volume::{crop_box, crop_to_roi, crop_to_roi_labels, LabelMask, MaskStats, VoxelGrid};
 
 /// Seed for the synthetic stand-in intensities used when a case has no
 /// image volume *and* the `synthetic_image` opt-in is set; fixed so the
@@ -382,52 +382,7 @@ impl FeatureExtractor {
         drop(sp);
         timing.preprocess = t.elapsed();
 
-        let t = Instant::now();
-        let sp = crate::trace::span("stage.mesh");
-        let mesh = mesh_roi(&cropped);
-        drop(sp);
-        timing.marching = t.elapsed();
-
-        let vertex_count = mesh.vertices.len();
-        let sp = crate::trace::span_args(
-            "stage.diameters",
-            &[("verts", crate::trace::ArgV::Int(vertex_count as u64))],
-        );
-        let t_diam = Instant::now();
-        let (diam, path) = if let Some(batcher) = &self.batcher {
-            match self.accelerated_diameters(batcher, &mesh) {
-                Ok((d, exec)) => {
-                    timing.transfer = exec.transfer;
-                    timing.diameters = exec.execute;
-                    if exec.transfer > Duration::ZERO {
-                        // engine-side upload time, surfaced on this case's
-                        // timeline (the precise engine-thread placement is
-                        // the engine.transfer span)
-                        crate::trace::complete_span("stage.transfer", t_diam, exec.transfer, &[]);
-                    }
-                    (d, PathTaken::Accelerated)
-                }
-                Err(err) if self.backend == Backend::Auto => {
-                    eprintln!("radpipe: accelerated diameters failed ({err:#}); CPU fallback");
-                    let t = Instant::now();
-                    let d = self.cpu_diameters(&mesh);
-                    timing.diameters = t.elapsed();
-                    (d, PathTaken::CpuFallback)
-                }
-                Err(err) => return Err(err),
-            }
-        } else {
-            let t = Instant::now();
-            let d = self.cpu_diameters(&mesh);
-            timing.diameters = t.elapsed();
-            (d, PathTaken::CpuFallback)
-        };
-        drop(sp);
-
-        let t = Instant::now();
-        let features =
-            compute_shape_features(&cropped, &mask_stats, &mesh.stats, &diam, vertex_count);
-        timing.derive = t.elapsed();
+        let (features, path) = self.mesh_and_shape(&cropped, &mask_stats, &mut timing)?;
 
         let derived = if self.classes.needs_image() && mask_stats.count > 0 {
             // Stream one derived image at a time through feature
@@ -561,6 +516,340 @@ impl FeatureExtractor {
             d.dxz_sq = d.dxz_sq.max(planar[2]);
             d
         }
+    }
+
+    /// The shape half of one extraction: marching cubes on the cropped
+    /// ROI, diameters (accelerated with fallback per the backend policy),
+    /// shape features. Fills `timing.marching/transfer/diameters/derive`.
+    /// Shared by the binary-mask path and the per-label path so both
+    /// produce bit-identical shape features.
+    fn mesh_and_shape(
+        &self,
+        cropped: &VoxelGrid<u8>,
+        mask_stats: &MaskStats,
+        timing: &mut CaseTiming,
+    ) -> Result<(ShapeFeatures, PathTaken)> {
+        let t = Instant::now();
+        let sp = crate::trace::span("stage.mesh");
+        let mesh = mesh_roi(cropped);
+        drop(sp);
+        timing.marching = t.elapsed();
+
+        let vertex_count = mesh.vertices.len();
+        let sp = crate::trace::span_args(
+            "stage.diameters",
+            &[("verts", crate::trace::ArgV::Int(vertex_count as u64))],
+        );
+        let t_diam = Instant::now();
+        let (diam, path) = if let Some(batcher) = &self.batcher {
+            match self.accelerated_diameters(batcher, &mesh) {
+                Ok((d, exec)) => {
+                    timing.transfer = exec.transfer;
+                    timing.diameters = exec.execute;
+                    if exec.transfer > Duration::ZERO {
+                        // engine-side upload time, surfaced on this case's
+                        // timeline (the precise engine-thread placement is
+                        // the engine.transfer span)
+                        crate::trace::complete_span("stage.transfer", t_diam, exec.transfer, &[]);
+                    }
+                    (d, PathTaken::Accelerated)
+                }
+                Err(err) if self.backend == Backend::Auto => {
+                    eprintln!("radpipe: accelerated diameters failed ({err:#}); CPU fallback");
+                    let t = Instant::now();
+                    let d = self.cpu_diameters(&mesh);
+                    timing.diameters = t.elapsed();
+                    (d, PathTaken::CpuFallback)
+                }
+                Err(err) => return Err(err),
+            }
+        } else {
+            let t = Instant::now();
+            let d = self.cpu_diameters(&mesh);
+            timing.diameters = t.elapsed();
+            (d, PathTaken::CpuFallback)
+        };
+        drop(sp);
+
+        let t = Instant::now();
+        let features =
+            compute_shape_features(cropped, mask_stats, &mesh.stats, &diam, vertex_count);
+        timing.derive = t.elapsed();
+        Ok((features, path))
+    }
+
+    /// Per-label extraction from a label map: **one** shared
+    /// read/resample/derive pass, N per-label feature extractions.
+    ///
+    /// Shared preparation — optional label-preserving resample, the union
+    /// ROI crop over all labels, image alignment and one image crop to the
+    /// union box, and (with a real image) the derived-image filtering —
+    /// happens once per case. Its cost is attached to the **first
+    /// successful label's** `preprocess` timing so whole-run stage totals
+    /// stay truthful, and the `stage.preprocess` span is recorded once per
+    /// case, not once per label.
+    ///
+    /// Each selected label then gets its own binary crop, mesh, diameters,
+    /// shape and intensity features — bit-identical to extracting that
+    /// label from its own binary mask for the `original` image type (the
+    /// per-label crop boxes nest inside the union crop; see
+    /// `crate::volume::crop_to_roi_labels`). LoG/wavelet images are
+    /// filtered on the union crop, so their border values can differ from
+    /// a standalone per-label run — documented in the README.
+    ///
+    /// Per-label failures (a selected label absent from the mask, a
+    /// texture error) are isolated: that label's slot carries the error,
+    /// the other labels complete. A whole-case failure (resample error,
+    /// missing image without the synthetic opt-in) is the outer `Err`.
+    pub fn execute_label_map(
+        &self,
+        case_id: &str,
+        mask: &LabelMask,
+        image: Option<&VoxelGrid<f32>>,
+        labels: &[u16],
+    ) -> Result<Vec<(u16, Result<Extraction>)>> {
+        let t_shared = Instant::now();
+        let sp = crate::trace::span("stage.preprocess");
+        let mut grid_c: Cow<VoxelGrid<u16>> = Cow::Borrowed(&mask.grid);
+        if self.resampled_spacing > 0.0 {
+            let target = Vec3::splat(self.resampled_spacing);
+            if mask.grid.spacing != target {
+                grid_c = Cow::Owned(
+                    crate::imgproc::resample_labels(
+                        &mask.grid,
+                        target,
+                        self.strategy,
+                        self.cpu_threads,
+                    )
+                    .context("resample label mask onto resampled_spacing")?,
+                );
+            }
+        }
+        let (ucrop, uoff) = crop_to_roi_labels(&grid_c);
+        // Image alignment mirrors prepare_grids: the resampled label grid
+        // has the same dims/spacing a resampled binary mask would have
+        // (identical nearest-neighbour index math), so a standalone binary
+        // run resamples the image onto the very same grid.
+        let image_c: Option<Cow<VoxelGrid<f32>>> = match image {
+            None => None,
+            Some(_) if !self.classes.needs_image() => None,
+            Some(img) if img.dims == grid_c.dims && img.spacing == grid_c.spacing => {
+                Some(Cow::Borrowed(img))
+            }
+            Some(img) => Some(Cow::Owned(
+                crate::imgproc::resample_image_to_grid(
+                    img,
+                    grid_c.dims,
+                    grid_c.spacing,
+                    self.strategy,
+                    self.cpu_threads,
+                )
+                .with_context(|| {
+                    format!(
+                        "auto-resample image (dims {}, spacing {:?}) onto the mask \
+                         grid (dims {}, spacing {:?})",
+                        img.dims, img.spacing, grid_c.dims, grid_c.spacing
+                    )
+                })?,
+            )),
+        };
+        let uimage = image_c.as_ref().map(|img| crop_box(&**img, uoff, ucrop.dims));
+        drop(sp);
+        let mut shared_preprocess = t_shared.elapsed();
+
+        if self.classes.needs_image() && image.is_none() && !self.synthetic_image {
+            bail!(
+                "case {case_id}: intensity feature classes are enabled but this case \
+                 has no image volume; add `image=<path>` to its manifest entry, or \
+                 explicitly opt in to the synthetic stand-in with --synthetic-image / \
+                 `synthetic_image = true`"
+            );
+        }
+
+        // Per-label shape pass: binary crop, mesh, diameters, shape.
+        struct LabelWork {
+            label: u16,
+            cropped: VoxelGrid<u8>,
+            off_local: (usize, usize, usize),
+            features: ShapeFeatures,
+            timing: CaseTiming,
+            path: PathTaken,
+            derived: Vec<DerivedImageFeatures>,
+            error: Option<anyhow::Error>,
+        }
+        let mut works: Vec<(u16, Result<LabelWork>)> = Vec::with_capacity(labels.len());
+        for &label in labels {
+            let work = (|| -> Result<LabelWork> {
+                let t = Instant::now();
+                let binary = ucrop.map(|v| u8::from(v == label));
+                let (cropped, off_local) = crop_to_roi(&binary);
+                let mask_stats = MaskStats::compute(&cropped);
+                if mask_stats.count == 0 {
+                    bail!(
+                        "case {case_id} label {label}: the mask has no voxels with \
+                         this label (selected via --labels / the manifest inventory)"
+                    );
+                }
+                let mut timing = CaseTiming {
+                    preprocess: t.elapsed(),
+                    ..CaseTiming::default()
+                };
+                let (features, path) =
+                    self.mesh_and_shape(&cropped, &mask_stats, &mut timing)?;
+                Ok(LabelWork {
+                    label,
+                    cropped,
+                    off_local,
+                    features,
+                    timing,
+                    path,
+                    derived: Vec::new(),
+                    error: None,
+                })
+            })();
+            works.push((label, work));
+        }
+
+        // Intensity pass. With a real image the derived images are
+        // filtered ONCE on the union crop and every label extracts from
+        // its own sub-crop inside the visitor callback; the synthetic
+        // stand-in is a function of each label's own crop, so nothing can
+        // be shared there and each label derives its own images.
+        if self.classes.needs_image() {
+            if let Some(uimg) = &uimage {
+                let t = Instant::now();
+                let _sp = crate::trace::span("stage.derived");
+                let opts = self.imgproc_options();
+                let mut feature_time = Duration::ZERO;
+                for_each_derived_image(uimg, &opts, |d| {
+                    for w in works.iter_mut().filter_map(|(_, r)| r.as_mut().ok()) {
+                        if w.error.is_some() {
+                            continue;
+                        }
+                        let ft = Instant::now();
+                        let _sp = crate::trace::span_args(
+                            "stage.texture",
+                            &[("image", crate::trace::ArgV::Str(&d.name))],
+                        );
+                        let img_k = crop_box(d.image, w.off_local, w.cropped.dims);
+                        let first_order = if self.classes.first_order {
+                            compute_first_order_with(&img_k, &w.cropped, self.discretization())
+                        } else {
+                            None
+                        };
+                        let texture = if self.classes.texture() {
+                            match compute_texture(&img_k, &w.cropped, &self.texture_options()) {
+                                Ok(tx) => tx,
+                                Err(e) => {
+                                    w.error = Some(e.context(format!(
+                                        "case {case_id} label {}: texture features of {}",
+                                        w.label, d.name
+                                    )));
+                                    let dt = ft.elapsed();
+                                    w.timing.texture += dt;
+                                    feature_time += dt;
+                                    continue;
+                                }
+                            }
+                        } else {
+                            None
+                        };
+                        w.derived.push(DerivedImageFeatures {
+                            image: d.name.clone(),
+                            first_order,
+                            texture,
+                        });
+                        let dt = ft.elapsed();
+                        w.timing.texture += dt;
+                        feature_time += dt;
+                    }
+                    Ok(())
+                })?;
+                shared_preprocess += t.elapsed().saturating_sub(feature_time);
+            } else if self.synthetic_image {
+                for w in works.iter_mut().filter_map(|(_, r)| r.as_mut().ok()) {
+                    let t = Instant::now();
+                    let _sp = crate::trace::span("stage.derived");
+                    let img = crate::synth::synthesize_image(&w.cropped, SYNTH_IMAGE_SEED);
+                    let opts = self.imgproc_options();
+                    let mut feature_time = Duration::ZERO;
+                    let label = w.label;
+                    let res = for_each_derived_image(&img, &opts, |d| {
+                        let ft = Instant::now();
+                        let _sp = crate::trace::span_args(
+                            "stage.texture",
+                            &[("image", crate::trace::ArgV::Str(&d.name))],
+                        );
+                        let first_order = if self.classes.first_order {
+                            compute_first_order_with(d.image, &w.cropped, self.discretization())
+                        } else {
+                            None
+                        };
+                        let texture = if self.classes.texture() {
+                            compute_texture(d.image, &w.cropped, &self.texture_options())
+                                .with_context(|| {
+                                    format!(
+                                        "case {case_id} label {label}: texture features \
+                                         of {}",
+                                        d.name
+                                    )
+                                })?
+                        } else {
+                            None
+                        };
+                        w.derived.push(DerivedImageFeatures {
+                            image: d.name,
+                            first_order,
+                            texture,
+                        });
+                        feature_time += ft.elapsed();
+                        Ok(())
+                    });
+                    w.timing.texture += feature_time;
+                    w.timing.preprocess += t.elapsed().saturating_sub(feature_time);
+                    if let Err(e) = res {
+                        w.error = Some(e);
+                    }
+                }
+            }
+        }
+
+        // Assemble: shared prep time rides on the first successful label.
+        let mut shared_left = Some(shared_preprocess);
+        let mut out = Vec::with_capacity(works.len());
+        for (label, work) in works {
+            match work {
+                Err(e) => out.push((label, Err(e))),
+                Ok(w) => {
+                    if let Some(e) = w.error {
+                        out.push((label, Err(e)));
+                        continue;
+                    }
+                    let mut timing = w.timing;
+                    if let Some(shared) = shared_left.take() {
+                        timing.preprocess += shared;
+                    }
+                    let (first_order, texture) = w
+                        .derived
+                        .iter()
+                        .find(|d| d.image == "original")
+                        .map(|d| (d.first_order.clone(), d.texture.clone()))
+                        .unwrap_or((None, None));
+                    out.push((
+                        label,
+                        Ok(Extraction {
+                            features: w.features,
+                            first_order,
+                            texture,
+                            derived: w.derived,
+                            timing,
+                            path: w.path,
+                        }),
+                    ));
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -1010,5 +1299,93 @@ mod tests {
         assert!(ex.batch_stats().is_none(), "no batcher on the CPU path");
         let out = ex.execute_mask(&sphere_mask(12, 4.0)).unwrap();
         assert_eq!(out.path, PathTaken::CpuFallback);
+    }
+
+    /// Two disjoint blobs with different label ids in one 16³ grid.
+    fn two_blob_labels() -> LabelMask {
+        let mut g: VoxelGrid<u16> = VoxelGrid::zeros(Dims::new(16, 14, 12), Vec3::new(0.8, 0.8, 2.0));
+        for z in 1..5 {
+            for y in 2..7 {
+                for x in 1..6 {
+                    g.set(x, y, z, 1);
+                }
+            }
+        }
+        for z in 6..11 {
+            for y in 7..13 {
+                for x in 9..15 {
+                    g.set(x, y, z, 3);
+                }
+            }
+        }
+        LabelMask::from_grid(g)
+    }
+
+    #[test]
+    fn label_map_matches_per_label_binary_runs() {
+        let lm = two_blob_labels();
+        assert_eq!(lm.labels, vec![1, 3]);
+        let ex = FeatureExtractor::new(&all_classes_cfg(1)).unwrap();
+        let per_label = ex.execute_label_map("case-a", &lm, None, &[1, 3]).unwrap();
+        assert_eq!(per_label.len(), 2);
+        for (label, got) in per_label {
+            let got = got.unwrap();
+            let standalone = ex.execute_mask(&lm.binary(label)).unwrap();
+            assert_eq!(got.features, standalone.features, "label {label} shape");
+            assert_eq!(got.derived, standalone.derived, "label {label} intensity");
+        }
+    }
+
+    #[test]
+    fn label_map_with_real_image_matches_binary_runs() {
+        let lm = two_blob_labels();
+        let mut img: VoxelGrid<f32> = VoxelGrid::zeros(lm.grid.dims, lm.grid.spacing);
+        let d = img.dims;
+        for z in 0..d.z {
+            for y in 0..d.y {
+                for x in 0..d.x {
+                    img.set(x, y, z, (x * 7 + y * 3 + z * 11) as f32 * 0.5 - 20.0);
+                }
+            }
+        }
+        let cfg = PipelineConfig {
+            backend: Backend::Cpu,
+            cpu_threads: 1,
+            feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            ..Default::default()
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let per_label = ex.execute_label_map("case-b", &lm, Some(&img), &[1, 3]).unwrap();
+        for (label, got) in per_label {
+            let got = got.unwrap();
+            let standalone = ex.execute_case(&lm.binary(label), Some(&img)).unwrap();
+            assert_eq!(got.features, standalone.features, "label {label} shape");
+            assert_eq!(got.derived, standalone.derived, "label {label} intensity");
+        }
+    }
+
+    #[test]
+    fn empty_selected_label_is_isolated_not_fatal() {
+        let lm = two_blob_labels();
+        let ex = FeatureExtractor::new(&all_classes_cfg(1)).unwrap();
+        let out = ex.execute_label_map("case-c", &lm, None, &[1, 2, 3]).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out[0].1.is_ok(), "label 1 present");
+        assert!(out[2].1.is_ok(), "label 3 present");
+        let err = out[1].1.as_ref().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("case-c"), "carries the case id: {msg}");
+        assert!(msg.contains("label 2"), "carries the label: {msg}");
+        assert!(msg.contains("no voxels"), "{msg}");
+    }
+
+    #[test]
+    fn shared_preprocess_rides_on_the_first_successful_label() {
+        let lm = two_blob_labels();
+        let ex = cpu_extractor();
+        let out = ex.execute_label_map("case-d", &lm, None, &[1, 3]).unwrap();
+        let t1 = &out[0].1.as_ref().unwrap().timing;
+        assert!(t1.preprocess > Duration::ZERO);
+        assert!(out[1].1.as_ref().unwrap().timing.marching > Duration::ZERO);
     }
 }

@@ -26,11 +26,21 @@
 //! there to watch, so it is excluded by design.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::volume::VoxelGrid;
 
 static CURRENT: AtomicU64 = AtomicU64::new(0);
 static PEAK: AtomicU64 = AtomicU64::new(0);
+
+// Pipeline-wide accounting: every case volume (mask + image payloads) the
+// read stage materialises, held from read until extraction finishes.
+static PIPE_CURRENT: AtomicU64 = AtomicU64::new(0);
+static PIPE_PEAK: AtomicU64 = AtomicU64::new(0);
+
+fn lock_recover<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(|e| e.into_inner())
+}
 
 /// Payload bytes of one derived f32 volume.
 pub(crate) fn grid_bytes(g: &VoxelGrid<f32>) -> u64 {
@@ -62,6 +72,112 @@ pub fn peak_derived_bytes() -> u64 {
 /// this at startup so the final gauge describes that run.
 pub fn reset_peak_derived_bytes() {
     PEAK.store(CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn note_pipeline_alloc(bytes: u64) {
+    let now = PIPE_CURRENT.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    PIPE_PEAK.fetch_max(now, Ordering::Relaxed);
+    crate::trace::counter_u64("mem.pipeline_bytes", now);
+}
+
+fn note_pipeline_free(bytes: u64) {
+    let now = PIPE_CURRENT.fetch_sub(bytes, Ordering::Relaxed).saturating_sub(bytes);
+    crate::trace::counter_u64("mem.pipeline_bytes", now);
+}
+
+/// Process-wide high-water mark of *pipeline* case bytes — the mask and
+/// image payloads the read stage has materialised and extraction has not
+/// yet released — since the last [`reset_peak_pipeline_bytes`]. With slab
+/// IO this is crop-proportional; with whole-grid reads it scales with the
+/// file dims, which is exactly the contrast the slab bench leg asserts.
+pub fn peak_pipeline_bytes() -> u64 {
+    PIPE_PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset the pipeline high-water mark to the currently-held total (not
+/// zero: in-flight cases stay accounted). `run_pipeline` calls this at
+/// startup so the final `mem.peak_pipeline_bytes` gauge describes that
+/// run.
+pub fn reset_peak_pipeline_bytes() {
+    PIPE_PEAK.store(PIPE_CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// RAII hold on the pipeline-wide meter: created by the read stage when a
+/// case's volumes are materialised, dropped when extraction is done with
+/// them. Feeds [`peak_pipeline_bytes`] and the `mem.pipeline_bytes` trace
+/// counter track.
+#[derive(Debug)]
+pub(crate) struct PipelineHold(u64);
+
+impl PipelineHold {
+    pub(crate) fn new(bytes: u64) -> PipelineHold {
+        if bytes > 0 {
+            note_pipeline_alloc(bytes);
+        }
+        PipelineHold(bytes)
+    }
+}
+
+impl Drop for PipelineHold {
+    fn drop(&mut self) {
+        if self.0 > 0 {
+            note_pipeline_free(self.0);
+        }
+    }
+}
+
+/// A byte budget the read stage respects by throttling in-flight cases.
+///
+/// `acquire(bytes)` blocks while admitting the request would push the
+/// admitted total past the limit **and** at least one other case is still
+/// in flight — a single case is always admitted even if it alone exceeds
+/// the budget, so an undersized limit degrades to serial execution
+/// instead of deadlocking. A limit of `0` means unlimited (every acquire
+/// is immediate). The returned [`BudgetGuard`] releases its bytes on drop
+/// and wakes the waiters.
+#[derive(Debug)]
+pub struct MemoryBudget {
+    limit: u64,
+    held: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl MemoryBudget {
+    /// New budget of `limit` bytes (`0` = unlimited).
+    pub fn new(limit: u64) -> Arc<MemoryBudget> {
+        Arc::new(MemoryBudget { limit, held: Mutex::new(0), cv: Condvar::new() })
+    }
+
+    /// Block until `bytes` fit under the limit (see type docs for the
+    /// no-deadlock admission rule), then account them.
+    pub fn acquire(self: &Arc<Self>, bytes: u64) -> BudgetGuard {
+        if self.limit == 0 {
+            return BudgetGuard { budget: Arc::clone(self), bytes: 0 };
+        }
+        let mut held = lock_recover(self.held.lock());
+        while *held > 0 && *held + bytes > self.limit {
+            held = lock_recover(self.cv.wait(held));
+        }
+        *held += bytes;
+        BudgetGuard { budget: Arc::clone(self), bytes }
+    }
+}
+
+/// Admission held against a [`MemoryBudget`]; released on drop.
+#[derive(Debug)]
+pub struct BudgetGuard {
+    budget: Arc<MemoryBudget>,
+    bytes: u64,
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        if self.bytes > 0 {
+            let mut held = lock_recover(self.budget.held.lock());
+            *held = held.saturating_sub(self.bytes);
+            self.budget.cv.notify_all();
+        }
+    }
 }
 
 /// Single-owner tally of the volumes one derivation holds. Mirrors every
@@ -150,5 +266,55 @@ mod tests {
         let a = tally.hold(&g);
         tally.release(a);
         assert_eq!(tally.current, 0);
+    }
+
+    #[test]
+    fn budget_admits_one_oversized_case_and_throttles_the_rest() {
+        let budget = MemoryBudget::new(100);
+        // a single case larger than the whole budget is admitted (no
+        // deadlock): the budget degrades to serial execution
+        let big = budget.acquire(250);
+        drop(big);
+
+        // within the limit, concurrent holds coexist
+        let a = budget.acquire(40);
+        let b = budget.acquire(40);
+
+        // a third acquire that would overflow blocks until a release; run
+        // it on a helper thread and assert it only lands after the drop
+        let released = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (budget2, released2) = (std::sync::Arc::clone(&budget), released.clone());
+        let waiter = std::thread::spawn(move || {
+            let g = budget2.acquire(40);
+            assert!(
+                released2.load(Ordering::SeqCst),
+                "acquire returned before any release"
+            );
+            drop(g);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        released.store(true, Ordering::SeqCst);
+        drop(a);
+        waiter.join().unwrap();
+        drop(b);
+
+        // unlimited budget never blocks and its guards are free
+        let unlimited = MemoryBudget::new(0);
+        let g1 = unlimited.acquire(u64::MAX);
+        let g2 = unlimited.acquire(u64::MAX);
+        drop(g1);
+        drop(g2);
+    }
+
+    #[test]
+    fn pipeline_holds_feed_the_pipeline_peak() {
+        // process-wide atomics are shared across tests (see note above):
+        // assert monotone facts only — the peak covers this hold
+        reset_peak_pipeline_bytes();
+        let hold = PipelineHold::new(4096);
+        assert!(peak_pipeline_bytes() >= 4096);
+        drop(hold);
+        let zero = PipelineHold::new(0);
+        drop(zero); // a zero hold must not underflow the meter
     }
 }

@@ -48,10 +48,14 @@ mod wavelet;
 
 pub use filters::{gaussian_kernel, gaussian_smooth, log_filter, MAX_KERNEL_RADIUS};
 pub use lines::Axis;
-pub use mem::{peak_derived_bytes, reset_peak_derived_bytes};
+pub use mem::{
+    peak_derived_bytes, peak_pipeline_bytes, reset_peak_derived_bytes,
+    reset_peak_pipeline_bytes, BudgetGuard, MemoryBudget,
+};
+pub(crate) use mem::PipelineHold;
 pub use resample::{
-    resample_image, resample_image_to_grid, resample_mask, resampled_dims,
-    MAX_RESAMPLED_VOXELS,
+    resample_image, resample_image_to_grid, resample_labels, resample_mask,
+    resampled_dims, MAX_RESAMPLED_VOXELS,
 };
 pub use wavelet::{haar_band, haar_decompose, haar_reconstruct, SUB_BANDS};
 

@@ -169,6 +169,43 @@ pub fn resample_mask(
     Ok(grid)
 }
 
+/// [`resample_mask`] for integer label volumes: the exact same
+/// nearest-neighbour index arithmetic on a `u16` grid, so a label volume
+/// resampled and *then* binarised per label is bit-identical to
+/// binarising first and resampling with [`resample_mask`] — the identity
+/// the multi-label dispatcher's single shared resample pass relies on.
+pub fn resample_labels(
+    labels: &VoxelGrid<u16>,
+    new_spacing: Vec3,
+    strategy: Strategy,
+    threads: usize,
+) -> Result<VoxelGrid<u16>> {
+    if labels.dims.is_empty() {
+        bail!("cannot resample an empty label volume {}", labels.dims);
+    }
+    check_spacing("source mask", labels.spacing)?;
+    check_spacing("target", new_spacing)?;
+    let dims = resampled_dims(labels.dims, labels.spacing, new_spacing);
+    check_output_volume(dims)?;
+    let (sd, src) = (labels.dims, labels.data());
+    let r = Vec3::new(
+        new_spacing.x / labels.spacing.x,
+        new_spacing.y / labels.spacing.y,
+        new_spacing.z / labels.spacing.z,
+    );
+    let grid = build_slices(dims, new_spacing, strategy, threads, |z, out| {
+        let zi = ((z as f64 * r.z).round() as usize).min(sd.z - 1);
+        for y in 0..dims.y {
+            let yi = ((y as f64 * r.y).round() as usize).min(sd.y - 1);
+            for x in 0..dims.x {
+                let xi = ((x as f64 * r.x).round() as usize).min(sd.x - 1);
+                out.push(src[xi + sd.x * (yi + sd.y * zi)]);
+            }
+        }
+    });
+    Ok(grid)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +291,39 @@ mod tests {
         // 4³ voxels at 1 mm ≈ 7³ at 0.5 mm (corner-lattice rounding)
         let kept = out.data().iter().filter(|&&v| v == 3).count();
         assert!(kept >= 6 * 6 * 6 && kept <= 9 * 9 * 9, "kept {kept}");
+    }
+
+    #[test]
+    fn label_resample_commutes_with_per_label_binarisation() {
+        // resample_labels then binarise == binarise then resample_mask,
+        // for every label — the shared-pass identity, bit for bit
+        let mut labels: VoxelGrid<u16> =
+            VoxelGrid::zeros(Dims::new(7, 6, 5), Vec3::new(1.0, 1.3, 0.8));
+        for z in 1..4 {
+            for y in 1..4 {
+                labels.set(2, y, z, 2);
+                labels.set(4, y, z, 9);
+            }
+        }
+        labels.set(6, 5, 4, 300); // label above u8 range
+        for new in [Vec3::splat(0.5), Vec3::splat(1.7), Vec3::new(0.9, 1.0, 1.1)] {
+            let resampled =
+                resample_labels(&labels, new, Strategy::EqualSplit, 2).unwrap();
+            for label in [2u16, 9, 300] {
+                let want = resample_mask(
+                    &labels.map(|v| u8::from(v == label)),
+                    new,
+                    Strategy::EqualSplit,
+                    2,
+                )
+                .unwrap();
+                let got = resampled.map(|v| u8::from(v == label));
+                assert_eq!(got, want, "label {label} at {new:?}");
+            }
+        }
+        // identity at source spacing, like the u8 path
+        let id = resample_labels(&labels, labels.spacing, Strategy::EqualSplit, 1).unwrap();
+        assert_eq!(id, labels);
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! case=00000-1 mask=00000-1.rvol.gz image=00000-1.img.rvol.gz dims=231x104x264 target_vertices=124406
 //! ```
 //!
-//! `image=` is optional: shape-only datasets ship masks alone. Unknown
-//! keys are still ignored (forward compatibility).
+//! `image=` is optional: shape-only datasets ship masks alone.
+//! `labels=1,2,4` optionally declares a label inventory for multi-label
+//! masks (see [`CaseEntry::labels`]). Unknown keys are still ignored
+//! (forward compatibility).
 
 use std::path::{Path, PathBuf};
 
@@ -31,6 +33,12 @@ pub struct CaseEntry {
     /// The vertex count this case was generated to approximate (paper
     /// Table 2 column); 0 when unknown.
     pub target_vertices: usize,
+    /// Declared label inventory (`labels=1,2,4`), sorted. Lets a manifest
+    /// promise labels the mask may not contain — `--labels all` extracts
+    /// the union of declared and observed, so a declared-but-empty label
+    /// surfaces as a per-label error instead of vanishing. Empty when the
+    /// manifest says nothing.
+    pub labels: Vec<u16>,
 }
 
 /// A scanned dataset: root directory + parsed entries.
@@ -59,7 +67,12 @@ impl DatasetManifest {
             if let Some(image) = &e.image {
                 s.push_str(&format!(" image={}", image.display()));
             }
-            s.push_str(&format!(" dims={} target_vertices={}\n", e.dims, e.target_vertices));
+            s.push_str(&format!(" dims={} target_vertices={}", e.dims, e.target_vertices));
+            if !e.labels.is_empty() {
+                let ids: Vec<String> = e.labels.iter().map(|l| l.to_string()).collect();
+                s.push_str(&format!(" labels={}", ids.join(",")));
+            }
+            s.push('\n');
         }
         s
     }
@@ -85,6 +98,7 @@ fn parse_line(line: &str) -> Result<CaseEntry> {
     let mut image = None;
     let mut dims = None;
     let mut target = 0usize;
+    let mut labels = Vec::new();
     for tok in line.split_whitespace() {
         let Some((k, v)) = tok.split_once('=') else {
             bail!("bad token '{tok}'");
@@ -95,6 +109,17 @@ fn parse_line(line: &str) -> Result<CaseEntry> {
             "image" => image = Some(PathBuf::from(v)),
             "dims" => dims = Some(parse_dims(v)?),
             "target_vertices" => target = v.parse().context("target_vertices")?,
+            "labels" => {
+                for id in v.split(',') {
+                    let id: u16 = id.parse().with_context(|| format!("labels id '{id}'"))?;
+                    if id == 0 {
+                        bail!("labels= cannot include 0 (background)");
+                    }
+                    labels.push(id);
+                }
+                labels.sort_unstable();
+                labels.dedup();
+            }
             _ => {} // forward-compatible: ignore unknown keys
         }
     }
@@ -104,6 +129,7 @@ fn parse_line(line: &str) -> Result<CaseEntry> {
         image,
         dims: dims.context("missing dims=")?,
         target_vertices: target,
+        labels,
     })
 }
 
@@ -148,6 +174,7 @@ mod tests {
                     image: Some("00000-1.img.rvol.gz".into()),
                     dims: Dims::new(231, 104, 264),
                     target_vertices: 124406,
+                    labels: vec![1, 2, 4],
                 },
                 CaseEntry {
                     case_id: "00000-2".into(),
@@ -155,6 +182,7 @@ mod tests {
                     image: None,
                     dims: Dims::new(28, 30, 59),
                     target_vertices: 6132,
+                    labels: Vec::new(),
                 },
             ],
         };
@@ -200,6 +228,25 @@ mod tests {
         )
         .unwrap();
         assert_eq!(scan_dataset(&root).unwrap().cases[0].image, None);
+    }
+
+    #[test]
+    fn labels_key_parses_sorted_and_rejects_zero() {
+        let root = tdir("labels");
+        std::fs::write(
+            root.join("cases.txt"),
+            "case=a mask=a.rvol dims=4x4x4 target_vertices=1 labels=4,1,2,2\n",
+        )
+        .unwrap();
+        let m = scan_dataset(&root).unwrap();
+        assert_eq!(m.cases[0].labels, vec![1, 2, 4], "sorted, deduped");
+        std::fs::write(
+            root.join("cases.txt"),
+            "case=a mask=a.rvol dims=4x4x4 target_vertices=1 labels=1,0\n",
+        )
+        .unwrap();
+        let err = scan_dataset(&root).unwrap_err();
+        assert!(format!("{err:#}").contains("background"), "{err:#}");
     }
 
     #[test]

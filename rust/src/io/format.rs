@@ -10,7 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::volume::VoxelGrid;
+use crate::volume::{LabelMask, VoxelGrid};
 
 /// Supported volume container formats.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,12 +44,55 @@ pub fn detect_mask_format(path: &Path) -> Result<MaskFormat> {
     }
 }
 
-/// Read a mask volume (binarised u8), dispatching on the detected format.
-pub fn read_mask(path: &Path) -> Result<VoxelGrid<u8>> {
-    match detect_mask_format(path)? {
-        MaskFormat::Nifti => super::read_nifti(path),
-        MaskFormat::Rvol => super::read_rvol(path),
+/// Read a mask as a label map (u16 ids preserved, plus the sorted label
+/// inventory), dispatching on the detected format.
+pub fn read_label_mask(path: &Path) -> Result<LabelMask> {
+    let grid = match detect_mask_format(path)? {
+        MaskFormat::Nifti => super::nifti::read_nifti_labels(path)?,
+        MaskFormat::Rvol => super::rvol::read_rvol_labels(path)?,
+    };
+    Ok(LabelMask::from_grid(grid))
+}
+
+/// Render a label inventory for an error message: `1,2,3` with a
+/// truncation marker past a dozen entries.
+pub(crate) fn format_labels(labels: &[u16]) -> String {
+    const SHOW: usize = 12;
+    let mut s = labels
+        .iter()
+        .take(SHOW)
+        .map(|l| l.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    if labels.len() > SHOW {
+        s.push_str(",...");
     }
+    s
+}
+
+/// Read a mask volume as a binary (0/1) u8 grid, dispatching on the
+/// detected format.
+///
+/// A mask holding **more than one** distinct nonzero label is rejected:
+/// collapsing a label map to 0/1 silently merges ROIs, which is almost
+/// never what a multi-label segmentation means. The error names the
+/// labels found and points at the `--labels` selector, which extracts
+/// them separately. Single-label masks collapse to 0/1 whatever the
+/// stored id; all-zero masks pass through (emptiness is diagnosed
+/// downstream, where the case id is known).
+pub fn read_mask(path: &Path) -> Result<VoxelGrid<u8>> {
+    let lm = read_label_mask(path)?;
+    if lm.labels.len() > 1 {
+        bail!(
+            "mask '{}' is a label map with {} distinct labels ({}): select the ROIs to \
+             extract with --labels <ids|all> (config key `labels`) instead of silently \
+             merging them into one",
+            path.display(),
+            lm.labels.len(),
+            format_labels(&lm.labels)
+        );
+    }
+    Ok(lm.collapsed())
 }
 
 /// Read an intensity image volume (f32, values preserved — no
@@ -137,6 +180,61 @@ mod tests {
         assert!(has_gz_suffix(&PathBuf::from("m.nii.Gz")));
         assert!(!has_gz_suffix(&PathBuf::from("m.rvol")));
         assert!(!has_gz_suffix(&PathBuf::from("m.nii")));
+    }
+
+    #[test]
+    fn multi_label_mask_is_rejected_with_the_labels_remedy() {
+        use crate::geometry::Vec3;
+        use crate::volume::{Dims, VoxelGrid};
+        let dir = std::env::temp_dir().join("radpipe_format_multilabel");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(5, 4, 3), Vec3::splat(1.0));
+        g.set(1, 1, 1, 1);
+        g.set(3, 2, 2, 7);
+        for name in ["multi.rvol", "multi.nii.gz"] {
+            let p = dir.join(name);
+            match detect_mask_format(&p).unwrap() {
+                MaskFormat::Rvol => crate::io::write_rvol(&p, &g).unwrap(),
+                MaskFormat::Nifti => crate::io::write_nifti(&p, &g).unwrap(),
+            }
+            let err = read_mask(&p).unwrap_err().to_string();
+            assert!(err.contains("label map"), "{name}: {err}");
+            assert!(err.contains("1,7"), "{name}: names the labels found: {err}");
+            assert!(err.contains("--labels"), "{name}: names the remedy: {err}");
+            // the label-map reader accepts the same file
+            let lm = read_label_mask(&p).unwrap();
+            assert_eq!(lm.labels, vec![1, 7], "{name}");
+        }
+    }
+
+    #[test]
+    fn single_label_mask_collapses_to_binary_whatever_its_id() {
+        use crate::geometry::Vec3;
+        use crate::volume::{Dims, VoxelGrid};
+        let dir = std::env::temp_dir().join("radpipe_format_single");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut g: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(4, 3, 2), Vec3::splat(1.0));
+        g.set(1, 1, 1, 7);
+        g.set(2, 1, 1, 7);
+        let p = dir.join("seven.rvol");
+        crate::io::write_rvol(&p, &g).unwrap();
+        let back = read_mask(&p).unwrap();
+        assert_eq!(back.get(1, 1, 1), 1, "id 7 collapses to 1");
+        assert_eq!(back.count_nonzero(), 2);
+        // an all-zero mask reads fine; emptiness is a downstream concern
+        let empty: VoxelGrid<u8> = VoxelGrid::zeros(Dims::new(4, 3, 2), Vec3::splat(1.0));
+        let pe = dir.join("empty.rvol");
+        crate::io::write_rvol(&pe, &empty).unwrap();
+        assert_eq!(read_mask(&pe).unwrap().count_nonzero(), 0);
+    }
+
+    #[test]
+    fn label_lists_truncate_in_error_messages() {
+        let many: Vec<u16> = (1..=20).collect();
+        let s = format_labels(&many);
+        assert!(s.starts_with("1,2,3"));
+        assert!(s.ends_with(",..."));
+        assert_eq!(format_labels(&[4, 9]), "4,9");
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Volume IO: the `.rvol(.gz)` container, a NIfTI-1 subset reader/writer
-//! (KiTS19-style `.nii.gz`), and the dataset manifest.
+//! (KiTS19-style `.nii.gz`), the dataset manifest, and slab-streamed
+//! reading ([`slab`]) that locates the ROI without materialising the
+//! full grid.
 //!
 //! The paper's Table 2 charges a large share of wall time to "file
 //! reading" (disk + decompression + normalisation + relayout); this module
@@ -9,8 +11,10 @@ mod rvol;
 mod nifti;
 mod dataset;
 mod format;
+pub mod slab;
 
 pub use dataset::{scan_dataset, CaseEntry, DatasetManifest};
-pub use format::{detect_mask_format, read_image, read_mask, MaskFormat};
-pub use nifti::{read_nifti, read_nifti_image, write_nifti, write_nifti_image};
-pub use rvol::{read_rvol, read_rvol_image, write_rvol};
+pub(crate) use format::format_labels;
+pub use format::{detect_mask_format, read_image, read_label_mask, read_mask, MaskFormat};
+pub use nifti::{read_nifti, read_nifti_image, read_nifti_labels, write_nifti, write_nifti_image};
+pub use rvol::{read_rvol, read_rvol_image, read_rvol_labels, write_rvol};

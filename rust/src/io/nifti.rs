@@ -8,9 +8,12 @@
 //! deliberately not a full implementation (no qform/sform rotations; the
 //! pipeline only needs dims + spacing).
 //!
-//! Two read paths share one header parser:
+//! Three read paths share one header parser:
 //!
 //! * [`read_nifti`] — segmentation masks, binarised to u8 (`!= 0`);
+//! * [`read_nifti_labels`] — label-map masks, converted to u16 with the
+//!   stored label ids preserved (negative or non-integral values are
+//!   corruption, not labels);
 //! * [`read_nifti_image`] — intensity images, widened to f32 with the
 //!   stored values preserved (and `scl_slope`/`scl_inter` applied when the
 //!   header carries a real scaling).
@@ -40,16 +43,17 @@ fn rd_f32(b: &[u8], off: usize) -> f32 {
     f32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
 }
 
-/// The header fields both read paths need.
-struct NiftiHeader {
-    dims: Dims,
-    spacing: Vec3,
-    datatype: i16,
-    scl_slope: f32,
-    scl_inter: f32,
+/// The header fields every read path needs. `pub(crate)` so slab IO can
+/// stream payload planes against the parsed geometry.
+pub(crate) struct NiftiHeader {
+    pub(crate) dims: Dims,
+    pub(crate) spacing: Vec3,
+    pub(crate) datatype: i16,
+    pub(crate) scl_slope: f32,
+    pub(crate) scl_inter: f32,
 }
 
-fn open_reader(path: &Path) -> Result<Box<dyn Read>> {
+pub(crate) fn open_reader(path: &Path) -> Result<Box<dyn Read>> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
     Ok(if super::format::has_gz_suffix(path) {
         Box::new(GzDecoder::new(BufReader::new(file)))
@@ -60,7 +64,7 @@ fn open_reader(path: &Path) -> Result<Box<dyn Read>> {
 
 /// Parse the 348-byte header and consume everything up to `vox_offset`,
 /// leaving the reader at the first payload byte.
-fn parse_header(reader: &mut dyn Read) -> Result<NiftiHeader> {
+pub(crate) fn parse_header(reader: &mut dyn Read) -> Result<NiftiHeader> {
     let mut hdr = [0u8; HDR_SIZE];
     reader.read_exact(&mut hdr).context("nifti header")?;
     let sizeof_hdr = i32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
@@ -163,15 +167,11 @@ pub fn read_nifti(path: &Path) -> Result<VoxelGrid<u8>> {
     Ok(VoxelGrid::from_vec(h.dims, h.spacing, data))
 }
 
-/// Read a NIfTI-1 file (`.nii` or `.nii.gz`) as an f32 intensity volume —
-/// no binarisation. uint8 and int16 payloads are widened to f32; when the
-/// header carries a real intensity scaling (`scl_slope != 0` and not the
-/// identity), `v * scl_slope + scl_inter` is applied.
-pub fn read_nifti_image(path: &Path) -> Result<VoxelGrid<f32>> {
-    let mut reader = open_reader(path)?;
-    let h = parse_header(&mut *reader)?;
-    let n = h.dims.len();
-    let mut data: Vec<f32> = match h.datatype {
+/// Decode `n` payload samples as f32 intensities, without the header's
+/// intensity scaling — callers pair this with [`apply_scl`]. Shared with
+/// slab IO, which decodes plane-sized runs through the same code.
+pub(crate) fn image_samples(datatype: i16, n: usize, reader: &mut dyn Read) -> Result<Vec<f32>> {
+    Ok(match datatype {
         DT_UINT8 => {
             let mut v = vec![0u8; n];
             reader.read_exact(&mut v).context("nifti payload")?;
@@ -192,13 +192,83 @@ pub fn read_nifti_image(path: &Path) -> Result<VoxelGrid<f32>> {
                 .collect()
         }
         other => bail!("unsupported NIfTI datatype {other}"),
-    };
-    let (slope, inter) = (h.scl_slope, h.scl_inter);
+    })
+}
+
+/// Apply the header's intensity scaling in place when it carries a real
+/// scaling (`scl_slope` finite, non-zero, and not the identity).
+pub(crate) fn apply_scl(data: &mut [f32], slope: f32, inter: f32) {
     if slope.is_finite() && slope != 0.0 && (slope != 1.0 || inter != 0.0) {
-        for v in &mut data {
+        for v in data {
             *v = (*v as f64 * slope as f64 + inter as f64) as f32;
         }
     }
+}
+
+/// Decode `n` payload samples as u16 label ids. uint8 widens; int16 must
+/// be non-negative; float32 must hold finite, non-negative, integral
+/// values that fit u16 — a label map stores identities, so any value that
+/// cannot be one exactly is corruption, not something to round. Intensity
+/// scaling (`scl_slope`/`scl_inter`) is deliberately not applied: it
+/// rescales measurements, and label ids are not measurements.
+pub(crate) fn label_samples(datatype: i16, n: usize, reader: &mut dyn Read) -> Result<Vec<u16>> {
+    match datatype {
+        DT_UINT8 => {
+            let mut v = vec![0u8; n];
+            reader.read_exact(&mut v).context("nifti payload")?;
+            Ok(v.into_iter().map(u16::from).collect())
+        }
+        DT_INT16 => {
+            let mut raw = vec![0u8; n * 2];
+            reader.read_exact(&mut raw).context("nifti payload")?;
+            raw.chunks_exact(2)
+                .map(|c| {
+                    let v = i16::from_le_bytes([c[0], c[1]]);
+                    if v < 0 {
+                        bail!("negative value {v} cannot be a label id");
+                    }
+                    Ok(v as u16)
+                })
+                .collect()
+        }
+        DT_FLOAT32 => {
+            let mut raw = vec![0u8; n * 4];
+            reader.read_exact(&mut raw).context("nifti payload")?;
+            raw.chunks_exact(4)
+                .map(|c| {
+                    let v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > u16::MAX as f32 {
+                        bail!("float value {v} is not an integral u16 label id");
+                    }
+                    Ok(v as u16)
+                })
+                .collect()
+        }
+        other => bail!("unsupported NIfTI datatype {other}"),
+    }
+}
+
+/// Read a NIfTI-1 file (`.nii` or `.nii.gz`) as an f32 intensity volume —
+/// no binarisation. uint8 and int16 payloads are widened to f32; when the
+/// header carries a real intensity scaling (`scl_slope != 0` and not the
+/// identity), `v * scl_slope + scl_inter` is applied.
+pub fn read_nifti_image(path: &Path) -> Result<VoxelGrid<f32>> {
+    let mut reader = open_reader(path)?;
+    let h = parse_header(&mut *reader)?;
+    let mut data = image_samples(h.datatype, h.dims.len(), &mut *reader)?;
+    apply_scl(&mut data, h.scl_slope, h.scl_inter);
+    Ok(VoxelGrid::from_vec(h.dims, h.spacing, data))
+}
+
+/// Read a NIfTI-1 file (`.nii` or `.nii.gz`) as a u16 label volume,
+/// preserving stored label ids instead of binarising — the entry point
+/// for multi-label segmentations. See [`label_samples`] for the per-dtype
+/// conversion rules.
+pub fn read_nifti_labels(path: &Path) -> Result<VoxelGrid<u16>> {
+    let mut reader = open_reader(path)?;
+    let h = parse_header(&mut *reader)?;
+    let data = label_samples(h.datatype, h.dims.len(), &mut *reader)
+        .with_context(|| format!("read label mask {}", path.display()))?;
     Ok(VoxelGrid::from_vec(h.dims, h.spacing, data))
 }
 
@@ -406,6 +476,64 @@ mod tests {
         }
         // the mask reader is unaffected by intensity scaling concerns
         assert!(read_nifti(&p).is_ok());
+    }
+
+    #[test]
+    fn label_reader_preserves_ids_across_dtypes() {
+        // u8 payload: ids pass through unchanged (no binarisation)
+        let mut g = sample();
+        g.set(0, 0, 0, 3);
+        let p = tdir().join("lab_u8.nii.gz");
+        write_nifti(&p, &g).unwrap();
+        let labels = read_nifti_labels(&p).unwrap();
+        assert_eq!(labels.get(0, 0, 0), 3);
+        assert_eq!(labels.get(3, 2, 1), 1);
+        assert_eq!(labels.get(0, 1, 0), 0);
+
+        // int16 payload: ids widen; a negative voxel is rejected
+        let p = tdir().join("lab_i16.nii");
+        write_nifti(&p, &g).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[70..72].copy_from_slice(&DT_INT16.to_le_bytes());
+        let payload: Vec<u8> =
+            g.data().iter().flat_map(|&v| ((v as i16) * 7).to_le_bytes()).collect();
+        bytes.truncate(352);
+        bytes.extend_from_slice(&payload);
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(read_nifti_labels(&p).unwrap().get(0, 0, 0), 21);
+        let mut bad = bytes.clone();
+        bad[352..354].copy_from_slice(&(-4i16).to_le_bytes());
+        std::fs::write(&p, &bad).unwrap();
+        let err = read_nifti_labels(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("-4"), "{err:#}");
+
+        // float32 payload: integral values convert, fractional ones do not
+        let p = tdir().join("lab_f32.nii");
+        let mut img = VoxelGrid::<f32>::zeros(g.dims, g.spacing);
+        for (dst, src) in img.data_mut().iter_mut().zip(g.data()) {
+            *dst = *src as f32 * 2.0;
+        }
+        write_nifti_image(&p, &img).unwrap();
+        assert_eq!(read_nifti_labels(&p).unwrap().get(0, 0, 0), 6);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[352..356].copy_from_slice(&0.5f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_nifti_labels(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("0.5"), "{err:#}");
+    }
+
+    #[test]
+    fn label_reader_ignores_intensity_scaling() {
+        // scl_slope/inter rescale measurements; label ids are identities
+        let mut g = sample();
+        g.set(0, 0, 0, 2);
+        let p = tdir().join("lab_scl.nii");
+        write_nifti(&p, &g).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[112..116].copy_from_slice(&3.0f32.to_le_bytes()); // scl_slope
+        bytes[116..120].copy_from_slice(&100.0f32.to_le_bytes()); // scl_inter
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(read_nifti_labels(&p).unwrap().get(0, 0, 0), 2);
     }
 
     #[test]

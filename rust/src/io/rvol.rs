@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! magic   8 B   "RVOL\x01\n\0\0"
-//! dtype   u32   0 = u8, 1 = f32
+//! dtype   u32   0 = u8, 1 = f32, 2 = u16
 //! dims    3 × u64   (x, y, z)
 //! spacing 3 × f64   mm
 //! data    x·y·z samples, x fastest
@@ -66,6 +66,26 @@ impl RvolSample for u8 {
         let mut v = vec![0u8; n];
         r.read_exact(&mut v)?;
         Ok(v)
+    }
+}
+
+impl RvolSample for u16 {
+    const DTYPE: u32 = 2;
+    fn write_all(data: &[Self], w: &mut impl Write) -> io::Result<()> {
+        let mut buf = Vec::with_capacity(4096 * 2);
+        for chunk in data.chunks(4096) {
+            buf.clear();
+            for v in chunk {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+    fn read_all(n: usize, r: &mut impl Read) -> io::Result<Vec<Self>> {
+        let mut bytes = vec![0u8; n * 2];
+        r.read_exact(&mut bytes)?;
+        Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
     }
 }
 
@@ -157,32 +177,73 @@ fn read_body<T: RvolSample>(r: &mut impl Read) -> Result<VoxelGrid<T>> {
     Ok(VoxelGrid::from_vec(dims, spacing, data))
 }
 
-/// Read an rvol file as an f32 intensity volume regardless of its stored
-/// dtype: f32 payloads are read directly, u8 payloads are widened. The
-/// rvol counterpart of [`super::read_nifti_image`].
-pub fn read_rvol_image(path: &Path) -> Result<VoxelGrid<f32>> {
+/// Open `path` (gzip-transparent) and consume the header, returning the
+/// stored dtype, dims and spacing plus the reader positioned at the first
+/// payload sample. Slab IO builds on this to stream planes without ever
+/// materialising the grid.
+pub(crate) fn open_rvol_stream(path: &Path) -> Result<(u32, Dims, Vec3, Box<dyn Read>)> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let buf = BufReader::new(file);
-    if super::format::has_gz_suffix(path) {
-        read_image_body(&mut GzDecoder::new(buf))
+    let mut r: Box<dyn Read> = if super::format::has_gz_suffix(path) {
+        Box::new(GzDecoder::new(buf))
     } else {
-        read_image_body(&mut { buf })
+        Box::new(buf)
+    };
+    let (dtype, dims, spacing) = read_header(&mut r)?;
+    Ok((dtype, dims, spacing, r))
+}
+
+/// Decode `n` payload samples of `dtype` as u16 labels: u8 widens, u16
+/// reads directly, f32 is rejected (an intensity payload is not a label
+/// map — there is no meaningful integer identity to preserve).
+pub(crate) fn label_samples(dtype: u32, n: usize, r: &mut impl Read) -> Result<Vec<u16>> {
+    match dtype {
+        0 => Ok(u8::read_all(n, r)
+            .context("rvol payload")?
+            .into_iter()
+            .map(u16::from)
+            .collect()),
+        2 => u16::read_all(n, r).context("rvol payload"),
+        1 => bail!("f32 payload cannot be read as a label mask (labels must be u8 or u16)"),
+        other => bail!("rvol dtype {other} unsupported"),
     }
 }
 
-fn read_image_body(r: &mut impl Read) -> Result<VoxelGrid<f32>> {
-    let (dtype, dims, spacing) = read_header(r)?;
-    let data: Vec<f32> = if dtype == <u8 as RvolSample>::DTYPE {
-        u8::read_all(dims.len(), r)
+/// Decode `n` payload samples of `dtype` as f32 intensities: f32 reads
+/// directly, u8/u16 widen.
+pub(crate) fn image_samples(dtype: u32, n: usize, r: &mut impl Read) -> Result<Vec<f32>> {
+    match dtype {
+        0 => Ok(u8::read_all(n, r)
             .context("rvol payload")?
             .into_iter()
             .map(|v| v as f32)
-            .collect()
-    } else if dtype == <f32 as RvolSample>::DTYPE {
-        f32::read_all(dims.len(), r).context("rvol payload")?
-    } else {
-        bail!("rvol dtype {dtype} unsupported")
-    };
+            .collect()),
+        2 => Ok(u16::read_all(n, r)
+            .context("rvol payload")?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect()),
+        1 => f32::read_all(n, r).context("rvol payload"),
+        other => bail!("rvol dtype {other} unsupported"),
+    }
+}
+
+/// Read an rvol file as an f32 intensity volume regardless of its stored
+/// dtype: f32 payloads are read directly, u8/u16 payloads are widened.
+/// The rvol counterpart of [`super::read_nifti_image`].
+pub fn read_rvol_image(path: &Path) -> Result<VoxelGrid<f32>> {
+    let (dtype, dims, spacing, mut r) = open_rvol_stream(path)?;
+    let data = image_samples(dtype, dims.len(), &mut r)?;
+    Ok(VoxelGrid::from_vec(dims, spacing, data))
+}
+
+/// Read an rvol file as a u16 label volume, preserving stored label ids:
+/// u8 payloads widen, u16 payloads read directly, f32 payloads are
+/// rejected. The rvol counterpart of [`super::nifti::read_nifti_labels`].
+pub fn read_rvol_labels(path: &Path) -> Result<VoxelGrid<u16>> {
+    let (dtype, dims, spacing, mut r) = open_rvol_stream(path)?;
+    let data = label_samples(dtype, dims.len(), &mut r)
+        .with_context(|| format!("read label mask {}", path.display()))?;
     Ok(VoxelGrid::from_vec(dims, spacing, data))
 }
 
@@ -257,6 +318,39 @@ mod tests {
         assert_eq!(img.get(4, 3, 2), 7.0);
         assert_eq!(img.get(1, 2, 1), 1.0);
         assert_eq!(img.get(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn u16_payload_roundtrips_and_reads_as_labels() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels_u16.rvol.gz");
+        let mut g: VoxelGrid<u16> = VoxelGrid::zeros(Dims::new(4, 3, 2), Vec3::splat(1.0));
+        g.set(0, 0, 0, 3);
+        g.set(2, 1, 1, 300); // above u8 range: needs the u16 dtype
+        write_rvol(&p, &g).unwrap();
+        let back: VoxelGrid<u16> = read_rvol(&p).unwrap();
+        assert_eq!(back, g);
+        assert_eq!(read_rvol_labels(&p).unwrap(), g);
+        // the image reader widens u16 payloads instead of rejecting them
+        assert_eq!(read_rvol_image(&p).unwrap().get(2, 1, 1), 300.0);
+    }
+
+    #[test]
+    fn label_reader_widens_u8_and_rejects_f32() {
+        let dir = std::env::temp_dir().join("radpipe_rvol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pu = dir.join("labels_u8.rvol");
+        write_rvol(&pu, &sample_mask()).unwrap();
+        let labels = read_rvol_labels(&pu).unwrap();
+        assert_eq!(labels.get(4, 3, 2), 7, "label ids survive the widen");
+        assert_eq!(labels.get(1, 2, 1), 1);
+
+        let pf = dir.join("labels_f32.rvol");
+        let gf: VoxelGrid<f32> = VoxelGrid::zeros(Dims::new(2, 2, 2), Vec3::splat(1.0));
+        write_rvol(&pf, &gf).unwrap();
+        let err = read_rvol_labels(&pf).unwrap_err();
+        assert!(format!("{err:#}").contains("label"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Slab-streamed volume IO: locate the ROI without materialising the grid.
+//!
+//! Large scans with small segmentations are the worst case for the
+//! whole-grid readers: a big CT series decodes to hundreds of megabytes
+//! per case just to locate a ROI that crops to a few. The slab path
+//! instead streams the mask file z-plane by z-plane (pass 1) to learn the
+//! nonzero bounding box and the label inventory, then re-opens the file
+//! and materialises exactly the crop box (pass 2) — peak residency is one
+//! plane plus the crop, never the full grid. Gzip streams cannot seek, so
+//! both passes are strictly sequential; planes before the crop are
+//! decoded and discarded.
+//!
+//! Bit-identity contract: [`SlabScan::crop_box`] applies the same
+//! one-voxel-margin arithmetic as [`crate::volume::crop_to_roi`], so the
+//! in-memory crop of a slab-read grid is the identity (offset `(0, 0,
+//! 0)`, same dims) and downstream features match a whole-grid read bit
+//! for bit. Where the margin extends one voxel past the file's far face,
+//! [`read_label_crop`]/[`read_image_crop`] zero-fill — exactly the
+//! [`crate::volume::crop_box`] out-of-bounds convention.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::geometry::Vec3;
+use crate::volume::{Dims, VoxelGrid};
+
+use super::format::{detect_mask_format, MaskFormat};
+use super::{nifti, rvol};
+
+/// What one cheap streaming pass over a mask file learns: geometry, the
+/// inclusive nonzero bounding box in file voxel coordinates, and the
+/// distinct nonzero labels present (sorted).
+#[derive(Debug)]
+pub struct SlabScan {
+    /// Full on-disk grid dims — what a whole-grid read would materialise.
+    pub file_dims: Dims,
+    /// Voxel spacing in mm.
+    pub spacing: Vec3,
+    /// Inclusive `(min, max)` voxel-index bounding box of the nonzero
+    /// region, or `None` for an all-zero mask.
+    pub bbox: Option<((usize, usize, usize), (usize, usize, usize))>,
+    /// Sorted distinct nonzero label ids observed.
+    pub labels: Vec<u16>,
+}
+
+impl SlabScan {
+    /// The `(offset, dims)` box that [`crate::volume::crop_to_roi`] would
+    /// carve from the full grid: bounding box plus a 1-voxel margin,
+    /// clamped at the near faces, extending at most one voxel past the
+    /// far faces. An empty mask gets the same 1-voxel sentinel crop.
+    pub fn crop_box(&self) -> ((usize, usize, usize), Dims) {
+        let Some(((minx, miny, minz), (maxx, maxy, maxz))) = self.bbox else {
+            return ((0, 0, 0), Dims::new(1, 1, 1));
+        };
+        let d = self.file_dims;
+        let ox = minx.saturating_sub(1);
+        let oy = miny.saturating_sub(1);
+        let oz = minz.saturating_sub(1);
+        let dims = Dims::new(
+            (maxx - ox + 2).min(d.x - ox + 1),
+            (maxy - oy + 2).min(d.y - oy + 1),
+            (maxz - oz + 2).min(d.z - oz + 1),
+        );
+        ((ox, oy, oz), dims)
+    }
+}
+
+/// A format-erased sequential plane stream over an open volume file.
+enum Planes {
+    Rvol { dtype: u32, r: Box<dyn Read> },
+    Nifti { datatype: i16, scl: (f32, f32), r: Box<dyn Read> },
+}
+
+fn open_planes(path: &Path) -> Result<(Planes, Dims, Vec3)> {
+    match detect_mask_format(path)? {
+        MaskFormat::Rvol => {
+            let (dtype, dims, spacing, r) = rvol::open_rvol_stream(path)?;
+            Ok((Planes::Rvol { dtype, r }, dims, spacing))
+        }
+        MaskFormat::Nifti => {
+            let mut r = nifti::open_reader(path)?;
+            let h = nifti::parse_header(&mut *r)?;
+            Ok((
+                Planes::Nifti { datatype: h.datatype, scl: (h.scl_slope, h.scl_inter), r },
+                h.dims,
+                h.spacing,
+            ))
+        }
+    }
+}
+
+impl Planes {
+    /// Decode the next `n` samples as labels (same conversion rules as the
+    /// whole-grid label readers).
+    fn label_plane(&mut self, n: usize) -> Result<Vec<u16>> {
+        match self {
+            Planes::Rvol { dtype, r } => rvol::label_samples(*dtype, n, r),
+            Planes::Nifti { datatype, r, .. } => nifti::label_samples(*datatype, n, &mut **r),
+        }
+    }
+
+    /// Decode the next `n` samples as intensities (same conversion and
+    /// scl handling as the whole-grid image readers).
+    fn image_plane(&mut self, n: usize) -> Result<Vec<f32>> {
+        match self {
+            Planes::Rvol { dtype, r } => rvol::image_samples(*dtype, n, r),
+            Planes::Nifti { datatype, scl, r } => {
+                let mut v = nifti::image_samples(*datatype, n, &mut **r)?;
+                nifti::apply_scl(&mut v, scl.0, scl.1);
+                Ok(v)
+            }
+        }
+    }
+}
+
+/// Read just the geometry of a volume file (any supported container)
+/// without touching the payload. Used to validate that a paired image
+/// shares the mask's grid before streaming a crop out of it.
+pub fn read_volume_header(path: &Path) -> Result<(Dims, Vec3)> {
+    let (_planes, dims, spacing) = open_planes(path)?;
+    Ok((dims, spacing))
+}
+
+/// Pass 1: stream the mask plane-by-plane, recording the nonzero bounding
+/// box and label inventory. Peak residency is one z-plane of samples.
+pub fn scan_mask_slab(path: &Path) -> Result<SlabScan> {
+    let (mut planes, dims, spacing) = open_planes(path)?;
+    let n = dims.x * dims.y;
+    let mut seen = vec![false; 1 << 16];
+    let mut bbox: Option<((usize, usize, usize), (usize, usize, usize))> = None;
+    for z in 0..dims.z {
+        let plane = planes
+            .label_plane(n)
+            .with_context(|| format!("scan {} plane z={z}", path.display()))?;
+        for (i, &v) in plane.iter().enumerate() {
+            if v == 0 {
+                continue;
+            }
+            seen[v as usize] = true;
+            let (x, y) = (i % dims.x, i / dims.x);
+            bbox = Some(match bbox {
+                None => ((x, y, z), (x, y, z)),
+                Some(((ax, ay, az), (bx, by, bz))) => {
+                    ((ax.min(x), ay.min(y), az.min(z)), (bx.max(x), by.max(y), bz.max(z)))
+                }
+            });
+        }
+    }
+    let labels = seen
+        .iter()
+        .enumerate()
+        .skip(1)
+        .filter(|(_, &s)| s)
+        .map(|(i, _)| i as u16)
+        .collect();
+    Ok(SlabScan { file_dims: dims, spacing, bbox, labels })
+}
+
+/// Copy the in-bounds part of one decoded z-plane into crop plane `z` of
+/// `out`; rows/columns where the crop extends past the file stay zero.
+fn copy_plane<T: Copy>(
+    plane: &[T],
+    fd: Dims,
+    offset: (usize, usize, usize),
+    dims: Dims,
+    z: usize,
+    out: &mut [T],
+) {
+    let w = dims.x.min(fd.x.saturating_sub(offset.0));
+    if w == 0 {
+        return;
+    }
+    for y in 0..dims.y {
+        let gy = offset.1 + y;
+        if gy >= fd.y {
+            break;
+        }
+        let src_base = offset.0 + fd.x * gy;
+        let dst_base = dims.x * (y + dims.y * z);
+        out[dst_base..dst_base + w].copy_from_slice(&plane[src_base..src_base + w]);
+    }
+}
+
+/// Pass 2 (mask): materialise exactly the `offset .. offset + dims` box
+/// of the label payload, zero-filling where the box extends past the file
+/// (which the [`SlabScan::crop_box`] margin does by at most one voxel).
+pub fn read_label_crop(
+    path: &Path,
+    offset: (usize, usize, usize),
+    dims: Dims,
+) -> Result<VoxelGrid<u16>> {
+    let (mut planes, fd, spacing) = open_planes(path)?;
+    let n = fd.x * fd.y;
+    let mut out = VoxelGrid::zeros(dims, spacing);
+    for z in 0..offset.2.min(fd.z) {
+        planes
+            .label_plane(n)
+            .with_context(|| format!("skip {} plane z={z}", path.display()))?;
+    }
+    for z in 0..dims.z {
+        let gz = offset.2 + z;
+        if gz >= fd.z {
+            break; // zero-filled far margin
+        }
+        let plane = planes
+            .label_plane(n)
+            .with_context(|| format!("read {} plane z={gz}", path.display()))?;
+        copy_plane(&plane, fd, offset, dims, z, out.data_mut());
+    }
+    Ok(out)
+}
+
+/// Pass 2 (image): same crop materialisation for the intensity payload.
+/// Out-of-file voxels are zero — identical to what
+/// [`crate::volume::crop_box`] produces from a whole-grid read.
+pub fn read_image_crop(
+    path: &Path,
+    offset: (usize, usize, usize),
+    dims: Dims,
+) -> Result<VoxelGrid<f32>> {
+    let (mut planes, fd, spacing) = open_planes(path)?;
+    let n = fd.x * fd.y;
+    let mut out = VoxelGrid::zeros(dims, spacing);
+    for z in 0..offset.2.min(fd.z) {
+        planes
+            .image_plane(n)
+            .with_context(|| format!("skip {} plane z={z}", path.display()))?;
+    }
+    for z in 0..dims.z {
+        let gz = offset.2 + z;
+        if gz >= fd.z {
+            break;
+        }
+        let plane = planes
+            .image_plane(n)
+            .with_context(|| format!("read {} plane z={gz}", path.display()))?;
+        copy_plane(&plane, fd, offset, dims, z, out.data_mut());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::{crop_box, crop_to_roi_labels, label_inventory};
+
+    fn tdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("radpipe_slab_test");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Labels 2 and 5 in a 9×7×6 grid, touching the far x face so the
+    /// crop margin extends one voxel past the file.
+    fn labelled_grid() -> VoxelGrid<u16> {
+        let mut g = VoxelGrid::zeros(Dims::new(9, 7, 6), Vec3::new(0.5, 1.0, 2.0));
+        g.set(3, 2, 1, 2);
+        g.set(4, 2, 1, 2);
+        g.set(8, 4, 3, 5);
+        g
+    }
+
+    fn paired_image(dims: Dims, spacing: Vec3) -> VoxelGrid<f32> {
+        let mut img = VoxelGrid::zeros(dims, spacing);
+        for z in 0..dims.z {
+            for y in 0..dims.y {
+                for x in 0..dims.x {
+                    img.set(x, y, z, (x + 10 * y + 100 * z) as f32 - 17.5);
+                }
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn scan_matches_the_in_memory_inventory_and_crop() {
+        let g = labelled_grid();
+        for name in ["scan.rvol", "scan.rvol.gz"] {
+            let p = tdir().join(name);
+            rvol::write_rvol(&p, &g).unwrap();
+            let scan = scan_mask_slab(&p).unwrap();
+            assert_eq!(scan.file_dims, g.dims, "{name}");
+            assert_eq!(scan.labels, label_inventory(&g), "{name}");
+            assert_eq!(scan.bbox, Some(((3, 2, 1), (8, 4, 3))), "{name}");
+            let (off, dims) = scan.crop_box();
+            let (whole_crop, whole_off) = crop_to_roi_labels(&g);
+            assert_eq!(off, whole_off, "{name}");
+            assert_eq!(dims, whole_crop.dims, "{name}");
+        }
+    }
+
+    #[test]
+    fn slab_crop_read_equals_whole_read_then_crop() {
+        let g = labelled_grid();
+        let p = tdir().join("crop.rvol.gz");
+        rvol::write_rvol(&p, &g).unwrap();
+        let scan = scan_mask_slab(&p).unwrap();
+        let (off, dims) = scan.crop_box();
+        let slab = read_label_crop(&p, off, dims).unwrap();
+        let (whole_crop, _) = crop_to_roi_labels(&g);
+        assert_eq!(slab, whole_crop, "slab == whole-read crop, zero margin included");
+        // and the in-memory crop of the slab grid is the identity
+        let (recrop, reoff) = crop_to_roi_labels(&slab);
+        assert_eq!(reoff, (0, 0, 0));
+        assert_eq!(recrop, slab);
+    }
+
+    #[test]
+    fn image_crop_matches_crop_box_on_the_whole_read() {
+        let g = labelled_grid();
+        let img = paired_image(g.dims, g.spacing);
+        let pm = tdir().join("img_mask.rvol");
+        let pi = tdir().join("img.rvol.gz");
+        rvol::write_rvol(&pm, &g).unwrap();
+        rvol::write_rvol(&pi, &img).unwrap();
+        let scan = scan_mask_slab(&pm).unwrap();
+        let (off, dims) = scan.crop_box();
+        let slab = read_image_crop(&pi, off, dims).unwrap();
+        let whole = crop_box(&img, off, dims);
+        assert_eq!(slab.data(), whole.data(), "image crop is bit-identical");
+    }
+
+    #[test]
+    fn nifti_containers_stream_too() {
+        // u8 mask with label ids, float image with scl scaling applied
+        let g = labelled_grid();
+        let g8: VoxelGrid<u8> = g.map(|v| v as u8);
+        let pm = tdir().join("m.nii.gz");
+        nifti::write_nifti(&pm, &g8).unwrap();
+        let scan = scan_mask_slab(&pm).unwrap();
+        assert_eq!(scan.labels, vec![2, 5]);
+        let (off, dims) = scan.crop_box();
+        let slab = read_label_crop(&pm, off, dims).unwrap();
+        let (whole_crop, _) = crop_to_roi_labels(&nifti::read_nifti_labels(&pm).unwrap());
+        assert_eq!(slab, whole_crop);
+
+        let img = paired_image(g.dims, g.spacing);
+        let pi = tdir().join("i.nii");
+        nifti::write_nifti_image(&pi, &img).unwrap();
+        let mut bytes = std::fs::read(&pi).unwrap();
+        bytes[112..116].copy_from_slice(&2.0f32.to_le_bytes()); // scl_slope
+        bytes[116..120].copy_from_slice(&5.0f32.to_le_bytes()); // scl_inter
+        std::fs::write(&pi, &bytes).unwrap();
+        let slab_img = read_image_crop(&pi, off, dims).unwrap();
+        let whole_img = crop_box(&nifti::read_nifti_image(&pi).unwrap(), off, dims);
+        assert_eq!(slab_img.data(), whole_img.data(), "scl-scaled crop is bit-identical");
+    }
+
+    #[test]
+    fn empty_mask_scans_to_the_sentinel_crop() {
+        let g: VoxelGrid<u16> = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        let p = tdir().join("empty.rvol");
+        rvol::write_rvol(&p, &g).unwrap();
+        let scan = scan_mask_slab(&p).unwrap();
+        assert!(scan.bbox.is_none());
+        assert!(scan.labels.is_empty());
+        assert_eq!(scan.crop_box(), ((0, 0, 0), Dims::new(1, 1, 1)));
+        let crop = read_label_crop(&p, (0, 0, 0), Dims::new(1, 1, 1)).unwrap();
+        assert!(crop.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn header_peek_reports_geometry_without_reading_payload() {
+        let g = labelled_grid();
+        let p = tdir().join("peek.rvol.gz");
+        rvol::write_rvol(&p, &g).unwrap();
+        let (dims, spacing) = read_volume_header(&p).unwrap();
+        assert_eq!(dims, g.dims);
+        assert_eq!(spacing, g.spacing);
+    }
+}

@@ -2,25 +2,31 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::channel::bounded;
-use crate::config::PipelineConfig;
+use crate::config::{LabelSelection, PipelineConfig};
 use crate::dispatch::{CaseTiming, DerivedImageFeatures, FeatureExtractor, PathTaken};
 use crate::features::{FirstOrderFeatures, ShapeFeatures, TextureFeatures};
+use crate::imgproc::{BudgetGuard, MemoryBudget, PipelineHold};
+use crate::io::slab::{read_image_crop, read_label_crop, read_volume_header, scan_mask_slab};
 use crate::io::DatasetManifest;
 use crate::metrics::Metrics;
-use crate::volume::VoxelGrid;
+use crate::volume::{LabelMask, VoxelGrid};
 
-/// Fully-processed case. `first_order`/`texture` are populated when the
-/// corresponding feature classes are enabled in the config; `derived`
-/// holds the per-derived-image feature sets (original / LoG / wavelet)
-/// when intensity classes are enabled.
+/// Fully-processed case (or, on a label-map run, one label of a case).
+/// `first_order`/`texture` are populated when the corresponding feature
+/// classes are enabled in the config; `derived` holds the
+/// per-derived-image feature sets (original / LoG / wavelet) when
+/// intensity classes are enabled.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
     pub case_id: String,
+    /// The label this row belongs to on a label-map run (`labels`
+    /// selector set); `None` on the legacy binary-mask path.
+    pub label: Option<u16>,
     pub features: ShapeFeatures,
     pub first_order: Option<FirstOrderFeatures>,
     pub texture: Option<TextureFeatures>,
@@ -47,14 +53,203 @@ struct CaseJob {
     mask_path: PathBuf,
     image_path: Option<PathBuf>,
     declared_dims: crate::volume::Dims,
+    declared_labels: Vec<u16>,
+}
+
+/// What the read stage loaded for the extract stage.
+enum MaskPayload {
+    /// Legacy binary-mask case.
+    Binary(VoxelGrid<u8>),
+    /// Label-map case (`labels` selector set): the integer mask plus the
+    /// resolved label selection to extract.
+    Labels { mask: LabelMask, selected: Vec<u16> },
 }
 
 struct ReadItem {
     case_id: String,
-    mask: VoxelGrid<u8>,
+    payload: MaskPayload,
     image: Option<VoxelGrid<f32>>,
-    read: std::time::Duration,
-    read_image: std::time::Duration,
+    read: Duration,
+    read_image: Duration,
+    /// Feeds the `mem.peak_pipeline_bytes` gauge while the case is in
+    /// flight (read → extracted).
+    _hold: PipelineHold,
+    /// Admission ticket from the pipeline memory budget; dropping it
+    /// (when this item is fully extracted) lets the read pool admit the
+    /// next case.
+    _budget: Option<BudgetGuard>,
+}
+
+/// Everything `load_case` produced; the read worker wraps it into a
+/// [`ReadItem`] with timings.
+struct LoadedCase {
+    payload: MaskPayload,
+    image: Option<VoxelGrid<f32>>,
+    read_image: Duration,
+    hold: PipelineHold,
+    budget: Option<BudgetGuard>,
+}
+
+/// Resolve the `labels` selector against what the mask actually contains
+/// (`observed`) and what the manifest promises (`declared`). `All` is the
+/// union of both, so a declared-but-empty label is *selected* and then
+/// fails per-label downstream instead of silently vanishing.
+fn resolve_labels(sel: &LabelSelection, observed: &[u16], declared: &[u16]) -> Vec<u16> {
+    match sel {
+        LabelSelection::Unset => Vec::new(),
+        LabelSelection::List(ids) => ids.clone(),
+        LabelSelection::All => {
+            let mut all: Vec<u16> = observed.to_vec();
+            all.extend_from_slice(declared);
+            all.sort_unstable();
+            all.dedup();
+            all
+        }
+    }
+}
+
+/// Read one case's volumes, respecting the `labels` selector, the
+/// `slab_io` knob and the pipeline memory budget. Errors carry the
+/// per-stage error-counter name (`errors.read` / `errors.read_image`).
+///
+/// With `slab_io` the mask file is scanned in z-slabs first — a cheap
+/// streaming pass that finds the union ROI bounding box and the label
+/// inventory without materialising the grid — and only the crop is then
+/// read, for both the mask and the image. The budget is therefore sized
+/// on the *crop*, not the file. Whole-grid reads size the budget on the
+/// manifest's declared dims.
+fn load_case(
+    job: &CaseJob,
+    labels_cfg: &LabelSelection,
+    slab_io: bool,
+    needs_image: bool,
+    budget: &Arc<MemoryBudget>,
+) -> Result<LoadedCase, (&'static str, String)> {
+    let want_image = needs_image && job.image_path.is_some();
+    let read_err = |e: anyhow::Error| ("errors.read", format!("read: {e:#}"));
+    let dims_err = |got: crate::volume::Dims| {
+        (
+            "errors.read",
+            format!(
+                "read: mask dims {got} do not match the manifest's dims={} \
+                 (stale or corrupt cases.txt?)",
+                job.declared_dims
+            ),
+        )
+    };
+
+    if slab_io {
+        let scan = scan_mask_slab(&job.mask_path).map_err(read_err)?;
+        if scan.file_dims != job.declared_dims {
+            return Err(dims_err(scan.file_dims));
+        }
+        let (off, dims) = scan.crop_box();
+        let crop_vox = (dims.x * dims.y * dims.z) as u64;
+        let bytes = crop_vox * 2 + if want_image { crop_vox * 4 } else { 0 };
+        let budget_guard = budget.acquire(bytes);
+        let hold = PipelineHold::new(bytes);
+        let grid = read_label_crop(&job.mask_path, off, dims).map_err(read_err)?;
+        let mask = LabelMask::from_grid(grid);
+        let payload = if labels_cfg.is_set() {
+            let selected = resolve_labels(labels_cfg, &mask.labels, &job.declared_labels);
+            if selected.is_empty() {
+                return Err((
+                    "errors.read",
+                    "read: --labels all selected nothing: the mask contains no labels \
+                     and the manifest declares none (labels= in cases.txt)"
+                        .to_string(),
+                ));
+            }
+            MaskPayload::Labels { mask, selected }
+        } else {
+            if mask.labels.len() > 1 {
+                return Err((
+                    "errors.read",
+                    format!(
+                        "read: mask '{}' is a label map with {} distinct labels ({}): \
+                         select the ROIs to extract with --labels <ids|all> (config \
+                         key `labels`) instead of silently merging them into one",
+                        job.mask_path.display(),
+                        mask.labels.len(),
+                        crate::io::format_labels(&mask.labels)
+                    ),
+                ));
+            }
+            MaskPayload::Binary(mask.collapsed())
+        };
+        let mut image = None;
+        let mut read_image = Duration::ZERO;
+        if want_image {
+            let ipath = job.image_path.as_ref().unwrap();
+            let t0 = Instant::now();
+            let sp = crate::trace::span("stage.read_image");
+            let loaded = read_volume_header(ipath)
+                .and_then(|(idims, ispacing)| {
+                    if idims != scan.file_dims || ispacing != scan.spacing {
+                        anyhow::bail!(
+                            "slab_io needs the image on the mask grid, but image dims \
+                             {idims} / spacing {ispacing:?} differ from mask dims {} / \
+                             spacing {:?}; disable slab_io to auto-resample",
+                            scan.file_dims,
+                            scan.spacing
+                        );
+                    }
+                    read_image_crop(ipath, off, dims)
+                })
+                .map_err(|e| {
+                    ("errors.read_image", format!("read image {}: {e:#}", ipath.display()))
+                });
+            drop(sp);
+            read_image = t0.elapsed();
+            image = Some(loaded?);
+        }
+        return Ok(LoadedCase { payload, image, read_image, hold, budget: Some(budget_guard) });
+    }
+
+    // whole-grid read: budget on the declared dims (2 bytes/voxel for a
+    // label mask, 1 for binary, +4 for the f32 image when one is read)
+    let d = job.declared_dims;
+    let file_vox = (d.x * d.y * d.z) as u64;
+    let mask_elem = if labels_cfg.is_set() { 2 } else { 1 };
+    let bytes = file_vox * mask_elem + if want_image { file_vox * 4 } else { 0 };
+    let budget_guard = budget.acquire(bytes);
+    let hold = PipelineHold::new(bytes);
+    let payload = if labels_cfg.is_set() {
+        let mask = crate::io::read_label_mask(&job.mask_path).map_err(read_err)?;
+        if mask.grid.dims != job.declared_dims {
+            return Err(dims_err(mask.grid.dims));
+        }
+        let selected = resolve_labels(labels_cfg, &mask.labels, &job.declared_labels);
+        if selected.is_empty() {
+            return Err((
+                "errors.read",
+                "read: --labels all selected nothing: the mask contains no labels \
+                 and the manifest declares none (labels= in cases.txt)"
+                    .to_string(),
+            ));
+        }
+        MaskPayload::Labels { mask, selected }
+    } else {
+        let mask = crate::io::read_mask(&job.mask_path).map_err(read_err)?;
+        if mask.dims != job.declared_dims {
+            return Err(dims_err(mask.dims));
+        }
+        MaskPayload::Binary(mask)
+    };
+    let mut image = None;
+    let mut read_image = Duration::ZERO;
+    if want_image {
+        let ipath = job.image_path.as_ref().unwrap();
+        let t0 = Instant::now();
+        let sp = crate::trace::span("stage.read_image");
+        let loaded = crate::io::read_image(ipath).map_err(|e| {
+            ("errors.read_image", format!("read image {}: {e:#}", ipath.display()))
+        });
+        drop(sp);
+        read_image = t0.elapsed();
+        image = Some(loaded?);
+    }
+    Ok(LoadedCase { payload, image, read_image, hold, budget: Some(budget_guard) })
 }
 
 /// Run the full streaming pipeline over a dataset.
@@ -73,9 +268,12 @@ pub fn run_pipeline(
 ) -> Result<PipelineReport> {
     let start = Instant::now();
     let metrics = Arc::new(Metrics::new());
-    // scope the derived-image memory gauge to this run (process-wide
-    // high-water mark; concurrent runs in one process share the meter)
+    // scope the memory gauges to this run (process-wide high-water marks;
+    // concurrent runs in one process share the meters)
     crate::imgproc::reset_peak_derived_bytes();
+    crate::imgproc::reset_peak_pipeline_bytes();
+    // pipeline-wide read-admission budget (0 = unlimited)
+    let budget = MemoryBudget::new(cfg.memory_budget);
 
     let (case_tx, case_rx) = bounded::<CaseJob>(cfg.queue_capacity);
     let (read_tx, read_rx) = bounded::<ReadItem>(cfg.queue_capacity);
@@ -98,6 +296,7 @@ pub fn run_pipeline(
                         mask_path: manifest.mask_path(e),
                         image_path: manifest.image_path(e),
                         declared_dims: e.dims,
+                        declared_labels: e.labels.clone(),
                     };
                     if case_tx.send(job).is_err() {
                         break;
@@ -112,75 +311,44 @@ pub fn run_pipeline(
             let read_tx = read_tx.clone();
             let out_tx = out_tx.clone();
             let metrics = metrics.clone();
+            let budget = budget.clone();
+            let labels_cfg = cfg.labels.clone();
+            let slab_io = cfg.slab_io;
             spawn_named(scope, format!("read-{i}"), move || {
                 while let Ok(job) = case_rx.recv() {
                     let _case = crate::trace::case_scope(&job.case_id);
                     let t0 = Instant::now();
                     let sp = crate::trace::span("stage.read");
-                    let loaded = crate::io::read_mask(&job.mask_path);
+                    let loaded = load_case(&job, &labels_cfg, slab_io, needs_image, &budget);
                     drop(sp);
-                    let read = t0.elapsed();
-                    metrics.timer("stage.read").record(read);
-                    let mask = match loaded {
-                        Ok(mask) => mask,
-                        Err(e) => {
+                    let total = t0.elapsed();
+                    let loaded = match loaded {
+                        Ok(l) => l,
+                        Err((counter, msg)) => {
+                            metrics.timer("stage.read").record(total);
                             metrics
-                                .counter("errors.read")
+                                .counter(counter)
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            let msg = format!("read: {e:#}");
                             if out_tx.send(Err((job.case_id, msg))).is_err() {
                                 break;
                             }
                             continue;
                         }
                     };
-                    // the manifest's dims= claim is a contract, not a hint:
-                    // a mismatch means the file and the index disagree
-                    if mask.dims != job.declared_dims {
-                        metrics
-                            .counter("errors.read")
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        let msg = format!(
-                            "read: mask dims {} do not match the manifest's dims={} \
-                             (stale or corrupt cases.txt?)",
-                            mask.dims, job.declared_dims
-                        );
-                        if out_tx.send(Err((job.case_id, msg))).is_err() {
-                            break;
-                        }
-                        continue;
-                    }
-                    let mut image = None;
-                    let mut read_image = std::time::Duration::ZERO;
-                    if needs_image {
-                        if let Some(ipath) = &job.image_path {
-                            let t0 = Instant::now();
-                            let sp = crate::trace::span("stage.read_image");
-                            let loaded = crate::io::read_image(ipath);
-                            drop(sp);
-                            read_image = t0.elapsed();
-                            metrics.timer("stage.read_image").record(read_image);
-                            match loaded {
-                                Ok(img) => image = Some(img),
-                                Err(e) => {
-                                    metrics
-                                        .counter("errors.read_image")
-                                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                                    let msg = format!("read image {}: {e:#}", ipath.display());
-                                    if out_tx.send(Err((job.case_id, msg))).is_err() {
-                                        break;
-                                    }
-                                    continue;
-                                }
-                            }
-                        }
+                    // mask-read time is the case total minus the image leg
+                    let read = total.saturating_sub(loaded.read_image);
+                    metrics.timer("stage.read").record(read);
+                    if loaded.image.is_some() {
+                        metrics.timer("stage.read_image").record(loaded.read_image);
                     }
                     let item = ReadItem {
                         case_id: job.case_id,
-                        mask,
-                        image,
+                        payload: loaded.payload,
+                        image: loaded.image,
                         read,
-                        read_image,
+                        read_image: loaded.read_image,
+                        _hold: loaded.hold,
+                        _budget: loaded.budget,
                     };
                     if read_tx.send(item).is_err() {
                         break;
@@ -197,55 +365,132 @@ pub fn run_pipeline(
             let out_tx = out_tx.clone();
             let metrics = metrics.clone();
             spawn_named(scope, format!("extract-{i}"), move || {
-                while let Ok(item) = read_rx.recv() {
+                let bump = |name: &str| {
+                    metrics.counter(name).fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                };
+                let record = |ex: &crate::dispatch::Extraction| {
+                    metrics.timer("stage.mesh").record(ex.timing.marching);
+                    metrics.timer("stage.diameters").record(ex.timing.diameters);
+                    metrics.timer("stage.transfer").record(ex.timing.transfer);
+                    // timing.texture covers the whole intensity phase; only
+                    // attribute it to the texture stage when texture
+                    // matrices actually ran on any derived image
+                    // (ex.texture alone mirrors just the `original` image,
+                    // which may be disabled)
+                    if ex.derived.iter().any(|d| d.texture.is_some()) {
+                        metrics.timer("stage.texture").record(ex.timing.texture);
+                    }
+                    bump(match ex.path {
+                        PathTaken::Accelerated => "path.accelerated",
+                        PathTaken::CpuFallback => "path.cpu",
+                    });
+                };
+                'cases: while let Ok(item) = read_rx.recv() {
                     let _case = crate::trace::case_scope(&item.case_id);
-                    let sp = crate::trace::span("case");
-                    let res = extractor.execute_case(&item.mask, item.image.as_ref());
-                    drop(sp);
-                    let msg = match res {
-                        Ok(mut ex) => {
-                            ex.timing.read = item.read;
-                            ex.timing.read_image = item.read_image;
-                            metrics.timer("stage.preprocess").record(ex.timing.preprocess);
-                            metrics.timer("stage.mesh").record(ex.timing.marching);
-                            metrics.timer("stage.diameters").record(ex.timing.diameters);
-                            metrics.timer("stage.transfer").record(ex.timing.transfer);
-                            // timing.texture covers the whole intensity
-                            // phase; only attribute it to the texture stage
-                            // when texture matrices actually ran on any
-                            // derived image (ex.texture alone mirrors just
-                            // the `original` image, which may be disabled)
-                            if ex.derived.iter().any(|d| d.texture.is_some()) {
-                                metrics.timer("stage.texture").record(ex.timing.texture);
+                    match &item.payload {
+                        MaskPayload::Binary(mask) => {
+                            let sp = crate::trace::span("case");
+                            let res = extractor.execute_case(mask, item.image.as_ref());
+                            drop(sp);
+                            let msg = match res {
+                                Ok(mut ex) => {
+                                    ex.timing.read = item.read;
+                                    ex.timing.read_image = item.read_image;
+                                    metrics
+                                        .timer("stage.preprocess")
+                                        .record(ex.timing.preprocess);
+                                    record(&ex);
+                                    Ok(CaseResult {
+                                        case_id: item.case_id.clone(),
+                                        label: None,
+                                        features: ex.features,
+                                        first_order: ex.first_order,
+                                        texture: ex.texture,
+                                        derived: ex.derived,
+                                        timing: ex.timing,
+                                        path: ex.path,
+                                    })
+                                }
+                                Err(e) => {
+                                    // every per-case failure lands in
+                                    // exactly one named counter; this is the
+                                    // bucket for failures inside the extract
+                                    // stage itself
+                                    bump("errors.extract");
+                                    Err((item.case_id.clone(), format!("extract: {e:#}")))
+                                }
+                            };
+                            if out_tx.send(msg).is_err() {
+                                break;
                             }
-                            metrics
-                                .counter(match ex.path {
-                                    PathTaken::Accelerated => "path.accelerated",
-                                    PathTaken::CpuFallback => "path.cpu",
-                                })
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            Ok(CaseResult {
-                                case_id: item.case_id,
-                                features: ex.features,
-                                first_order: ex.first_order,
-                                texture: ex.texture,
-                                derived: ex.derived,
-                                timing: ex.timing,
-                                path: ex.path,
-                            })
                         }
-                        Err(e) => {
-                            // every per-case failure lands in exactly one
-                            // named counter; this is the per-stage bucket
-                            // for failures inside the extract stage itself
-                            metrics
-                                .counter("errors.extract")
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            Err((item.case_id, format!("extract: {e:#}")))
+                        MaskPayload::Labels { mask, selected } => {
+                            let sp = crate::trace::span("case");
+                            let res = extractor.execute_label_map(
+                                &item.case_id,
+                                mask,
+                                item.image.as_ref(),
+                                selected,
+                            );
+                            drop(sp);
+                            let per_label = match res {
+                                Ok(p) => p,
+                                Err(e) => {
+                                    // whole-case failure (shared prep):
+                                    // one errors.extract bump, one failure
+                                    bump("errors.extract");
+                                    let msg = (item.case_id.clone(), format!("extract: {e:#}"));
+                                    if out_tx.send(Err(msg)).is_err() {
+                                        break;
+                                    }
+                                    continue;
+                                }
+                            };
+                            // `stage.preprocess` counts once per *case*
+                            // (the pass is shared), while mesh/diameters/
+                            // texture count once per label
+                            let mut case_preprocess = Duration::ZERO;
+                            let mut attached_read = false;
+                            let mut any_ok = false;
+                            for (label, r) in per_label {
+                                let msg = match r {
+                                    Ok(mut ex) => {
+                                        if !attached_read {
+                                            ex.timing.read = item.read;
+                                            ex.timing.read_image = item.read_image;
+                                            attached_read = true;
+                                        }
+                                        any_ok = true;
+                                        case_preprocess += ex.timing.preprocess;
+                                        record(&ex);
+                                        Ok(CaseResult {
+                                            case_id: item.case_id.clone(),
+                                            label: Some(label),
+                                            features: ex.features,
+                                            first_order: ex.first_order,
+                                            texture: ex.texture,
+                                            derived: ex.derived,
+                                            timing: ex.timing,
+                                            path: ex.path,
+                                        })
+                                    }
+                                    Err(e) => {
+                                        // per-label isolation: this label
+                                        // failed, the case's other labels
+                                        // still flow; separate counter so
+                                        // errors.extract stays per-case
+                                        bump("errors.label");
+                                        Err((item.case_id.clone(), format!("label {label}: {e:#}")))
+                                    }
+                                };
+                                if out_tx.send(msg).is_err() {
+                                    break 'cases;
+                                }
+                            }
+                            if any_ok {
+                                metrics.timer("stage.preprocess").record(case_preprocess);
+                            }
                         }
-                    };
-                    if out_tx.send(msg).is_err() {
-                        break;
                     }
                 }
             });
@@ -262,14 +507,19 @@ pub fn run_pipeline(
                 Err(f) => failures.push(f),
             }
         }
-        // stable order: manifest order
+        // stable order: manifest order, then ascending label within a case
         let order: std::collections::HashMap<&str, usize> = manifest
             .cases
             .iter()
             .enumerate()
             .map(|(i, e)| (e.case_id.as_str(), i))
             .collect();
-        results.sort_by_key(|r| order.get(r.case_id.as_str()).copied().unwrap_or(usize::MAX));
+        results.sort_by_key(|r| {
+            (
+                order.get(r.case_id.as_str()).copied().unwrap_or(usize::MAX),
+                r.label.unwrap_or(0),
+            )
+        });
 
         // Batch-occupancy counters from the accelerated dispatcher, when it
         // is live (cumulative over the extractor's lifetime).
@@ -297,6 +547,14 @@ pub fn run_pipeline(
                 crate::imgproc::peak_derived_bytes(),
             );
         }
+
+        // Peak in-flight case residency (mask + image bytes held between
+        // read admission and extraction): the gauge the `memory_budget`
+        // knob bounds, and the slab-vs-whole bench leg's measurement.
+        metrics.set_counter(
+            "mem.peak_pipeline_bytes",
+            crate::imgproc::peak_pipeline_bytes(),
+        );
 
         Ok(PipelineReport {
             results,
@@ -696,6 +954,155 @@ mod tests {
         assert_eq!(report.failures.len(), 1);
         assert_eq!(report.failures[0].0, m.cases[1].case_id);
         assert!(report.failures[0].1.contains("dims=1x2x3"), "{}", report.failures[0].1);
+    }
+
+    fn multilabel_dataset(tag: &str) -> DatasetManifest {
+        let root = std::env::temp_dir().join(format!("radpipe_pipeline_ml_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        crate::synth::generate_multilabel_dataset(&root, &GenOptions { scale: 0.003, seed: 5 })
+            .unwrap()
+    }
+
+    #[test]
+    fn label_map_run_shares_one_pass_and_isolates_the_empty_label() {
+        let m = multilabel_dataset("all");
+        let cfg = PipelineConfig {
+            labels: LabelSelection::All,
+            feature_classes: crate::config::FeatureClasses::parse("all").unwrap(),
+            ..cpu_cfg()
+        };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        // 3 cases × labels {1,2,3}; the declared-but-empty label 4 on the
+        // first case fails per-label, not per-case
+        assert_eq!(report.results.len(), 9, "{:?}", report.failures);
+        assert_eq!(report.failures.len(), 1);
+        assert_eq!(report.failures[0].0, m.cases[0].case_id);
+        assert!(report.failures[0].1.contains("label 4"), "{}", report.failures[0].1);
+        assert!(report.failures[0].1.contains("no voxels"), "{}", report.failures[0].1);
+        assert_eq!(report.metrics.counter("errors.label"), Some(1));
+        assert_eq!(report.metrics.counter("errors.extract"), None);
+        // the error taxonomy stays total with the per-label counter
+        let errors: u64 = report
+            .metrics
+            .counters
+            .iter()
+            .filter(|(k, _)| k.starts_with("errors."))
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(errors, report.failures.len() as u64);
+        // ONE shared pass per case: preprocess counts cases, mesh counts labels
+        assert_eq!(report.metrics.timer("stage.preprocess").map(|t| t.count), Some(3));
+        assert_eq!(report.metrics.timer("stage.mesh").map(|t| t.count), Some(9));
+        assert_eq!(report.metrics.timer("stage.read").map(|t| t.count), Some(3));
+        // rows are (case, label)-ordered and label-tagged
+        let got: Vec<(String, Option<u16>)> = report
+            .results
+            .iter()
+            .map(|r| (r.case_id.clone(), r.label))
+            .collect();
+        let want: Vec<(String, Option<u16>)> = m
+            .cases
+            .iter()
+            .flat_map(|e| (1u16..=3).map(move |l| (e.case_id.clone(), Some(l))))
+            .collect();
+        assert_eq!(got, want);
+        assert!(report.results.iter().all(|r| r.texture.is_some()));
+        assert!(report.metrics_text.contains("mem.peak_pipeline_bytes"));
+    }
+
+    #[test]
+    fn multi_label_mask_without_a_selector_fails_with_the_remedy() {
+        let m = multilabel_dataset("nosel");
+        let cfg = cpu_cfg();
+        assert!(!cfg.labels.is_set());
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.results.is_empty());
+        assert_eq!(report.failures.len(), 3);
+        for (case, msg) in &report.failures {
+            assert!(msg.contains("label map"), "{case}: {msg}");
+            assert!(msg.contains("--labels"), "{case}: {msg}");
+            assert!(msg.contains("1,2,3"), "names the labels found — {case}: {msg}");
+        }
+        assert_eq!(report.metrics.counter("errors.read"), Some(3));
+    }
+
+    #[test]
+    fn explicit_label_list_extracts_only_those_labels() {
+        let m = multilabel_dataset("list");
+        let cfg = PipelineConfig { labels: LabelSelection::List(vec![2]), ..cpu_cfg() };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        assert_eq!(report.results.len(), 3);
+        assert!(report.results.iter().all(|r| r.label == Some(2)));
+    }
+
+    #[test]
+    fn slab_read_run_is_bit_identical_to_whole_read() {
+        let m = multilabel_dataset("slab");
+        let whole_cfg = PipelineConfig {
+            labels: LabelSelection::All,
+            feature_classes: crate::config::FeatureClasses::parse("shape,firstorder").unwrap(),
+            ..cpu_cfg()
+        };
+        let ex = FeatureExtractor::new(&whole_cfg).unwrap();
+        let whole = run_pipeline(&m, &whole_cfg, &ex).unwrap();
+        let slab_cfg = PipelineConfig { slab_io: true, ..whole_cfg.clone() };
+        slab_cfg.validate().unwrap();
+        let ex2 = FeatureExtractor::new(&slab_cfg).unwrap();
+        let slab = run_pipeline(&m, &slab_cfg, &ex2).unwrap();
+        assert_eq!(whole.results.len(), slab.results.len());
+        for (a, b) in whole.results.iter().zip(&slab.results) {
+            assert_eq!((a.case_id.as_str(), a.label), (b.case_id.as_str(), b.label));
+            assert_eq!(a.features, b.features, "{} label {:?}", a.case_id, a.label);
+            assert_eq!(a.first_order, b.first_order, "{} label {:?}", a.case_id, a.label);
+            assert_eq!(a.derived, b.derived, "{} label {:?}", a.case_id, a.label);
+        }
+        assert_eq!(whole.failures.len(), slab.failures.len());
+    }
+
+    #[test]
+    fn slab_io_also_serves_legacy_binary_masks() {
+        let m = tiny_dataset("slabbin");
+        let whole_cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&whole_cfg).unwrap();
+        let whole = run_pipeline(&m, &whole_cfg, &ex).unwrap();
+        let slab_cfg = PipelineConfig { slab_io: true, ..cpu_cfg() };
+        let ex2 = FeatureExtractor::new(&slab_cfg).unwrap();
+        let slab = run_pipeline(&m, &slab_cfg, &ex2).unwrap();
+        assert!(slab.failures.is_empty(), "{:?}", slab.failures);
+        assert_eq!(whole.results.len(), slab.results.len());
+        for (a, b) in whole.results.iter().zip(&slab.results) {
+            assert_eq!(a.case_id, b.case_id);
+            assert_eq!(a.features, b.features, "{}", a.case_id);
+        }
+    }
+
+    #[test]
+    fn memory_budget_throttles_but_completes_identically() {
+        let m = tiny_dataset("budget");
+        let free_cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&free_cfg).unwrap();
+        let free = run_pipeline(&m, &free_cfg, &ex).unwrap();
+        // a budget far below one case still admits cases one at a time
+        let tight_cfg = PipelineConfig {
+            memory_budget: 1024,
+            read_workers: 3,
+            feature_workers: 2,
+            ..cpu_cfg()
+        };
+        let ex2 = FeatureExtractor::new(&tight_cfg).unwrap();
+        let tight = run_pipeline(&m, &tight_cfg, &ex2).unwrap();
+        assert!(tight.failures.is_empty(), "{:?}", tight.failures);
+        assert_eq!(free.results.len(), tight.results.len());
+        for (a, b) in free.results.iter().zip(&tight.results) {
+            assert_eq!(a.case_id, b.case_id);
+            assert_eq!(a.features, b.features, "{}", a.case_id);
+        }
+        let peak = tight.metrics.counter("mem.peak_pipeline_bytes").unwrap();
+        assert!(peak > 0, "gauge must reflect in-flight case bytes");
     }
 
     #[test]

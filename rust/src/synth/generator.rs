@@ -188,6 +188,70 @@ pub fn generate_dataset(root: &Path, opts: &GenOptions) -> Result<DatasetManifes
             image: Some(iname.into()),
             dims: mask.dims,
             target_vertices: nverts, // record the *measured* vertex count
+            labels: Vec::new(),
+        });
+    }
+    let manifest = DatasetManifest { root: root.to_path_buf(), cases: entries };
+    manifest.save()?;
+    Ok(manifest)
+}
+
+/// Split a binary ROI into three labels by x-bands of its bounding box —
+/// a deterministic multi-label segmentation with spatially coherent,
+/// non-empty ROIs (the generator's blobs are convex-ish, so every band of
+/// the box contains voxels).
+fn relabel_by_x_bands(mask: &VoxelGrid<u8>) -> VoxelGrid<u16> {
+    let (mut minx, mut maxx) = (usize::MAX, 0usize);
+    for (x, _, _) in mask.iter_roi() {
+        minx = minx.min(x);
+        maxx = maxx.max(x);
+    }
+    let mut out: VoxelGrid<u16> = VoxelGrid::zeros(mask.dims, mask.spacing);
+    if minx > maxx {
+        return out; // empty mask
+    }
+    let w = maxx - minx + 1;
+    let (a, b) = (minx + w / 3, minx + 2 * w / 3);
+    for (x, y, z) in mask.iter_roi() {
+        let label = if x < a {
+            1
+        } else if x < b {
+            2
+        } else {
+            3
+        };
+        out.set(x, y, z, label);
+    }
+    out
+}
+
+/// Generate a small deterministic **multi-label** dataset: 3 cases, each a
+/// u16 label map carrying labels `{1, 2, 3}` (the binary blob split into
+/// x-bands) plus a paired intensity image. The first case's manifest entry
+/// additionally declares label `4`, which no voxel carries — so a
+/// `--labels all` run surfaces exactly one per-label failure (the
+/// declared-but-empty label) while every present label extracts. This is
+/// the fixture the label-map conformance tests and the CI texture-matrix
+/// job run against.
+pub fn generate_multilabel_dataset(root: &Path, opts: &GenOptions) -> Result<DatasetManifest> {
+    std::fs::create_dir_all(root)?;
+    let mut entries = Vec::new();
+    for (i, case) in paper_cases().into_iter().take(3).enumerate() {
+        let (mask, nverts) = generate_case(&case, opts);
+        let labels = relabel_by_x_bands(&mask);
+        let fname = format!("{}.rvol.gz", case.case_id);
+        write_rvol(&root.join(&fname), &labels)?;
+        let image = synthesize_image(&mask, opts.seed ^ case_stream(case.case_id));
+        let iname = format!("{}.img.rvol.gz", case.case_id);
+        write_rvol(&root.join(&iname), &image)?;
+        entries.push(CaseEntry {
+            case_id: case.case_id.to_string(),
+            mask: fname.into(),
+            image: Some(iname.into()),
+            dims: mask.dims,
+            target_vertices: nverts,
+            // the first case declares a label that is deliberately absent
+            labels: if i == 0 { vec![1, 2, 3, 4] } else { vec![1, 2, 3] },
         });
     }
     let manifest = DatasetManifest { root: root.to_path_buf(), cases: entries };
@@ -268,5 +332,31 @@ mod tests {
         assert_eq!(a.dims, mask_a.dims);
         let b = crate::io::read_image(&back.image_path(&back.cases[1]).unwrap()).unwrap();
         assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn multilabel_dataset_has_three_labels_and_one_declared_empty() {
+        let root = std::env::temp_dir().join("radpipe_synth_multilabel");
+        let _ = std::fs::remove_dir_all(&root);
+        let opts = GenOptions { scale: 0.005, seed: 3 };
+        let m = generate_multilabel_dataset(&root, &opts).unwrap();
+        assert_eq!(m.cases.len(), 3);
+        assert_eq!(m.cases[0].labels, vec![1, 2, 3, 4], "declares the empty label");
+        assert_eq!(m.cases[1].labels, vec![1, 2, 3]);
+        for e in &m.cases {
+            let lm = crate::io::read_label_mask(&m.mask_path(e)).unwrap();
+            assert_eq!(lm.labels, vec![1, 2, 3], "{}: observed inventory", e.case_id);
+            assert!(lm.binary(4).count_nonzero() == 0, "{}: label 4 empty", e.case_id);
+            assert!(m.image_path(e).unwrap().exists());
+        }
+        // deterministic: a second generation is bit-identical
+        let root2 = std::env::temp_dir().join("radpipe_synth_multilabel2");
+        let _ = std::fs::remove_dir_all(&root2);
+        generate_multilabel_dataset(&root2, &opts).unwrap();
+        for e in &m.cases {
+            let a = std::fs::read(m.mask_path(e)).unwrap();
+            let b = std::fs::read(root2.join(e.mask.clone())).unwrap();
+            assert_eq!(a, b, "{}", e.case_id);
+        }
     }
 }

@@ -12,4 +12,6 @@ mod cases;
 mod generator;
 
 pub use cases::{paper_cases, PaperCase, PAPER_CASE_COUNT};
-pub use generator::{generate_case, generate_dataset, synthesize_image, GenOptions};
+pub use generator::{
+    generate_case, generate_dataset, generate_multilabel_dataset, synthesize_image, GenOptions,
+};

@@ -1,0 +1,200 @@
+//! Integer label-map masks: one segmentation volume carrying many ROIs.
+//!
+//! Clinical segmentations routinely pack several structures into a single
+//! integer volume — label 1 = tumour, 2 = oedema, … — where the legacy
+//! path collapsed everything non-zero to a single binary ROI. A
+//! [`LabelMask`] keeps the raw `u16` labels plus their inventory so the
+//! dispatcher can extract each label independently from one shared read /
+//! resample / crop pass.
+//!
+//! The companion [`crop_to_roi_labels`] is [`crop_to_roi`] for label
+//! volumes: it crops to the **union** bounding box of every non-zero
+//! label (same 1-voxel zero margin), preserving the label values. The
+//! crop geometry nests: cropping a single label's binary view out of the
+//! union crop yields bit-identical grids to cropping it from the full
+//! volume, with offsets composing additively (unit-tested below) — which
+//! is what lets per-label extraction share one pass without perturbing a
+//! single feature bit.
+
+use super::{crop_to_roi, Dims, VoxelGrid};
+
+/// A multi-ROI segmentation: an integer label volume plus the sorted
+/// inventory of distinct non-zero labels present in it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LabelMask {
+    /// The label volume; `0` is background, any other value a ROI id.
+    pub grid: VoxelGrid<u16>,
+    /// Sorted distinct non-zero labels present in `grid`.
+    pub labels: Vec<u16>,
+}
+
+impl LabelMask {
+    /// Wrap a label volume, scanning it once for the label inventory.
+    pub fn from_grid(grid: VoxelGrid<u16>) -> LabelMask {
+        let labels = label_inventory(&grid);
+        LabelMask { grid, labels }
+    }
+
+    /// Collapse every non-zero label to `1` — the legacy binary view.
+    pub fn collapsed(&self) -> VoxelGrid<u8> {
+        self.grid.map(|v| u8::from(v != 0))
+    }
+
+    /// Binary mask of a single label (`v == label` → 1, else 0).
+    pub fn binary(&self, label: u16) -> VoxelGrid<u8> {
+        self.grid.map(|v| u8::from(v == label))
+    }
+}
+
+/// Sorted distinct non-zero labels of a label volume.
+pub fn label_inventory(grid: &VoxelGrid<u16>) -> Vec<u16> {
+    let mut seen = vec![false; 1 << 16];
+    for &v in grid.data() {
+        seen[v as usize] = true;
+    }
+    seen.iter()
+        .enumerate()
+        .skip(1)
+        .filter(|&(_, &s)| s)
+        .map(|(i, _)| i as u16)
+        .collect()
+}
+
+/// [`crop_to_roi`] for label volumes: crop to the union bounding box of
+/// *all* non-zero labels plus the same 1-voxel zero margin, preserving
+/// the raw label values. Returns the cropped grid and the voxel-index
+/// offset of the crop origin in the original volume.
+pub fn crop_to_roi_labels(grid: &VoxelGrid<u16>) -> (VoxelGrid<u16>, (usize, usize, usize)) {
+    let dims = grid.dims;
+    let (mut minx, mut miny, mut minz) = (usize::MAX, usize::MAX, usize::MAX);
+    let (mut maxx, mut maxy, mut maxz) = (0usize, 0usize, 0usize);
+    let mut any = false;
+    for (i, &v) in grid.data().iter().enumerate() {
+        if v != 0 {
+            any = true;
+            let x = i % dims.x;
+            let y = (i / dims.x) % dims.y;
+            let z = i / (dims.x * dims.y);
+            minx = minx.min(x);
+            miny = miny.min(y);
+            minz = minz.min(z);
+            maxx = maxx.max(x);
+            maxy = maxy.max(y);
+            maxz = maxz.max(z);
+        }
+    }
+    if !any {
+        return (VoxelGrid::zeros(Dims::new(1, 1, 1), grid.spacing), (0, 0, 0));
+    }
+    // identical margin/clamp arithmetic to `crop_to_roi`
+    let ox = minx.saturating_sub(1);
+    let oy = miny.saturating_sub(1);
+    let oz = minz.saturating_sub(1);
+    let out_dims = Dims::new(
+        (maxx - ox + 2).min(dims.x - ox + 1),
+        (maxy - oy + 2).min(dims.y - oy + 1),
+        (maxz - oz + 2).min(dims.z - oz + 1),
+    );
+    let mut out = VoxelGrid::zeros(out_dims, grid.spacing);
+    for z in 0..out_dims.z {
+        for y in 0..out_dims.y {
+            for x in 0..out_dims.x {
+                let (gx, gy, gz) = (ox + x, oy + y, oz + z);
+                if gx < dims.x && gy < dims.y && gz < dims.z {
+                    let v = grid.get(gx, gy, gz);
+                    if v != 0 {
+                        out.set(x, y, z, v);
+                    }
+                }
+            }
+        }
+    }
+    (out, (ox, oy, oz))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Vec3;
+
+    fn three_label_grid() -> VoxelGrid<u16> {
+        let mut g = VoxelGrid::zeros(Dims::new(12, 10, 9), Vec3::splat(1.0));
+        // label 1: small blob near the low corner
+        for (x, y, z) in [(2, 2, 2), (3, 2, 2), (2, 3, 2)] {
+            g.set(x, y, z, 1);
+        }
+        // label 3: a bar near the far face (touches the clamped margin)
+        for x in 7..11 {
+            g.set(x, 8, 7, 3);
+        }
+        // label 7: single voxel between them
+        g.set(5, 5, 4, 7);
+        g
+    }
+
+    #[test]
+    fn inventory_is_sorted_and_distinct() {
+        let lm = LabelMask::from_grid(three_label_grid());
+        assert_eq!(lm.labels, vec![1, 3, 7]);
+        let empty = LabelMask::from_grid(VoxelGrid::zeros(Dims::new(2, 2, 2), Vec3::splat(1.0)));
+        assert!(empty.labels.is_empty());
+    }
+
+    #[test]
+    fn collapsed_and_binary_views() {
+        let lm = LabelMask::from_grid(three_label_grid());
+        assert_eq!(lm.collapsed().count_nonzero(), 8);
+        assert_eq!(lm.binary(1).count_nonzero(), 3);
+        assert_eq!(lm.binary(3).count_nonzero(), 4);
+        assert_eq!(lm.binary(7).count_nonzero(), 1);
+        assert_eq!(lm.binary(2).count_nonzero(), 0);
+        // binary views are exact: voxel (5,5,4) belongs to label 7 only
+        assert_eq!(lm.binary(7).get(5, 5, 4), 1);
+        assert_eq!(lm.binary(1).get(5, 5, 4), 0);
+    }
+
+    #[test]
+    fn union_crop_matches_collapsed_binary_crop_geometry() {
+        let lm = LabelMask::from_grid(three_label_grid());
+        let (ucrop, uoff) = crop_to_roi_labels(&lm.grid);
+        let (bcrop, boff) = crop_to_roi(&lm.collapsed());
+        assert_eq!(uoff, boff);
+        assert_eq!(ucrop.dims, bcrop.dims);
+        // values survive the crop uncollapsed
+        let mut seen = std::collections::BTreeSet::new();
+        for &v in ucrop.data() {
+            if v != 0 {
+                seen.insert(v);
+            }
+        }
+        assert_eq!(seen.into_iter().collect::<Vec<_>>(), vec![1, 3, 7]);
+    }
+
+    #[test]
+    fn empty_grid_crops_to_the_empty_sentinel() {
+        let g: VoxelGrid<u16> = VoxelGrid::zeros(Dims::new(4, 4, 4), Vec3::splat(1.0));
+        let (crop, off) = crop_to_roi_labels(&g);
+        assert_eq!(off, (0, 0, 0));
+        assert_eq!(crop.dims, Dims::new(1, 1, 1));
+    }
+
+    #[test]
+    fn per_label_crops_nest_bit_identically_inside_the_union_crop() {
+        // the algebra the shared-pass dispatcher relies on: cropping a
+        // label's binary view out of the union crop must reproduce the
+        // standalone full-volume crop exactly, offsets composing
+        let lm = LabelMask::from_grid(three_label_grid());
+        let (ucrop, uoff) = crop_to_roi_labels(&lm.grid);
+        for &label in &lm.labels {
+            let (standalone, s_off) = crop_to_roi(&lm.binary(label));
+            let local = ucrop.map(|v| u8::from(v == label));
+            let (nested, n_off) = crop_to_roi(&local);
+            assert_eq!(nested, standalone, "label {label}");
+            assert_eq!(
+                (n_off.0 + uoff.0, n_off.1 + uoff.1, n_off.2 + uoff.2),
+                s_off,
+                "label {label}"
+            );
+        }
+    }
+}

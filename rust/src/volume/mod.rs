@@ -6,7 +6,9 @@
 //! `index * spacing` in millimetres.
 
 mod grid;
+mod label;
 mod mask;
 
 pub use grid::{Dims, VoxelGrid};
+pub use label::{crop_to_roi_labels, label_inventory, LabelMask};
 pub use mask::{crop_box, crop_to_roi, MaskStats};

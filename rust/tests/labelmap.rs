@@ -1,0 +1,255 @@
+//! Integration locks for label-map extraction and slab-streamed IO.
+//!
+//! Two contracts the out-of-core, label-aware path must never drift from:
+//!
+//! * a label-map run is bit-identical to N separate binary-mask runs —
+//!   shape + first-order + all five texture classes, for every parallel
+//!   strategy × thread count;
+//! * a slab-streamed read (`slab_io = true`) yields bit-identical features
+//!   to the whole-grid read, in every supported container format.
+//!
+//! Both rest on exact arithmetic: the fixtures use integer-valued
+//! intensities (exact in f32) and the crop-nesting algebra unit-tested in
+//! `volume::label`, so every assertion below is `==`, never a tolerance.
+
+use radpipe::config::{Backend, FeatureClasses, LabelSelection, PipelineConfig};
+use radpipe::dispatch::FeatureExtractor;
+use radpipe::geometry::Vec3;
+use radpipe::io::{write_nifti, write_nifti_image, write_rvol, CaseEntry, DatasetManifest};
+use radpipe::parallel::Strategy;
+use radpipe::pipeline::run_pipeline;
+use radpipe::synth::{generate_multilabel_dataset, GenOptions};
+use radpipe::volume::{Dims, LabelMask, VoxelGrid};
+
+/// Thread counts for the determinism sweeps: 1/2/4/8 by default; the CI
+/// thread-matrix leg pins the sweep via `RADPIPE_TEST_THREADS` (same
+/// contract as tests/conformance.rs).
+fn sweep_threads() -> Vec<usize> {
+    if let Ok(v) = std::env::var("RADPIPE_TEST_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return vec![n];
+            }
+        }
+    }
+    vec![1, 2, 4, 8]
+}
+
+/// Three ROIs (labels 1, 3, 7) in an anisotropic 18×16×14 grid: two
+/// blocks plus a thin bar, with label 3 touching the far x face so the
+/// crop margin clamp path is exercised.
+fn label_fixture() -> LabelMask {
+    let mut g = VoxelGrid::zeros(Dims::new(18, 16, 14), Vec3::new(0.8, 0.8, 2.0));
+    for z in 2..6 {
+        for y in 3..8 {
+            for x in 2..7 {
+                g.set(x, y, z, 1);
+            }
+        }
+    }
+    for z in 7..12 {
+        for y in 9..14 {
+            for x in 11..18 {
+                g.set(x, y, z, 3);
+            }
+        }
+    }
+    for x in 8..11 {
+        g.set(x, 6, 6, 7);
+    }
+    LabelMask::from_grid(g)
+}
+
+/// Deterministic integer-valued intensities — exact in f32, so write →
+/// read → extract round-trips are bit-preserving.
+fn fixture_image(dims: Dims, spacing: Vec3) -> VoxelGrid<f32> {
+    let mut img = VoxelGrid::zeros(dims, spacing);
+    for z in 0..dims.z {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                img.set(x, y, z, ((7 * x + 3 * y + 11 * z) % 61) as f32 - 14.0);
+            }
+        }
+    }
+    img
+}
+
+#[test]
+fn label_map_matches_binary_runs_for_every_strategy_and_thread_count() {
+    // the tentpole conformance lock: one shared-pass label-map extraction
+    // == N independent binary-mask extractions, bit for bit, with shape +
+    // first-order + all five texture classes enabled
+    let lm = label_fixture();
+    let img = fixture_image(lm.grid.dims, lm.grid.spacing);
+    for strategy in Strategy::ALL {
+        for &threads in &sweep_threads() {
+            let cfg = PipelineConfig {
+                backend: Backend::Cpu,
+                cpu_threads: threads,
+                strategy,
+                feature_classes: FeatureClasses::parse("all").unwrap(),
+                ..Default::default()
+            };
+            let ex = FeatureExtractor::new(&cfg).unwrap();
+            let out = ex.execute_label_map("case", &lm, Some(&img), &lm.labels).unwrap();
+            assert_eq!(out.len(), 3, "{strategy:?} x{threads}");
+            for (label, res) in out {
+                let tag = format!("{strategy:?} x{threads} label {label}");
+                let got = res.unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+                let want = ex.execute_case(&lm.binary(label), Some(&img)).unwrap();
+                assert_eq!(got.features, want.features, "{tag}: shape");
+                assert_eq!(got.first_order, want.first_order, "{tag}: first-order");
+                assert_eq!(got.texture, want.texture, "{tag}: texture");
+                assert_eq!(got.derived, want.derived, "{tag}: derived images");
+            }
+        }
+    }
+}
+
+#[test]
+fn synthetic_label_map_matches_binary_runs_on_every_derived_image() {
+    // with the synthetic stand-in, the per-label image is synthesised on
+    // the label's own crop, so even LoG/wavelet features are bit-identical
+    // to the standalone binary run
+    let lm = label_fixture();
+    let cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 2,
+        feature_classes: FeatureClasses::parse("all").unwrap(),
+        image_types: radpipe::imgproc::ImageTypes::parse("all").unwrap(),
+        log_sigmas: vec![1.0, 2.0],
+        synthetic_image: true,
+        ..Default::default()
+    };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let out = ex.execute_label_map("case", &lm, None, &lm.labels).unwrap();
+    assert_eq!(out.len(), 3);
+    for (label, res) in out {
+        let got = res.unwrap();
+        let want = ex.execute_mask(&lm.binary(label)).unwrap();
+        assert_eq!(got.derived.len(), 11, "original + 2 LoG + 8 wavelet");
+        assert_eq!(got.features, want.features, "label {label}: shape");
+        assert_eq!(got.derived, want.derived, "label {label}: derived images");
+    }
+}
+
+#[test]
+fn slab_read_is_bit_identical_to_whole_read_in_every_container() {
+    let lm = label_fixture();
+    let img = fixture_image(lm.grid.dims, lm.grid.spacing);
+    let base = std::env::temp_dir().join("radpipe_labelmap_slab_formats");
+    let _ = std::fs::remove_dir_all(&base);
+
+    for (mask_name, img_name) in [
+        ("m.nii", "i.nii"),
+        ("m.nii.gz", "i.nii.gz"),
+        ("m.rvol", "i.rvol"),
+        ("m.rvol.gz", "i.rvol.gz"),
+    ] {
+        let root = base.join(mask_name.replace('.', "_"));
+        std::fs::create_dir_all(&root).unwrap();
+        if mask_name.starts_with("m.nii") {
+            // NIfTI masks carry the label ids in uint8 (ids here are ≤ 7)
+            write_nifti(&root.join(mask_name), &lm.grid.map(|v| v as u8)).unwrap();
+            write_nifti_image(&root.join(img_name), &img).unwrap();
+        } else {
+            write_rvol(&root.join(mask_name), &lm.grid).unwrap();
+            write_rvol(&root.join(img_name), &img).unwrap();
+        }
+        let manifest = DatasetManifest {
+            root: root.clone(),
+            cases: vec![CaseEntry {
+                case_id: format!("case-{mask_name}"),
+                mask: mask_name.into(),
+                image: Some(img_name.into()),
+                dims: lm.grid.dims,
+                target_vertices: 0,
+                labels: Vec::new(),
+            }],
+        };
+        let cfg = |slab: bool| PipelineConfig {
+            backend: Backend::Cpu,
+            cpu_threads: 1,
+            feature_classes: FeatureClasses::parse("all").unwrap(),
+            labels: LabelSelection::All,
+            slab_io: slab,
+            ..Default::default()
+        };
+        let whole_cfg = cfg(false);
+        let whole =
+            run_pipeline(&manifest, &whole_cfg, &FeatureExtractor::new(&whole_cfg).unwrap())
+                .unwrap();
+        let slab_cfg = cfg(true);
+        slab_cfg.validate().unwrap();
+        let slab =
+            run_pipeline(&manifest, &slab_cfg, &FeatureExtractor::new(&slab_cfg).unwrap())
+                .unwrap();
+        assert!(whole.failures.is_empty(), "{mask_name}: {:?}", whole.failures);
+        assert!(slab.failures.is_empty(), "{mask_name}: {:?}", slab.failures);
+        assert_eq!(whole.results.len(), 3, "{mask_name}: one row per label");
+        assert_eq!(slab.results.len(), whole.results.len(), "{mask_name}");
+        for (a, b) in whole.results.iter().zip(&slab.results) {
+            assert_eq!(a.case_id, b.case_id, "{mask_name}");
+            assert_eq!(a.label, b.label, "{mask_name}");
+            let tag = format!("{mask_name} label {:?}", a.label);
+            assert_eq!(a.features, b.features, "{tag}: shape");
+            assert_eq!(a.first_order, b.first_order, "{tag}: first-order");
+            assert_eq!(a.texture, b.texture, "{tag}: texture");
+            assert_eq!(a.derived, b.derived, "{tag}: derived images");
+        }
+        // the slab run tracked its bounded in-flight footprint
+        assert!(
+            slab.metrics.counter("mem.peak_pipeline_bytes").unwrap_or(0) > 0,
+            "{mask_name}: peak gauge missing"
+        );
+    }
+}
+
+#[test]
+fn multilabel_fixture_shares_one_pass_and_isolates_the_empty_label() {
+    let root = std::env::temp_dir().join("radpipe_labelmap_fixture_run");
+    let _ = std::fs::remove_dir_all(&root);
+    let m = generate_multilabel_dataset(&root, &GenOptions { scale: 0.003, seed: 5 }).unwrap();
+    assert_eq!(m.cases.len(), 3);
+    let cfg = PipelineConfig {
+        backend: Backend::Cpu,
+        cpu_threads: 2,
+        feature_classes: FeatureClasses::parse("all").unwrap(),
+        labels: LabelSelection::All,
+        memory_budget: 1 << 20,
+        ..Default::default()
+    };
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let report = run_pipeline(&m, &cfg, &ex).unwrap();
+
+    // 3 cases × labels 1..3 extract; the declared-but-empty label 4 of the
+    // first case is the run's only failure — isolated, not fatal
+    assert_eq!(report.results.len(), 9, "one row per populated (case, label)");
+    assert_eq!(report.failures.len(), 1);
+    let (case, err) = &report.failures[0];
+    assert_eq!(case, &m.cases[0].case_id);
+    assert!(err.contains("label 4") && err.contains("no voxels"), "{err}");
+
+    // failure accounting stays exact: per-label errors land on their own
+    // counter, the whole-case counter stays untouched, and the counters
+    // sum to the failure list
+    assert_eq!(report.metrics.counter("errors.label"), Some(1));
+    assert_eq!(report.metrics.counter("errors.extract").unwrap_or(0), 0);
+    let err_sum: u64 = report
+        .metrics
+        .counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("errors."))
+        .map(|(_, &v)| v)
+        .sum();
+    assert_eq!(err_sum, report.failures.len() as u64);
+
+    // the N-label extraction shares ONE pass per case: preprocess counts
+    // cases, mesh counts labels, and each mask file is read exactly once
+    assert_eq!(report.metrics.timer("stage.preprocess").map(|t| t.count), Some(3));
+    assert_eq!(report.metrics.timer("stage.mesh").map(|t| t.count), Some(9));
+    assert_eq!(report.metrics.timer("stage.read").map(|t| t.count), Some(3));
+
+    // the memory budget rode along and reported the peak it governed
+    assert!(report.metrics.counter("mem.peak_pipeline_bytes").unwrap_or(0) > 0);
+}
