@@ -64,7 +64,7 @@ fn slab_dataset(quick: bool) -> anyhow::Result<DatasetManifest> {
             case_id,
             mask: mask_name.into(),
             image: Some(img_name.into()),
-            dims,
+            dims: Some(dims),
             target_vertices: 0,
             labels: Vec::new(),
         });

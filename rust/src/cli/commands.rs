@@ -7,11 +7,12 @@ use anyhow::{bail, Context, Result};
 
 use super::args::Args;
 use crate::bench::{compare, load_dir, parse_tolerance, Tolerance};
+use crate::cohort::{run_batch, BatchOptions};
 use crate::config::{Backend, PipelineConfig};
 use crate::dispatch::FeatureExtractor;
 use crate::experiments;
 use crate::gpusim::{cpu_profiles, gpu_profiles};
-use crate::pipeline::run_pipeline;
+use crate::pipeline::{case_named_features, run_pipeline};
 use crate::report::{JsonValue, Table};
 use crate::synth::{generate_dataset, generate_multilabel_dataset, GenOptions};
 
@@ -41,6 +42,14 @@ USAGE:
                                           without an image= manifest entry)
                     [--trace-out FILE]   (Chrome Trace Event JSON of the run)
                     [--metrics-out FILE] (radpipe.metrics/1 snapshot)
+  radpipe batch     --manifest FILE [--journal FILE] [--resume]
+                    [--cache-dir DIR] [--cache-max-bytes N[K|M|G|T]]
+                    [--json FILE] [--csv FILE] (+ every extract tuning flag)
+                    (cohort CSV manifest: case_id,mask[,image][,labels].
+                     Per-case failures become status=failed report rows;
+                     the journal checkpoint lets --resume re-execute only
+                     unfinished cases; the content-addressed cache replays
+                     identical inputs bit-for-bit with zero extractions)
   radpipe obs-check [--trace FILE] [--metrics FILE]
                     [--require-stages read,preprocess,mesh,diameters]
                     (validate observability outputs of an extract run)
@@ -65,6 +74,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
     match cmd {
         "gen-data" => gen_data(&args),
         "extract" => extract(&args),
+        "batch" => batch(&args),
         "obs-check" => obs_check(&args),
         "table2" => table2(&args),
         "fig1" => fig1(&args),
@@ -104,7 +114,7 @@ fn gen_data(args: &Args) -> Result<()> {
                 e.labels.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",");
             t.row(vec![
                 e.case_id.clone(),
-                e.dims.to_string(),
+                e.dims.map(|d| d.to_string()).unwrap_or_default(),
                 e.target_vertices.to_string(),
                 labels,
             ]);
@@ -113,7 +123,11 @@ fn gen_data(args: &Args) -> Result<()> {
     } else {
         let mut t = Table::new(vec!["case", "dims", "vertices"]);
         for e in &m.cases {
-            t.row(vec![e.case_id.clone(), e.dims.to_string(), e.target_vertices.to_string()]);
+            t.row(vec![
+                e.case_id.clone(),
+                e.dims.map(|d| d.to_string()).unwrap_or_default(),
+                e.target_vertices.to_string(),
+            ]);
         }
         print!("{}", t.to_text());
     }
@@ -202,6 +216,13 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if args.flag("synthetic-image") {
         cfg.synthetic_image = true;
     }
+    if let Some(dir) = args.opt("cache-dir") {
+        cfg.cache_dir = Some(PathBuf::from(dir));
+    }
+    if let Some(s) = args.opt("cache-max-bytes") {
+        cfg.cache_max_bytes =
+            crate::config::parse_byte_size(s).context("--cache-max-bytes")?;
+    }
     if let Some(p) = args.opt("trace-out") {
         cfg.trace_out = Some(PathBuf::from(p));
     }
@@ -210,19 +231,6 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     }
     cfg.validate()?;
     Ok(cfg)
-}
-
-/// Every computed (name, value) pair of one case, in stable order: shape,
-/// then every derived image (original keeps the historical plain names;
-/// LoG / wavelet images carry filter-qualified names, e.g.
-/// `log-sigma-2-0-mm_firstorder_Mean`).
-fn case_named_features(r: &crate::pipeline::CaseResult) -> Vec<(String, f64)> {
-    let mut out: Vec<(String, f64)> =
-        r.features.named().into_iter().map(|(n, v)| (n.to_string(), v)).collect();
-    for d in &r.derived {
-        out.extend(d.named());
-    }
-    out
 }
 
 fn extract(args: &Args) -> Result<()> {
@@ -364,6 +372,113 @@ fn extract(args: &Args) -> Result<()> {
     }
     if !report.failures.is_empty() {
         bail!("{} case(s) failed", report.failures.len());
+    }
+    Ok(())
+}
+
+/// Cohort batch mode: isolate per-case failures, checkpoint every
+/// finished case to a journal, and replay the content-addressed feature
+/// cache. The full report (status/error columns + stored feature
+/// strings) goes to --csv/--json; the terminal gets a summary table.
+fn batch(args: &Args) -> Result<()> {
+    let manifest = PathBuf::from(args.req("manifest")?);
+    let cfg = load_config(args)?;
+    let json_out = args.opt("json").map(PathBuf::from);
+    let csv_out = args.opt("csv").map(PathBuf::from);
+    let journal = args.opt("journal").map(PathBuf::from);
+    let resume = args.flag("resume");
+    args.finish()?;
+
+    let trace_sink = cfg.trace_out.as_ref().map(|_| crate::trace::TraceSink::new());
+    let session = trace_sink.clone().map(crate::trace::install);
+
+    let extractor = FeatureExtractor::new(&cfg)?;
+    let opts = BatchOptions {
+        manifest,
+        cache_dir: cfg.cache_dir.clone(),
+        cache_max_bytes: cfg.cache_max_bytes,
+        journal,
+        resume,
+    };
+    let outcome = run_batch(&cfg, &extractor, &opts)?;
+    drop(session);
+    if let (Some(path), Some(sink)) = (cfg.trace_out.as_ref(), trace_sink.as_ref()) {
+        sink.write(path)?;
+        eprintln!("wrote {}", path.display());
+    }
+    if let Some(path) = cfg.metrics_out.as_ref() {
+        outcome.metrics.write(path)?;
+        eprintln!("wrote {}", path.display());
+    }
+
+    let mut t = Table::new(vec!["case", "label", "status", "error"]);
+    for r in &outcome.rows {
+        // errors can be long and multi-line; the full text lives in the
+        // CSV/JSON reports, the terminal gets one readable line
+        let flat = r.error.replace(['\n', '\r'], " ");
+        let short: String = flat.chars().take(72).collect();
+        t.row(vec![
+            r.case_id.clone(),
+            r.label.map(|l| l.to_string()).unwrap_or_default(),
+            r.status.to_string(),
+            short,
+        ]);
+    }
+    print!("{}", t.to_text());
+    eprintln!(
+        "cohort: {} case(s): {} ok, {} failed | {} executed, {} from cache, {} from journal | wall {:.2}s",
+        outcome.total,
+        outcome.succeeded,
+        outcome.failed,
+        outcome.executed,
+        outcome.from_cache,
+        outcome.from_journal,
+        outcome.wall.as_secs_f64()
+    );
+
+    if let Some(path) = json_out {
+        let mut doc = JsonValue::obj();
+        doc.set("schema", "radpipe.batch/1");
+        let mut rows = Vec::new();
+        for r in &outcome.rows {
+            let mut o = JsonValue::obj();
+            o.set("case", r.case_id.as_str());
+            match r.label {
+                Some(l) => o.set("label", l as usize),
+                None => o.set("label", JsonValue::Null),
+            };
+            o.set("status", r.status);
+            o.set("error", r.error.as_str());
+            let mut f = JsonValue::obj();
+            // values as their stored strings: NaN/inf survive, and the
+            // document is byte-stable across cold/warm/resumed runs
+            for (name, value) in &r.features {
+                f.set(name, value.as_str());
+            }
+            o.set("features", f);
+            rows.push(o);
+        }
+        doc.set("rows", JsonValue::Arr(rows));
+        doc.set("total", outcome.total);
+        doc.set("executed", outcome.executed);
+        doc.set("from_cache", outcome.from_cache);
+        doc.set("from_journal", outcome.from_journal);
+        doc.set("succeeded", outcome.succeeded);
+        doc.set("failed", outcome.failed);
+        doc.set("metrics", outcome.metrics.to_json());
+        std::fs::write(&path, doc.to_string())
+            .with_context(|| format!("write {}", path.display()))?;
+        eprintln!("wrote {}", path.display());
+    }
+
+    if let Some(path) = csv_out {
+        std::fs::write(&path, outcome.to_csv())
+            .with_context(|| format!("write {}", path.display()))?;
+        eprintln!("wrote {}", path.display());
+    }
+
+    if outcome.failed > 0 {
+        bail!("{} case(s) failed", outcome.failed);
     }
     Ok(())
 }
@@ -1072,5 +1187,141 @@ mod tests {
             "extract", "--data", dir.to_str().unwrap(), "--labels", "0",
         ]))
         .is_err());
+    }
+
+    /// Generate a small dataset and derive a cohort CSV from its
+    /// `cases.txt`, returning (dataset dir, cohort manifest path).
+    fn cohort_fixture(tag: &str) -> (PathBuf, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("radpipe_cli_batch_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dispatch(argv(&[
+            "gen-data", "--out", dir.to_str().unwrap(), "--scale", "0.002", "--seed", "3",
+        ]))
+        .unwrap();
+        let m = crate::io::scan_dataset(&dir).unwrap();
+        let mut csv = String::from("case_id,mask\n");
+        for e in &m.cases {
+            csv.push_str(&format!("{},{}\n", e.case_id, e.mask.display()));
+        }
+        let manifest = dir.join("cohort.csv");
+        std::fs::write(&manifest, csv).unwrap();
+        (dir, manifest)
+    }
+
+    #[test]
+    fn batch_cold_then_warm_runs_are_byte_identical_with_zero_extractions() {
+        let (dir, manifest) = cohort_fixture("warm");
+        let cache = dir.join("cache");
+        let csv1 = dir.join("b1.csv");
+        let csv2 = dir.join("b2.csv");
+        let metrics2 = dir.join("m2.json");
+        let base = [
+            "batch", "--manifest", manifest.to_str().unwrap(),
+            "--backend", "cpu",
+            "--cache-dir", cache.to_str().unwrap(),
+        ];
+        let mut cold: Vec<&str> = base.to_vec();
+        cold.extend(["--csv", csv1.to_str().unwrap()]);
+        dispatch(argv(&cold)).unwrap();
+        let mut warm: Vec<&str> = base.to_vec();
+        warm.extend([
+            "--csv", csv2.to_str().unwrap(),
+            "--metrics-out", metrics2.to_str().unwrap(),
+        ]);
+        dispatch(argv(&warm)).unwrap();
+        assert_eq!(
+            std::fs::read(&csv1).unwrap(),
+            std::fs::read(&csv2).unwrap(),
+            "warm-cache report must be byte-identical to the cold run"
+        );
+        let snap =
+            crate::metrics::snapshot::MetricsSnapshot::read(&metrics2).unwrap();
+        assert_eq!(snap.counter("batch.executed"), Some(0), "warm run extracts nothing");
+        assert_eq!(snap.counter("cache.hit"), snap.counter("batch.succeeded"));
+        assert_eq!(snap.counter("cache.miss"), Some(0));
+    }
+
+    #[test]
+    fn batch_isolates_a_poisoned_case_and_exits_nonzero() {
+        let (dir, manifest) = cohort_fixture("poison");
+        // poison one case: its mask path points at garbage bytes
+        let bad = dir.join("garbage.rvol.gz");
+        std::fs::write(&bad, b"this is not a volume").unwrap();
+        let mut text = std::fs::read_to_string(&manifest).unwrap();
+        text.push_str("poisoned,garbage.rvol.gz\n");
+        std::fs::write(&manifest, text).unwrap();
+        let csv = dir.join("b.csv");
+        let err = dispatch(argv(&[
+            "batch", "--manifest", manifest.to_str().unwrap(),
+            "--backend", "cpu",
+            "--csv", csv.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("1 case(s) failed"), "{err:#}");
+        // the report still carries every healthy case plus the failed row
+        let text = std::fs::read_to_string(&csv).unwrap();
+        let failed: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("poisoned,")).collect();
+        assert_eq!(failed.len(), 1, "{text}");
+        assert!(failed[0].contains("failed"), "{failed:?}");
+        assert!(
+            text.lines().filter(|l| l.contains(",ok,")).count() >= 1,
+            "healthy cases still extract: {text}"
+        );
+    }
+
+    #[test]
+    fn batch_resume_skips_journaled_cases() {
+        let (dir, manifest) = cohort_fixture("resume");
+        let journal = dir.join("run.journal");
+        let m1 = dir.join("m1.json");
+        dispatch(argv(&[
+            "batch", "--manifest", manifest.to_str().unwrap(),
+            "--backend", "cpu",
+            "--journal", journal.to_str().unwrap(),
+            "--metrics-out", m1.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let total = crate::metrics::snapshot::MetricsSnapshot::read(&m1)
+            .unwrap()
+            .counter("batch.cases")
+            .unwrap();
+        assert!(total > 0);
+        // resume right after a completed run: nothing left to execute
+        let m2 = dir.join("m2.json");
+        dispatch(argv(&[
+            "batch", "--manifest", manifest.to_str().unwrap(),
+            "--backend", "cpu",
+            "--journal", journal.to_str().unwrap(),
+            "--resume",
+            "--metrics-out", m2.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let snap = crate::metrics::snapshot::MetricsSnapshot::read(&m2).unwrap();
+        assert_eq!(snap.counter("batch.executed"), Some(0));
+        assert_eq!(snap.counter("batch.from_journal"), Some(total));
+    }
+
+    #[test]
+    fn batch_rejects_bad_knobs_and_manifests() {
+        let dir = std::env::temp_dir().join("radpipe_cli_batch_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = dir.join("cohort.csv");
+        std::fs::write(&manifest, "case_id,mask\na,m.rvol\n").unwrap();
+        // u64-overflow byte size is a parse error, not a wrapped number
+        let err = dispatch(argv(&[
+            "batch", "--manifest", manifest.to_str().unwrap(),
+            "--cache-max-bytes", "18446744073709551G",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--cache-max-bytes"), "{err:#}");
+        // a manifest without the required columns is a located error
+        std::fs::write(&manifest, "id,volume\na,m.rvol\n").unwrap();
+        let err = dispatch(argv(&[
+            "batch", "--manifest", manifest.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("case_id column"), "{err:#}");
     }
 }

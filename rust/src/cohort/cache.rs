@@ -1,0 +1,297 @@
+//! Content-addressed feature cache.
+//!
+//! A cache entry is keyed by SHA-256 over (schema tag, canonicalized
+//! config, mask file bytes, image file bytes, label selection) — the
+//! complete set of inputs that determine feature values. Parallelism
+//! knobs (threads, strategy, backend, slab vs whole-grid reads, queue
+//! sizes) are deliberately **excluded**: the pipeline's determinism
+//! contract guarantees bit-identical features across all of them, so a
+//! cohort hashed on a laptop hits the cache on a 64-core node.
+//!
+//! Entries are JSON files under `<dir>/<key[..2]>/<key>.json`, written
+//! via tmp-file + rename so a killed run never leaves a half-written
+//! entry a later run could read. `--cache-max-bytes` evicts
+//! oldest-modified-first after each store.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::PipelineConfig;
+use crate::report::JsonValue;
+
+use super::manifest::CohortCase;
+use super::sha256::{hex, Sha256};
+use super::StoredRow;
+
+/// Cache entry schema tag; bump on incompatible layout changes.
+pub const SCHEMA: &str = "radpipe.cache/1";
+
+/// The value-affecting slice of the config, rendered to a stable string
+/// for hashing. Anything that changes feature *values* must appear here;
+/// anything that only changes *how fast* they are computed must not.
+/// Rendering goes through `Debug`, so a `Debug` drift across builds reads
+/// as a different config — a safe cache miss, never a wrong result.
+pub fn canonical_config(cfg: &PipelineConfig) -> String {
+    format!(
+        "feature_classes={:?};bin_width={};bin_count={};glcm_distances={:?};\
+         gldm_alpha={};image_types={:?};log_sigmas={:?};resampled_spacing={};\
+         wavelet_levels={};synthetic_image={};labels={:?}",
+        cfg.feature_classes,
+        cfg.bin_width,
+        cfg.bin_count,
+        cfg.glcm_distances,
+        cfg.gldm_alpha,
+        cfg.image_types,
+        cfg.log_sigmas,
+        cfg.resampled_spacing,
+        cfg.wavelet_levels,
+        cfg.synthetic_image,
+        cfg.labels,
+    )
+}
+
+/// On-disk feature cache rooted at `dir`.
+pub struct FeatureCache {
+    dir: PathBuf,
+    /// 0 = unbounded; otherwise evict oldest entries past this total.
+    max_bytes: u64,
+}
+
+impl FeatureCache {
+    pub fn open(dir: &Path, max_bytes: u64) -> Result<FeatureCache> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create cache directory {}", dir.display()))?;
+        Ok(FeatureCache { dir: dir.to_path_buf(), max_bytes })
+    }
+
+    /// Compute the content key for one cohort case. Reads the mask and
+    /// image files in full — an unreadable input is an error here, which
+    /// callers treat as a miss so the pipeline reports the real failure.
+    pub fn case_key(&self, cfg_canon: &str, case: &CohortCase, root: &Path) -> Result<String> {
+        let mut h = Sha256::new();
+        // length-prefix every part so (a,bc) and (ab,c) cannot collide
+        let part = |h: &mut Sha256, bytes: &[u8]| {
+            h.update(&(bytes.len() as u64).to_le_bytes());
+            h.update(bytes);
+        };
+        part(&mut h, SCHEMA.as_bytes());
+        part(&mut h, cfg_canon.as_bytes());
+        let mask_path = root.join(&case.mask);
+        let mask = std::fs::read(&mask_path)
+            .with_context(|| format!("hash mask {}", mask_path.display()))?;
+        part(&mut h, &mask);
+        match &case.image {
+            Some(rel) => {
+                let image_path = root.join(rel);
+                let image = std::fs::read(&image_path)
+                    .with_context(|| format!("hash image {}", image_path.display()))?;
+                part(&mut h, b"image");
+                part(&mut h, &image);
+            }
+            None => part(&mut h, b"no-image"),
+        }
+        part(&mut h, format!("{:?}", case.labels).as_bytes());
+        Ok(hex(&h.finalize()))
+    }
+
+    /// Entry path: two-hex-char fan-out directory keeps any one directory
+    /// from accumulating an entire cohort of files.
+    fn entry_path(&self, key: &str) -> PathBuf {
+        self.dir.join(&key[..2]).join(format!("{key}.json"))
+    }
+
+    /// Fetch stored rows for a key. Any problem — absent file, schema
+    /// drift, damaged JSON — is a miss, never an error: the pipeline can
+    /// always recompute.
+    pub fn lookup(&self, key: &str) -> Option<Vec<StoredRow>> {
+        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
+        let doc = JsonValue::parse(&text).ok()?;
+        if doc.get("schema").and_then(JsonValue::as_str) != Some(SCHEMA) {
+            return None;
+        }
+        doc.get("rows")?
+            .as_arr()?
+            .iter()
+            .map(|r| StoredRow::from_json(r).ok())
+            .collect()
+    }
+
+    /// Store rows for a key. Atomic: written to a tmp file in the same
+    /// directory, then renamed over the final path.
+    pub fn store(&self, key: &str, case_id: &str, rows: &[StoredRow]) -> Result<()> {
+        let path = self.entry_path(key);
+        let parent = path.parent().expect("entry path always has a parent");
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("create cache shard {}", parent.display()))?;
+        let mut doc = JsonValue::obj();
+        doc.set("schema", SCHEMA);
+        doc.set("case", case_id);
+        doc.set("key", key);
+        doc.set("rows", rows.iter().map(StoredRow::to_json).collect::<Vec<_>>());
+        let tmp = parent.join(format!(".tmp-{key}"));
+        std::fs::write(&tmp, doc.to_string())
+            .with_context(|| format!("write cache entry {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publish cache entry {}", path.display()))?;
+        self.evict()
+    }
+
+    /// Trim the cache to `max_bytes`, oldest-modified entries first
+    /// (path as a deterministic tiebreak). No-op when unbounded.
+    fn evict(&self) -> Result<()> {
+        if self.max_bytes == 0 {
+            return Ok(());
+        }
+        let mut entries: Vec<(std::time::SystemTime, PathBuf, u64)> = Vec::new();
+        let mut total: u64 = 0;
+        for shard in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("scan cache {}", self.dir.display()))?
+        {
+            let shard = shard?;
+            if !shard.file_type()?.is_dir() {
+                continue;
+            }
+            for f in std::fs::read_dir(shard.path())? {
+                let f = f?;
+                let path = f.path();
+                if path.extension().map(|e| e != "json").unwrap_or(true) {
+                    continue;
+                }
+                let meta = f.metadata()?;
+                let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+                total += meta.len();
+                entries.push((mtime, path, meta.len()));
+            }
+        }
+        if total <= self.max_bytes {
+            return Ok(());
+        }
+        entries.sort();
+        for (_, path, len) in entries {
+            if total <= self.max_bytes {
+                break;
+            }
+            // a concurrent run may have raced us to this entry; that is fine
+            if std::fs::remove_file(&path).is_ok() {
+                total = total.saturating_sub(len);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_cohort(tag: &str) -> (PathBuf, CohortCase) {
+        let dir = std::env::temp_dir().join(format!("radpipe_cache_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.bin"), b"mask-bytes").unwrap();
+        std::fs::write(dir.join("i.bin"), b"image-bytes").unwrap();
+        let case = CohortCase {
+            case_id: "a".into(),
+            mask: "m.bin".into(),
+            image: Some("i.bin".into()),
+            labels: vec![1, 2],
+        };
+        (dir, case)
+    }
+
+    fn rows() -> Vec<StoredRow> {
+        vec![StoredRow {
+            label: Some(1),
+            features: vec![("shape_Volume".into(), "42".into()), ("x".into(), "-inf".into())],
+        }]
+    }
+
+    #[test]
+    fn key_tracks_every_input_and_nothing_else() {
+        let (dir, case) = tmp_cohort("key");
+        let cache = FeatureCache::open(&dir.join("cache"), 0).unwrap();
+        let mut cfg = PipelineConfig::default();
+        let canon = canonical_config(&cfg);
+        let base = cache.case_key(&canon, &case, &dir).unwrap();
+        assert_eq!(base, cache.case_key(&canon, &case, &dir).unwrap(), "stable");
+
+        // mask bytes change the key
+        std::fs::write(dir.join("m.bin"), b"mask-bytes2").unwrap();
+        assert_ne!(base, cache.case_key(&canon, &case, &dir).unwrap());
+        std::fs::write(dir.join("m.bin"), b"mask-bytes").unwrap();
+
+        // dropping the image changes the key
+        let mut no_img = case.clone();
+        no_img.image = None;
+        assert_ne!(base, cache.case_key(&canon, &no_img, &dir).unwrap());
+
+        // label selection changes the key
+        let mut other_labels = case.clone();
+        other_labels.labels = vec![1];
+        assert_ne!(base, cache.case_key(&canon, &other_labels, &dir).unwrap());
+
+        // a value-affecting config knob changes the key…
+        cfg.bin_width *= 2.0;
+        assert_ne!(base, cache.case_key(&canonical_config(&cfg), &case, &dir).unwrap());
+        cfg.bin_width /= 2.0;
+
+        // …but parallelism knobs do not (determinism contract)
+        cfg.feature_workers = 17;
+        cfg.slab_io = true;
+        cfg.memory_budget = 12345;
+        cfg.cpu_threads = 3;
+        assert_eq!(base, cache.case_key(&canonical_config(&cfg), &case, &dir).unwrap());
+
+        // the case id is NOT part of the key: identical content shares one entry
+        let mut renamed = case.clone();
+        renamed.case_id = "b".into();
+        assert_eq!(base, cache.case_key(&canon, &renamed, &dir).unwrap());
+    }
+
+    #[test]
+    fn unreadable_input_is_an_error_not_a_key() {
+        let (dir, mut case) = tmp_cohort("unreadable");
+        let cache = FeatureCache::open(&dir.join("cache"), 0).unwrap();
+        case.mask = "missing.bin".into();
+        let err = cache.case_key("cfg", &case, &dir).unwrap_err();
+        assert!(format!("{err:#}").contains("missing.bin"), "{err:#}");
+    }
+
+    #[test]
+    fn store_then_lookup_round_trips_and_misses_stay_misses() {
+        let (dir, _case) = tmp_cohort("rt");
+        let cache = FeatureCache::open(&dir.join("cache"), 0).unwrap();
+        let key = "ab".to_string() + &"cd".repeat(31);
+        assert!(cache.lookup(&key).is_none(), "cold cache misses");
+        cache.store(&key, "case-a", &rows()).unwrap();
+        assert_eq!(cache.lookup(&key).unwrap(), rows());
+        // a damaged entry degrades to a miss, never an error
+        let path = cache.entry_path(&key);
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(cache.lookup(&key).is_none());
+        // so does a schema-drifted one
+        std::fs::write(&path, "{\"schema\":\"radpipe.cache/999\",\"rows\":[]}").unwrap();
+        assert!(cache.lookup(&key).is_none());
+    }
+
+    #[test]
+    fn eviction_drops_oldest_entries_to_fit_the_budget() {
+        let (dir, _case) = tmp_cohort("evict");
+        let cache = FeatureCache::open(&dir.join("cache"), 0).unwrap();
+        let keys: Vec<String> = (0..4).map(|i| format!("{i:02x}") + &"00".repeat(31)).collect();
+        for k in &keys {
+            cache.store(k, "c", &rows()).unwrap();
+            // mtime granularity on some filesystems is coarse; space the writes
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let entry_len = std::fs::metadata(cache.entry_path(&keys[0])).unwrap().len();
+        // budget for two entries: the two oldest must go
+        let bounded = FeatureCache::open(&dir.join("cache"), entry_len * 2).unwrap();
+        bounded.evict().unwrap();
+        assert!(bounded.lookup(&keys[0]).is_none(), "oldest evicted");
+        assert!(bounded.lookup(&keys[1]).is_none(), "second-oldest evicted");
+        assert!(bounded.lookup(&keys[2]).is_some());
+        assert!(bounded.lookup(&keys[3]).is_some());
+    }
+}

@@ -1,0 +1,267 @@
+//! Append-only batch journal: one JSON line per finished case.
+//!
+//! `radpipe batch` appends an entry the moment a case's outcome reaches
+//! the sink, so a killed run (OOM, SIGKILL, node eviction) loses at most
+//! the in-flight cases. `--resume` replays the journal and re-executes
+//! only cases with no entry. A kill can truncate the final line mid-write;
+//! [`Journal::load`] therefore stops at the first unparseable line — a
+//! killed run can only corrupt the tail, and everything before it is
+//! intact by construction (each entry is flushed before the next starts).
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::report::JsonValue;
+
+use super::StoredRow;
+
+/// Journal line schema tag; bump on incompatible layout changes so a
+/// resume never misreads an old journal.
+pub const SCHEMA: &str = "radpipe.journal/1";
+
+/// One finished case: either its feature rows or its failure messages
+/// (a label-map case can have both — some labels extracted, some failed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEntry {
+    pub case_id: String,
+    pub rows: Vec<StoredRow>,
+    pub failures: Vec<String>,
+}
+
+impl JournalEntry {
+    pub fn is_success(&self) -> bool {
+        self.failures.is_empty() && !self.rows.is_empty()
+    }
+
+    pub fn to_json_line(&self) -> String {
+        let mut doc = JsonValue::obj();
+        doc.set("schema", SCHEMA);
+        doc.set("case", self.case_id.as_str());
+        doc.set("status", if self.is_success() { "ok" } else { "failed" });
+        doc.set(
+            "rows",
+            self.rows.iter().map(StoredRow::to_json).collect::<Vec<_>>(),
+        );
+        doc.set(
+            "failures",
+            self.failures.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        // JsonValue renders single-line (newlines in strings are escaped),
+        // so one entry is always exactly one journal line
+        doc.to_string()
+    }
+
+    pub fn from_json_line(line: &str) -> Result<JournalEntry> {
+        let doc = JsonValue::parse(line).context("journal line is not valid JSON")?;
+        match doc.get("schema").and_then(JsonValue::as_str) {
+            Some(s) if s == SCHEMA => {}
+            other => bail!(
+                "journal line has schema {:?}, this build reads {SCHEMA:?}",
+                other
+            ),
+        }
+        let case_id = doc
+            .get("case")
+            .and_then(JsonValue::as_str)
+            .context("journal line has no case id")?
+            .to_string();
+        let rows = doc
+            .get("rows")
+            .and_then(JsonValue::as_arr)
+            .context("journal line has no rows array")?
+            .iter()
+            .map(StoredRow::from_json)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("journal entry for case '{case_id}'"))?;
+        let failures = doc
+            .get("failures")
+            .and_then(JsonValue::as_arr)
+            .context("journal line has no failures array")?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .context("journal failure message is not a string")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(JournalEntry { case_id, rows, failures })
+    }
+}
+
+/// Open journal handle; every [`Journal::append`] is flushed before it
+/// returns so the entry survives a kill of this process.
+pub struct Journal {
+    file: File,
+}
+
+impl Journal {
+    /// Start a fresh journal (truncates any previous one).
+    pub fn create(path: &Path) -> Result<Journal> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create journal directory {}", parent.display()))?;
+        }
+        let file = File::create(path)
+            .with_context(|| format!("create journal {}", path.display()))?;
+        Ok(Journal { file })
+    }
+
+    /// Continue an existing journal (creates it if absent) — the resume
+    /// path, where replayed entries must be preserved.
+    pub fn append_to(path: &Path) -> Result<Journal> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create journal directory {}", parent.display()))?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        Ok(Journal { file })
+    }
+
+    pub fn append(&mut self, entry: &JournalEntry) -> Result<()> {
+        let mut line = entry.to_json_line();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|()| self.file.flush())
+            .with_context(|| format!("append journal entry for case '{}'", entry.case_id))
+    }
+
+    /// Load every intact entry; a missing journal is an empty one. Parsing
+    /// stops silently at the first damaged line (the truncated tail of a
+    /// killed run) — those cases simply re-execute.
+    pub fn load(path: &Path) -> Result<Vec<JournalEntry>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e).with_context(|| format!("read journal {}", path.display()))
+            }
+        };
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match JournalEntry::from_json_line(line) {
+                Ok(entry) => entries.push(entry),
+                Err(_) => break,
+            }
+        }
+        Ok(entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: &str) -> JournalEntry {
+        JournalEntry {
+            case_id: id.to_string(),
+            rows: vec![StoredRow {
+                label: Some(3),
+                features: vec![
+                    ("firstorder_Mean".into(), "12.5".into()),
+                    ("firstorder_Skewness".into(), "NaN".into()),
+                ],
+            }],
+            failures: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn entry_round_trips_through_its_json_line() {
+        let e = JournalEntry {
+            case_id: "weird \"id\"\nwith newline".to_string(),
+            rows: vec![
+                StoredRow { label: None, features: vec![("shape_Volume".into(), "1e-300".into())] },
+                StoredRow { label: Some(65535), features: Vec::new() },
+            ],
+            failures: vec!["read: no such file".to_string()],
+        };
+        let line = e.to_json_line();
+        assert!(!line.contains('\n'), "an entry must be a single line: {line:?}");
+        assert_eq!(JournalEntry::from_json_line(&line).unwrap(), e);
+        assert!(!e.is_success(), "failures present → not a success");
+        assert!(entry("x").is_success());
+    }
+
+    #[test]
+    fn empty_rows_and_no_failures_is_not_a_success() {
+        let e = JournalEntry { case_id: "e".into(), rows: Vec::new(), failures: Vec::new() };
+        assert!(!e.is_success(), "no rows means nothing was extracted");
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let line = entry("a").to_json_line().replace(SCHEMA, "radpipe.journal/999");
+        let err = JournalEntry::from_json_line(&line).unwrap_err();
+        assert!(format!("{err:#}").contains("schema"), "{err:#}");
+    }
+
+    #[test]
+    fn append_then_load_round_trips() {
+        let dir = std::env::temp_dir().join("radpipe_journal_test_rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("run.journal");
+        let mut j = Journal::create(&path).unwrap();
+        j.append(&entry("a")).unwrap();
+        j.append(&entry("b")).unwrap();
+        drop(j);
+        // resume-style reopen appends, not truncates
+        let mut j = Journal::append_to(&path).unwrap();
+        j.append(&entry("c")).unwrap();
+        drop(j);
+        let got = Journal::load(&path).unwrap();
+        assert_eq!(
+            got.iter().map(|e| e.case_id.as_str()).collect::<Vec<_>>(),
+            ["a", "b", "c"]
+        );
+        assert_eq!(got[0], entry("a"));
+    }
+
+    #[test]
+    fn missing_journal_loads_empty() {
+        let path = std::env::temp_dir().join("radpipe_journal_test_missing.journal");
+        let _ = std::fs::remove_file(&path);
+        assert!(Journal::load(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncated_tail_is_dropped_but_the_prefix_survives() {
+        let dir = std::env::temp_dir().join("radpipe_journal_test_trunc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("run.journal");
+        let mut j = Journal::create(&path).unwrap();
+        j.append(&entry("a")).unwrap();
+        j.append(&entry("b")).unwrap();
+        drop(j);
+        // simulate a kill mid-write: chop the last line in half
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cut = text.len() - 20;
+        std::fs::write(&path, &text[..cut]).unwrap();
+        let got = Journal::load(&path).unwrap();
+        assert_eq!(got.len(), 1, "only the intact prefix survives");
+        assert_eq!(got[0].case_id, "a");
+    }
+
+    #[test]
+    fn create_truncates_a_previous_journal() {
+        let dir = std::env::temp_dir().join("radpipe_journal_test_fresh");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("run.journal");
+        let mut j = Journal::create(&path).unwrap();
+        j.append(&entry("old")).unwrap();
+        drop(j);
+        let j = Journal::create(&path).unwrap();
+        drop(j);
+        assert!(Journal::load(&path).unwrap().is_empty());
+    }
+}

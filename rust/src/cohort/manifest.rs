@@ -1,0 +1,327 @@
+//! Cohort manifests: the CSV front-door of `radpipe batch`.
+//!
+//! ```csv
+//! case_id,mask,image,labels
+//! patient-001,masks/001.rvol.gz,images/001.img.rvol.gz,
+//! patient-002,masks/002.rvol.gz,,"1,2,4"
+//! ```
+//!
+//! The header row names the columns (any order, unknown columns
+//! ignored): `case_id` and `mask` are required, `image` and `labels` are
+//! optional. Paths are resolved against the manifest's directory;
+//! absolute paths stand as-is. Cells follow RFC 4180 — quoted fields may
+//! carry commas, doubled quotes, and embedded line breaks, so hostile
+//! case ids survive a write→parse round trip. Unlike `cases.txt`, cohort
+//! rows declare no dims: the pipeline sizes budgets from file headers.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One row of a cohort manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CohortCase {
+    pub case_id: String,
+    /// Mask path, relative to the manifest's directory (or absolute).
+    pub mask: PathBuf,
+    /// Optional intensity image path.
+    pub image: Option<PathBuf>,
+    /// Declared label inventory from the `labels` cell (sorted, deduped);
+    /// feeds `--labels all` exactly like `labels=` in `cases.txt`.
+    pub labels: Vec<u16>,
+}
+
+/// A loaded cohort: the manifest's directory plus its parsed rows.
+#[derive(Debug, Clone)]
+pub struct CohortManifest {
+    pub root: PathBuf,
+    pub cases: Vec<CohortCase>,
+}
+
+/// Read and parse a cohort CSV manifest.
+pub fn load_cohort(path: &Path) -> Result<CohortManifest> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read cohort manifest {}", path.display()))?;
+    let cases =
+        parse_cohort_csv(&text).with_context(|| format!("parse {}", path.display()))?;
+    let root = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    Ok(CohortManifest { root, cases })
+}
+
+/// Parse the manifest text. Errors carry the 1-based record number
+/// (header = record 1).
+pub fn parse_cohort_csv(text: &str) -> Result<Vec<CohortCase>> {
+    let mut records = parse_csv(text)?;
+    // a blank line parses as one empty field; drop those
+    records.retain(|r| !(r.len() == 1 && r[0].is_empty()));
+    if records.is_empty() {
+        bail!("cohort manifest is empty (need a header row: case_id,mask[,image][,labels])");
+    }
+    let header = records.remove(0);
+    let col = |name: &str| header.iter().position(|h| h.trim().eq_ignore_ascii_case(name));
+    let ci = col("case_id")
+        .context("cohort manifest header has no case_id column (case_id,mask[,image][,labels])")?;
+    let mi = col("mask")
+        .context("cohort manifest header has no mask column (case_id,mask[,image][,labels])")?;
+    let ii = col("image");
+    let li = col("labels");
+
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut cases = Vec::with_capacity(records.len());
+    for (n, rec) in records.iter().enumerate() {
+        let rec_no = n + 2; // 1-based, after the header
+        let get = |i: usize| rec.get(i).map(String::as_str).unwrap_or("");
+        let case_id = get(ci);
+        if case_id.is_empty() {
+            bail!("cohort manifest record {rec_no}: empty case_id");
+        }
+        if !seen.insert(case_id.to_string()) {
+            bail!("cohort manifest record {rec_no}: duplicate case_id '{case_id}'");
+        }
+        let mask = get(mi);
+        if mask.is_empty() {
+            bail!("cohort manifest record {rec_no}: case '{case_id}' has an empty mask path");
+        }
+        let image = ii
+            .map(|i| get(i))
+            .filter(|v| !v.is_empty())
+            .map(PathBuf::from);
+        let labels = match li {
+            Some(i) => parse_labels(get(i))
+                .with_context(|| format!("cohort manifest record {rec_no}: labels cell"))?,
+            None => Vec::new(),
+        };
+        cases.push(CohortCase {
+            case_id: case_id.to_string(),
+            mask: PathBuf::from(mask),
+            image,
+            labels,
+        });
+    }
+    if cases.is_empty() {
+        bail!("cohort manifest has a header but no case rows");
+    }
+    Ok(cases)
+}
+
+/// Label inventory cell: ids separated by commas, semicolons or spaces
+/// (commas require the cell to be quoted).
+fn parse_labels(cell: &str) -> Result<Vec<u16>> {
+    let mut out = Vec::new();
+    for tok in cell.split([',', ';', ' ', '\t']) {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let id: u16 = tok.parse().with_context(|| format!("label id '{tok}'"))?;
+        if id == 0 {
+            bail!("label 0 is background and cannot be selected");
+        }
+        out.push(id);
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+/// RFC-4180 record reader: quoted fields may contain commas, doubled
+/// quotes and raw CR/LF; records end at an unquoted LF or CRLF. Returns
+/// the raw cell matrix; no trimming (cell bytes are significant).
+fn parse_csv(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut records: Vec<Vec<String>> = Vec::new();
+    let mut record: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    // a closing quote ends the field's content: only a separator (or a
+    // re-opening doubled quote, handled inside the quoted state) may follow
+    let mut after_close = false;
+    let mut field_quoted = false;
+    let mut chars = text.chars().peekable();
+
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    in_quotes = false;
+                    after_close = true;
+                }
+            } else {
+                field.push(c);
+            }
+            continue;
+        }
+        match c {
+            ',' => {
+                record.push(std::mem::take(&mut field));
+                after_close = false;
+                field_quoted = false;
+            }
+            '\n' | '\r' => {
+                if c == '\r' && chars.peek() == Some(&'\n') {
+                    chars.next();
+                }
+                record.push(std::mem::take(&mut field));
+                records.push(std::mem::take(&mut record));
+                after_close = false;
+                field_quoted = false;
+            }
+            '"' => {
+                if !field.is_empty() || after_close {
+                    bail!(
+                        "CSV record {}: quote inside an unquoted field (quote the whole cell)",
+                        records.len() + 1
+                    );
+                }
+                in_quotes = true;
+                field_quoted = true;
+            }
+            _ => {
+                if after_close {
+                    bail!(
+                        "CSV record {}: content after a closing quote",
+                        records.len() + 1
+                    );
+                }
+                field.push(c);
+            }
+        }
+    }
+    if in_quotes {
+        bail!("CSV record {}: unterminated quoted field", records.len() + 1);
+    }
+    // flush a final record with no trailing newline
+    if !field.is_empty() || field_quoted || !record.is_empty() {
+        record.push(field);
+        records.push(record);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::Table;
+
+    #[test]
+    fn plain_manifest_parses() {
+        let cases = parse_cohort_csv(
+            "case_id,mask,image\n\
+             a,masks/a.rvol.gz,images/a.img.rvol.gz\n\
+             b,masks/b.rvol.gz,\n",
+        )
+        .unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].case_id, "a");
+        assert_eq!(cases[0].image, Some(PathBuf::from("images/a.img.rvol.gz")));
+        assert_eq!(cases[1].image, None, "empty image cell means no image");
+    }
+
+    #[test]
+    fn header_columns_may_reorder_and_unknowns_are_ignored() {
+        let cases = parse_cohort_csv(
+            "site,image,case_id,mask\n\
+             MGH,,p1,m1.rvol\n",
+        )
+        .unwrap();
+        assert_eq!(cases[0].case_id, "p1");
+        assert_eq!(cases[0].mask, PathBuf::from("m1.rvol"));
+    }
+
+    #[test]
+    fn labels_cell_parses_sorted_and_rejects_zero() {
+        let cases = parse_cohort_csv(
+            "case_id,mask,labels\n\
+             a,m.rvol,\"4,1,2,2\"\n\
+             b,m2.rvol,1; 3\n\
+             c,m3.rvol,\n",
+        )
+        .unwrap();
+        assert_eq!(cases[0].labels, vec![1, 2, 4]);
+        assert_eq!(cases[1].labels, vec![1, 3]);
+        assert!(cases[2].labels.is_empty());
+        let err = parse_cohort_csv("case_id,mask,labels\na,m.rvol,0\n").unwrap_err();
+        assert!(format!("{err:#}").contains("background"), "{err:#}");
+    }
+
+    #[test]
+    fn hostile_case_ids_survive_a_write_parse_round_trip() {
+        // ids with commas, quotes, newlines and CRs — written through the
+        // RFC-4180 Table writer, read back through this parser
+        let ids = [
+            "plain",
+            "with,comma",
+            "with \"quotes\"",
+            "multi\nline",
+            "cr\rhere",
+            "all,of\n\"it\"\r together",
+            " leading and trailing ",
+        ];
+        let mut t = Table::new(vec!["case_id", "mask"]);
+        for id in &ids {
+            t.row(vec![id.to_string(), "m.rvol".to_string()]);
+        }
+        let cases = parse_cohort_csv(&t.to_csv()).unwrap();
+        let got: Vec<&str> = cases.iter().map(|c| c.case_id.as_str()).collect();
+        assert_eq!(got, ids, "cell bytes must be preserved exactly");
+    }
+
+    #[test]
+    fn crlf_and_blank_lines_are_tolerated() {
+        let cases = parse_cohort_csv(
+            "case_id,mask\r\n\
+             \r\n\
+             a,m.rvol\r\n\
+             \n\
+             b,n.rvol",
+        )
+        .unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[1].case_id, "b", "final record may lack a newline");
+    }
+
+    #[test]
+    fn duplicate_and_missing_fields_are_located_errors() {
+        let err = parse_cohort_csv("case_id,mask\na,m\na,n\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("record 3") && msg.contains("duplicate"), "{msg}");
+        let err = parse_cohort_csv("case_id,mask\n,m\n").unwrap_err();
+        assert!(format!("{err:#}").contains("empty case_id"), "{err:#}");
+        let err = parse_cohort_csv("case_id,mask\na,\n").unwrap_err();
+        assert!(format!("{err:#}").contains("empty mask"), "{err:#}");
+        let err = parse_cohort_csv("mask\nm\n").unwrap_err();
+        assert!(format!("{err:#}").contains("case_id column"), "{err:#}");
+        let err = parse_cohort_csv("case_id,mask\n").unwrap_err();
+        assert!(format!("{err:#}").contains("no case rows"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_quoting_is_rejected_with_the_record_number() {
+        for bad in [
+            "case_id,mask\na\"b,m\n",      // quote mid-field
+            "case_id,mask\n\"a\"x,m\n",    // content after closing quote
+            "case_id,mask\n\"unterminated", // EOF inside quotes
+        ] {
+            let err = parse_cohort_csv(bad).unwrap_err();
+            assert!(format!("{err:#}").contains("record 2"), "{bad:?}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn load_cohort_resolves_root_to_the_manifest_directory() {
+        let dir = std::env::temp_dir().join("radpipe_cohort_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cohort.csv");
+        std::fs::write(&path, "case_id,mask\na,a.rvol\n").unwrap();
+        let m = load_cohort(&path).unwrap();
+        assert_eq!(m.root, dir);
+        assert_eq!(m.cases.len(), 1);
+        assert!(load_cohort(&dir.join("nope.csv")).is_err());
+    }
+}

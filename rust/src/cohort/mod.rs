@@ -1,0 +1,531 @@
+//! Cohort batch mode: `radpipe batch --manifest cohort.csv`.
+//!
+//! A cohort run is the HPC front-end over the streaming pipeline:
+//!
+//! * **Manifests** ([`manifest`]) — CSV rows of
+//!   `(case_id, mask[, image][, labels])`, RFC-4180 quoted so hostile
+//!   case ids round-trip.
+//! * **Failure isolation** — a case that cannot be read or extracted
+//!   becomes `status=failed` rows in the batch report; the run finishes
+//!   the rest of the cohort.
+//! * **Checkpoint/resume** ([`journal`]) — every finished case is
+//!   appended to a journal the moment its outcome reaches the sink;
+//!   `--resume` replays intact entries and re-executes only the rest.
+//! * **Content-addressed cache** ([`cache`]) — feature rows keyed by
+//!   SHA-256 of (config, mask bytes, image bytes, labels); a warm run
+//!   replays stored rows bit-for-bit with zero extractions.
+//!
+//! Bit-identical replay is the load-bearing property: feature values are
+//! stored as their Rust `Display` strings (shortest round-trip, and
+//! `NaN`/`inf` survive where JSON numbers cannot), and the batch CSV is
+//! assembled from those stored strings on every path — cold, warm and
+//! resumed runs of the same cohort produce byte-identical reports.
+
+pub mod cache;
+pub mod journal;
+pub mod manifest;
+pub mod sha256;
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::PipelineConfig;
+use crate::dispatch::FeatureExtractor;
+use crate::io::{CaseEntry, DatasetManifest};
+use crate::metrics::snapshot::MetricsSnapshot;
+use crate::metrics::Metrics;
+use crate::pipeline::{case_named_features, run_pipeline_with, CaseOutcome, CaseResult};
+use crate::report::{JsonValue, Table};
+
+pub use cache::{canonical_config, FeatureCache};
+pub use journal::{Journal, JournalEntry};
+pub use manifest::{load_cohort, parse_cohort_csv, CohortCase, CohortManifest};
+
+/// One feature row as persisted by the journal and the cache: the label
+/// it belongs to (`None` on the binary-mask path) and every feature as a
+/// `(name, value-string)` pair.
+///
+/// Values are stored as Rust `Display` strings rather than JSON numbers:
+/// `Display` for `f64` is shortest-round-trip (parsing the string yields
+/// the exact same bits), and it can represent `NaN`/`inf`/`-inf`, which
+/// a JSON number cannot. The batch CSV prints these strings verbatim, so
+/// a replayed case is byte-identical to its original extraction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredRow {
+    pub label: Option<u16>,
+    pub features: Vec<(String, String)>,
+}
+
+impl StoredRow {
+    pub fn from_result(r: &CaseResult) -> StoredRow {
+        StoredRow {
+            label: r.label,
+            features: case_named_features(r)
+                .into_iter()
+                .map(|(n, v)| (n, format!("{v}")))
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::obj();
+        match self.label {
+            Some(l) => o.set("label", l as usize),
+            None => o.set("label", JsonValue::Null),
+        };
+        o.set(
+            "features",
+            JsonValue::Arr(
+                self.features
+                    .iter()
+                    .map(|(n, v)| {
+                        JsonValue::Arr(vec![
+                            JsonValue::Str(n.clone()),
+                            JsonValue::Str(v.clone()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<StoredRow> {
+        let label = match v.get("label") {
+            None | Some(JsonValue::Null) => None,
+            Some(l) => {
+                let n = l.as_f64().context("stored row label is not a number")?;
+                if n < 0.0 || n > f64::from(u16::MAX) || n.fract() != 0.0 {
+                    anyhow::bail!("stored row label {n} is not a u16");
+                }
+                Some(n as u16)
+            }
+        };
+        let features = v
+            .get("features")
+            .and_then(JsonValue::as_arr)
+            .context("stored row has no features array")?
+            .iter()
+            .map(|pair| {
+                let pair = pair.as_arr().context("feature entry is not a pair")?;
+                match pair {
+                    [n, val] => Ok((
+                        n.as_str().context("feature name is not a string")?.to_string(),
+                        val.as_str().context("feature value is not a string")?.to_string(),
+                    )),
+                    _ => anyhow::bail!("feature entry is not a [name, value] pair"),
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StoredRow { label, features })
+    }
+}
+
+/// Knobs of one `radpipe batch` invocation.
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// Cohort CSV manifest path.
+    pub manifest: PathBuf,
+    /// Feature cache directory; `None` disables the cache.
+    pub cache_dir: Option<PathBuf>,
+    /// Cache size bound for oldest-first eviction; 0 = unbounded.
+    pub cache_max_bytes: u64,
+    /// Journal path; defaults to `<manifest>.journal`.
+    pub journal: Option<PathBuf>,
+    /// Replay intact journal entries and execute only the remainder.
+    pub resume: bool,
+}
+
+/// One row of the batch report: `status` is `"ok"` (a feature row) or
+/// `"failed"` (an error row whose message sits in `error`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchRow {
+    pub case_id: String,
+    pub label: Option<u16>,
+    pub status: &'static str,
+    pub error: String,
+    pub features: Vec<(String, String)>,
+}
+
+/// Outcome of a batch run: report rows in cohort-manifest order plus the
+/// merged metrics snapshot and provenance tallies.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    pub rows: Vec<BatchRow>,
+    /// Pipeline metrics merged with the cohort-level counters/timers
+    /// (`cache.hit`, `cache.miss`, `stage.cache`, `batch.*`).
+    pub metrics: MetricsSnapshot,
+    /// Cohort size.
+    pub total: usize,
+    /// Cases actually run through the pipeline.
+    pub executed: usize,
+    /// Cases replayed from the feature cache.
+    pub from_cache: usize,
+    /// Cases replayed from the journal (`--resume`).
+    pub from_journal: usize,
+    pub succeeded: usize,
+    pub failed: usize,
+    pub wall: Duration,
+}
+
+impl BatchOutcome {
+    /// The batch CSV: `case,label,status,error` plus the union of feature
+    /// names in first-seen order. Cells are the stored value strings, so
+    /// cold, warm and resumed runs of one cohort emit identical bytes
+    /// (the RFC-4180 writer quotes hostile case ids and error text).
+    pub fn to_csv(&self) -> String {
+        let mut names: Vec<String> = Vec::new();
+        let mut seen: HashSet<&str> = HashSet::new();
+        for r in &self.rows {
+            for (n, _) in &r.features {
+                if seen.insert(n.as_str()) {
+                    names.push(n.clone());
+                }
+            }
+        }
+        let mut headers = vec![
+            "case".to_string(),
+            "label".to_string(),
+            "status".to_string(),
+            "error".to_string(),
+        ];
+        headers.extend(names.iter().cloned());
+        let mut t = Table::new(headers);
+        for r in &self.rows {
+            let mut cells = vec![
+                r.case_id.clone(),
+                r.label.map(|l| l.to_string()).unwrap_or_default(),
+                r.status.to_string(),
+                r.error.clone(),
+            ];
+            let by_name: HashMap<&str, &str> =
+                r.features.iter().map(|(n, v)| (n.as_str(), v.as_str())).collect();
+            for n in &names {
+                cells.push(by_name.get(n.as_str()).map(|v| v.to_string()).unwrap_or_default());
+            }
+            t.row(cells);
+        }
+        t.to_csv()
+    }
+}
+
+/// `<manifest>.journal`, next to the manifest.
+fn default_journal_path(manifest: &std::path::Path) -> PathBuf {
+    let mut os = manifest.as_os_str().to_os_string();
+    os.push(".journal");
+    PathBuf::from(os)
+}
+
+/// Run a cohort. See the module docs for the journal/cache contract.
+pub fn run_batch(
+    cfg: &PipelineConfig,
+    extractor: &FeatureExtractor,
+    opts: &BatchOptions,
+) -> Result<BatchOutcome> {
+    let start = Instant::now();
+    let cohort = manifest::load_cohort(&opts.manifest)?;
+    let metrics = Metrics::new();
+    let journal_path = opts
+        .journal
+        .clone()
+        .unwrap_or_else(|| default_journal_path(&opts.manifest));
+
+    // 1. resume: replay intact journal entries for cases this cohort knows
+    let mut done: BTreeMap<String, JournalEntry> = BTreeMap::new();
+    if opts.resume {
+        let known: HashSet<&str> = cohort.cases.iter().map(|c| c.case_id.as_str()).collect();
+        for entry in Journal::load(&journal_path)
+            .with_context(|| format!("resume from {}", journal_path.display()))?
+        {
+            if known.contains(entry.case_id.as_str()) {
+                // later entries win (a case journaled twice keeps its newest outcome)
+                done.insert(entry.case_id.clone(), entry);
+            }
+        }
+    }
+    let from_journal = done.len();
+    metrics.set_counter("journal.replayed", from_journal as u64);
+    let mut journal = if opts.resume {
+        Journal::append_to(&journal_path)?
+    } else {
+        Journal::create(&journal_path)?
+    };
+
+    // 2. cache probe: replay hits, remember keys for post-run stores
+    let cache = match &opts.cache_dir {
+        Some(dir) => Some(FeatureCache::open(dir, opts.cache_max_bytes)?),
+        None => None,
+    };
+    let canon = canonical_config(cfg);
+    let mut keys: HashMap<String, String> = HashMap::new();
+    let mut from_cache = 0usize;
+    if let Some(cache) = &cache {
+        let _sp = crate::trace::span("stage.cache");
+        let timer = metrics.timer("stage.cache");
+        for case in &cohort.cases {
+            if done.contains_key(&case.case_id) {
+                continue;
+            }
+            let t0 = Instant::now();
+            match cache.case_key(&canon, case, &cohort.root) {
+                Ok(key) => {
+                    if let Some(rows) = cache.lookup(&key) {
+                        metrics.counter("cache.hit").fetch_add(1, Ordering::Relaxed);
+                        let entry = JournalEntry {
+                            case_id: case.case_id.clone(),
+                            rows,
+                            failures: Vec::new(),
+                        };
+                        journal.append(&entry)?;
+                        done.insert(case.case_id.clone(), entry);
+                        from_cache += 1;
+                    } else {
+                        metrics.counter("cache.miss").fetch_add(1, Ordering::Relaxed);
+                        keys.insert(case.case_id.clone(), key);
+                    }
+                }
+                // an unreadable input cannot be keyed; count a miss and let
+                // the pipeline's read stage report the real failure
+                Err(_) => {
+                    metrics.counter("cache.miss").fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            timer.record(t0.elapsed());
+        }
+    }
+
+    // 3. run the remainder through the pipeline, journaling + caching each
+    // case the moment its outcome reaches the sink
+    let to_run: Vec<&CohortCase> =
+        cohort.cases.iter().filter(|c| !done.contains_key(&c.case_id)).collect();
+    let executed_count = to_run.len();
+    let mut executed: BTreeMap<String, JournalEntry> = BTreeMap::new();
+    let mut pipeline_metrics = MetricsSnapshot::default();
+    let mut journal_err: Option<anyhow::Error> = None;
+    if !to_run.is_empty() {
+        let ds = DatasetManifest {
+            root: cohort.root.clone(),
+            cases: to_run
+                .iter()
+                .map(|c| CaseEntry {
+                    case_id: c.case_id.clone(),
+                    mask: c.mask.clone(),
+                    image: c.image.clone(),
+                    dims: None,
+                    target_vertices: 0,
+                    labels: c.labels.clone(),
+                })
+                .collect(),
+        };
+        let report = run_pipeline_with(&ds, cfg, extractor, &mut |o: &CaseOutcome| {
+            let entry = JournalEntry {
+                case_id: o.case_id.clone(),
+                rows: o.rows.iter().map(StoredRow::from_result).collect(),
+                failures: o.failures.iter().map(|(_, msg)| msg.clone()).collect(),
+            };
+            if let Err(e) = journal.append(&entry) {
+                // keep extracting — losing the checkpoint is not worth
+                // losing the cohort — but surface the first error afterwards
+                if journal_err.is_none() {
+                    journal_err = Some(e);
+                }
+            }
+            if entry.is_success() {
+                if let Some(cache) = &cache {
+                    if let Some(key) = keys.get(&entry.case_id) {
+                        let t0 = Instant::now();
+                        if cache.store(key, &entry.case_id, &entry.rows).is_err() {
+                            metrics.counter("cache.write_errors").fetch_add(1, Ordering::Relaxed);
+                        }
+                        metrics.timer("stage.cache").record(t0.elapsed());
+                    }
+                }
+            }
+            executed.insert(entry.case_id.clone(), entry);
+        })?;
+        pipeline_metrics = report.metrics;
+    }
+    if let Some(e) = journal_err {
+        return Err(e).with_context(|| {
+            format!("batch journal {} failed mid-run", journal_path.display())
+        });
+    }
+
+    // 4. assemble the report in cohort-manifest order; rows within a case
+    // sorted by label so every path (cold / cached / resumed) agrees
+    let mut rows: Vec<BatchRow> = Vec::new();
+    let mut succeeded = 0usize;
+    let mut failed = 0usize;
+    for case in &cohort.cases {
+        let entry = done.get(&case.case_id).or_else(|| executed.get(&case.case_id));
+        let Some(entry) = entry else {
+            // the pipeline contract is one outcome per case; this is a
+            // defensive row, not an expected path
+            failed += 1;
+            rows.push(BatchRow {
+                case_id: case.case_id.clone(),
+                label: None,
+                status: "failed",
+                error: "case produced no outcome (internal error)".to_string(),
+                features: Vec::new(),
+            });
+            continue;
+        };
+        if entry.is_success() {
+            succeeded += 1;
+        } else {
+            failed += 1;
+        }
+        let mut case_rows: Vec<&StoredRow> = entry.rows.iter().collect();
+        case_rows.sort_by_key(|r| r.label);
+        for r in case_rows {
+            rows.push(BatchRow {
+                case_id: case.case_id.clone(),
+                label: r.label,
+                status: "ok",
+                error: String::new(),
+                features: r.features.clone(),
+            });
+        }
+        for msg in &entry.failures {
+            rows.push(BatchRow {
+                case_id: case.case_id.clone(),
+                label: None,
+                status: "failed",
+                error: msg.clone(),
+                features: Vec::new(),
+            });
+        }
+        if entry.rows.is_empty() && entry.failures.is_empty() {
+            rows.push(BatchRow {
+                case_id: case.case_id.clone(),
+                label: None,
+                status: "failed",
+                error: "no rows and no failures recorded (internal error)".to_string(),
+                features: Vec::new(),
+            });
+        }
+    }
+
+    // 5. merge cohort-level metrics into the pipeline snapshot
+    let mut snap = pipeline_metrics;
+    let cohort_snap = metrics.snapshot();
+    for (k, v) in cohort_snap.counters {
+        *snap.counters.entry(k).or_insert(0) += v;
+    }
+    for (k, v) in cohort_snap.timers {
+        snap.timers.insert(k, v);
+    }
+    snap.counters.insert("batch.cases".to_string(), cohort.cases.len() as u64);
+    snap.counters.insert("batch.executed".to_string(), executed_count as u64);
+    snap.counters.insert("batch.from_cache".to_string(), from_cache as u64);
+    snap.counters.insert("batch.from_journal".to_string(), from_journal as u64);
+    snap.counters.insert("batch.succeeded".to_string(), succeeded as u64);
+    snap.counters.insert("batch.failed".to_string(), failed as u64);
+
+    Ok(BatchOutcome {
+        rows,
+        metrics: snap,
+        total: cohort.cases.len(),
+        executed: executed_count,
+        from_cache,
+        from_journal,
+        succeeded,
+        failed,
+        wall: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stored_row_round_trips_non_finite_values() {
+        let r = StoredRow {
+            label: None,
+            features: vec![
+                ("a".into(), "NaN".into()),
+                ("b".into(), "inf".into()),
+                ("c".into(), "-inf".into()),
+                ("d".into(), "0.30000000000000004".into()),
+            ],
+        };
+        let back = StoredRow::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // the stored strings parse back to the exact f64s Display printed
+        assert!(back.features[0].1.parse::<f64>().unwrap().is_nan());
+        assert_eq!(back.features[1].1.parse::<f64>().unwrap(), f64::INFINITY);
+        assert_eq!(back.features[3].1.parse::<f64>().unwrap(), 0.1 + 0.2);
+    }
+
+    #[test]
+    fn stored_row_label_round_trips_and_rejects_garbage() {
+        let r = StoredRow { label: Some(65535), features: Vec::new() };
+        assert_eq!(StoredRow::from_json(&r.to_json()).unwrap(), r);
+        let bad = JsonValue::parse(r#"{"label": 70000, "features": []}"#).unwrap();
+        assert!(StoredRow::from_json(&bad).is_err());
+        let bad = JsonValue::parse(r#"{"label": 1.5, "features": []}"#).unwrap();
+        assert!(StoredRow::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn batch_csv_takes_the_feature_name_union_and_quotes_hostile_cells() {
+        let outcome = BatchOutcome {
+            rows: vec![
+                BatchRow {
+                    case_id: "plain".into(),
+                    label: Some(1),
+                    status: "ok",
+                    error: String::new(),
+                    features: vec![("f1".into(), "1".into()), ("f2".into(), "2".into())],
+                },
+                BatchRow {
+                    case_id: "evil,case\n\"2\"".into(),
+                    label: None,
+                    status: "failed",
+                    error: "read: mask \"m\" is, sadly,\nmissing".into(),
+                    features: Vec::new(),
+                },
+                BatchRow {
+                    case_id: "third".into(),
+                    label: None,
+                    status: "ok",
+                    error: String::new(),
+                    features: vec![("f3".into(), "3".into()), ("f1".into(), "9".into())],
+                },
+            ],
+            metrics: MetricsSnapshot::default(),
+            total: 3,
+            executed: 3,
+            from_cache: 0,
+            from_journal: 0,
+            succeeded: 2,
+            failed: 1,
+            wall: Duration::ZERO,
+        };
+        let csv = outcome.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "case,label,status,error,f1,f2,f3");
+        // the hostile row survives a parse through the cohort CSV reader
+        // (rename columns so the strict parser maps case→case_id and the
+        // always-non-empty status→mask)
+        let header_and_rows =
+            parse_cohort_csv(&csv.replace("case,label,status", "case_id,x,mask")).unwrap();
+        assert_eq!(header_and_rows[1].case_id, "evil,case\n\"2\"");
+        // absent features are empty cells, present ones keep their strings
+        assert!(csv.contains("third,,ok,,9,,3"));
+    }
+
+    #[test]
+    fn default_journal_path_sits_next_to_the_manifest() {
+        assert_eq!(
+            default_journal_path(std::path::Path::new("runs/cohort.csv")),
+            PathBuf::from("runs/cohort.csv.journal")
+        );
+    }
+}

@@ -237,29 +237,46 @@ impl LabelSelection {
 }
 
 /// Parse a byte size: a plain integer (bytes) or one with a binary
-/// K/M/G/T suffix, e.g. `"512M"`. Shared by the `memory_budget` TOML key
-/// and the `--memory-budget` CLI flag.
+/// K/M/G/T suffix, e.g. `"512M"`. Shared by the `memory_budget` /
+/// `cache_max_bytes` TOML keys and the `--memory-budget` /
+/// `--cache-max-bytes` CLI flags. Values whose scaled result exceeds
+/// `u64::MAX` are a located parse error, never a wrap or silent
+/// saturation.
 pub fn parse_byte_size(s: &str) -> Result<u64> {
     let s = s.trim();
     let mut chars = s.chars();
     let Some(last) = chars.next_back() else {
         bail!("empty byte size (use e.g. \"512M\" or a byte count)");
     };
-    let (num, mult) = match last.to_ascii_uppercase() {
-        'K' => (chars.as_str(), 1u64 << 10),
-        'M' => (chars.as_str(), 1 << 20),
-        'G' => (chars.as_str(), 1 << 30),
-        'T' => (chars.as_str(), 1 << 40),
-        _ => (s, 1),
+    let (num, shift) = match last.to_ascii_uppercase() {
+        'K' => (chars.as_str(), 10u32),
+        'M' => (chars.as_str(), 20),
+        'G' => (chars.as_str(), 30),
+        'T' => (chars.as_str(), 40),
+        _ => (s, 0),
     };
+    let num = num.trim();
+    // Integral sizes (the common case) go through checked integer
+    // arithmetic so an overflowing suffix multiplication is an error.
+    if let Ok(v) = num.parse::<u64>() {
+        return v.checked_mul(1u64 << shift).ok_or_else(|| {
+            anyhow::anyhow!("byte size '{s}' overflows u64 (max {} bytes)", u64::MAX)
+        });
+    }
+    // Fractional sizes ("1.5M") take the float path with an explicit
+    // range check; `u64::MAX as f64` rounds up to 2^64, so `>=` rejects
+    // everything not representable.
     let v: f64 = num
-        .trim()
         .parse()
         .with_context(|| format!("bad byte size '{s}' (e.g. \"512M\", \"2G\", or bytes)"))?;
     if !(v >= 0.0 && v.is_finite()) {
         bail!("byte size must be non-negative and finite, got '{s}'");
     }
-    Ok((v * mult as f64) as u64)
+    let scaled = v * (1u64 << shift) as f64;
+    if scaled >= u64::MAX as f64 {
+        bail!("byte size '{s}' overflows u64 (max {} bytes)", u64::MAX);
+    }
+    Ok(scaled as u64)
 }
 
 /// Typed pipeline configuration (defaults reflect the single-core testbed).
@@ -339,6 +356,14 @@ pub struct PipelineConfig {
     /// always admitted, so an undersized budget degrades to serial
     /// execution). `0` = unlimited.
     pub memory_budget: u64,
+    /// Content-addressed feature cache directory for `radpipe batch`:
+    /// completed cases are stored keyed by (mask bytes, image bytes,
+    /// canonicalized config) and replayed bit-for-bit on re-runs. `None`
+    /// disables caching.
+    pub cache_dir: Option<PathBuf>,
+    /// Soft size cap on the feature cache in bytes; oldest entries are
+    /// evicted after a write pushes the store over it. `0` = unbounded.
+    pub cache_max_bytes: u64,
 }
 
 impl Default for PipelineConfig {
@@ -370,6 +395,8 @@ impl Default for PipelineConfig {
             labels: LabelSelection::Unset,
             slab_io: false,
             memory_budget: 0,
+            cache_dir: None,
+            cache_max_bytes: 0,
         }
     }
 }
@@ -454,6 +481,14 @@ impl PipelineConfig {
                 "slab_io" => cfg.slab_io = value.as_bool()?,
                 "memory_budget" => {
                     cfg.memory_budget = if let Ok(s) = value.as_str() {
+                        parse_byte_size(s)?
+                    } else {
+                        value.as_usize()? as u64
+                    }
+                }
+                "cache_dir" => cfg.cache_dir = Some(PathBuf::from(value.as_str()?)),
+                "cache_max_bytes" => {
+                    cfg.cache_max_bytes = if let Ok(s) = value.as_str() {
                         parse_byte_size(s)?
                     } else {
                         value.as_usize()? as u64
@@ -738,6 +773,51 @@ memory_budget = "512M"
         assert!(parse_byte_size("").is_err());
         assert!(parse_byte_size("-1K").is_err());
         assert!(parse_byte_size("many").is_err());
+    }
+
+    #[test]
+    fn byte_size_overflow_is_a_parse_error_not_a_wrap() {
+        // exact u64 boundaries: the largest value that fits per suffix...
+        assert_eq!(parse_byte_size(&u64::MAX.to_string()).unwrap(), u64::MAX);
+        assert_eq!(parse_byte_size("17179869183G").unwrap(), ((1u64 << 34) - 1) << 30);
+        assert_eq!(parse_byte_size("16777215T").unwrap(), ((1u64 << 24) - 1) << 40);
+        // ...and the first value that does not: a located error, never a
+        // silent wrap or saturation
+        for over in ["18446744073709551G", "17179869184G", "16777216T", "18446744073709551616"]
+        {
+            let err = parse_byte_size(over).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("overflow") || msg.contains("bad byte size"),
+                "{over}: {msg}"
+            );
+            assert!(msg.contains(over) || msg.contains("u64"), "{over}: {msg}");
+        }
+        // huge fractional values take the float path and still error
+        assert!(parse_byte_size("99999999999999999999.5G").is_err());
+        assert!(parse_byte_size("inf").is_err());
+    }
+
+    #[test]
+    fn cache_knobs_parse_from_toml() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.cache_dir, None, "caching is opt-in");
+        assert_eq!(c.cache_max_bytes, 0, "unbounded by default");
+        let text = r#"
+[pipeline]
+cache_dir = "feature-cache"
+cache_max_bytes = "64M"
+"#;
+        let c = PipelineConfig::from_toml(text).unwrap();
+        assert_eq!(c.cache_dir, Some(PathBuf::from("feature-cache")));
+        assert_eq!(c.cache_max_bytes, 64 << 20);
+        // integer byte counts work too, and overflow is rejected
+        let c = PipelineConfig::from_toml("[pipeline]\ncache_max_bytes = 4096\n").unwrap();
+        assert_eq!(c.cache_max_bytes, 4096);
+        assert!(PipelineConfig::from_toml(
+            "[pipeline]\ncache_max_bytes = \"18446744073709551G\"\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -181,7 +181,7 @@ pub fn run_table2(manifest: &DatasetManifest, opts: &Table2Options) -> Result<Ta
 
         rows.push(Table2Row {
             case_id: entry.case_id.clone(),
-            dims: entry.dims.to_string(),
+            dims: entry.dims.map(|d| d.to_string()).unwrap_or_else(|| "?".into()),
             vertices,
             read_ms,
             mc_cpu_ms,

@@ -27,9 +27,11 @@ pub struct CaseEntry {
     /// `None` for mask-only cases (intensity classes then require the
     /// explicit synthetic-image opt-in).
     pub image: Option<PathBuf>,
-    /// Declared dims — the pipeline read stage validates these against the
-    /// loaded mask and fails the case on a mismatch.
-    pub dims: Dims,
+    /// Declared dims — when present, the pipeline read stage validates
+    /// these against the loaded mask and fails the case on a mismatch.
+    /// Cohort manifests (`radpipe batch`) carry no dims declaration, so
+    /// their entries skip the check.
+    pub dims: Option<Dims>,
     /// The vertex count this case was generated to approximate (paper
     /// Table 2 column); 0 when unknown.
     pub target_vertices: usize,
@@ -67,7 +69,10 @@ impl DatasetManifest {
             if let Some(image) = &e.image {
                 s.push_str(&format!(" image={}", image.display()));
             }
-            s.push_str(&format!(" dims={} target_vertices={}", e.dims, e.target_vertices));
+            if let Some(dims) = &e.dims {
+                s.push_str(&format!(" dims={dims}"));
+            }
+            s.push_str(&format!(" target_vertices={}", e.target_vertices));
             if !e.labels.is_empty() {
                 let ids: Vec<String> = e.labels.iter().map(|l| l.to_string()).collect();
                 s.push_str(&format!(" labels={}", ids.join(",")));
@@ -127,7 +132,7 @@ fn parse_line(line: &str) -> Result<CaseEntry> {
         case_id: case_id.context("missing case=")?,
         mask: mask.context("missing mask=")?,
         image,
-        dims: dims.context("missing dims=")?,
+        dims: Some(dims.context("missing dims=")?),
         target_vertices: target,
         labels,
     })
@@ -172,7 +177,7 @@ mod tests {
                     case_id: "00000-1".into(),
                     mask: "00000-1.rvol.gz".into(),
                     image: Some("00000-1.img.rvol.gz".into()),
-                    dims: Dims::new(231, 104, 264),
+                    dims: Some(Dims::new(231, 104, 264)),
                     target_vertices: 124406,
                     labels: vec![1, 2, 4],
                 },
@@ -180,7 +185,7 @@ mod tests {
                     case_id: "00000-2".into(),
                     mask: "00000-2.rvol.gz".into(),
                     image: None,
-                    dims: Dims::new(28, 30, 59),
+                    dims: Some(Dims::new(28, 30, 59)),
                     target_vertices: 6132,
                     labels: Vec::new(),
                 },

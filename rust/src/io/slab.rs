@@ -128,6 +128,10 @@ pub fn read_volume_header(path: &Path) -> Result<(Dims, Vec3)> {
 pub fn scan_mask_slab(path: &Path) -> Result<SlabScan> {
     let (mut planes, dims, spacing) = open_planes(path)?;
     let n = dims.x * dims.y;
+    // 2^16 slots: every possible u16 sample (including 65535) indexes in
+    // bounds, so a corrupt mask can never push `seen[v as usize]` out of
+    // range — malformed files fail inside `label_plane` with the offending
+    // plane named instead.
     let mut seen = vec![false; 1 << 16];
     let mut bbox: Option<((usize, usize, usize), (usize, usize, usize))> = None;
     for z in 0..dims.z {
@@ -359,6 +363,51 @@ mod tests {
         assert_eq!(scan.crop_box(), ((0, 0, 0), Dims::new(1, 1, 1)));
         let crop = read_label_crop(&p, (0, 0, 0), Dims::new(1, 1, 1)).unwrap();
         assert!(crop.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn full_u16_label_range_scans_in_bounds() {
+        // the label-inventory array must cover every raw u16 sample —
+        // u16::MAX included — so no voxel value can index out of bounds
+        let mut g: VoxelGrid<u16> = VoxelGrid::zeros(Dims::new(5, 4, 3), Vec3::splat(1.0));
+        g.set(1, 1, 1, u16::MAX);
+        g.set(2, 1, 1, 1);
+        let p = tdir().join("maxlabel.rvol.gz");
+        rvol::write_rvol(&p, &g).unwrap();
+        let scan = scan_mask_slab(&p).unwrap();
+        assert_eq!(scan.labels, vec![1, u16::MAX]);
+        assert_eq!(scan.bbox, Some(((1, 1, 1), (2, 1, 1))));
+    }
+
+    #[test]
+    fn corrupt_mask_is_a_located_error_naming_the_plane() {
+        // a mask file truncated mid-payload must fail the scan with an
+        // error that names the file and the offending z-plane — never a
+        // panic or a silent short read
+        let mut g: VoxelGrid<u16> = VoxelGrid::zeros(Dims::new(16, 16, 16), Vec3::splat(1.0));
+        for z in 0..16 {
+            for y in 4..12 {
+                for x in 4..12 {
+                    g.set(x, y, z, 1 + (x % 3) as u16);
+                }
+            }
+        }
+        let p = tdir().join("truncated.rvol");
+        rvol::write_rvol(&p, &g).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // keep the header and roughly half the payload
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        let err = scan_mask_slab(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated.rvol"), "{msg}");
+        assert!(msg.contains("plane z="), "{msg}");
+        // the gzip container reports truncation the same located way
+        let pgz = tdir().join("truncated.rvol.gz");
+        rvol::write_rvol(&pgz, &g).unwrap();
+        let bytes = std::fs::read(&pgz).unwrap();
+        std::fs::write(&pgz, &bytes[..bytes.len() / 2]).unwrap();
+        let err = scan_mask_slab(&pgz).unwrap_err();
+        assert!(format!("{err:#}").contains("plane"), "{err:#}");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod cohort;
 pub mod config;
 pub mod dispatch;
 pub mod experiments;

@@ -13,4 +13,7 @@ mod channel;
 mod stages;
 
 pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
-pub use stages::{run_pipeline, CaseResult, PipelineReport};
+pub use stages::{
+    case_named_features, run_pipeline, run_pipeline_with, CaseOutcome, CaseResult,
+    PipelineReport,
+};

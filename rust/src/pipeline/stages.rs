@@ -47,12 +47,47 @@ pub struct PipelineReport {
     pub wall: std::time::Duration,
 }
 
+/// Every computed (name, value) pair of one case row, in stable order:
+/// shape, then every derived image (original keeps the historical plain
+/// names; LoG / wavelet images carry filter-qualified names, e.g.
+/// `log-sigma-2-0-mm_firstorder_Mean`). Both the report writers and the
+/// cohort feature cache serialise exactly this list.
+pub fn case_named_features(r: &CaseResult) -> Vec<(String, f64)> {
+    let mut out: Vec<(String, f64)> =
+        r.features.named().into_iter().map(|(n, v)| (n.to_string(), v)).collect();
+    for d in &r.derived {
+        out.extend(d.named());
+    }
+    out
+}
+
+/// Everything the pipeline produced for ONE manifest entry: its feature
+/// rows (one on the binary-mask path, one per label on a label-map run)
+/// plus its failures (whole-case or per-label). Exactly one outcome is
+/// emitted per case, which is what lets a cohort journal record case
+/// completion atomically.
+#[derive(Debug, Clone)]
+pub struct CaseOutcome {
+    pub case_id: String,
+    /// Successful rows, label-ascending on a label-map run.
+    pub rows: Vec<CaseResult>,
+    pub failures: Vec<(String, String)>,
+}
+
+impl CaseOutcome {
+    /// A case counts as succeeded only when nothing in it failed (a
+    /// label-map case with one bad label is *not* cacheable as complete).
+    pub fn is_success(&self) -> bool {
+        self.failures.is_empty() && !self.rows.is_empty()
+    }
+}
+
 /// A case as the scanner hands it to the read pool.
 struct CaseJob {
     case_id: String,
     mask_path: PathBuf,
     image_path: Option<PathBuf>,
-    declared_dims: crate::volume::Dims,
+    declared_dims: Option<crate::volume::Dims>,
     declared_labels: Vec<u16>,
 }
 
@@ -127,21 +162,22 @@ fn load_case(
 ) -> Result<LoadedCase, (&'static str, String)> {
     let want_image = needs_image && job.image_path.is_some();
     let read_err = |e: anyhow::Error| ("errors.read", format!("read: {e:#}"));
-    let dims_err = |got: crate::volume::Dims| {
+    let dims_err = |want: crate::volume::Dims, got: crate::volume::Dims| {
         (
             "errors.read",
             format!(
-                "read: mask dims {got} do not match the manifest's dims={} \
-                 (stale or corrupt cases.txt?)",
-                job.declared_dims
+                "read: mask dims {got} do not match the manifest's dims={want} \
+                 (stale or corrupt cases.txt?)"
             ),
         )
     };
 
     if slab_io {
         let scan = scan_mask_slab(&job.mask_path).map_err(read_err)?;
-        if scan.file_dims != job.declared_dims {
-            return Err(dims_err(scan.file_dims));
+        if let Some(want) = job.declared_dims {
+            if scan.file_dims != want {
+                return Err(dims_err(want, scan.file_dims));
+            }
         }
         let (off, dims) = scan.crop_box();
         let crop_vox = (dims.x * dims.y * dims.z) as u64;
@@ -179,8 +215,11 @@ fn load_case(
         };
         let mut image = None;
         let mut read_image = Duration::ZERO;
-        if want_image {
-            let ipath = job.image_path.as_ref().unwrap();
+        // `if let` rather than unwrap: a case with no image simply reads
+        // none (the extract stage then reports the missing-image remedy),
+        // instead of gambling the whole worker on the guard staying in
+        // sync with this branch
+        if let Some(ipath) = job.image_path.as_ref().filter(|_| needs_image) {
             let t0 = Instant::now();
             let sp = crate::trace::span("stage.read_image");
             let loaded = read_volume_header(ipath)
@@ -207,8 +246,13 @@ fn load_case(
     }
 
     // whole-grid read: budget on the declared dims (2 bytes/voxel for a
-    // label mask, 1 for binary, +4 for the f32 image when one is read)
-    let d = job.declared_dims;
+    // label mask, 1 for binary, +4 for the f32 image when one is read);
+    // cohort entries declare no dims, so size from the file header — a
+    // cheap header-only read, no payload
+    let d = match job.declared_dims {
+        Some(d) => d,
+        None => read_volume_header(&job.mask_path).map_err(read_err)?.0,
+    };
     let file_vox = (d.x * d.y * d.z) as u64;
     let mask_elem = if labels_cfg.is_set() { 2 } else { 1 };
     let bytes = file_vox * mask_elem + if want_image { file_vox * 4 } else { 0 };
@@ -216,8 +260,10 @@ fn load_case(
     let hold = PipelineHold::new(bytes);
     let payload = if labels_cfg.is_set() {
         let mask = crate::io::read_label_mask(&job.mask_path).map_err(read_err)?;
-        if mask.grid.dims != job.declared_dims {
-            return Err(dims_err(mask.grid.dims));
+        if let Some(want) = job.declared_dims {
+            if mask.grid.dims != want {
+                return Err(dims_err(want, mask.grid.dims));
+            }
         }
         let selected = resolve_labels(labels_cfg, &mask.labels, &job.declared_labels);
         if selected.is_empty() {
@@ -231,15 +277,16 @@ fn load_case(
         MaskPayload::Labels { mask, selected }
     } else {
         let mask = crate::io::read_mask(&job.mask_path).map_err(read_err)?;
-        if mask.dims != job.declared_dims {
-            return Err(dims_err(mask.dims));
+        if let Some(want) = job.declared_dims {
+            if mask.dims != want {
+                return Err(dims_err(want, mask.dims));
+            }
         }
         MaskPayload::Binary(mask)
     };
     let mut image = None;
     let mut read_image = Duration::ZERO;
-    if want_image {
-        let ipath = job.image_path.as_ref().unwrap();
+    if let Some(ipath) = job.image_path.as_ref().filter(|_| needs_image) {
         let t0 = Instant::now();
         let sp = crate::trace::span("stage.read_image");
         let loaded = crate::io::read_image(ipath).map_err(|e| {
@@ -266,6 +313,21 @@ pub fn run_pipeline(
     cfg: &PipelineConfig,
     extractor: &FeatureExtractor,
 ) -> Result<PipelineReport> {
+    run_pipeline_with(manifest, cfg, extractor, &mut |_| {})
+}
+
+/// [`run_pipeline`] plus a completion callback: `on_case` runs on the
+/// sink thread, once per manifest entry, as soon as that case's outcome
+/// arrives (NOT in manifest order — cases complete as workers finish
+/// them). The cohort batch front-end uses it to journal and cache each
+/// case the moment it is done, so a killed run loses at most the cases
+/// that were still in flight.
+pub fn run_pipeline_with(
+    manifest: &DatasetManifest,
+    cfg: &PipelineConfig,
+    extractor: &FeatureExtractor,
+    on_case: &mut dyn FnMut(&CaseOutcome),
+) -> Result<PipelineReport> {
     let start = Instant::now();
     let metrics = Arc::new(Metrics::new());
     // scope the memory gauges to this run (process-wide high-water marks;
@@ -277,7 +339,7 @@ pub fn run_pipeline(
 
     let (case_tx, case_rx) = bounded::<CaseJob>(cfg.queue_capacity);
     let (read_tx, read_rx) = bounded::<ReadItem>(cfg.queue_capacity);
-    let (out_tx, out_rx) = bounded::<Result<CaseResult, (String, String)>>(cfg.queue_capacity);
+    let (out_tx, out_rx) = bounded::<CaseOutcome>(cfg.queue_capacity);
 
     let n_cases = manifest.cases.len();
     // the image is loaded only when an enabled class will read it —
@@ -329,7 +391,12 @@ pub fn run_pipeline(
                             metrics
                                 .counter(counter)
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if out_tx.send(Err((job.case_id, msg))).is_err() {
+                            let outcome = CaseOutcome {
+                                case_id: job.case_id.clone(),
+                                rows: Vec::new(),
+                                failures: vec![(job.case_id, msg)],
+                            };
+                            if out_tx.send(outcome).is_err() {
                                 break;
                             }
                             continue;
@@ -385,14 +452,19 @@ pub fn run_pipeline(
                         PathTaken::CpuFallback => "path.cpu",
                     });
                 };
-                'cases: while let Ok(item) = read_rx.recv() {
+                while let Ok(item) = read_rx.recv() {
                     let _case = crate::trace::case_scope(&item.case_id);
+                    let mut outcome = CaseOutcome {
+                        case_id: item.case_id.clone(),
+                        rows: Vec::new(),
+                        failures: Vec::new(),
+                    };
                     match &item.payload {
                         MaskPayload::Binary(mask) => {
                             let sp = crate::trace::span("case");
                             let res = extractor.execute_case(mask, item.image.as_ref());
                             drop(sp);
-                            let msg = match res {
+                            match res {
                                 Ok(mut ex) => {
                                     ex.timing.read = item.read;
                                     ex.timing.read_image = item.read_image;
@@ -400,7 +472,7 @@ pub fn run_pipeline(
                                         .timer("stage.preprocess")
                                         .record(ex.timing.preprocess);
                                     record(&ex);
-                                    Ok(CaseResult {
+                                    outcome.rows.push(CaseResult {
                                         case_id: item.case_id.clone(),
                                         label: None,
                                         features: ex.features,
@@ -409,7 +481,7 @@ pub fn run_pipeline(
                                         derived: ex.derived,
                                         timing: ex.timing,
                                         path: ex.path,
-                                    })
+                                    });
                                 }
                                 Err(e) => {
                                     // every per-case failure lands in
@@ -417,11 +489,10 @@ pub fn run_pipeline(
                                     // bucket for failures inside the extract
                                     // stage itself
                                     bump("errors.extract");
-                                    Err((item.case_id.clone(), format!("extract: {e:#}")))
+                                    outcome
+                                        .failures
+                                        .push((item.case_id.clone(), format!("extract: {e:#}")));
                                 }
-                            };
-                            if out_tx.send(msg).is_err() {
-                                break;
                             }
                         }
                         MaskPayload::Labels { mask, selected } => {
@@ -433,64 +504,69 @@ pub fn run_pipeline(
                                 selected,
                             );
                             drop(sp);
-                            let per_label = match res {
-                                Ok(p) => p,
+                            match res {
                                 Err(e) => {
                                     // whole-case failure (shared prep):
                                     // one errors.extract bump, one failure
                                     bump("errors.extract");
-                                    let msg = (item.case_id.clone(), format!("extract: {e:#}"));
-                                    if out_tx.send(Err(msg)).is_err() {
-                                        break;
-                                    }
-                                    continue;
+                                    outcome
+                                        .failures
+                                        .push((item.case_id.clone(), format!("extract: {e:#}")));
                                 }
-                            };
-                            // `stage.preprocess` counts once per *case*
-                            // (the pass is shared), while mesh/diameters/
-                            // texture count once per label
-                            let mut case_preprocess = Duration::ZERO;
-                            let mut attached_read = false;
-                            let mut any_ok = false;
-                            for (label, r) in per_label {
-                                let msg = match r {
-                                    Ok(mut ex) => {
-                                        if !attached_read {
-                                            ex.timing.read = item.read;
-                                            ex.timing.read_image = item.read_image;
-                                            attached_read = true;
+                                Ok(per_label) => {
+                                    // `stage.preprocess` counts once per
+                                    // *case* (the pass is shared), while
+                                    // mesh/diameters/texture count once per
+                                    // label
+                                    let mut case_preprocess = Duration::ZERO;
+                                    let mut attached_read = false;
+                                    for (label, r) in per_label {
+                                        match r {
+                                            Ok(mut ex) => {
+                                                if !attached_read {
+                                                    ex.timing.read = item.read;
+                                                    ex.timing.read_image = item.read_image;
+                                                    attached_read = true;
+                                                }
+                                                case_preprocess += ex.timing.preprocess;
+                                                record(&ex);
+                                                outcome.rows.push(CaseResult {
+                                                    case_id: item.case_id.clone(),
+                                                    label: Some(label),
+                                                    features: ex.features,
+                                                    first_order: ex.first_order,
+                                                    texture: ex.texture,
+                                                    derived: ex.derived,
+                                                    timing: ex.timing,
+                                                    path: ex.path,
+                                                });
+                                            }
+                                            Err(e) => {
+                                                // per-label isolation: this
+                                                // label failed, the case's
+                                                // other labels still flow;
+                                                // separate counter so
+                                                // errors.extract stays
+                                                // per-case
+                                                bump("errors.label");
+                                                outcome.failures.push((
+                                                    item.case_id.clone(),
+                                                    format!("label {label}: {e:#}"),
+                                                ));
+                                            }
                                         }
-                                        any_ok = true;
-                                        case_preprocess += ex.timing.preprocess;
-                                        record(&ex);
-                                        Ok(CaseResult {
-                                            case_id: item.case_id.clone(),
-                                            label: Some(label),
-                                            features: ex.features,
-                                            first_order: ex.first_order,
-                                            texture: ex.texture,
-                                            derived: ex.derived,
-                                            timing: ex.timing,
-                                            path: ex.path,
-                                        })
                                     }
-                                    Err(e) => {
-                                        // per-label isolation: this label
-                                        // failed, the case's other labels
-                                        // still flow; separate counter so
-                                        // errors.extract stays per-case
-                                        bump("errors.label");
-                                        Err((item.case_id.clone(), format!("label {label}: {e:#}")))
+                                    if !outcome.rows.is_empty() {
+                                        metrics
+                                            .timer("stage.preprocess")
+                                            .record(case_preprocess);
                                     }
-                                };
-                                if out_tx.send(msg).is_err() {
-                                    break 'cases;
                                 }
-                            }
-                            if any_ok {
-                                metrics.timer("stage.preprocess").record(case_preprocess);
                             }
                         }
+                    }
+                    if out_tx.send(outcome).is_err() {
+                        break;
                     }
                 }
             });
@@ -498,14 +574,15 @@ pub fn run_pipeline(
         drop(read_rx);
         drop(out_tx);
 
-        // sink (inline in the scope so `results` lives on this stack)
+        // sink (inline in the scope so `results` lives on this stack);
+        // the callback fires before the outcome is folded into the
+        // report, in completion order
         let mut results = Vec::with_capacity(n_cases);
         let mut failures = Vec::new();
-        while let Ok(msg) = out_rx.recv() {
-            match msg {
-                Ok(r) => results.push(r),
-                Err(f) => failures.push(f),
-            }
+        while let Ok(outcome) = out_rx.recv() {
+            on_case(&outcome);
+            results.extend(outcome.rows);
+            failures.extend(outcome.failures);
         }
         // stable order: manifest order, then ascending label within a case
         let order: std::collections::HashMap<&str, usize> = manifest
@@ -882,6 +959,67 @@ mod tests {
     }
 
     #[test]
+    fn missing_image_is_isolated_on_the_slab_path_too() {
+        // regression: the slab read arm used to unwrap image_path behind a
+        // want_image guard; a mask-only case on an intensity run must fail
+        // as *that case*, with the remedy, never panic a read worker
+        let mut m = tiny_dataset("slabnoimg");
+        m.cases[4].image = None;
+        let cfg = PipelineConfig { slab_io: true, ..firstorder_cfg() };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let report = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert_eq!(report.results.len(), 19);
+        assert_eq!(report.failures.len(), 1);
+        assert_eq!(report.failures[0].0, m.cases[4].case_id);
+        assert!(
+            report.failures[0].1.contains("--synthetic-image"),
+            "{}",
+            report.failures[0].1
+        );
+    }
+
+    #[test]
+    fn undeclared_dims_still_flow_through_both_read_paths() {
+        // cohort manifests carry no dims declaration: None must skip the
+        // mismatch check and still size the whole-grid budget correctly
+        let mut m = tiny_dataset("nodims");
+        for e in &mut m.cases {
+            e.dims = None;
+        }
+        let cfg = PipelineConfig { memory_budget: 1 << 20, ..cpu_cfg() };
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let whole = run_pipeline(&m, &cfg, &ex).unwrap();
+        assert!(whole.failures.is_empty(), "{:?}", whole.failures);
+        assert_eq!(whole.results.len(), 20);
+        let slab_cfg = PipelineConfig { slab_io: true, ..cpu_cfg() };
+        let ex2 = FeatureExtractor::new(&slab_cfg).unwrap();
+        let slab = run_pipeline(&m, &slab_cfg, &ex2).unwrap();
+        assert!(slab.failures.is_empty(), "{:?}", slab.failures);
+        for (a, b) in whole.results.iter().zip(&slab.results) {
+            assert_eq!(a.features, b.features, "{}", a.case_id);
+        }
+    }
+
+    #[test]
+    fn per_case_callback_sees_every_outcome_exactly_once() {
+        let mut m = tiny_dataset("callback");
+        m.cases[3].mask = PathBuf::from("does-not-exist.rvol.gz");
+        let cfg = cpu_cfg();
+        let ex = FeatureExtractor::new(&cfg).unwrap();
+        let mut seen: Vec<(String, bool)> = Vec::new();
+        let report = run_pipeline_with(&m, &cfg, &ex, &mut |o| {
+            seen.push((o.case_id.clone(), o.is_success()));
+        })
+        .unwrap();
+        assert_eq!(seen.len(), 20, "one callback per manifest entry");
+        assert_eq!(seen.iter().filter(|(_, ok)| !ok).count(), 1);
+        let failed = seen.iter().find(|(_, ok)| !ok).unwrap();
+        assert_eq!(failed.0, m.cases[3].case_id);
+        assert_eq!(report.results.len(), 19);
+        assert_eq!(report.failures.len(), 1);
+    }
+
+    #[test]
     fn extract_failures_land_in_the_errors_extract_counter() {
         // an intensity run with one image stripped (and no synthetic
         // stand-in opt-in) fails inside the extract stage — exactly one
@@ -946,7 +1084,7 @@ mod tests {
     #[test]
     fn dims_mismatch_is_a_case_failure() {
         let mut m = tiny_dataset("dims");
-        m.cases[1].dims = crate::volume::Dims::new(1, 2, 3);
+        m.cases[1].dims = Some(crate::volume::Dims::new(1, 2, 3));
         let cfg = cpu_cfg();
         let ex = FeatureExtractor::new(&cfg).unwrap();
         let report = run_pipeline(&m, &cfg, &ex).unwrap();

@@ -71,10 +71,12 @@ impl Table {
         out
     }
 
-    /// RFC-4180-ish CSV (quotes cells containing commas/quotes).
+    /// RFC-4180 CSV: cells containing commas, quotes, or CR/LF are quoted
+    /// (embedded quotes doubled). Case ids come from user filenames, so
+    /// every hostile cell must survive a write→parse round trip.
     pub fn to_csv(&self) -> String {
         let esc = |c: &String| -> String {
-            if c.contains(',') || c.contains('"') || c.contains('\n') {
+            if c.contains(',') || c.contains('"') || c.contains('\n') || c.contains('\r') {
                 format!("\"{}\"", c.replace('"', "\"\""))
             } else {
                 c.clone()
@@ -126,6 +128,16 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("\"x,y\""));
         assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn csv_quotes_embedded_newlines_and_carriage_returns() {
+        let mut t = Table::new(vec!["a", "b", "c"]);
+        t.row(vec!["two\nlines", "cr\rhere", "plain"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"two\nlines\""), "{csv}");
+        assert!(csv.contains("\"cr\rhere\""), "{csv}");
+        assert!(csv.contains(",plain\n"), "unremarkable cells stay bare: {csv}");
     }
 
     #[test]

@@ -24,7 +24,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -98,6 +98,17 @@ impl BatchStats {
             max_occupancy: self.max_occupancy.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Lock a scheduler mutex, recovering from poisoning (same treatment as
+/// `metrics::lock_recover`). A panicking engine thread must not take the
+/// whole run down: the guarded state here (`pending` group map, the
+/// loopback's `serial` token) is never left half-applied by the panic
+/// sites — panics originate in backend execution, not inside these
+/// critical sections — so continuing past the poison marker is sound and
+/// every subsequent submitter keeps batching instead of panicking.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Pending groups keyed by pad-bucket, with the arrival time of each
@@ -187,7 +198,7 @@ impl Batcher {
             self.shared.flush(bucket, vec![item], true);
         } else {
             let full_group = {
-                let mut g = self.shared.pending.lock().unwrap();
+                let mut g = lock_recover(&self.shared.pending);
                 let entry = g
                     .groups
                     .entry(bucket)
@@ -214,7 +225,7 @@ impl Batcher {
 impl Drop for Batcher {
     fn drop(&mut self) {
         {
-            let mut g = self.shared.pending.lock().unwrap();
+            let mut g = lock_recover(&self.shared.pending);
             g.shutdown = true;
         }
         self.shared.wake.notify_all();
@@ -230,8 +241,12 @@ fn linger_loop(shared: &Shared) {
         let mut due: Vec<(usize, Vec<BatchItem>)> = Vec::new();
         let shutdown;
         {
-            let g = shared.pending.lock().unwrap();
-            let (mut g, _timeout) = shared.wake.wait_timeout(g, tick).unwrap();
+            let g = lock_recover(&shared.pending);
+            // a poisoned wait re-acquires the (recovered) guard the same way
+            let (mut g, _timeout) = shared
+                .wake
+                .wait_timeout(g, tick)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             shutdown = g.shutdown;
             let now = Instant::now();
             let ready: Vec<usize> = g
@@ -254,7 +269,7 @@ fn linger_loop(shared: &Shared) {
         if shutdown {
             // One final drain pass in case something raced the shutdown.
             let drained: Vec<(usize, Vec<BatchItem>)> = {
-                let mut g = shared.pending.lock().unwrap();
+                let mut g = lock_recover(&shared.pending);
                 g.groups.drain().map(|(b, (_, items))| (b, items)).collect()
             };
             for (bucket, items) in drained {
@@ -294,7 +309,7 @@ impl BatchBackend for CpuLoopbackBackend {
     }
 
     fn execute_group(&self, bucket: usize, items: Vec<BatchItem>) {
-        let _serial = self.serial.lock().unwrap();
+        let _serial = lock_recover(&self.serial);
         if self.overhead > Duration::ZERO {
             // fixed per-round-trip cost, paid once per *group*
             std::thread::sleep(self.overhead);
@@ -401,6 +416,49 @@ mod tests {
             BatchConfig { batch_size: 2, linger: Duration::from_millis(1) },
         );
         assert!(tiny.diameters(cloud_f32(9, 1)).is_err());
+    }
+
+    #[test]
+    fn poisoned_pending_lock_does_not_kill_subsequent_submitters() {
+        // One engine/worker thread panicking while it holds the pending
+        // lock used to poison it for every later submitter — each
+        // `.unwrap()` then panicked in turn, taking the whole run down.
+        // With lock_recover, submissions keep flowing.
+        let b = loopback(4);
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence the deliberate panic
+        let _ = std::thread::spawn({
+            let shared = b.shared.clone();
+            move || {
+                let _g = shared.pending.lock().unwrap();
+                panic!("deliberate poison");
+            }
+        })
+        .join();
+        std::panic::set_hook(hook);
+        assert!(b.shared.pending.is_poisoned(), "the lock must actually be poisoned");
+
+        // concurrent submissions still batch and still match brute force
+        let cases: Vec<Vec<f32>> = (0..8).map(|i| cloud_f32(30 + i * 11, i as u64)).collect();
+        let out: Vec<[f64; 4]> = std::thread::scope(|scope| {
+            let handles: Vec<_> = cases
+                .iter()
+                .map(|v| {
+                    let b = &b;
+                    let v = v.clone();
+                    scope.spawn(move || b.diameters(v).unwrap().0.as_array())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (v, got) in cases.iter().zip(&out) {
+            let pts: Vec<Vec3> =
+                v.chunks_exact(3).map(|c| Vec3::from([c[0], c[1], c[2]])).collect();
+            assert_eq!(*got, brute_force_diameters(&pts).as_array());
+        }
+        assert_eq!(b.stats().submitted, 8);
+        // Drop (which locks pending to signal shutdown) must survive too.
+        drop(b);
     }
 
     #[test]

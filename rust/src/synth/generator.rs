@@ -186,7 +186,7 @@ pub fn generate_dataset(root: &Path, opts: &GenOptions) -> Result<DatasetManifes
             case_id: case.case_id.to_string(),
             mask: fname.into(),
             image: Some(iname.into()),
-            dims: mask.dims,
+            dims: Some(mask.dims),
             target_vertices: nverts, // record the *measured* vertex count
             labels: Vec::new(),
         });
@@ -248,7 +248,7 @@ pub fn generate_multilabel_dataset(root: &Path, opts: &GenOptions) -> Result<Dat
             case_id: case.case_id.to_string(),
             mask: fname.into(),
             image: Some(iname.into()),
-            dims: mask.dims,
+            dims: Some(mask.dims),
             target_vertices: nverts,
             // the first case declares a label that is deliberately absent
             labels: if i == 0 { vec![1, 2, 3, 4] } else { vec![1, 2, 3] },

@@ -1,0 +1,214 @@
+//! Cohort batch-mode integration tests: cache replay identity, kill-mid-run
+//! resume, and per-case failure isolation — through the public API only.
+
+use std::path::PathBuf;
+
+use radpipe::cohort::{run_batch, BatchOptions, BatchOutcome};
+use radpipe::config::{Backend, PipelineConfig};
+use radpipe::dispatch::FeatureExtractor;
+use radpipe::synth::{generate_dataset, GenOptions};
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("radpipe_cohort_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Generate the 20-case paper dataset (tiny scale) and derive a cohort
+/// CSV manifest from it.
+fn fixture(tag: &str) -> (PathBuf, PathBuf, usize) {
+    let dir = tdir(tag);
+    let m = generate_dataset(&dir, &GenOptions { scale: 0.002, seed: 3 }).unwrap();
+    let mut csv = String::from("case_id,mask\n");
+    for e in &m.cases {
+        csv.push_str(&format!("{},{}\n", e.case_id, e.mask.display()));
+    }
+    let manifest = dir.join("cohort.csv");
+    std::fs::write(&manifest, csv).unwrap();
+    (dir, manifest, m.cases.len())
+}
+
+fn cfg() -> PipelineConfig {
+    PipelineConfig { backend: Backend::Cpu, cpu_threads: 1, ..Default::default() }
+}
+
+fn opts(manifest: &PathBuf) -> BatchOptions {
+    BatchOptions {
+        manifest: manifest.clone(),
+        cache_dir: None,
+        cache_max_bytes: 0,
+        journal: None,
+        resume: false,
+    }
+}
+
+fn errors_total(outcome: &BatchOutcome) -> u64 {
+    outcome
+        .metrics
+        .counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("errors."))
+        .map(|(_, v)| *v)
+        .sum()
+}
+
+#[test]
+fn warm_cache_run_is_bit_identical_with_zero_extractions() {
+    let (dir, manifest, total) = fixture("warm");
+    let cfg = cfg();
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let mut o = opts(&manifest);
+    o.cache_dir = Some(dir.join("cache"));
+
+    let cold = run_batch(&cfg, &ex, &o).unwrap();
+    assert_eq!(cold.total, total);
+    assert_eq!(cold.executed, total, "cold cache executes everything");
+    assert_eq!(cold.from_cache, 0);
+    assert_eq!(cold.failed, 0);
+    assert_eq!(cold.metrics.counter("cache.miss"), Some(total as u64));
+
+    let warm = run_batch(&cfg, &ex, &o).unwrap();
+    assert_eq!(warm.executed, 0, "warm cache extracts nothing");
+    assert_eq!(warm.from_cache, total);
+    assert_eq!(
+        warm.metrics.counter("cache.hit"),
+        Some(warm.succeeded as u64),
+        "every success came from the cache"
+    );
+    assert_eq!(
+        cold.to_csv(),
+        warm.to_csv(),
+        "cache replay must reproduce the report byte-for-byte"
+    );
+    // warm runs skip the pipeline entirely: no stage timers, only cache ones
+    assert!(warm.metrics.timer("stage.mesh").is_none());
+    assert!(warm.metrics.timer("stage.cache").is_some());
+}
+
+#[test]
+fn resume_after_a_kill_reexecutes_only_unfinished_cases() {
+    let (dir, manifest, total) = fixture("resume");
+    let cfg = cfg();
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+
+    // the reference run, journaled to completion
+    let full_journal = dir.join("full.journal");
+    let mut o = opts(&manifest);
+    o.journal = Some(full_journal.clone());
+    let reference = run_batch(&cfg, &ex, &o).unwrap();
+    assert_eq!(reference.failed, 0);
+    let reference_csv = reference.to_csv();
+    let journal_text = std::fs::read_to_string(&full_journal).unwrap();
+    let lines: Vec<&str> = journal_text.lines().collect();
+    assert_eq!(lines.len(), total, "one journal line per case");
+
+    // simulate a kill after N cases: keep N intact lines plus half of the
+    // next one (the torn tail a SIGKILL mid-write leaves behind)
+    for n in [0usize, 7, total - 1] {
+        let partial = dir.join(format!("killed_at_{n}.journal"));
+        let mut text: String =
+            lines[..n].iter().map(|l| format!("{l}\n")).collect();
+        let torn = lines[n];
+        text.push_str(&torn[..torn.len() / 2]);
+        std::fs::write(&partial, text).unwrap();
+
+        let mut o = opts(&manifest);
+        o.journal = Some(partial);
+        o.resume = true;
+        let resumed = run_batch(&cfg, &ex, &o).unwrap();
+        assert_eq!(resumed.from_journal, n, "kill after {n}");
+        assert_eq!(
+            resumed.executed,
+            total - n,
+            "only unfinished cases re-execute (kill after {n})"
+        );
+        assert_eq!(resumed.failed, 0);
+        assert_eq!(
+            resumed.to_csv(),
+            reference_csv,
+            "resumed report must match the uninterrupted run (kill after {n})"
+        );
+    }
+}
+
+#[test]
+fn a_poisoned_case_is_isolated_and_counted() {
+    let (dir, manifest, total) = fixture("poison");
+    std::fs::write(dir.join("garbage.rvol.gz"), b"definitely not a volume").unwrap();
+    let mut text = std::fs::read_to_string(&manifest).unwrap();
+    text.push_str("poisoned,garbage.rvol.gz\n");
+    std::fs::write(&manifest, text).unwrap();
+
+    let cfg = cfg();
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let mut o = opts(&manifest);
+    o.cache_dir = Some(dir.join("cache"));
+
+    let cold = run_batch(&cfg, &ex, &o).unwrap();
+    assert_eq!(cold.total, total + 1);
+    assert_eq!(cold.succeeded, total, "healthy cases are unaffected");
+    assert_eq!(cold.failed, 1);
+    let failed_rows: Vec<_> =
+        cold.rows.iter().filter(|r| r.status == "failed").collect();
+    assert_eq!(failed_rows.len(), 1);
+    assert_eq!(failed_rows[0].case_id, "poisoned");
+    assert!(!failed_rows[0].error.is_empty(), "the error column carries the cause");
+    assert_eq!(
+        errors_total(&cold),
+        1,
+        "error counters must account for every failure: {:?}",
+        cold.metrics.counters
+    );
+
+    // failures are never cached: a warm re-run retries exactly the failed
+    // case and replays everything else
+    let warm = run_batch(&cfg, &ex, &o).unwrap();
+    assert_eq!(warm.from_cache, total);
+    assert_eq!(warm.executed, 1, "only the poisoned case re-executes");
+    assert_eq!(warm.failed, 1);
+    assert_eq!(
+        warm.metrics.counter("cache.hit"),
+        Some(warm.succeeded as u64),
+        "CI gate: hits == successes on a warm run"
+    );
+    assert_eq!(cold.to_csv(), warm.to_csv());
+}
+
+#[test]
+fn journal_and_cache_compose_across_a_resume() {
+    // kill-then-resume with the cache on: replayed-from-journal cases must
+    // not double-count as cache hits, and the resumed run still stores the
+    // features it computes
+    let (dir, manifest, total) = fixture("compose");
+    let cfg = cfg();
+    let ex = FeatureExtractor::new(&cfg).unwrap();
+    let journal = dir.join("run.journal");
+    let mut o = opts(&manifest);
+    o.cache_dir = Some(dir.join("cache"));
+    o.journal = Some(journal.clone());
+
+    let first = run_batch(&cfg, &ex, &o).unwrap();
+    assert_eq!(first.executed, total);
+    let reference_csv = first.to_csv();
+
+    // keep only the first 5 journal entries, as if the run died there
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let head: String = text.lines().take(5).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&journal, head).unwrap();
+    // and wipe the cache entries so the resumed run actually executes
+    let _ = std::fs::remove_dir_all(dir.join("cache"));
+
+    let mut o2 = o.clone();
+    o2.resume = true;
+    let resumed = run_batch(&cfg, &ex, &o2).unwrap();
+    assert_eq!(resumed.from_journal, 5);
+    assert_eq!(resumed.from_cache, 0, "cache was wiped");
+    assert_eq!(resumed.executed, total - 5);
+    assert_eq!(resumed.to_csv(), reference_csv);
+
+    // the resumed run refilled the cache for the cases it executed
+    let warm = run_batch(&cfg, &ex, &o).unwrap();
+    assert_eq!(warm.from_cache, total - 5);
+    assert_eq!(warm.executed, 5, "journal-replayed cases were not re-cached");
+}

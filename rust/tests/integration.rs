@@ -284,8 +284,9 @@ fn image_on_a_different_grid_is_auto_resampled_through_the_pipeline() {
                 case_id: "case".into(),
                 mask: "case.rvol.gz".into(),
                 image: Some(image.into()),
-                dims: mask.dims,
+                dims: Some(mask.dims),
                 target_vertices: 0,
+                labels: Vec::new(),
             }],
         };
         let report = run_pipeline(&manifest, &cfg, &ex).unwrap();

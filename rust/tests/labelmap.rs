@@ -162,7 +162,7 @@ fn slab_read_is_bit_identical_to_whole_read_in_every_container() {
                 case_id: format!("case-{mask_name}"),
                 mask: mask_name.into(),
                 image: Some(img_name.into()),
-                dims: lm.grid.dims,
+                dims: Some(lm.grid.dims),
                 target_vertices: 0,
                 labels: Vec::new(),
             }],
